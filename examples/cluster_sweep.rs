@@ -1,0 +1,152 @@
+//! Regenerates every analytic table and simulated figure of the paper in
+//! one run (Table 1, §2.2, §2.4, §3.3, Fig 3 model, Figs 4/6/7 curves) —
+//! the programmatic companion to `repro analyze ...` / `repro simulate
+//! ...`, used to fill EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sweep
+//! ```
+
+use pcl_dnn::analytic::machine::{MachineSpec, Platform};
+use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::models::Layer;
+use pcl_dnn::netsim::cluster::scaling_curve;
+
+fn main() {
+    // ---------------- Table 1 ----------------
+    println!("## Table 1 — theoretical scaling of data parallelism");
+    println!("(paper: 1336/336 FLOPs per byte; OverFeat 3 (86) / 2 (128); VGG-A 1 (256) / 1 (256))");
+    let platforms =
+        [("Ethernet", Platform::table1_ethernet()), ("FDR", Platform::table1_fdr())];
+    let mut t = Table::new(&["", "2s9c+10GbE", "2s16c+FDR"]);
+    t.row(vec![
+        "comp-to-comms".into(),
+        format!("{:.0}", platforms[0].1.comp_to_comms()),
+        format!("{:.0}", platforms[1].1.comp_to_comms()),
+    ]);
+    for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+        let c: Vec<String> = platforms
+            .iter()
+            .map(|(_, p)| {
+                let (mb, n) = scaling::table1_row(&net, p, 256);
+                format!("{mb} ({n})")
+            })
+            .collect();
+        t.row(vec![net.name.clone(), c[0].clone(), c[1].clone()]);
+    }
+    t.print();
+
+    // ---------------- §2.2 ----------------
+    println!("\n## §2.2 — cache-blocking search, OverFeat-FAST C5, 128 KB");
+    let c5 = zoo::overfeat_c5_paper();
+    println!(
+        "row-streaming B/F = {:.2} (paper 0.54); full-cache B/F(mb=8) = {:.4} (paper ~0.003)",
+        compute_model::bf_ratio_row(&c5).unwrap(),
+        compute_model::bf_ratio_full(&c5, 8).unwrap()
+    );
+    let b = cache_blocking::search(&c5, &cache_blocking::SearchCfg::default()).unwrap();
+    println!(
+        "best blocking under 128 KB: B/F {:.4} (paper bound <= 0.04), tile ({},{},{},{},{},{},{}), {} bytes",
+        b.bf, b.mb_b, b.ofm_b, b.oh_b, b.ow_b, b.ifm_b, b.kh_b, b.kw_b, b.bytes
+    );
+
+    // ---------------- §2.4 ----------------
+    println!("\n## §2.4 — register blocking");
+    let m = register_blocking::cycle_model(12, 8, 3);
+    println!(
+        "fwd C5 (RB=1x12, SW=8): efficiency {:.1}% (paper 88%); wt-grad 3x3 naive {:.0}% (paper 75%)",
+        100.0 * m.efficiency,
+        100.0 * register_blocking::weight_grad_naive_efficiency(3)
+    );
+
+    // ---------------- §3.3 ----------------
+    println!("\n## §3.3 — hybrid parallelism optimum (FC 4096x4096, MB=256, N=64)");
+    let fc = Layer::fc("fc", 4096, 4096);
+    println!(
+        "G* (continuous) = {:.2}; discrete best: overlap=0 -> G={}, overlap=1 -> G={}",
+        comm_model::optimal_groups_continuous(4096, 256, 64),
+        comm_model::optimal_groups(&fc, 256, 64, 0.0),
+        comm_model::optimal_groups(&fc, 256, 64, 1.0),
+    );
+
+    // ---------------- Fig 3 ----------------
+    println!("\n## Fig 3 — single-node model (E5-2698v3; paper: OF 315/90, VGG 95/30)");
+    let mach = MachineSpec::e5_2698v3();
+    let mut t = Table::new(&["net", "mode", "MB16", "MB32", "MB64", "MB128", "MB256"]);
+    for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+        for (mode, tr) in [("FP", false), ("FP+BP", true)] {
+            let mut row = vec![net.name.clone(), mode.into()];
+            row.extend(
+                compute_model::fig3_row(&net, &mach, tr).iter().map(|(_, v)| format!("{v:.0}")),
+            );
+            t.row(row);
+        }
+    }
+    t.print();
+
+    // ---------------- Figs 4 / 6 / 7 ----------------
+    for (title, net, platform, mb, nodes, expect) in [
+        (
+            "Fig 4 — VGG-A on Cori, MB=512",
+            zoo::vgg_a(),
+            Platform::cori(),
+            512u64,
+            vec![1u64, 2, 4, 8, 16, 32, 64, 128],
+            "paper: 90x @128, 2510 img/s",
+        ),
+        (
+            "Fig 4 — VGG-A on Cori, MB=256",
+            zoo::vgg_a(),
+            Platform::cori(),
+            256,
+            vec![1, 2, 4, 8, 16, 32, 64],
+            "paper: 82% efficiency @64",
+        ),
+        (
+            "Fig 6 — OverFeat on AWS, MB=256",
+            zoo::overfeat_fast(),
+            Platform::aws(),
+            256,
+            vec![1, 2, 4, 8, 16],
+            "paper: 1027 img/s = 11.9x @16",
+        ),
+        (
+            "Fig 6 — VGG-A on AWS, MB=256",
+            zoo::vgg_a(),
+            Platform::aws(),
+            256,
+            vec![1, 2, 4, 8, 16],
+            "paper: 397 img/s = 14.2x @16",
+        ),
+        (
+            "Fig 7 — CD-DNN on Endeavor, MB=1024",
+            zoo::cddnn_full(),
+            Platform::endeavor(),
+            1024,
+            vec![1, 2, 4, 8, 16],
+            "paper: 4600 f/s @1, 29.5K = 6.4x @16",
+        ),
+    ] {
+        println!("\n## {title}  ({expect})");
+        let curve = scaling_curve(&net, &platform, mb, &nodes, true);
+        let mut t = Table::new(&["nodes", "samples/s", "speedup", "efficiency"]);
+        for p in &curve {
+            t.row(vec![
+                p.nodes.to_string(),
+                format!("{:.0}", p.images_per_s),
+                format!("{:.1}x", p.speedup),
+                format!("{:.0}%", 100.0 * p.efficiency),
+            ]);
+        }
+        t.print();
+    }
+
+    // ---------------- ablation: hybrid off ----------------
+    println!("\n## Ablation — CD-DNN @16 nodes, hybrid FCs vs pure data parallel");
+    let p = Platform::endeavor();
+    let hy = scaling_curve(&zoo::cddnn_full(), &p, 1024, &[16], true)[0].speedup;
+    let dp = scaling_curve(&zoo::cddnn_full(), &p, 1024, &[16], false)[0].speedup;
+    println!("hybrid {hy:.1}x vs pure-data {dp:.1}x  (the §3.3 claim: hybrid wins for FC nets)");
+}

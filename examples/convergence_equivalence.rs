@@ -1,0 +1,96 @@
+//! Fig 5 reproduction — convergence equivalence of distributed synchronous
+//! SGD: "Since we parallelize SGD retaining its synchronous nature, and
+//! there are no hyperparameter changes, the convergence of the distributed
+//! algorithm is identical to the single node version."
+//!
+//! Trains tiny-VGG with 1, 2, 4 and 8 workers on the SAME global
+//! minibatch stream and overlays the loss / Top-1 / Top-5 curves. The
+//! only permitted divergence is f32 reassociation across worker gradient
+//! accumulators (the paper's curves "overlap"; so must ours).
+//!
+//! ```bash
+//! cargo run --release --example convergence_equivalence [-- --steps 60]
+//! ```
+
+use pcl_dnn::metrics::Table;
+use pcl_dnn::runtime::Runtime;
+use pcl_dnn::trainer::{train, TrainConfig};
+use pcl_dnn::util::cli::Opts;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let steps: u64 = opts.parse_or("steps", 60u64)?;
+    let mb: usize = opts.parse_or("minibatch", 32usize)?;
+    let mut rt = Runtime::new("artifacts")?;
+
+    let workers = [1usize, 2, 4, 8];
+    let mut runs = Vec::new();
+    for &w in &workers {
+        println!("--- {w} worker(s) ---");
+        let cfg = TrainConfig {
+            model: "vgg_tiny".into(),
+            workers: w,
+            global_mb: mb,
+            steps,
+            lr: 0.01,
+            log_every: steps / 3,
+            eval_every: steps / 3,
+            ..Default::default()
+        };
+        runs.push((w, train(&mut rt, &cfg)?));
+    }
+
+    println!("\n# Fig 5 — loss curves must overlay (same global minibatch stream)");
+    let mut t = Table::new(&["step", "loss w=1", "loss w=2", "loss w=4", "loss w=8", "max dev"]);
+    let stride = (steps / 12).max(1) as usize;
+    for i in (0..steps as usize).step_by(stride) {
+        let losses: Vec<f64> = runs.iter().map(|(_, r)| r.history.records[i].loss).collect();
+        let dev = losses.iter().cloned().fold(f64::MIN, f64::max)
+            - losses.iter().cloned().fold(f64::MAX, f64::min);
+        let mut row = vec![i.to_string()];
+        row.extend(losses.iter().map(|l| format!("{l:.4}")));
+        row.push(format!("{dev:.2e}"));
+        t.row(row);
+    }
+    t.print();
+
+    // Quantify. Two regimes: (1) early steps must agree to fp noise —
+    // the K-worker step computes the same averaged gradient up to
+    // summation associativity; (2) later steps may drift visibly because
+    // SGD is chaotic (fp reassociation differences amplify), exactly as
+    // on the real cluster — the paper's Fig 5 shows *curve overlay*, not
+    // bitwise equality. Note: worker counts whose accumulation order is
+    // left-to-right identical to serial (e.g. 4 workers x 1 microbatch
+    // here) track the 1-worker run EXACTLY.
+    let base = &runs[0].1;
+    let mut early: f64 = 0.0;
+    let mut final_dev: f64 = 0.0;
+    for (_, r) in &runs[1..] {
+        for (a, b) in base.history.records.iter().zip(&r.history.records).take(10) {
+            early = early.max((a.loss - b.loss).abs() / a.loss.abs().max(1.0));
+        }
+        let fa = base.history.tail_loss(5).unwrap();
+        let fb = r.history.tail_loss(5).unwrap();
+        final_dev = final_dev.max((fa - fb).abs() / fa.abs().max(1.0));
+    }
+    println!("\nworst relative loss deviation, steps 0-9 (must be fp-noise): {early:.2e}");
+    println!("worst relative tail-loss deviation (chaotic drift bound):    {final_dev:.2e}");
+    println!("held-out metrics at final step:");
+    let mut t = Table::new(&["workers", "eval loss", "top1", "top5"]);
+    for (w, r) in &runs {
+        if let Some(e) = r.evals.last() {
+            t.row(vec![
+                w.to_string(),
+                format!("{:.4}", e.loss),
+                format!("{:.3}", e.top1),
+                format!("{:.3}", e.top5),
+            ]);
+        }
+    }
+    t.print();
+    anyhow::ensure!(early < 1e-3, "early curves diverged: {early}");
+    anyhow::ensure!(final_dev < 0.30, "curves failed to overlay: {final_dev}");
+    println!("\nconvergence equivalence holds (early deviation is fp-reassociation noise;");
+    println!("late drift is chaotic amplification of that noise, same as on real clusters)");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT pipeline: lower every L2 step function to HLO *text* artifacts.
+
+Runs ONCE at build time (`make artifacts`); python is never on the training
+path. The interchange format is HLO text, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs into --out-dir:
+  <name>.hlo.txt          one per artifact (positional ABI)
+  <model>.params.bin      little-endian f32 init params, spec order, seed 0
+  manifest.json           full ABI description consumed by rust/src/runtime/
+"""
+
+import argparse
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .models import cddnn, cnn, transformer
+
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "artifacts": {}, "models": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_model(self, name: str, specs, config: dict):
+        """Dump seed-0 init params for `specs` and register the model."""
+        params = None
+        key = jax.random.PRNGKey(SEED)
+        from .models import common
+
+        params = common.init_from_specs(specs, key)
+        path = os.path.join(self.out_dir, f"{name}.params.bin")
+        with open(path, "wb") as f:
+            for p in params:
+                f.write(np.asarray(p, dtype="<f4").tobytes())
+        self.manifest["models"][name] = {
+            "params_file": f"{name}.params.bin",
+            "params": [{"name": n, "shape": list(s)} for n, s in specs],
+            "n_elements": int(sum(int(np.prod(s)) for _, s in specs)),
+            "config": config,
+        }
+        return params
+
+    def add_artifact(self, name: str, fn, inputs: Sequence[dict], *, kind: str,
+                     model: str = None, batch: int = 0, n_params: int = 0,
+                     outputs=None):
+        """Lower fn(*inputs) and write <name>.hlo.txt + manifest entry."""
+        arg_specs = [_spec(i["shape"], i["dtype"]) for i in inputs]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        if outputs is None:
+            out_avals = jax.eval_shape(fn, *arg_specs)
+            outputs = [
+                _io(f"out{i}", o.shape, "i32" if o.dtype == jnp.int32 else "f32")
+                for i, o in enumerate(out_avals)
+            ]
+        self.manifest["artifacts"][name] = {
+            "hlo": fname,
+            "kind": kind,
+            "model": model,
+            "batch": batch,
+            "n_params": n_params,
+            "inputs": list(inputs),
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(text)} chars, {len(inputs)} inputs, {len(outputs)} outputs")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts, "
+              f"{len(self.manifest['models'])} models")
+
+
+def _param_ios(specs):
+    return [_io(n, s) for n, s in specs]
+
+
+def build_cnn(b: Builder, cfg: cnn.CnnConfig, train_b: int, fwd_b: int, eval_b: int):
+    specs = cnn.param_specs(cfg)
+    b.add_model(cfg.name, specs, {"type": "cnn", "image": cfg.image,
+                                  "in_ch": cfg.in_ch, "classes": cfg.classes})
+    pios = _param_ios(specs)
+    img = lambda n: _io("images", (n, cfg.image, cfg.image, cfg.in_ch))
+    lab = lambda n: _io("labels", (n,), "i32")
+    b.add_artifact(f"{cfg.name}_train", M.make_cnn_train_step(cfg),
+                   pios + [img(train_b), lab(train_b)], kind="train",
+                   model=cfg.name, batch=train_b, n_params=len(specs))
+    b.add_artifact(f"{cfg.name}_fwd", M.make_cnn_fwd(cfg),
+                   pios + [img(fwd_b)], kind="fwd",
+                   model=cfg.name, batch=fwd_b, n_params=len(specs))
+    b.add_artifact(f"{cfg.name}_eval", M.make_cnn_eval(cfg),
+                   pios + [img(eval_b), lab(eval_b)], kind="eval",
+                   model=cfg.name, batch=eval_b, n_params=len(specs))
+
+
+def build_cddnn(b: Builder, cfg: cddnn.CddnnConfig, train_b: int, fwd_b: int):
+    specs = cddnn.param_specs(cfg)
+    b.add_model(cfg.name, specs, {"type": "cddnn", "in_dim": cfg.in_dim,
+                                  "hidden": cfg.hidden, "n_hidden": cfg.n_hidden,
+                                  "senones": cfg.senones})
+    pios = _param_ios(specs)
+    b.add_artifact(f"{cfg.name}_train", M.make_cddnn_train_step(cfg),
+                   pios + [_io("frames", (train_b, cfg.in_dim)),
+                           _io("senones", (train_b,), "i32")],
+                   kind="train", model=cfg.name, batch=train_b, n_params=len(specs))
+    b.add_artifact(f"{cfg.name}_fwd", M.make_cddnn_fwd(cfg),
+                   pios + [_io("frames", (fwd_b, cfg.in_dim))],
+                   kind="fwd", model=cfg.name, batch=fwd_b, n_params=len(specs))
+
+
+def build_gpt(b: Builder, cfg: transformer.GptConfig, train_b: int, eval_b: int):
+    specs = transformer.param_specs(cfg)
+    b.add_model(cfg.name, specs, {"type": "gpt", "vocab": cfg.vocab, "seq": cfg.seq,
+                                  "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                                  "n_layers": cfg.n_layers,
+                                  "n_params_total": cfg.n_params})
+    pios = _param_ios(specs)
+    tok = lambda n: _io("tokens", (n, cfg.seq), "i32")
+    b.add_artifact(f"{cfg.name}_train", M.make_gpt_train_step(cfg),
+                   pios + [tok(train_b)], kind="train", model=cfg.name,
+                   batch=train_b, n_params=len(specs))
+    b.add_artifact(f"{cfg.name}_eval", M.make_gpt_eval(cfg),
+                   pios + [tok(eval_b)], kind="eval", model=cfg.name,
+                   batch=eval_b, n_params=len(specs))
+
+
+def build_kernel_ablation(b: Builder):
+    """Same conv layer lowered via the Pallas kernel and via XLA's native
+    conv — the L1 ablation pair (bench: pallas-interpret HLO vs cuDNN-style
+    native lowering on the CPU PJRT backend)."""
+    x_shape, w_shape = (8, 16, 16, 64), (3, 3, 64, 128)
+    for tag, use_pallas in [("pallas", True), ("native", False)]:
+        b.add_artifact(
+            f"conv_layer_{tag}",
+            M.make_conv_layer(x_shape, w_shape, 1, "SAME", use_pallas),
+            [_io("x", x_shape), _io("w", w_shape)],
+            kind="kernel", batch=x_shape[0],
+        )
+    # Pallas conv composed through a full scoring graph (fwd only: pallas
+    # kernels are exercised under jit+vmap-style tracing, not autodiff).
+    cfg = cnn.VGG_TINY
+    specs = cnn.param_specs(cfg)
+    b.add_artifact(
+        "vgg_tiny_fwd_pallas",
+        M.make_cnn_fwd(cfg, use_pallas=True),
+        _param_ios(specs) + [_io("images", (4, cfg.image, cfg.image, cfg.in_ch))],
+        kind="fwd", model=cfg.name, batch=4, n_params=len(specs),
+    )
+
+    from .kernels import matmul as pmm
+    from .kernels import ref as kref
+
+    for tag, f in [("pallas", lambda x, w: (pmm.matmul(x, w),)),
+                   ("native", lambda x, w: (kref.matmul_ref(x, w),))]:
+        b.add_artifact(f"matmul_{tag}", f,
+                       [_io("x", (256, 512)), _io("w", (512, 256))],
+                       kind="kernel", batch=256)
+
+
+def build_sgd(b: Builder):
+    """In-graph SGD apply for vgg_tiny — ablation vs rust-side update."""
+    specs = cnn.param_specs(cnn.VGG_TINY)
+    pios = _param_ios(specs)
+    gios = [_io("grad_" + n, s) for n, s in specs]
+    b.add_artifact("vgg_tiny_sgd", M.make_sgd_apply(len(specs)),
+                   pios + gios + [_io("lr", ())], kind="sgd",
+                   model="vgg_tiny", n_params=len(specs))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--large", action="store_true",
+                    help="also lower the ~100M-param gpt_large artifacts")
+    args = ap.parse_args()
+    b = Builder(args.out_dir)
+    print("lowering CNN artifacts…")
+    build_cnn(b, cnn.VGG_TINY, train_b=4, fwd_b=32, eval_b=64)
+    build_cnn(b, cnn.OVERFEAT_TINY, train_b=4, fwd_b=32, eval_b=64)
+    print("lowering CD-DNN artifacts…")
+    build_cddnn(b, cddnn.CDDNN_TINY, train_b=64, fwd_b=256)
+    print("lowering GPT artifacts…")
+    build_gpt(b, transformer.GPT_TEST, train_b=2, eval_b=2)
+    build_gpt(b, transformer.GPT_MINI, train_b=4, eval_b=8)
+    if args.large:
+        build_gpt(b, transformer.GPT_LARGE, train_b=2, eval_b=2)
+    print("lowering kernel ablation artifacts…")
+    build_kernel_ablation(b)
+    build_sgd(b)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

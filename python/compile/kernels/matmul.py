@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: block-SGEMM for fully-connected layers (paper §2.1, §4).
+
+The paper's compute library implements FC layers as "highly efficient
+block-SGEMM functions"; this is that kernel, TPU-adapted. M is the
+minibatch dim, K the input features, N the output features. Blocking:
+
+  * (block_m x block_n) output tile resident in VMEM (cache block),
+  * K consumed in block_k chunks (the ifm-blocked inner loop of §2.4),
+  * block_n is the lane dimension (the paper's SIMD-width ofm group).
+
+Optional fused bias+ReLU epilogue — the paper fuses activation into the
+SGEMM epilogue to avoid an extra pass over the output.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(total: int, preferred: int) -> int:
+    b = min(preferred, total)
+    while total % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k, bk, relu):
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for k0 in range(0, k, bk):
+        acc += jax.lax.dot_general(
+            x_ref[:, k0 : k0 + bk],
+            w_ref[k0 : k0 + bk, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _matmul_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, k, bk, relu):
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for k0 in range(0, k, bk):
+        acc += jax.lax.dot_general(
+            x_ref[:, k0 : k0 + bk],
+            w_ref[k0 : k0 + bk, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def matmul(x, w, bias=None, relu: bool = False, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 512, interpret: bool = True):
+    """Blocked matmul: x (M,K) @ w (K,N) [+ bias (N,)] [then ReLU] -> (M,N)."""
+    m, k = x.shape
+    wk, n = w.shape
+    assert k == wk, f"contraction mismatch {k} vs {wk}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, n // bn)
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    if bias is None:
+        kernel = functools.partial(_matmul_kernel, k=k, bk=bk, relu=relu)
+        in_specs = [
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ]
+        args = (x, w)
+    else:
+        assert bias.shape == (n,)
+        kernel = functools.partial(_matmul_bias_kernel, k=k, bk=bk, relu=relu)
+        in_specs = [
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ]
+        args = (x, w, bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)

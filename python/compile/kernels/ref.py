@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+These implement the paper's three compute patterns (Algorithm 1 and the
+backprop / weight-gradient variants of §2.1) with stock XLA ops. The Pallas
+kernels in conv2d.py / matmul.py must match these to ~1e-5 (f32).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, stride: int = 1, padding: str = "VALID"):
+    """NHWC x KHKWIO forward convolution (paper Algorithm 1).
+
+    x: (N, H, W, Cin)   w: (KH, KW, Cin, Cout)  ->  (N, OH, OW, Cout)
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_input_grad_ref(dy, w, x_shape, stride: int = 1, padding: str = "VALID"):
+    """Backpropagation (paper §2.1): gradient w.r.t. the input activations."""
+    _, vjp = jax.vjp(
+        lambda x: conv2d_ref(x, w, stride, padding), jnp.zeros(x_shape, dy.dtype)
+    )
+    return vjp(dy)[0]
+
+
+def conv2d_weight_grad_ref(x, dy, w_shape, stride: int = 1, padding: str = "VALID"):
+    """Weight-gradient update (paper §2.1): gradient w.r.t. the kernel."""
+    _, vjp = jax.vjp(
+        lambda w: conv2d_ref(x, w, stride, padding), jnp.zeros(w_shape, x.dtype)
+    )
+    return vjp(dy)[0]
+
+
+def matmul_ref(x, w, bias=None, relu: bool = False):
+    """Fully-connected layer: the k_h=k_w=out_h=out_w=1 special case of
+    Algorithm 1 (paper §2.1). Optional fused bias + ReLU epilogue."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def maxpool2d_ref(x, window: int = 2, stride: int = 2):
+    """2x2 max-pooling used between VGG conv blocks."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )

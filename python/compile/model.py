@@ -1,0 +1,147 @@
+"""L2 entrypoints: train/score step functions over the model zoo.
+
+Every function here takes *positional* flat arguments (params..., data...)
+and returns a tuple — that is the ABI the rust runtime executes against.
+The ordering of params is fixed by each model's `param_specs` and recorded
+in artifacts/manifest.json by aot.py.
+
+The weight update deliberately does NOT live in these graphs: the paper
+places SGD between part-reduce and part-broadcast on the coordinator
+(§3.4), so the artifacts return (loss, grad_0, ..., grad_{P-1}) and rust
+owns optimizer state and synchronization.
+"""
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import cddnn, cnn, common, transformer
+
+
+def _split(args, n_params):
+    return list(args[:n_params]), args[n_params:]
+
+
+def make_cnn_train_step(cfg: cnn.CnnConfig, use_pallas: bool = False) -> Callable:
+    """(params..., images f32[N,H,W,C], labels i32[N]) -> (loss, grads...)."""
+    n_params = len(cnn.param_specs(cfg))
+
+    def step(*args):
+        params, (x, y) = _split(args, n_params)
+
+        def loss_fn(ps):
+            return common.cross_entropy(cnn.forward(cfg, ps, x, use_pallas), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return step
+
+
+def make_cnn_fwd(cfg: cnn.CnnConfig, use_pallas: bool = False) -> Callable:
+    """(params..., images) -> (logits,) — the scoring path (Fig 3 'FP')."""
+    n_params = len(cnn.param_specs(cfg))
+
+    def fwd(*args):
+        params, (x,) = _split(args, n_params)
+        return (cnn.forward(cfg, params, x, use_pallas),)
+
+    return fwd
+
+
+def make_cnn_eval(cfg: cnn.CnnConfig) -> Callable:
+    """(params..., images, labels) -> (loss, top1, top5) for validation."""
+    n_params = len(cnn.param_specs(cfg))
+
+    def ev(*args):
+        params, (x, y) = _split(args, n_params)
+        logits = cnn.forward(cfg, params, x)
+        k5 = min(5, cfg.classes)
+        return (
+            common.cross_entropy(logits, y),
+            common.accuracy_topk(logits, y, 1),
+            common.accuracy_topk(logits, y, k5),
+        )
+
+    return ev
+
+
+def make_cddnn_train_step(cfg: cddnn.CddnnConfig, use_pallas: bool = False) -> Callable:
+    """(params..., frames f32[N,in_dim], senones i32[N]) -> (loss, grads...)."""
+    n_params = len(cddnn.param_specs(cfg))
+
+    def step(*args):
+        params, (x, y) = _split(args, n_params)
+
+        def loss_fn(ps):
+            return common.cross_entropy(cddnn.forward(cfg, ps, x, use_pallas), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return step
+
+
+def make_cddnn_fwd(cfg: cddnn.CddnnConfig, use_pallas: bool = False) -> Callable:
+    n_params = len(cddnn.param_specs(cfg))
+
+    def fwd(*args):
+        params, (x,) = _split(args, n_params)
+        return (cddnn.forward(cfg, params, x, use_pallas),)
+
+    return fwd
+
+
+def make_gpt_train_step(cfg: transformer.GptConfig, use_pallas: bool = False) -> Callable:
+    """(params..., tokens i32[N,seq]) -> (loss, grads...)."""
+    n_params = len(transformer.param_specs(cfg))
+
+    def step(*args):
+        params, (tokens,) = _split(args, n_params)
+
+        def loss_fn(ps):
+            return transformer.lm_loss(cfg, ps, tokens, use_pallas)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return step
+
+
+def make_gpt_eval(cfg: transformer.GptConfig) -> Callable:
+    """(params..., tokens) -> (loss,) — held-out perplexity probe."""
+    n_params = len(transformer.param_specs(cfg))
+
+    def ev(*args):
+        params, (tokens,) = _split(args, n_params)
+        return (transformer.lm_loss(cfg, params, tokens),)
+
+    return ev
+
+
+def make_sgd_apply(n_params: int) -> Callable:
+    """(params..., grads..., lr f32[]) -> updated params. Kept as an
+    artifact so the ablation bench can compare in-graph vs rust-side SGD."""
+
+    def apply(*args):
+        params = args[:n_params]
+        grads = args[n_params : 2 * n_params]
+        lr = args[2 * n_params]
+        return tuple(p - lr * g for p, g in zip(params, grads))
+
+    return apply
+
+
+def make_conv_layer(shape: Tuple[int, int, int, int], wshape, stride: int,
+                    padding: str, use_pallas: bool) -> Callable:
+    """Single conv layer (x, w) -> (y,) — the L1 kernel ablation artifact."""
+    from .kernels import conv2d as pconv
+    from .kernels import ref
+
+    def f(x, w):
+        if use_pallas:
+            return (pconv.conv2d(x, w, stride, padding),)
+        return (ref.conv2d_ref(x, w, stride, padding),)
+
+    return f

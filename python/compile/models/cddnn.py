@@ -1,0 +1,59 @@
+"""CD-DNN acoustic model (paper §5.4): fully-connected DNN-HMM frontend.
+
+The paper's network (Seide et al. 2011) is 7 hidden layers x 2048 units,
+input = 429 (11-frame context x 39 MFCC features), output = senone set
+(~9304). That full-size descriptor lives on the rust side for the analytic
+scaling model (Fig 7). Here we define a runnable scaled variant with the
+same depth (7 hidden FC layers — depth is what stresses the FC/hybrid
+communication path) for real training runs.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+from ..kernels import matmul as pmm
+from ..kernels import ref
+from . import common
+
+
+@dataclasses.dataclass(frozen=True)
+class CddnnConfig:
+    name: str
+    in_dim: int
+    hidden: int
+    n_hidden: int
+    senones: int
+
+
+# Paper-scale (analytic only): 429 -> 7x2048 -> 9304.
+CDDNN_FULL = CddnnConfig("cddnn_full", 429, 2048, 7, 9304)
+# Runnable: same depth, 1/8 width, 128 senone classes.
+CDDNN_TINY = CddnnConfig("cddnn_tiny", 429, 256, 7, 128)
+
+
+def param_specs(cfg: CddnnConfig) -> List[common.ParamSpec]:
+    specs = []
+    width = cfg.in_dim
+    for i in range(cfg.n_hidden):
+        specs.append((f"h{i}.w", (width, cfg.hidden)))
+        specs.append((f"h{i}.b", (cfg.hidden,)))
+        width = cfg.hidden
+    specs.append(("senone.w", (width, cfg.senones)))
+    specs.append(("senone.b", (cfg.senones,)))
+    return specs
+
+
+def init_params(cfg: CddnnConfig, key):
+    return common.init_from_specs(param_specs(cfg), key)
+
+
+def forward(cfg: CddnnConfig, params, x, use_pallas: bool = False):
+    """Senone logits for a batch of frames x: (N, in_dim) f32."""
+    mm = pmm.matmul if use_pallas else ref.matmul_ref
+    i = 0
+    for _ in range(cfg.n_hidden):
+        w, b = params[i], params[i + 1]
+        i += 2
+        x = mm(x, w, b, relu=True)
+    w, b = params[i], params[i + 1]
+    return mm(x, w, b, relu=False)

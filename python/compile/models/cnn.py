@@ -1,0 +1,128 @@
+"""Configurable CNN family: tiny VGG-A and tiny OverFeat-FAST variants.
+
+The paper evaluates VGG-A (Simonyan & Zisserman) and OverFeat-FAST
+(Sermanet et al.) at ImageNet scale. The rust side keeps *full-size* layer
+descriptors for the analytic models (Table 1, Figs 3/4/6); here we define
+runnable scaled-down counterparts with the same architectural shape
+(conv pyramid with monotonically shrinking feature maps + FC head) for the
+real multi-worker training runs (Fig 5 convergence equivalence, e2e).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from ..kernels import conv2d as pconv
+from ..kernels import matmul as pmm
+from ..kernels import ref
+from . import common
+from .common import ConvSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    image: int  # square input, NHWC
+    in_ch: int
+    convs: Tuple[ConvSpec, ...]
+    fcs: Tuple[int, ...]  # hidden FC widths
+    classes: int
+
+    @property
+    def conv_out_hw(self) -> int:
+        hw = self.image
+        for c in self.convs:
+            if c.padding == "SAME":
+                pass
+            else:
+                hw = (hw - c.k) // c.stride + 1
+            if c.padding == "SAME" and c.stride != 1:
+                raise ValueError("SAME conv must be stride 1 here")
+            if c.pool:
+                hw //= 2
+        return hw
+
+    @property
+    def conv_out_ch(self) -> int:
+        return self.convs[-1].out
+
+
+# VGG-A shrunk 8x in channels, 32x32 input, 8 weight-layer conv pyramid with
+# 5 pool stages — same depth/shape as the paper's VGG-A, laptop-scale flops.
+VGG_TINY = CnnConfig(
+    name="vgg_tiny",
+    image=32,
+    in_ch=3,
+    convs=(
+        ConvSpec(3, 8, pool=True),
+        ConvSpec(3, 16, pool=True),
+        ConvSpec(3, 32),
+        ConvSpec(3, 32, pool=True),
+        ConvSpec(3, 64),
+        ConvSpec(3, 64, pool=True),
+        ConvSpec(3, 64),
+        ConvSpec(3, 64, pool=True),
+    ),
+    fcs=(128, 64),
+    classes=10,
+)
+
+# OverFeat-FAST shrunk: strided first conv (the 11x11/s4 C1 analogue),
+# VALID interior convs, big FC head relative to conv trunk — preserves the
+# property the paper leans on (OverFeat has ~7x lower comp/comm than VGG-A).
+OVERFEAT_TINY = CnnConfig(
+    name="overfeat_tiny",
+    image=32,
+    in_ch=3,
+    convs=(
+        ConvSpec(5, 16, stride=2, padding="VALID", pool=True),  # 32->14->7
+        ConvSpec(3, 32, padding="VALID"),  # 7->5
+        ConvSpec(3, 64),
+        ConvSpec(3, 64),
+    ),
+    fcs=(192, 96),
+    classes=10,
+)
+
+
+def param_specs(cfg: CnnConfig) -> List[common.ParamSpec]:
+    specs = []
+    ch = cfg.in_ch
+    for i, c in enumerate(cfg.convs):
+        specs.append((f"conv{i}.w", (c.k, c.k, ch, c.out)))
+        specs.append((f"conv{i}.b", (c.out,)))
+        ch = c.out
+    width = cfg.conv_out_hw * cfg.conv_out_hw * cfg.conv_out_ch
+    for i, w in enumerate(cfg.fcs):
+        specs.append((f"fc{i}.w", (width, w)))
+        specs.append((f"fc{i}.b", (w,)))
+        width = w
+    specs.append(("head.w", (width, cfg.classes)))
+    specs.append(("head.b", (cfg.classes,)))
+    return specs
+
+
+def init_params(cfg: CnnConfig, key):
+    return common.init_from_specs(param_specs(cfg), key)
+
+
+def forward(cfg: CnnConfig, params, x, use_pallas: bool = False):
+    """Logits for a batch of images x: (N, image, image, in_ch) f32."""
+    conv = pconv.conv2d if use_pallas else ref.conv2d_ref
+    mm = pmm.matmul if use_pallas else ref.matmul_ref
+    i = 0
+    for c in cfg.convs:
+        w, b = params[i], params[i + 1]
+        i += 2
+        x = conv(x, w, c.stride, c.padding)
+        x = jnp.maximum(x + b, 0.0)
+        if c.pool:
+            x = ref.maxpool2d_ref(x)
+    x = x.reshape(x.shape[0], -1)
+    for _ in cfg.fcs:
+        w, b = params[i], params[i + 1]
+        i += 2
+        x = mm(x, w, b, relu=True)
+    w, b = params[i], params[i + 1]
+    return mm(x, w, b, relu=False)

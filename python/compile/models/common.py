@@ -1,0 +1,81 @@
+"""Shared building blocks for the L2 model zoo.
+
+Parameters are *ordered lists* of arrays (with a parallel spec list of
+(name, shape)) rather than pytrees: the AOT boundary between python and the
+rust coordinator is positional, so a deterministic flat order is part of
+the artifact ABI (recorded in artifacts/manifest.json).
+"""
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ParamSpec = Tuple[str, Tuple[int, ...]]
+
+
+def he_normal(key, shape, fan_in):
+    """He-normal initializer (ReLU networks)."""
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_from_specs(specs: Sequence[ParamSpec], key) -> List[jnp.ndarray]:
+    """Initialize every spec: weights He-normal (fan-in = prod of all dims
+    but the last), biases/gains zeros/ones by name convention."""
+    params = []
+    for name, shape in specs:
+        key, sub = jax.random.split(key)
+        if name.endswith(".b") or name.endswith(".bias"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(".g") or name.endswith(".gain"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("emb.w"):
+            # GPT-style embedding init: the token table doubles as the
+            # tied LM head, so He-by-fan-in would inflate initial logits
+            # by ~sqrt(d_model); sigma=0.02 is the standard choice.
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            params.append(he_normal(sub, shape, max(fan_in, 1)))
+    return params
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)
+    return jnp.mean(logz - gold[..., 0])
+
+
+def accuracy_topk(logits, labels, k: int = 1):
+    """Top-k accuracy (Fig 5 reports Top-5).
+
+    Expressed as a rank count (gold is top-k iff fewer than k logits
+    strictly exceed it) rather than `lax.top_k`: jax lowers top_k to an
+    HLO `topk(..., largest=true)` attribute that xla_extension 0.5.1's
+    text parser rejects, and comparisons+reductions lower cleanly.
+    """
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)
+    rank = jnp.sum((logits > gold).astype(jnp.int32), axis=-1)
+    return jnp.mean((rank < k).astype(jnp.float32))
+
+
+def layer_norm(x, gain, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gain + bias
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolutional layer: kernel k x k, `out` ofm, stride, padding,
+    optionally followed by a 2x2 maxpool (the VGG block boundary)."""
+
+    k: int
+    out: int
+    stride: int = 1
+    padding: str = "SAME"
+    pool: bool = False

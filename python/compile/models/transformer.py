@@ -1,0 +1,131 @@
+"""Decoder-only transformer LM for the end-to-end training driver.
+
+Not from the paper (which predates transformers) — this is the
+system-prompt-mandated e2e workload proving all layers compose: the rust
+coordinator trains this model with synchronous data-parallel SGD through
+the same part-reduce/part-broadcast path used for the paper's CNN/DNN
+topologies. FC-heavy like the paper's ASR network, so it also exercises
+the hybrid-parallel analysis on a modern workload.
+
+Pre-LN GPT-2-style blocks, learned positional embeddings, weight-tied LM
+head, no dropout (training must be bitwise-deterministic for the
+convergence-equivalence claim).
+"""
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+
+from ..kernels import matmul as pmm
+from ..kernels import ref
+from . import common
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    name: str
+    vocab: int
+    seq: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        return (self.vocab + self.seq) * d + self.n_layers * (12 * d * d + 13 * d) + 2 * d
+
+
+# ~11M params: the default e2e run (1 CPU core; see EXPERIMENTS.md).
+GPT_MINI = GptConfig("gpt_mini", vocab=128, seq=64, d_model=384, n_heads=6, n_layers=6)
+# ~100M-class config for the scaled e2e run.
+GPT_LARGE = GptConfig("gpt_large", vocab=4096, seq=128, d_model=768, n_heads=12, n_layers=12)
+# Small config for tests/quick artifacts.
+GPT_TEST = GptConfig("gpt_test", vocab=64, seq=16, d_model=64, n_heads=4, n_layers=2)
+
+
+def param_specs(cfg: GptConfig) -> List[common.ParamSpec]:
+    d = cfg.d_model
+    specs = [("tok_emb.w", (cfg.vocab, d)), ("pos_emb.w", (cfg.seq, d))]
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        specs += [
+            (p + "ln1.g", (d,)),
+            (p + "ln1.b", (d,)),
+            (p + "attn.wqkv", (d, 3 * d)),
+            (p + "attn.bqkv", (3 * d,)),
+            (p + "attn.wo", (d, d)),
+            (p + "attn.bo", (d,)),
+            (p + "ln2.g", (d,)),
+            (p + "ln2.b", (d,)),
+            (p + "mlp.w1", (d, 4 * d)),
+            (p + "mlp.b1", (4 * d,)),
+            (p + "mlp.w2", (4 * d, d)),
+            (p + "mlp.b2", (d,)),
+        ]
+    specs += [("lnf.g", (d,)), ("lnf.b", (d,))]
+    return specs
+
+
+def init_params(cfg: GptConfig, key):
+    return common.init_from_specs(param_specs(cfg), key)
+
+
+def _attention(cfg: GptConfig, x, wqkv, bqkv, wo, bo, mm):
+    n, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = mm(x.reshape(n * t, d), wqkv, bqkv).reshape(n, t, 3, h, dh)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)  # (n, h, t, dh)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+    att = jnp.einsum("nhqd,nhkd->nhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = att - att.max(axis=-1, keepdims=True)
+    p = jnp.exp(att)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("nhqk,nhkd->nhqd", p, v).transpose(0, 2, 1, 3).reshape(n * t, d)
+    return mm(out, wo, bo).reshape(n, t, d)
+
+
+def forward(cfg: GptConfig, params, tokens, use_pallas: bool = False):
+    """Next-token logits. tokens: (N, seq) int32 -> (N, seq, vocab) f32.
+
+    The LM head is tied to tok_emb (saves vocab*d params and matches
+    standard practice for small LMs).
+    """
+    mm = pmm.matmul if use_pallas else ref.matmul_ref
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    n, t = tokens.shape
+    x = tok_emb[tokens] + pos_emb[None, :t]
+    for _ in range(cfg.n_layers):
+        ln1g, ln1b = next(it), next(it)
+        wqkv, bqkv, wo, bo = next(it), next(it), next(it), next(it)
+        ln2g, ln2b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+        h = common.layer_norm(x, ln1g, ln1b)
+        x = x + _attention(cfg, h, wqkv, bqkv, wo, bo, mm)
+        h = common.layer_norm(x, ln2g, ln2b)
+        d = cfg.d_model
+        h2 = mm(h.reshape(n * t, d), w1, b1, relu=True)
+        h2 = mm(h2, w2, b2).reshape(n, t, d)
+        x = x + h2
+    lnfg, lnfb = next(it), next(it)
+    x = common.layer_norm(x, lnfg, lnfb)
+    return ref.matmul_ref(x.reshape(n * t, cfg.d_model), tok_emb.T).reshape(
+        n, t, cfg.vocab
+    )
+
+
+def lm_loss(cfg: GptConfig, params, tokens, use_pallas: bool = False):
+    """Causal LM loss: predict tokens[:, 1:] from tokens[:, :-1]."""
+    logits = forward(cfg, params, tokens, use_pallas)
+    return common.cross_entropy(logits[:, :-1].reshape(-1, cfg.vocab),
+                                tokens[:, 1:].reshape(-1))

@@ -1,0 +1,97 @@
+"""AOT pipeline: manifest/artifact consistency and HLO-text round-trip.
+
+These tests run against the already-built ../artifacts directory (built by
+`make artifacts`); they skip if it does not exist yet rather than re-lower
+everything inside pytest.
+"""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_artifacts_exist_on_disk():
+    m = _manifest()
+    assert m["version"] == 1
+    assert len(m["artifacts"]) >= 15
+    for name, a in m["artifacts"].items():
+        path = os.path.join(ART, a["hlo"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_models_params_files_match_specs():
+    m = _manifest()
+    for name, model in m["models"].items():
+        path = os.path.join(ART, model["params_file"])
+        assert os.path.exists(path), name
+        expect = sum(int(np.prod(p["shape"])) for p in model["params"])
+        assert model["n_elements"] == expect
+        assert os.path.getsize(path) == 4 * expect, name
+
+
+def test_train_artifacts_have_loss_plus_grads_abi():
+    """Train artifacts must return (loss, grad_i...) with grad shapes equal
+    to param shapes in order — the ABI the rust coordinator assumes."""
+    m = _manifest()
+    for name, a in m["artifacts"].items():
+        if a["kind"] != "train":
+            continue
+        model = m["models"][a["model"]]
+        outs = a["outputs"]
+        assert outs[0]["shape"] == []  # scalar loss
+        grads = outs[1:]
+        assert len(grads) == len(model["params"]), name
+        for g, p in zip(grads, model["params"]):
+            assert g["shape"] == p["shape"], (name, p["name"])
+
+
+def test_params_bin_is_finite_f32():
+    m = _manifest()
+    model = m["models"]["vgg_tiny"]
+    raw = open(os.path.join(ART, model["params_file"]), "rb").read()
+    arr = np.frombuffer(raw, dtype="<f4")
+    assert arr.size == model["n_elements"]
+    assert np.isfinite(arr).all()
+    # He-init weights are non-degenerate
+    assert arr.std() > 1e-3
+
+
+def test_inputs_start_with_params_in_spec_order():
+    m = _manifest()
+    for name, a in m["artifacts"].items():
+        if not a.get("model") or a["kind"] == "sgd":
+            continue
+        model = m["models"][a["model"]]
+        for inp, p in zip(a["inputs"], model["params"]):
+            assert inp["shape"] == p["shape"], (name, p["name"])
+            assert inp["dtype"] == "f32"
+
+
+def test_hlo_text_reloads_through_xla_client():
+    """Round-trip the smallest train artifact through the python XLA client
+    (same HLO-text parser family the rust xla crate wraps)."""
+    m = _manifest()
+    import jax
+    from jax._src.lib import xla_client as xc
+
+    a = m["artifacts"]["matmul_native"]
+    text = open(os.path.join(ART, a["hlo"])).read()
+    # the HLO text parser lives behind the XlaComputation ctor
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the core signal).
+
+Hypothesis sweeps shapes/strides/blockings; every case asserts allclose
+against ref.py. Kernels run interpret=True (mandatory on CPU — see
+kernels/conv2d.py docstring).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as pconv
+from compile.kernels import matmul as pmm
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(5, 14),
+    cin=st.sampled_from([1, 3, 8, 13]),
+    cout=st.sampled_from([1, 4, 16]),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_valid_matches_ref(n, hw, cin, cout, k, stride, seed):
+    if hw < k:
+        hw = k
+    x = rand(seed, (n, hw, hw, cin))
+    w = rand(seed + 1, (k, k, cin, cout))
+    got = pconv.conv2d(x, w, stride=stride, padding="VALID")
+    want = ref.conv2d_ref(x, w, stride=stride, padding="VALID")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hw=st.integers(4, 12),
+    cin=st.sampled_from([2, 8]),
+    cout=st.sampled_from([4, 8]),
+    k=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_same_matches_ref(hw, cin, cout, k, seed):
+    x = rand(seed, (2, hw, hw, cin))
+    w = rand(seed + 1, (k, k, cin, cout))
+    got = pconv.conv2d(x, w, padding="SAME")
+    want = ref.conv2d_ref(x, w, padding="SAME")
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("boh,boc,bic", [(1, 1, 1), (2, 4, 2), (4, 16, 8), (8, 16, 8)])
+def test_conv2d_explicit_blockings_agree(boh, boc, bic):
+    """Any legal blocking must produce identical results (paper §2.2:
+    blocking changes the schedule, never the math)."""
+    x = rand(7, (2, 10, 10, 8))
+    w = rand(8, (3, 3, 8, 16))
+    want = ref.conv2d_ref(x, w)
+    got = pconv.conv2d(x, w, block_oh=boh, block_oc=boc, block_ic=bic)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv2d_1x1_kernel_is_pointwise_matmul():
+    x = rand(1, (2, 6, 6, 8))
+    w = rand(2, (1, 1, 8, 4))
+    got = pconv.conv2d(x, w)
+    want = jnp.einsum("nhwc,cd->nhwd", x, w[0, 0])
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv2d_rejects_channel_mismatch():
+    with pytest.raises(AssertionError):
+        pconv.conv2d(rand(0, (1, 5, 5, 4)), rand(1, (3, 3, 8, 4)))
+
+
+def test_conv2d_linearity():
+    """Convolution is linear in both arguments — a structural property the
+    blocked accumulation must preserve exactly."""
+    x1, x2 = rand(3, (1, 8, 8, 4)), rand(4, (1, 8, 8, 4))
+    w = rand(5, (3, 3, 4, 8))
+    lhs = pconv.conv2d(x1 + 2.0 * x2, w)
+    rhs = pconv.conv2d(x1, w) + 2.0 * pconv.conv2d(x2, w)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- choose_blocks
+
+@settings(max_examples=40, deadline=None)
+@given(
+    oh=st.integers(1, 64),
+    ow=st.integers(1, 64),
+    cin=st.sampled_from([3, 16, 64, 256, 512]),
+    cout=st.sampled_from([16, 64, 256, 1024]),
+    k=st.sampled_from([1, 3, 5, 7, 11]),
+)
+def test_choose_blocks_invariants(oh, ow, cin, cout, k):
+    boh, boc, bic = pconv.choose_blocks(oh, ow, cin, cout, k, k)
+    assert oh % boh == 0 and cout % boc == 0 and cin % bic == 0
+    assert 1 <= boh <= oh and 1 <= boc <= cout and 1 <= bic <= cin
+
+
+def test_choose_blocks_respects_budget():
+    """Selected tile must fit the stated VMEM budget (double-buffered),
+    mirroring the paper's BS < Size_cache constraint."""
+    oh, ow, cin, cout, k = 32, 32, 256, 512, 3
+    boh, boc, _ = pconv.choose_blocks(oh, ow, cin, cout, k, k)
+    bs = 4 * 2 * (boh * ow * boc + (boh + k - 1) * (ow + k - 1) * cin
+                  + k * k * cin * boc)
+    assert bs <= pconv.VMEM_BUDGET
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    relu=st.booleans(),
+    with_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, relu, with_bias, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    bias = rand(seed + 2, (n,)) if with_bias else None
+    got = pmm.matmul(x, w, bias, relu)
+    want = ref.matmul_ref(x, w, bias, relu)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(1, 1, 1), (8, 8, 16), (128, 128, 512)])
+def test_matmul_blockings_agree(bm, bn, bk):
+    x, w = rand(11, (32, 48)), rand(12, (48, 24))
+    got = pmm.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), **TOL)
+
+
+def test_matmul_relu_clamps_negatives():
+    x = -jnp.ones((4, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    out = pmm.matmul(x, w, relu=True)
+    assert (np.asarray(out) == 0.0).all()
+
+
+# ------------------------------------------------------ grad-path oracles
+
+def test_conv_backprop_and_wtgrad_consistent_with_autodiff():
+    """The §2.1 claim: bprop and wt-grad are the same 7-loop with swapped
+    operands. Check our two oracle entry points against jax autodiff."""
+    x = rand(21, (2, 9, 9, 4))
+    w = rand(22, (3, 3, 4, 8))
+    y, vjp = jax.vjp(lambda a, b: ref.conv2d_ref(a, b), x, w)
+    dy = rand(23, y.shape)
+    dx, dw = vjp(dy)
+    np.testing.assert_allclose(
+        ref.conv2d_input_grad_ref(dy, w, x.shape), dx, **TOL)
+    np.testing.assert_allclose(
+        ref.conv2d_weight_grad_ref(x, dy, w.shape), dw, **TOL)

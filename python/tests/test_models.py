@@ -1,0 +1,155 @@
+"""L2 correctness: model zoo shapes, determinism, trainability, and the
+pallas-vs-native forward equivalence that underpins the kernel ablation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.models import cddnn, cnn, common, transformer
+
+
+def _data_cnn(cfg, n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, cfg.image, cfg.image, cfg.in_ch), jnp.float32)
+    y = jax.random.randint(k, (n,), 0, cfg.classes, jnp.int32)
+    return x, y
+
+
+@pytest.mark.parametrize("cfg", [cnn.VGG_TINY, cnn.OVERFEAT_TINY])
+def test_cnn_forward_shape(cfg):
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    x, _ = _data_cnn(cfg, 3)
+    logits = cnn.forward(cfg, params, x)
+    assert logits.shape == (3, cfg.classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("cfg", [cnn.VGG_TINY, cnn.OVERFEAT_TINY])
+def test_cnn_param_specs_match_init(cfg):
+    specs = cnn.param_specs(cfg)
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    assert len(specs) == len(params)
+    for (_, shape), p in zip(specs, params):
+        assert tuple(shape) == p.shape
+
+
+def test_cnn_pallas_forward_matches_native():
+    cfg = cnn.VGG_TINY
+    params = cnn.init_params(cfg, jax.random.PRNGKey(1))
+    x, _ = _data_cnn(cfg, 2, seed=1)
+    native = cnn.forward(cfg, params, x, use_pallas=False)
+    pallas = cnn.forward(cfg, params, x, use_pallas=True)
+    np.testing.assert_allclose(native, pallas, rtol=5e-5, atol=5e-5)
+
+
+def test_cnn_train_step_decreases_loss():
+    """A few SGD steps on a fixed batch must reduce the loss — the minimal
+    trainability signal for the artifact the rust trainer executes."""
+    cfg = cnn.VGG_TINY
+    step = jax.jit(M.make_cnn_train_step(cfg))
+    params = cnn.init_params(cfg, jax.random.PRNGKey(2))
+    x, y = _data_cnn(cfg, 8, seed=2)
+    first = None
+    for _ in range(20):
+        out = step(*params, x, y)
+        loss, grads = out[0], out[1:]
+        first = first if first is not None else float(loss)
+        params = [p - 0.02 * g for p, g in zip(params, grads)]
+    assert float(loss) < first - 0.05, (first, float(loss))
+
+
+def test_cnn_train_step_is_deterministic():
+    cfg = cnn.OVERFEAT_TINY
+    step = jax.jit(M.make_cnn_train_step(cfg))
+    params = cnn.init_params(cfg, jax.random.PRNGKey(3))
+    x, y = _data_cnn(cfg, 4, seed=3)
+    a = step(*params, x, y)
+    b = step(*params, x, y)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_cddnn_forward_and_train():
+    cfg = cddnn.CDDNN_TINY
+    params = cddnn.init_params(cfg, jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(4)
+    x = jax.random.normal(k, (16, cfg.in_dim), jnp.float32)
+    y = jax.random.randint(k, (16,), 0, cfg.senones, jnp.int32)
+    logits = cddnn.forward(cfg, params, x)
+    assert logits.shape == (16, cfg.senones)
+    step = jax.jit(M.make_cddnn_train_step(cfg))
+    out = step(*params, x, y)
+    assert len(out) == 1 + len(params)
+    l0 = float(out[0])
+    params2 = [p - 0.05 * g for p, g in zip(params, out[1:])]
+    l1 = float(step(*params2, x, y)[0])
+    assert l1 < l0
+
+
+def test_cddnn_paper_config_dimensions():
+    """Fig 7's network: 7 hidden x 2048, 429 in, 9304 senones."""
+    cfg = cddnn.CDDNN_FULL
+    specs = cddnn.param_specs(cfg)
+    assert len(specs) == 2 * (7 + 1)
+    assert specs[0][1] == (429, 2048)
+    assert specs[-2][1] == (2048, 9304)
+
+
+def test_gpt_forward_shape_and_causality():
+    cfg = transformer.GPT_TEST
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(5)
+    toks = jax.random.randint(k, (2, cfg.seq), 0, cfg.vocab, jnp.int32)
+    logits = transformer.forward(cfg, params, toks)
+    assert logits.shape == (2, cfg.seq, cfg.vocab)
+    # causality: changing a future token must not change past logits
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab)
+    logits2 = transformer.forward(cfg, params, toks2)
+    np.testing.assert_allclose(logits[:, :-1], logits2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_gpt_train_step_decreases_loss():
+    cfg = transformer.GPT_TEST
+    step = jax.jit(M.make_gpt_train_step(cfg))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jnp.tile(jnp.arange(cfg.seq, dtype=jnp.int32) % 7, (4, 1))
+    first = None
+    for _ in range(15):
+        out = step(*params, toks)
+        loss, grads = out[0], out[1:]
+        first = first if first is not None else float(loss)
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    assert float(loss) < first - 0.3, (first, float(loss))
+
+
+def test_gpt_param_count_formula():
+    for cfg in [transformer.GPT_TEST, transformer.GPT_MINI, transformer.GPT_LARGE]:
+        specs = transformer.param_specs(cfg)
+        total = sum(int(np.prod(s)) for _, s in specs)
+        assert total == cfg.n_params, (cfg.name, total, cfg.n_params)
+
+
+def test_gpt_large_is_100m_class():
+    assert transformer.GPT_LARGE.n_params >= 80_000_000
+
+
+def test_sgd_apply_matches_host_update():
+    n = 3
+    apply = jax.jit(M.make_sgd_apply(n))
+    ps = [jnp.ones((4,)) * i for i in range(n)]
+    gs = [jnp.ones((4,)) * 0.5 for _ in range(n)]
+    out = apply(*ps, *gs, jnp.float32(0.2))
+    for i, o in enumerate(out):
+        np.testing.assert_allclose(o, np.ones(4) * i - 0.1, rtol=1e-6)
+
+
+def test_cross_entropy_and_topk():
+    logits = jnp.array([[10.0, 0.0, 0.0], [0.0, 10.0, 0.0]], jnp.float32)
+    labels = jnp.array([0, 1], jnp.int32)
+    assert float(common.cross_entropy(logits, labels)) < 1e-3
+    assert float(common.accuracy_topk(logits, labels, 1)) == 1.0
+    wrong = jnp.array([1, 2], jnp.int32)
+    assert float(common.accuracy_topk(logits, wrong, 1)) == 0.0
+    assert float(common.accuracy_topk(logits, wrong, 3)) == 1.0

@@ -1,0 +1,84 @@
+//! Collectives microbenchmarks: part-reduce / part-broadcast / allreduce
+//! across engines (inline vs threaded), rank counts and message sizes,
+//! plus the lock-free command queue and the comm-thread round trip.
+
+use std::time::Duration;
+
+use pcl_dnn::collectives::{inline, threaded};
+use pcl_dnn::coordinator::{CommHandle, CommOp, CommRequest, CommandQueue};
+use pcl_dnn::util::bench::{bench, black_box, header};
+
+fn make(ranks: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..ranks).map(|r| (0..len).map(|i| (r * 31 + i) as f32).collect()).collect()
+}
+
+fn main() {
+    println!("=== collectives ===");
+    header();
+
+    for (ranks, len) in [(4usize, 1 << 10), (4, 1 << 16), (4, 1 << 20), (8, 1 << 16)] {
+        let label_len = if len >= 1 << 20 { format!("{}M", len >> 20) } else { format!("{}K", len >> 10) };
+        let base = make(ranks, len);
+        let mut bufs = base.clone();
+        bench(
+            &format!("inline allreduce r{ranks} x {label_len}"),
+            Duration::from_millis(300),
+            || {
+                bufs.clone_from(&base);
+                inline::allreduce(black_box(&mut bufs));
+            },
+        )
+        .report();
+        let mut bufs = base.clone();
+        bench(
+            &format!("threaded allreduce r{ranks} x {label_len}"),
+            Duration::from_millis(300),
+            || {
+                bufs.clone_from(&base);
+                threaded::allreduce(black_box(&mut bufs));
+            },
+        )
+        .report();
+        let mut bufs = base.clone();
+        bench(
+            &format!("inline part_reduce r{ranks} x {label_len}"),
+            Duration::from_millis(200),
+            || {
+                bufs.clone_from(&base);
+                inline::part_reduce(black_box(&mut bufs));
+            },
+        )
+        .report();
+    }
+
+    // lock-free queue throughput (single-thread push+pop pairs)
+    let q: CommandQueue<u64> = CommandQueue::new(1024);
+    bench("command_queue push+pop", Duration::from_millis(200), || {
+        q.push(black_box(7)).unwrap();
+        black_box(q.pop());
+    })
+    .report();
+
+    // comm-thread round trip (submit -> allreduce -> completion)
+    let h = CommHandle::spawn(64);
+    let payload = make(4, 1 << 12);
+    bench("comm_thread round-trip r4 x 4K", Duration::from_millis(300), || {
+        h.submit(CommRequest { id: 0, op: CommOp::AllReduce, bufs: payload.clone() }).unwrap();
+        black_box(h.wait_one());
+    })
+    .report();
+
+    // effective reduction bandwidth
+    let len = 1 << 20;
+    let base = make(4, len);
+    let mut bufs = base.clone();
+    let r = bench("allreduce bandwidth probe 4x4MB", Duration::from_millis(400), || {
+        bufs.clone_from(&base);
+        inline::allreduce(&mut bufs);
+    });
+    let bytes = 4.0 * (4 * len) as f64; // read+write both phases approx
+    println!(
+        "  -> effective allreduce throughput: {:.2} GB/s",
+        bytes / (r.mean_ns / 1e9) / 1e9
+    );
+}

@@ -1,0 +1,85 @@
+//! Fig 3 — single-node throughput. Two parts:
+//!  1. the analytic model for the paper's machines/topologies (regenerates
+//!     the figure's bars);
+//!  2. REAL measured throughput of the tiny AOT models on this CPU via the
+//!     PJRT runtime (scoring + training), across minibatch sizes — the
+//!     measured counterpart whose *shape* (flat vs MB; FP >> FP+BP) must
+//!     match the paper's.
+
+use std::time::Instant;
+
+use pcl_dnn::analytic::compute_model;
+use pcl_dnn::analytic::MachineSpec;
+use pcl_dnn::data::ImageDataset;
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::runtime::{HostTensor, Runtime};
+
+fn main() {
+    println!("=== fig3_single_node ===");
+    println!("\n# analytic model (E5-2698v3; paper: OF ~315 FP / ~90 FP+BP, VGG ~95 / ~30)");
+    let m = MachineSpec::e5_2698v3();
+    let mut t = Table::new(&["net", "mode", "MB16", "MB32", "MB64", "MB128", "MB256"]);
+    for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+        for (mode, tr) in [("FP", false), ("FP+BP", true)] {
+            let mut row = vec![net.name.clone(), mode.into()];
+            row.extend(
+                compute_model::fig3_row(&net, &m, tr).iter().map(|(_, v)| format!("{v:.0}")),
+            );
+            t.row(row);
+        }
+    }
+    t.print();
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n(artifacts not built; skipping measured part)");
+        return;
+    }
+    println!("\n# measured on this CPU (tiny models, PJRT runtime)");
+    let mut rt = Runtime::new("artifacts").expect("runtime");
+    let mut t = Table::new(&["model", "mode", "batch", "samples/s"]);
+    for model in ["vgg_tiny", "overfeat_tiny"] {
+        let params = rt.manifest().load_params(model).unwrap();
+        // scoring
+        let fwd = format!("{model}_fwd");
+        let spec = rt.manifest().artifact(&fwd).unwrap().clone();
+        let ds = ImageDataset::new(32, 3, 10, 0);
+        let b = spec.batch;
+        let batch = ds.batch(0, b);
+        let data = vec![HostTensor::f32(vec![b, 32, 32, 3], batch.images)];
+        rt.execute_with_params(&fwd, &params, &data).unwrap(); // warm
+        let t0 = Instant::now();
+        let iters = 12;
+        for _ in 0..iters {
+            rt.execute_with_params(&fwd, &params, &data).unwrap();
+        }
+        t.row(vec![
+            model.into(),
+            "FP".into(),
+            b.to_string(),
+            format!("{:.0}", (iters * b) as f64 / t0.elapsed().as_secs_f64()),
+        ]);
+        // training
+        let tr = format!("{model}_train");
+        let spec = rt.manifest().artifact(&tr).unwrap().clone();
+        let b = spec.batch;
+        let batch = ds.batch(0, b);
+        let data = vec![
+            HostTensor::f32(vec![b, 32, 32, 3], batch.images),
+            HostTensor::i32(vec![b], batch.labels),
+        ];
+        rt.execute_with_params(&tr, &params, &data).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            rt.execute_with_params(&tr, &params, &data).unwrap();
+        }
+        t.row(vec![
+            model.into(),
+            "FP+BP".into(),
+            b.to_string(),
+            format!("{:.0}", (iters * b) as f64 / t0.elapsed().as_secs_f64()),
+        ]);
+    }
+    t.print();
+    println!("(expected shape: FP sustains ~2.5-4x FP+BP, matching the paper's ratio)");
+}

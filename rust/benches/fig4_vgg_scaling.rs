@@ -1,0 +1,42 @@
+//! Fig 4 — VGG-A strong scaling on (simulated) Cori, MB 256 and 512.
+//! Regenerates the figure's two curves and times the simulator itself.
+
+use std::time::Duration;
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::util::bench::{bench, black_box, header};
+
+fn main() {
+    println!("=== fig4_vgg_scaling ===");
+    let p = Platform::cori();
+    let net = zoo::vgg_a();
+
+    header();
+    bench("simulate_training(vgg_a, 128 nodes)", Duration::from_millis(500), || {
+        black_box(simulate_training(
+            &net,
+            &p,
+            &SimConfig { nodes: 128, minibatch: 512, ..Default::default() },
+        ));
+    })
+    .report();
+
+    for mb in [256u64, 512] {
+        println!("\n# VGG-A on Cori, MB={mb} (paper: 90x @128 for MB=512 / 2510 img/s; 82% @64 for MB=256)");
+        let nodes = [1u64, 2, 4, 8, 16, 32, 64, 128];
+        let curve = scaling_curve(&net, &p, mb, &nodes, true);
+        let mut t = Table::new(&["nodes", "img/s", "speedup", "efficiency"]);
+        for pt in &curve {
+            t.row(vec![
+                pt.nodes.to_string(),
+                format!("{:.0}", pt.images_per_s),
+                format!("{:.1}x", pt.speedup),
+                format!("{:.0}%", 100.0 * pt.efficiency),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,43 @@
+//! Fig 6 — OverFeat + VGG-A scaling on (simulated) AWS EC2 10GbE with
+//! SR-IOV, MB=256. Paper @16 nodes: OverFeat 1027 img/s (11.9x), VGG-A
+//! 397 img/s (14.2x); VGG scales better thanks to higher flops/byte.
+
+use std::time::Duration;
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::util::bench::{bench, black_box, header};
+
+fn main() {
+    println!("=== fig6_aws_scaling ===");
+    let p = Platform::aws();
+    header();
+    bench("simulate_training(overfeat, 16 aws nodes)", Duration::from_millis(400), || {
+        black_box(simulate_training(
+            &zoo::overfeat_fast(),
+            &p,
+            &SimConfig { nodes: 16, minibatch: 256, ..Default::default() },
+        ));
+    })
+    .report();
+
+    let nodes = [1u64, 2, 4, 8, 16];
+    for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+        println!("\n# {} on AWS, MB=256", net.name);
+        let curve = scaling_curve(&net, &p, 256, &nodes, true);
+        let mut t = Table::new(&["nodes", "img/s", "speedup"]);
+        for pt in &curve {
+            t.row(vec![
+                pt.nodes.to_string(),
+                format!("{:.0}", pt.images_per_s),
+                format!("{:.1}x", pt.speedup),
+            ]);
+        }
+        t.print();
+    }
+    let of = scaling_curve(&zoo::overfeat_fast(), &p, 256, &[16], true)[0].speedup;
+    let vg = scaling_curve(&zoo::vgg_a(), &p, 256, &[16], true)[0].speedup;
+    println!("\n@16 nodes: OverFeat {of:.1}x vs VGG-A {vg:.1}x — VGG wins, as in the paper");
+}

@@ -1,0 +1,45 @@
+//! Fig 7 — CD-DNN (429 -> 7x2048 -> 9304 senones) scaling on (simulated)
+//! Endeavor FDR cluster, MB=1024 frames. Paper: 4600 f/s on one node,
+//! ~13K @4 nodes, 29.5K @16 (6.4x). The FC-dominated DNN is the hardest
+//! scaling case (highest comm-to-compute) — hybrid parallelism is what
+//! keeps it scaling at all (ablation below).
+
+use std::time::Duration;
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::util::bench::{bench, black_box, header};
+
+fn main() {
+    println!("=== fig7_cddnn_scaling ===");
+    let p = Platform::endeavor();
+    let net = zoo::cddnn_full();
+    header();
+    bench("simulate_training(cddnn, 16 nodes)", Duration::from_millis(400), || {
+        black_box(simulate_training(
+            &net,
+            &p,
+            &SimConfig { nodes: 16, minibatch: 1024, ..Default::default() },
+        ));
+    })
+    .report();
+
+    let nodes = [1u64, 2, 4, 8, 16];
+    println!("\n# CD-DNN on Endeavor, MB=1024 (hybrid FCs)");
+    let hybrid = scaling_curve(&net, &p, 1024, &nodes, true);
+    let data = scaling_curve(&net, &p, 1024, &nodes, false);
+    let mut t = Table::new(&["nodes", "hybrid f/s", "speedup", "pure-data f/s", "speedup"]);
+    for (h, d) in hybrid.iter().zip(&data) {
+        t.row(vec![
+            h.nodes.to_string(),
+            format!("{:.0}", h.images_per_s),
+            format!("{:.1}x", h.speedup),
+            format!("{:.0}", d.images_per_s),
+            format!("{:.1}x", d.speedup),
+        ]);
+    }
+    t.print();
+    println!("\n(paper's shape: DNN scales far worse than the CNNs; hybrid > pure data parallel)");
+}

@@ -1,0 +1,70 @@
+//! Bench + regeneration of the paper's analytic tables: Table 1, the §2.2
+//! blocking search, the §2.4 efficiency model and the §3.3 optimum. The
+//! timed portion is the brute-force search itself (the paper ran it as a
+//! standalone multithreaded program).
+
+use std::time::Duration;
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::analytic::{cache_blocking, comm_model, register_blocking, scaling};
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::models::Layer;
+use pcl_dnn::util::bench::{bench, black_box, header};
+
+fn main() {
+    println!("=== paper_tables bench ===");
+    header();
+
+    let c5 = zoo::overfeat_c5_paper();
+    let cfg = cache_blocking::SearchCfg::default();
+    bench("cache_blocking_search(C5, 128KB)", Duration::from_millis(400), || {
+        black_box(cache_blocking::search(&c5, &cfg));
+    })
+    .report();
+
+    let tpu = cache_blocking::SearchCfg { budget: 8 << 20, simd: 128, double_buffer: true, max_mb: 8 };
+    bench("cache_blocking_search(C5, 8MB VMEM)", Duration::from_millis(400), || {
+        black_box(cache_blocking::search(&c5, &tpu));
+    })
+    .report();
+
+    let net = zoo::vgg_a();
+    let p = Platform::table1_fdr();
+    bench("table1_row(vgg_a, FDR)", Duration::from_millis(300), || {
+        black_box(scaling::table1_row(&net, &p, 256));
+    })
+    .report();
+
+    let fc = Layer::fc("fc", 4096, 4096);
+    bench("optimal_groups(fc4096, N=64)", Duration::from_millis(200), || {
+        black_box(comm_model::optimal_groups(&fc, 256, 64, 1.0));
+    })
+    .report();
+
+    bench("register_cycle_model", Duration::from_millis(100), || {
+        black_box(register_blocking::cycle_model(12, 8, 3));
+    })
+    .report();
+
+    // ---- regenerated table ----
+    println!("\n# Table 1 (paper: 1336/336; OverFeat 3 (86)/2 (128); VGG-A 1 (256)/1 (256))");
+    let platforms = [Platform::table1_ethernet(), Platform::table1_fdr()];
+    let mut t = Table::new(&["", "Ethernet", "FDR"]);
+    t.row(vec![
+        "comp-to-comms".into(),
+        format!("{:.0}", platforms[0].comp_to_comms()),
+        format!("{:.0}", platforms[1].comp_to_comms()),
+    ]);
+    for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+        let cells: Vec<String> = platforms
+            .iter()
+            .map(|p| {
+                let (mb, n) = scaling::table1_row(&net, p, 256);
+                format!("{mb} ({n})")
+            })
+            .collect();
+        t.row(vec![net.name.clone(), cells[0].clone(), cells[1].clone()]);
+    }
+    t.print();
+}

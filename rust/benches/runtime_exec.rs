@@ -1,0 +1,85 @@
+//! PJRT runtime microbenchmarks: artifact execute latency, host<->literal
+//! conversion overhead, end-to-end coordinator step latency. These are the
+//! L3 hot-path numbers the §Perf pass optimizes.
+
+use std::time::Duration;
+
+use pcl_dnn::coordinator::{MicrobatchPlan, SgdConfig, SyncSgdCoordinator};
+use pcl_dnn::data::ImageDataset;
+use pcl_dnn::runtime::{HostTensor, Runtime};
+use pcl_dnn::util::bench::{bench, black_box, header};
+use pcl_dnn::util::rng::Rng;
+
+fn main() {
+    println!("=== runtime_exec ===");
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("(artifacts not built; skipping)");
+        return;
+    }
+    let mut rt = Runtime::new("artifacts").expect("runtime");
+    header();
+
+    // literal conversion overhead
+    let mut rng = Rng::new(0);
+    let mut big = vec![0.0f32; 1 << 20];
+    rng.fill_normal(&mut big, 1.0);
+    let t = HostTensor::f32(vec![1 << 20], big);
+    bench("to_literal 4MB f32", Duration::from_millis(200), || {
+        black_box(t.to_literal().unwrap());
+    })
+    .report();
+    let lit = t.to_literal().unwrap();
+    bench("from_literal 4MB f32", Duration::from_millis(200), || {
+        black_box(HostTensor::from_literal(&lit).unwrap());
+    })
+    .report();
+
+    // artifact execute latency (small kernels)
+    let x = HostTensor::f32(vec![256, 512], vec![0.5; 256 * 512]);
+    let w = HostTensor::f32(vec![512, 256], vec![0.25; 512 * 256]);
+    for name in ["matmul_native", "matmul_pallas"] {
+        rt.execute(name, &[x.clone(), w.clone()]).unwrap(); // compile+warm
+        let mut rt_ref = &mut rt;
+        bench(&format!("execute {name} 256x512x256"), Duration::from_millis(300), || {
+            black_box(rt_ref.execute(name, &[x.clone(), w.clone()]).unwrap());
+        })
+        .report();
+    }
+
+    // train-step execute (vgg_tiny micro-batch)
+    let params = rt.manifest().load_params("vgg_tiny").unwrap();
+    let spec = rt.manifest().artifact("vgg_tiny_train").unwrap().clone();
+    let b = spec.batch;
+    let ds = ImageDataset::new(32, 3, 10, 0);
+    let batch = ds.batch(0, b);
+    let data = vec![
+        HostTensor::f32(vec![b, 32, 32, 3], batch.images),
+        HostTensor::i32(vec![b], batch.labels),
+    ];
+    rt.execute_with_params("vgg_tiny_train", &params, &data).unwrap();
+    {
+        let rt_ref = &mut rt;
+        bench("execute vgg_tiny_train (micro=4)", Duration::from_millis(500), || {
+            black_box(rt_ref.execute_with_params("vgg_tiny_train", &params, &data).unwrap());
+        })
+        .report();
+    }
+
+    // full coordinator step (compute + queue + reduce + sgd)
+    let plan = MicrobatchPlan::new(16, 2, b).unwrap();
+    let mut coord = SyncSgdCoordinator::new(
+        "vgg_tiny_train",
+        params.clone(),
+        plan,
+        SgdConfig::default(),
+    );
+    let data2 = data.clone();
+    {
+        let rt_ref = &mut rt;
+        bench("coordinator step (2 workers, MB=16)", Duration::from_millis(800), || {
+            black_box(coord.step(rt_ref, &mut |_, _, _| data2.clone()).unwrap());
+        })
+        .report();
+    }
+    println!("\nmean PJRT execute latency since start: {:.2} ms", rt.mean_exec_ms());
+}

@@ -1,0 +1,249 @@
+//! Brute-force cache-blocking search (paper §2.2).
+//!
+//! "We write a multithreaded program to perform a brute-force state space
+//! search over all values of loop iterators in order to find the minimum
+//! B/F ratio for different 2-D convolutional layers, given a limit on the
+//! cache size." — this module is that program (std::thread-parallel), with the
+//! same constraint set:
+//!
+//! * block tensors: output `b1 = (mb_b, ofm_b, oh_b, ow_b)`, weights
+//!   `b2 = (ifm_b, ofm_b, kh_b, kw_b)` (shared `ofm_b`), input block
+//!   derived as `(mb_b, ifm_b, oh_b*s + kh_b - 1, ow_b*s + kw_b - 1)`;
+//! * `BS < Size_cache` with double-buffering headroom;
+//! * one dimension (`ofm_b`) constrained to a multiple of the SIMD width.
+//!
+//! The same search answers the TPU question when run with a VMEM-sized
+//! budget (see DESIGN.md §Hardware-Adaptation).
+
+
+
+
+use crate::models::{Layer, LayerKind};
+use crate::models::layers::SIZE_DATA;
+
+/// A candidate blocking and its figures of merit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Blocking {
+    pub mb_b: u64,
+    pub ofm_b: u64,
+    pub oh_b: u64,
+    pub ow_b: u64,
+    pub ifm_b: u64,
+    pub kh_b: u64,
+    pub kw_b: u64,
+    /// Working-set bytes (BS in the paper).
+    pub bytes: u64,
+    /// FLOPs computed per block residency (CPB).
+    pub flops: u64,
+    /// bytes / FLOPs — the minimized objective.
+    pub bf: f64,
+}
+
+/// Search configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchCfg {
+    /// Cache (or VMEM) budget in bytes.
+    pub budget: u64,
+    /// SIMD width the ofm block must be a multiple of (8 = AVX2; use 128
+    /// for the TPU lane dimension).
+    pub simd: u64,
+    /// Reserve half the budget for double buffering (paper: "with due
+    /// consideration for double buffering").
+    pub double_buffer: bool,
+    /// Largest minibatch block to consider.
+    pub max_mb: u64,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        SearchCfg { budget: 128 * 1024, simd: 8, double_buffer: true, max_mb: 1 }
+    }
+}
+
+fn divisors(n: u64) -> Vec<u64> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+fn simd_multiples(n: u64, simd: u64) -> Vec<u64> {
+    if n < simd {
+        return vec![n];
+    }
+    divisors(n).into_iter().filter(|d| d % simd == 0).collect()
+}
+
+/// Evaluate one candidate (returns None if over budget).
+fn eval(
+    cfg: &SearchCfg,
+    stride: u64,
+    b: (u64, u64, u64, u64, u64, u64, u64),
+) -> Option<Blocking> {
+    let (mb_b, ofm_b, oh_b, ow_b, ifm_b, kh_b, kw_b) = b;
+    let out_block = mb_b * ofm_b * oh_b * ow_b;
+    let wt_block = ifm_b * ofm_b * kh_b * kw_b;
+    let in_block = mb_b * ifm_b * (oh_b * stride + kh_b - 1) * (ow_b * stride + kw_b - 1);
+    let mut bytes = SIZE_DATA * (out_block + wt_block + in_block);
+    if cfg.double_buffer {
+        bytes *= 2;
+    }
+    if bytes > cfg.budget {
+        return None;
+    }
+    let flops = 2 * mb_b * ofm_b * oh_b * ow_b * ifm_b * kh_b * kw_b;
+    // Traffic per block residency: each resident tensor is read once from
+    // DRAM per residency (the §2.2 numerator).
+    let traffic = SIZE_DATA * (out_block + wt_block + in_block);
+    Some(Blocking {
+        mb_b,
+        ofm_b,
+        oh_b,
+        ow_b,
+        ifm_b,
+        kh_b,
+        kw_b,
+        bytes,
+        flops,
+        bf: traffic as f64 / flops as f64,
+    })
+}
+
+/// Exhaustive minimum-B/F search for one conv layer.
+pub fn search(layer: &Layer, cfg: &SearchCfg) -> Option<Blocking> {
+    let LayerKind::Conv { ifm, ofm, k, stride, out_h, out_w, .. } = layer.kind else {
+        return None;
+    };
+    let ofm_bs = simd_multiples(ofm, cfg.simd);
+    let oh_bs = divisors(out_h);
+    let ow_bs = divisors(out_w);
+    let ifm_bs = divisors(ifm);
+    let kh_bs = divisors(k);
+    let kw_bs = divisors(k);
+    let mb_bs: Vec<u64> = (1..=cfg.max_mb).collect();
+
+    // Multithreaded state-space search (the paper wrote "a multithreaded
+    // program"; we shard the (mb_b, ofm_b) plane across OS threads).
+    let mut outer: Vec<(u64, u64)> = Vec::new();
+    for &mb_b in &mb_bs {
+        for &ofm_b in &ofm_bs {
+            outer.push((mb_b, ofm_b));
+        }
+    }
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let chunk = outer.len().div_ceil(n_threads.max(1)).max(1);
+    let best = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for work in outer.chunks(chunk) {
+            let (oh_bs, ow_bs, ifm_bs, kh_bs, kw_bs) =
+                (&oh_bs, &ow_bs, &ifm_bs, &kh_bs, &kw_bs);
+            handles.push(scope.spawn(move || {
+                let mut local: Option<Blocking> = None;
+                for &(mb_b, ofm_b) in work {
+                    for &oh_b in oh_bs {
+                        for &ow_b in ow_bs {
+                            for &ifm_b in ifm_bs {
+                                for &kh_b in kh_bs {
+                                    for &kw_b in kw_bs {
+                                        if let Some(c) = eval(
+                                            cfg,
+                                            stride,
+                                            (mb_b, ofm_b, oh_b, ow_b, ifm_b, kh_b, kw_b),
+                                        ) {
+                                            if local
+                                                .map(|b| c.bf < b.bf)
+                                                .unwrap_or(true)
+                                            {
+                                                local = Some(c);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                local
+            }));
+        }
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("search thread panicked"))
+            .min_by(|a, b| a.bf.total_cmp(&b.bf))
+    });
+    best
+}
+
+/// §2.2 headline: run the search over every conv layer of a network and
+/// report (layer name, best blocking).
+pub fn search_network(
+    layers: &[Layer],
+    cfg: &SearchCfg,
+) -> Vec<(String, Option<Blocking>)> {
+    layers
+        .iter()
+        .filter(|l| l.is_conv())
+        .map(|l| (l.name.clone(), search(l, cfg)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{overfeat_c5_paper, overfeat_fast, vgg_a};
+
+    #[test]
+    fn c5_at_128kb_meets_paper_bound() {
+        // §2.2: "with 128 KB of cache per thread ... a B/F ratio of <=0.04
+        // can be maintained for most convolutional layers even for a
+        // minibatch size of 1".
+        let b = search(&overfeat_c5_paper(), &SearchCfg::default()).unwrap();
+        assert!(b.bf <= 0.04, "bf={}", b.bf);
+        assert!(b.bytes <= 128 * 1024);
+        assert_eq!(b.ofm_b % 8, 0, "SIMD constraint");
+    }
+
+    #[test]
+    fn most_conv_layers_meet_004_at_mb1() {
+        let cfg = SearchCfg::default();
+        for net in [overfeat_fast(), vgg_a()] {
+            let results = search_network(&net.layers, &cfg);
+            let ok = results
+                .iter()
+                .filter(|(_, b)| b.map(|b| b.bf <= 0.04).unwrap_or(false))
+                .count();
+            // "most" layers: all but the stem convs with tiny ifm counts.
+            assert!(ok * 3 >= results.len() * 2, "{}: {ok}/{}", net.name, results.len());
+        }
+    }
+
+    #[test]
+    fn bigger_budget_never_hurts() {
+        let small = search(&overfeat_c5_paper(), &SearchCfg::default()).unwrap();
+        let big = search(
+            &overfeat_c5_paper(),
+            &SearchCfg { budget: 1024 * 1024, ..SearchCfg::default() },
+        )
+        .unwrap();
+        assert!(big.bf <= small.bf);
+    }
+
+    #[test]
+    fn vmem_budget_tpu_variant_runs() {
+        // The TPU variant of the same search (DESIGN.md §Hardware-Adaptation):
+        // 128-wide lane dim, 8 MB VMEM budget.
+        let cfg = SearchCfg { budget: 8 << 20, simd: 128, max_mb: 4, double_buffer: true };
+        let b = search(&overfeat_c5_paper(), &cfg).unwrap();
+        assert!(b.bf < 0.01, "bf={}", b.bf);
+        assert_eq!(b.ofm_b % 128, 0);
+    }
+
+    #[test]
+    fn blocking_respects_budget_invariant() {
+        let cfg = SearchCfg::default();
+        for net in [overfeat_fast()] {
+            for (_, b) in search_network(&net.layers, &cfg) {
+                if let Some(b) = b {
+                    assert!(b.bytes <= cfg.budget);
+                }
+            }
+        }
+    }
+}

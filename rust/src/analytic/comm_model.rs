@@ -1,0 +1,212 @@
+//! Communication volume models for data, model, and hybrid parallelism
+//! (paper §3.1-3.3), including the closed-form optimal hybrid group count.
+
+
+
+use crate::models::{Layer, LayerKind};
+use crate::models::layers::SIZE_DATA;
+
+/// Parallelization strategy for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// Partition the minibatch; exchange weight gradients (§3.1).
+    Data,
+    /// Partition the feature maps; exchange activations (§3.2).
+    Model,
+    /// G data-parallel groups of N/G model-parallel nodes (§3.3).
+    Hybrid { groups: u64 },
+}
+
+/// Per-iteration *per-node* communication volume (bytes) under data
+/// parallelism: send partial weight gradients, receive updated weights.
+/// `overlap` in [0,1] is the send/recv overlap the software achieves.
+pub fn data_parallel_bytes(layer: &Layer, overlap: f64) -> f64 {
+    SIZE_DATA as f64 * layer.weight_elems() as f64 * (2.0 - overlap)
+}
+
+/// §3.1 headline ratio: algorithmic compute-to-communication of a
+/// data-parallel conv layer = `1.5 * out_w * out_h * MB_node` — independent
+/// of kernel size, feature counts and stride.
+pub fn data_parallel_comp_comm(layer: &Layer, mb_node: u64) -> Option<f64> {
+    match layer.kind {
+        LayerKind::Conv { out_h, out_w, .. } => Some(1.5 * (out_w * out_h * mb_node) as f64),
+        LayerKind::Fc { .. } => Some(1.5 * mb_node as f64),
+        _ => None,
+    }
+}
+
+/// Per-iteration total communication volume (bytes) under model
+/// parallelism for the forward+backward passes (§3.2): activations of the
+/// full minibatch cross the group twice.
+pub fn model_parallel_bytes(layer: &Layer, minibatch: u64) -> f64 {
+    2.0 * SIZE_DATA as f64 * (layer.in_elems() * minibatch) as f64
+}
+
+/// §3.2 decision rule: is model parallelism preferable to data parallelism
+/// for this layer? `ofm * k_w * k_h * (2 - overlap) > in_w * in_h * minibatch`.
+pub fn model_beats_data(layer: &Layer, minibatch: u64, overlap: f64) -> bool {
+    match layer.kind {
+        LayerKind::Conv { ofm, k, in_h, in_w, .. } => {
+            (ofm * k * k) as f64 * (2.0 - overlap) > (in_h * in_w * minibatch) as f64
+        }
+        LayerKind::Fc { out_dim, .. } => {
+            // k_w = k_h = in_w = in_h = 1: "whenever ofm > minibatch model
+            // parallelism is better" (overlap=1).
+            out_dim as f64 * (2.0 - overlap) > minibatch as f64
+        }
+        _ => false,
+    }
+}
+
+/// §3.3 hybrid volume per node group structure: G groups of N/G nodes.
+/// Returns total per-node bytes per iteration.
+pub fn hybrid_bytes(layer: &Layer, minibatch: u64, n: u64, g: u64, overlap: f64) -> f64 {
+    assert!(g >= 1 && g <= n && n % g == 0, "G={g} must divide N={n}");
+    let mb_group = minibatch as f64 / g as f64;
+    if g == 1 {
+        // pure model parallelism
+        return 2.0 * SIZE_DATA as f64 * layer.in_elems() as f64 * minibatch as f64;
+    }
+    let comms_model = 2.0 * SIZE_DATA as f64 * layer.in_elems() as f64 * mb_group;
+    let comms_data =
+        SIZE_DATA as f64 * layer.weight_elems() as f64 * (2.0 - overlap) * g as f64 / n as f64;
+    comms_model + comms_data
+}
+
+/// Closed-form §3.3 optimum for an FC layer (overlap=0 case the paper
+/// differentiates): `G* = sqrt(N * minibatch / ofm)`, compared against the
+/// boundary G=1 and clamped to divisors of N.
+pub fn optimal_groups(layer: &Layer, minibatch: u64, n: u64, overlap: f64) -> u64 {
+    let ofm = match layer.kind {
+        LayerKind::Fc { out_dim, .. } => out_dim,
+        LayerKind::Conv { ofm, .. } => ofm,
+        _ => return n,
+    };
+    let g_star = ((n * minibatch) as f64 / ofm as f64).sqrt();
+    // candidate divisors of N around G*, plus the G=1 boundary
+    let mut best = (1u64, hybrid_bytes(layer, minibatch, n, 1, overlap));
+    for g in (1..=n).filter(|g| n % g == 0) {
+        let bytes = hybrid_bytes(layer, minibatch, n, g, overlap);
+        if bytes < best.1 {
+            best = (g, bytes);
+        }
+    }
+    let _ = g_star; // continuous optimum; the discrete scan is authoritative
+    best.0
+}
+
+/// Continuous §3.3 optimum (for reporting/tests against the paper's G=3
+/// worked example).
+pub fn optimal_groups_continuous(ofm: u64, minibatch: u64, n: u64) -> f64 {
+    ((n * minibatch) as f64 / ofm as f64).sqrt()
+}
+
+/// Pick the best strategy for a layer (the paper's recipe: data-parallel
+/// convs, hybrid FCs with G chosen by the §3.3 optimum).
+pub fn best_strategy(layer: &Layer, minibatch: u64, n: u64, overlap: f64) -> Strategy {
+    if layer.is_conv() || !layer.is_weighted() {
+        return Strategy::Data;
+    }
+    if !model_beats_data(layer, minibatch, overlap) {
+        return Strategy::Data;
+    }
+    let g = optimal_groups(layer, minibatch, n, overlap);
+    if g == n {
+        Strategy::Data
+    } else if g == 1 {
+        Strategy::Model
+    } else {
+        Strategy::Hybrid { groups: g }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::overfeat_c5_paper;
+
+    fn fc4096() -> Layer {
+        Layer::fc("fc", 4096, 4096)
+    }
+
+    #[test]
+    fn comp_comm_independent_of_kernel_and_features() {
+        // §3.1: ratio depends only on output map size and MB/node.
+        let a = Layer::conv("a", 64, 128, 3, 1, 14, 12);
+        let b = Layer::conv("b", 512, 1024, 5, 1, 16, 12);
+        assert_eq!(
+            data_parallel_comp_comm(&a, 4),
+            data_parallel_comp_comm(&b, 4)
+        );
+    }
+
+    #[test]
+    fn paper_g3_worked_example() {
+        // §3.3 worked example: ofm=4096, minibatch=256, N=64. The paper
+        // states G=3 and volume 8*ifm*213; the formula it derives actually
+        // gives G* = sqrt(64*256/4096) = 2 and volume 8*ifm*(256/G +
+        // 4096*G/64) = 8*ifm*256 at G=2 (a tie with G=1 at overlap=0 —
+        // the paper's 213 appears to mix G=3 and G=2 terms). We assert
+        // the *derivation*: the continuous optimum, and that with
+        // overlap=1 (the paper's own software achieves overlap) hybrid
+        // strictly beats pure model parallelism.
+        let g_cont = optimal_groups_continuous(4096, 256, 64);
+        assert!((g_cont - 2.0).abs() < 1e-9, "{g_cont}");
+        let layer = fc4096();
+        // overlap=0: boundary tie — the scan must not pick anything worse.
+        let g0 = optimal_groups(&layer, 256, 64, 0.0);
+        assert!(
+            hybrid_bytes(&layer, 256, 64, g0, 0.0)
+                <= hybrid_bytes(&layer, 256, 64, 1, 0.0) + 1.0
+        );
+        // overlap=1: hybrid strictly wins, as §3.3 concludes.
+        let g1 = optimal_groups(&layer, 256, 64, 1.0);
+        assert!((2..=4).contains(&g1), "G={g1}");
+        let hybrid = hybrid_bytes(&layer, 256, 64, g1, 1.0);
+        let pure_model = hybrid_bytes(&layer, 256, 64, 1, 1.0);
+        assert!(hybrid < pure_model, "{hybrid} !< {pure_model}");
+        let ratio = hybrid / pure_model;
+        assert!((0.5..0.95).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn fc_prefers_model_when_ofm_exceeds_minibatch() {
+        // §3.2: "whenever ofm > minibatch model parallelism is better ...
+        // unless we have large minibatches (> 5000) as in ASR networks".
+        assert!(model_beats_data(&fc4096(), 256, 1.0));
+        assert!(!model_beats_data(&fc4096(), 5120, 1.0));
+    }
+
+    #[test]
+    fn conv_prefers_data_parallelism() {
+        // §3.2: convs have in_w*in_h*minibatch >> ofm*k*k.
+        let c5 = overfeat_c5_paper();
+        assert!(!model_beats_data(&c5, 64, 1.0));
+        assert_eq!(best_strategy(&c5, 64, 64, 1.0), Strategy::Data);
+    }
+
+    #[test]
+    fn large_kernel_small_minibatch_flips_to_model() {
+        // §3.2: "only for a large kernel size and small minibatch does
+        // model parallelism become better" for convs.
+        let big_k = Layer::conv("c", 512, 1024, 11, 1, 14, 4);
+        assert!(model_beats_data(&big_k, 1, 1.0));
+    }
+
+    #[test]
+    fn hybrid_bytes_matches_paper_arithmetic() {
+        // Paper: comm volume 8*ifm*(minibatch/G + ofm*G/N) at overlap=0.
+        let l = fc4096();
+        for g in [2u64, 4, 8] {
+            let got = hybrid_bytes(&l, 256, 64, g, 0.0);
+            let want = 8.0 * 4096.0 * (256.0 / g as f64 + 4096.0 * g as f64 / 64.0);
+            assert!((got - want).abs() / want < 1e-9, "g={g}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn strategy_for_fc_head_is_hybrid_or_model() {
+        let s = best_strategy(&fc4096(), 256, 64, 1.0);
+        assert!(matches!(s, Strategy::Hybrid { .. } | Strategy::Model), "{s:?}");
+    }
+}

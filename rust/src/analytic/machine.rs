@@ -1,0 +1,300 @@
+//! Machine and fabric constants for the paper's testbeds (§5).
+//!
+//! Peak FLOP/s is derived the way the paper derives it:
+//! `cores x AVX2-freq x SIMD-width(8 f32) x 2 FMA-ports x 2 FLOPs/FMA`.
+//! The Table 1 "comp-to-comms" column pins the constants: 2s9c E5-2666v3 +
+//! 10 GbE gives 1670 GF / 1.25 GB/s = 1336 FLOPs/byte, and 2s16c E5-2698v3
+//! + FDR gives 2355 GF / 7 GB/s = 336 — exactly the paper's numbers.
+
+
+
+use crate::models::Layer;
+
+/// CPU node description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineSpec {
+    pub name: String,
+    pub sockets: u64,
+    pub cores_per_socket: u64,
+    /// Sustained AVX frequency in GHz (what the FMA units actually run at).
+    pub freq_ghz: f64,
+    /// f32 lanes per vector (8 for AVX2).
+    pub simd_width: u64,
+    /// FMA issue ports per core (2 on Haswell).
+    pub fma_per_cycle: u64,
+    /// Achieved fraction of peak for convolutional layers (paper: "90%").
+    pub conv_efficiency: f64,
+    /// Achieved fraction of peak for fully-connected layers (paper: "70%").
+    pub fc_efficiency: f64,
+    /// Per-thread cache budget in bytes for blocking (paper §2.2: 128 KB).
+    pub cache_per_thread: u64,
+    /// Memory bandwidth GB/s (per node) — for B/F feasibility checks.
+    pub mem_bw_gbps: f64,
+    /// Whole-framework efficiency on top of per-kernel efficiency:
+    /// non-GEMM ops (pool/ReLU/softmax), layout transforms, and the data
+    /// layer. Calibrated so the Fig 3 model lands on the paper's measured
+    /// single-node throughputs (VGG-A ~30 img/s train, ~95 score).
+    pub framework_efficiency: f64,
+    /// Fixed per-layer-pass overhead (thread fork/join + barrier across
+    /// 32-64 threads, command submission). Amortized over the minibatch —
+    /// the §2.5 "load imbalance" penalty Fig 3 shows for small MB.
+    pub per_pass_overhead_s: f64,
+}
+
+impl MachineSpec {
+    /// Peak single-precision GFLOP/s of the whole node.
+    pub fn peak_gflops(&self) -> f64 {
+        let cores = (self.sockets * self.cores_per_socket) as f64;
+        cores * self.freq_ghz * self.simd_width as f64 * self.fma_per_cycle as f64 * 2.0
+    }
+
+    pub fn threads(&self) -> u64 {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// Achieved GFLOP/s for a given layer kind (paper's measured 90%/70%).
+    pub fn achieved_gflops(&self, layer: &Layer) -> f64 {
+        let eff = if layer.is_conv() { self.conv_efficiency } else { self.fc_efficiency };
+        self.peak_gflops() * eff
+    }
+
+    /// System bytes-per-FLOP ratio (§2.2 quotes "typically < 0.08").
+    pub fn system_bf_ratio(&self) -> f64 {
+        self.mem_bw_gbps / self.peak_gflops()
+    }
+
+    /// Dual-socket 16-core Xeon E5-2698v3 (Cori phase I node).
+    pub fn e5_2698v3() -> Self {
+        MachineSpec {
+            name: "2s16c E5-2698v3".into(),
+            sockets: 2,
+            cores_per_socket: 16,
+            freq_ghz: 2.3,
+            simd_width: 8,
+            fma_per_cycle: 2,
+            conv_efficiency: 0.90,
+            fc_efficiency: 0.70,
+            cache_per_thread: 128 * 1024,
+            mem_bw_gbps: 136.0, // 4ch DDR4-2133 x 2 sockets
+            framework_efficiency: 0.67,
+            per_pass_overhead_s: 3.0e-4,
+        }
+    }
+
+    /// Dual-socket 9-core Xeon E5-2666v3 @2.9 GHz (AWS c4.8xlarge).
+    pub fn e5_2666v3() -> Self {
+        MachineSpec {
+            name: "2s9c E5-2666v3".into(),
+            sockets: 2,
+            cores_per_socket: 9,
+            freq_ghz: 2.9,
+            simd_width: 8,
+            fma_per_cycle: 2,
+            conv_efficiency: 0.90,
+            fc_efficiency: 0.70,
+            cache_per_thread: 128 * 1024,
+            mem_bw_gbps: 118.0,
+            framework_efficiency: 0.67,
+            per_pass_overhead_s: 3.0e-4,
+        }
+    }
+
+    /// Dual-socket 14-core Xeon E5-2697v3 (Intel Endeavor; paper: "1.7
+    /// TFLOPS/s SP peak" — 28 cores x ~1.9 GHz AVX x 32).
+    pub fn e5_2697v3() -> Self {
+        MachineSpec {
+            name: "2s14c E5-2697v3".into(),
+            sockets: 2,
+            cores_per_socket: 14,
+            freq_ghz: 1.9,
+            simd_width: 8,
+            fma_per_cycle: 2,
+            conv_efficiency: 0.90,
+            fc_efficiency: 0.70,
+            cache_per_thread: 128 * 1024,
+            mem_bw_gbps: 136.0,
+            // ASR FC stacks are pure block-SGEMM: almost no non-GEMM work
+            // (paper: 4600 f/s = ~74% of peak on this machine).
+            framework_efficiency: 0.95,
+            per_pass_overhead_s: 1.0e-4,
+        }
+    }
+}
+
+/// Interconnect description: the α-β model plus a virtualization factor
+/// for multi-tenant clouds (§5.3: EC2 network is virtualized and slower).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    pub name: String,
+    /// Per-message latency (α), seconds.
+    pub latency_s: f64,
+    /// Per-node unidirectional injection bandwidth (β), bytes/s.
+    pub bw_bytes_per_s: f64,
+    /// Links are full-duplex: with send/recv overlap the effective
+    /// exchange bandwidth doubles (paper's overlap=1 assumption).
+    pub full_duplex: bool,
+    /// Software/virtualization multiplier on achieved bandwidth (1.0 =
+    /// bare metal; EC2 with SR-IOV + dedicated interrupt core ~0.8).
+    pub sw_efficiency: f64,
+    /// Per-collective software latency — the paper's §3.2 `SWlat` term
+    /// (MPI progress, command-queue handoff, rendezvous).
+    pub sw_latency_s: f64,
+    /// Fractional bandwidth loss per doubling of collective participants
+    /// (global-collective contention + OS jitter/stragglers; calibrated
+    /// against the paper's measured Fig 4 / Fig 6 / Fig 7 efficiencies).
+    pub congestion_per_doubling: f64,
+}
+
+impl FabricSpec {
+    /// Effective bandwidth for an overlapped exchange.
+    pub fn effective_bw(&self) -> f64 {
+        let duplex = if self.full_duplex { 2.0 } else { 1.0 };
+        self.bw_bytes_per_s * duplex * self.sw_efficiency
+    }
+
+    /// Effective bandwidth seen by an `n`-participant collective.
+    pub fn effective_bw_n(&self, n: u64) -> f64 {
+        if n <= 1 {
+            return self.effective_bw();
+        }
+        let doublings = (n as f64).log2();
+        self.effective_bw() / (1.0 + self.congestion_per_doubling * doublings)
+    }
+
+    /// Time to push `bytes` through the NIC once (single message).
+    pub fn point_to_point_s(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / (self.bw_bytes_per_s * self.sw_efficiency)
+    }
+
+    /// Cray Aries dragonfly (Cori phase I).
+    pub fn aries() -> Self {
+        FabricSpec {
+            name: "Cray Aries".into(),
+            latency_s: 1.5e-6,
+            bw_bytes_per_s: 8.0e9,
+            full_duplex: true,
+            sw_efficiency: 0.9,
+            sw_latency_s: 5.0e-5,
+            congestion_per_doubling: 0.65,
+        }
+    }
+
+    /// 56 Gb/s FDR InfiniBand.
+    pub fn fdr_infiniband() -> Self {
+        FabricSpec {
+            name: "56Gbps FDR".into(),
+            latency_s: 1.0e-6,
+            bw_bytes_per_s: 7.0e9,
+            full_duplex: true,
+            sw_efficiency: 0.9,
+            sw_latency_s: 1.5e-4,
+            congestion_per_doubling: 0.45,
+        }
+    }
+
+    /// Bare 10 Gigabit Ethernet.
+    pub fn ethernet_10g() -> Self {
+        FabricSpec {
+            name: "10Gbps Ethernet".into(),
+            latency_s: 2.0e-5,
+            bw_bytes_per_s: 1.25e9,
+            full_duplex: true,
+            sw_efficiency: 0.9,
+            sw_latency_s: 1.0e-4,
+            congestion_per_doubling: 0.30,
+        }
+    }
+
+    /// AWS EC2 10 GbE with SR-IOV ("enhanced networking") and a core
+    /// dedicated to NIC interrupts — the paper's §5.3 configuration. The
+    /// 30-40% interrupt-steering gain is already folded into sw_efficiency
+    /// relative to the un-tuned virtualized baseline.
+    pub fn aws_10g_sriov() -> Self {
+        FabricSpec {
+            name: "AWS 10GbE (SR-IOV)".into(),
+            latency_s: 5.0e-5,
+            bw_bytes_per_s: 1.25e9,
+            full_duplex: true,
+            sw_efficiency: 0.70,
+            sw_latency_s: 2.0e-4,
+            congestion_per_doubling: 0.20,
+        }
+    }
+}
+
+/// A named (machine, fabric) pair — the paper's evaluation platforms.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub machine: MachineSpec,
+    pub fabric: FabricSpec,
+}
+
+impl Platform {
+    /// NERSC Cori phase I (Fig 4/5).
+    pub fn cori() -> Self {
+        Platform { machine: MachineSpec::e5_2698v3(), fabric: FabricSpec::aries() }
+    }
+
+    /// AWS EC2 c4.8xlarge cluster (Fig 6).
+    pub fn aws() -> Self {
+        Platform { machine: MachineSpec::e5_2666v3(), fabric: FabricSpec::aws_10g_sriov() }
+    }
+
+    /// Intel Endeavor (Fig 7).
+    pub fn endeavor() -> Self {
+        Platform { machine: MachineSpec::e5_2697v3(), fabric: FabricSpec::fdr_infiniband() }
+    }
+
+    /// Table 1, column 1: 2s9c E5-2666v3 + bare 10 GbE.
+    pub fn table1_ethernet() -> Self {
+        Platform { machine: MachineSpec::e5_2666v3(), fabric: FabricSpec::ethernet_10g() }
+    }
+
+    /// Table 1, column 2: 2s16c E5-2698v3 + FDR.
+    pub fn table1_fdr() -> Self {
+        Platform { machine: MachineSpec::e5_2698v3(), fabric: FabricSpec::fdr_infiniband() }
+    }
+
+    /// The paper's comp-to-comms metric: peak FLOPs per wire byte.
+    pub fn comp_to_comms(&self) -> f64 {
+        self.machine.peak_gflops() * 1e9 / self.fabric.bw_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_match_paper_derivations() {
+        // E5-2697v3: paper quotes 1.7 TFLOPS/s SP peak.
+        let p = MachineSpec::e5_2697v3().peak_gflops();
+        assert!((1600.0..1800.0).contains(&p), "{p}");
+        // E5-2698v3: 32 cores x 2.3 x 32 = 2355 GF.
+        let p = MachineSpec::e5_2698v3().peak_gflops();
+        assert!((2300.0..2400.0).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn table1_comp_to_comms_row() {
+        // Table 1: 1336 (Ethernet platform) and 336 (FDR platform).
+        let eth = Platform::table1_ethernet().comp_to_comms();
+        let fdr = Platform::table1_fdr().comp_to_comms();
+        assert!((eth - 1336.0).abs() < 15.0, "{eth}");
+        assert!((fdr - 336.0).abs() < 5.0, "{fdr}");
+    }
+
+    #[test]
+    fn system_bf_below_paper_bound() {
+        // §2.2: "typically the system B/F ratio is less than 0.08".
+        for m in [MachineSpec::e5_2698v3(), MachineSpec::e5_2666v3()] {
+            assert!(m.system_bf_ratio() < 0.08, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn duplex_doubles_effective_bw() {
+        let f = FabricSpec::fdr_infiniband();
+        assert!(f.effective_bw() > f.bw_bytes_per_s);
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytic balance-equation engine (paper §2-§3).
+//!
+//! The paper's methodology is to "systematically develop detailed system
+//! balance equations, and solve them to obtain limits for performance".
+//! This module is that methodology, executable:
+//!
+//! * [`machine`] — CPU + fabric constants for the paper's testbeds.
+//! * [`compute_model`] — per-layer FLOPs/bytes/time and B/F ratios (§2.1-2.2).
+//! * [`cache_blocking`] — the brute-force blocking state-space search (§2.2).
+//! * [`register_blocking`] — the LS/FMA cycle-efficiency model (§2.4).
+//! * [`comm_model`] — data/model/hybrid communication volumes and the
+//!   optimal hybrid group count G* (§3.1-3.3).
+//! * [`scaling`] — the compute/communication overlap ("bubble") scaling
+//!   estimator and Table 1 (§3.1).
+
+pub mod cache_blocking;
+pub mod comm_model;
+pub mod compute_model;
+pub mod machine;
+pub mod register_blocking;
+pub mod scaling;
+
+pub use machine::{FabricSpec, MachineSpec, Platform};

@@ -1,0 +1,132 @@
+//! Single-threaded reference engine for part-reduce / part-broadcast.
+//!
+//! Used on the training hot path (the coordinator's comm thread calls
+//! these). The reduction order is a fixed left-to-right scan over ranks,
+//! shared with the [`super::threaded`] engine, so results are bitwise
+//! engine-independent.
+
+use super::topology::shard_range;
+
+/// part-reduce (§3.4, `MPI_Reduce_scatter`): after the call, rank `r`'s
+/// buffer holds the full sum over ranks on its own shard; other regions
+/// of each buffer are unspecified (they keep their pre-call content).
+pub fn part_reduce(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    debug_assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+    for r in 0..n {
+        let range = shard_range(r, n, len);
+        // owner-computes: acc = buf[0] + buf[1] + ... (fixed order)
+        for i in range {
+            let mut acc = bufs[0][i];
+            for q in 1..n {
+                acc += bufs[q][i];
+            }
+            bufs[r][i] = acc;
+        }
+    }
+}
+
+/// part-broadcast (§3.4, `MPI_Allgather`): every rank's owned shard is
+/// copied to all other ranks; afterwards all buffers are identical.
+pub fn part_broadcast(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    for r in 0..n {
+        let range = shard_range(r, n, len);
+        if range.is_empty() {
+            continue;
+        }
+        let (owner, rest) = split_one(bufs, r);
+        for (q, buf) in rest {
+            debug_assert_ne!(q, r);
+            buf[range.clone()].copy_from_slice(&owner[range.clone()]);
+        }
+    }
+}
+
+/// allreduce = part-reduce then part-broadcast (the data-parallel gradient
+/// exchange around the SGD update).
+pub fn allreduce(bufs: &mut [Vec<f32>]) {
+    part_reduce(bufs);
+    part_broadcast(bufs);
+}
+
+/// Borrow buffer `r` immutably and all others mutably.
+fn split_one(bufs: &mut [Vec<f32>], r: usize) -> (&Vec<f32>, Vec<(usize, &mut Vec<f32>)>) {
+    let (left, midright) = bufs.split_at_mut(r);
+    let (mid, right) = midright.split_at_mut(1);
+    let owner = &mid[0];
+    let mut rest: Vec<(usize, &mut Vec<f32>)> = Vec::with_capacity(bufs_len_hint(left, right));
+    for (i, b) in left.iter_mut().enumerate() {
+        rest.push((i, b));
+    }
+    for (i, b) in right.iter_mut().enumerate() {
+        rest.push((r + 1 + i, b));
+    }
+    (owner, rest)
+}
+
+fn bufs_len_hint(a: &[Vec<f32>], b: &[Vec<f32>]) -> usize {
+    a.len() + b.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn part_reduce_owner_shards_hold_sums() {
+        let mut bufs = vec![vec![1.0f32; 10], vec![2.0; 10], vec![4.0; 10]];
+        part_reduce(&mut bufs);
+        for r in 0..3 {
+            for i in shard_range(r, 3, 10) {
+                assert_eq!(bufs[r][i], 7.0);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_makes_buffers_identical() {
+        let mut bufs: Vec<Vec<f32>> =
+            (0..4).map(|r| (0..17).map(|i| (r * 17 + i) as f32).collect()).collect();
+        part_reduce(&mut bufs);
+        part_broadcast(&mut bufs);
+        for r in 1..4 {
+            assert_eq!(bufs[0], bufs[r]);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let mut bufs = vec![vec![3.0f32, -1.0, 2.5]];
+        let orig = bufs.clone();
+        allreduce(&mut bufs);
+        assert_eq!(bufs, orig);
+    }
+
+    #[test]
+    fn fixed_order_association() {
+        // The sum must be computed as ((b0 + b1) + b2) exactly.
+        let vals = [1.0e8f32, 1.0, -1.0e8];
+        let mut bufs: Vec<Vec<f32>> = vals.iter().map(|&v| vec![v]).collect();
+        part_reduce(&mut bufs);
+        let expect = ((vals[0] + vals[1]) + vals[2]) as f32;
+        assert_eq!(bufs[0][0], expect);
+    }
+
+    #[test]
+    fn handles_len_smaller_than_ranks() {
+        let mut bufs: Vec<Vec<f32>> = (0..5).map(|r| vec![r as f32, 1.0]).collect();
+        allreduce(&mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &vec![10.0, 5.0]);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Real (in-process) implementations of the paper's communication
+//! primitives (§3.4): **part-reduce** (reduce-scatter) and
+//! **part-broadcast** (allgather), plus allreduce compositions.
+//!
+//! These run over shared-memory "ranks" — the in-process stand-in for MPI
+//! ranks (DESIGN.md hardware substitutions). Two engines produce
+//! *bit-identical* results:
+//!
+//! * [`inline`] — single-threaded recursive-halving/doubling, used on the
+//!   training path (deterministic, allocation-light);
+//! * [`threaded`] — the same butterfly executed by one OS thread per rank
+//!   with barrier rounds, used by the collectives bench and to validate
+//!   that the algorithm parallelizes.
+//!
+//! Determinism matters: synchronous SGD's "distributed = serial" claim
+//! (Fig 5) requires a reduction order that does not depend on thread
+//! scheduling. Both engines reduce each owned shard by a fixed
+//! left-to-right scan over rank order (owner-computes direct
+//! reduce-scatter — the natural algorithm over shared memory; the
+//! butterfly/ring step structure only changes *cost*, which is what the
+//! netsim α-β models account for on the simulated wire).
+
+pub mod inline;
+pub mod threaded;
+pub mod topology;
+
+pub use inline::{allreduce, part_broadcast, part_reduce};
+pub use topology::{shard_range, GroupTopology};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_bufs(ranks: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..ranks)
+            .map(|r| (0..len).map(|i| ((r * 31 + i * 7) % 97) as f32 * 0.5 - 10.0).collect())
+            .collect()
+    }
+
+    fn expected_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let len = bufs[0].len();
+        (0..len).map(|i| bufs.iter().map(|b| b[i]).sum()).collect()
+    }
+
+    #[test]
+    fn inline_and_threaded_engines_agree_bitwise() {
+        for ranks in [2usize, 4, 8] {
+            for len in [8usize, 64, 1000] {
+                let mut a = make_bufs(ranks, len);
+                let mut b = a.clone();
+                inline::allreduce(&mut a);
+                threaded::allreduce(&mut b);
+                assert_eq!(a, b, "ranks={ranks} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        let mut bufs = make_bufs(4, 100);
+        let want = expected_sum(&bufs);
+        inline::allreduce(&mut bufs);
+        for (r, b) in bufs.iter().enumerate() {
+            for (i, (&got, &w)) in b.iter().zip(want.iter()).enumerate() {
+                assert!((got - w).abs() <= 1e-4 * w.abs().max(1.0), "rank {r} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn part_reduce_then_broadcast_equals_allreduce() {
+        let mut a = make_bufs(8, 123);
+        let mut b = a.clone();
+        inline::allreduce(&mut a);
+        inline::part_reduce(&mut b);
+        inline::part_broadcast(&mut b);
+        assert_eq!(a, b);
+    }
+}

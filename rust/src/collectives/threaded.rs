@@ -1,0 +1,154 @@
+//! Multi-threaded engine: one OS thread per rank, same owner-computes
+//! algorithm and reduction order as [`super::inline`], so results are
+//! bitwise identical. Phases are separated by a barrier, mirroring the
+//! step structure a real multi-node reduce-scatter/allgather would have.
+//!
+//! Safety model: within a phase every thread writes only its own shard
+//! rows (disjoint index ranges) and reads regions no thread writes in
+//! that phase; phases are separated by `std::sync::Barrier`.
+
+use std::sync::Barrier;
+
+use super::topology::shard_range;
+
+/// Shared-pointer wrapper so scoped threads can address the rank buffers.
+/// Disjointness of writes is guaranteed by the shard layout.
+struct SharedBufs {
+    ptrs: Vec<*mut f32>,
+    len: usize,
+}
+unsafe impl Sync for SharedBufs {}
+
+impl SharedBufs {
+    fn new(bufs: &mut [Vec<f32>]) -> Self {
+        let len = bufs.first().map_or(0, |b| b.len());
+        assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+        SharedBufs { ptrs: bufs.iter_mut().map(|b| b.as_mut_ptr()).collect(), len }
+    }
+
+    /// Read element `i` of rank `q`'s buffer.
+    ///
+    /// # Safety
+    /// Caller must ensure no concurrent writer of `(q, i)` in this phase.
+    unsafe fn get(&self, q: usize, i: usize) -> f32 {
+        *self.ptrs[q].add(i)
+    }
+
+    /// Write element `i` of rank `q`'s buffer.
+    ///
+    /// # Safety
+    /// Caller must ensure exclusive access to `(q, i)` in this phase.
+    unsafe fn set(&self, q: usize, i: usize, v: f32) {
+        *self.ptrs[q].add(i) = v;
+    }
+}
+
+/// Threaded part-reduce: rank threads reduce their own shard in the fixed
+/// left-to-right order.
+pub fn part_reduce(bufs: &mut [Vec<f32>]) {
+    run(bufs, true, false);
+}
+
+/// Threaded part-broadcast.
+pub fn part_broadcast(bufs: &mut [Vec<f32>]) {
+    run(bufs, false, true);
+}
+
+/// Threaded allreduce (reduce phase, barrier, broadcast phase).
+pub fn allreduce(bufs: &mut [Vec<f32>]) {
+    run(bufs, true, true);
+}
+
+fn run(bufs: &mut [Vec<f32>], reduce: bool, broadcast: bool) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let shared = SharedBufs::new(bufs);
+    let len = shared.len;
+    let barrier = Barrier::new(n);
+    std::thread::scope(|scope| {
+        for r in 0..n {
+            let shared = &shared;
+            let barrier = &barrier;
+            scope.spawn(move || {
+                let range = shard_range(r, n, len);
+                if reduce {
+                    // Phase 1: every thread writes ONLY its own shard range
+                    // of its OWN buffer; reads of other buffers hit index
+                    // ranges nobody writes in this phase... except other
+                    // owners writing their own shard of their own buffer —
+                    // which this thread never reads (it reads shard r of
+                    // all buffers; thread q writes shard q of buffer q).
+                    // shard r of buffer q (q != r) is read-only everywhere.
+                    // shard r of buffer r is written by this thread only.
+                    for i in range.clone() {
+                        let mut acc = unsafe { shared.get(0, i) };
+                        for q in 1..n {
+                            acc += unsafe { shared.get(q, i) };
+                        }
+                        unsafe { shared.set(r, i, acc) };
+                    }
+                }
+                // Wait: hazard between thread r reading buf[r][shard r]
+                // (phase 1 result) and thread q writing buf[r][shard q]
+                // (phase 2) is WAW/RAW-free only across the barrier.
+                barrier.wait();
+                if broadcast {
+                    // Phase 2: thread r writes shard r into ALL buffers;
+                    // ranges are disjoint across threads.
+                    for q in 0..n {
+                        if q == r {
+                            continue;
+                        }
+                        for i in range.clone() {
+                            let v = unsafe { shared.get(r, i) };
+                            unsafe { shared.set(q, i, v) };
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+// Aliasing argument, phase 1: thread r reads shard r of every buffer and
+// writes shard r of buffer r; thread q writes shard q of buffer q. Shards
+// are disjoint index ranges, so no location is concurrently written and
+// read. Phase 2: thread r writes shard r of all buffers and reads shard r
+// of buffer r — again disjoint across threads. `super::tests` verifies
+// bitwise equality with the single-threaded engine.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threaded_allreduce_correct_sums() {
+        let mut bufs: Vec<Vec<f32>> =
+            (0..8).map(|r| (0..257).map(|i| (r + i) as f32).collect()).collect();
+        let want: Vec<f32> =
+            (0..257).map(|i| (0..8).map(|r| (r + i) as f32).sum()).collect();
+        allreduce(&mut bufs);
+        for b in &bufs {
+            assert_eq!(b, &want);
+        }
+    }
+
+    #[test]
+    fn two_ranks_small_buffer() {
+        let mut bufs = vec![vec![1.0f32], vec![2.0f32]];
+        allreduce(&mut bufs);
+        assert_eq!(bufs, vec![vec![3.0], vec![3.0]]);
+    }
+
+    #[test]
+    fn reduce_only_leaves_other_shards_untouched() {
+        let mut bufs = vec![vec![1.0f32; 4], vec![10.0; 4]];
+        part_reduce(&mut bufs);
+        // rank 0 owns [0,2), rank 1 owns [2,4)
+        assert_eq!(bufs[0][..2], [11.0, 11.0]);
+        assert_eq!(bufs[0][2..], [1.0, 1.0]); // untouched
+        assert_eq!(bufs[1][2..], [11.0, 11.0]);
+    }
+}

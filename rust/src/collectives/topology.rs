@@ -1,0 +1,154 @@
+//! Shard layout and hybrid group topology (paper §3.3).
+
+
+use std::ops::Range;
+
+/// Contiguous balanced shard of `len` elements owned by `rank` of `n`.
+/// The first `len % n` ranks take one extra element.
+pub fn shard_range(rank: usize, n: usize, len: usize) -> Range<usize> {
+    assert!(rank < n, "rank {rank} out of {n}");
+    let base = len / n;
+    let rem = len % n;
+    let start = rank * base + rank.min(rem);
+    let extra = usize::from(rank < rem);
+    start..start + base + extra
+}
+
+/// Hybrid parallelism topology: `nodes` workers arranged as `groups`
+/// data-parallel replicas of `nodes/groups`-way model-parallel groups.
+/// Workers within a group hold disjoint feature shards; corresponding
+/// ranks across groups hold replicas (§3.3: "nodes within a group follow
+/// a model-parallelism regime while corresponding nodes across node
+/// groups follow a data-parallelism regime").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupTopology {
+    pub nodes: usize,
+    pub groups: usize,
+}
+
+impl GroupTopology {
+    pub fn new(nodes: usize, groups: usize) -> Self {
+        assert!(groups >= 1 && groups <= nodes, "G={groups} N={nodes}");
+        assert_eq!(nodes % groups, 0, "G={groups} must divide N={nodes}");
+        GroupTopology { nodes, groups }
+    }
+
+    /// Pure data parallelism = N groups of 1.
+    pub fn data_parallel(nodes: usize) -> Self {
+        Self::new(nodes, nodes)
+    }
+
+    /// Pure model parallelism = 1 group of N.
+    pub fn model_parallel(nodes: usize) -> Self {
+        Self::new(nodes, 1)
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.nodes / self.groups
+    }
+
+    /// Which model-parallel group a worker belongs to.
+    pub fn group_of(&self, worker: usize) -> usize {
+        assert!(worker < self.nodes);
+        worker / self.group_size()
+    }
+
+    /// Rank of a worker within its model-parallel group.
+    pub fn rank_in_group(&self, worker: usize) -> usize {
+        worker % self.group_size()
+    }
+
+    /// Workers in a model-parallel group (they exchange activations).
+    pub fn group_members(&self, group: usize) -> Vec<usize> {
+        assert!(group < self.groups);
+        let gs = self.group_size();
+        (group * gs..(group + 1) * gs).collect()
+    }
+
+    /// Workers with the same in-group rank across groups (they exchange
+    /// gradients data-parallel-wise for their shared feature shard).
+    pub fn replica_set(&self, rank: usize) -> Vec<usize> {
+        assert!(rank < self.group_size());
+        (0..self.groups).map(|g| g * self.group_size() + rank).collect()
+    }
+
+    /// Global minibatch range computed by `group` (data-parallel split).
+    pub fn minibatch_shard(&self, group: usize, minibatch: usize) -> Range<usize> {
+        shard_range(group, self.groups, minibatch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_exactly() {
+        for n in 1..12usize {
+            for len in [0usize, 1, 7, 64, 1001] {
+                let mut total = 0;
+                let mut next = 0;
+                for r in 0..n {
+                    let s = shard_range(r, n, len);
+                    assert_eq!(s.start, next, "contiguous");
+                    total += s.len();
+                    next = s.end;
+                }
+                assert_eq!(total, len);
+                assert_eq!(next, len);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_sizes_balanced() {
+        for r in 0..5 {
+            let s = shard_range(r, 5, 13);
+            assert!(s.len() == 2 || s.len() == 3);
+        }
+    }
+
+    #[test]
+    fn groups_partition_workers() {
+        let t = GroupTopology::new(16, 4);
+        assert_eq!(t.group_size(), 4);
+        let mut seen = vec![false; 16];
+        for g in 0..4 {
+            for w in t.group_members(g) {
+                assert_eq!(t.group_of(w), g);
+                assert!(!seen[w]);
+                seen[w] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn replica_sets_cross_groups() {
+        let t = GroupTopology::new(8, 4); // groups of 2
+        assert_eq!(t.replica_set(0), vec![0, 2, 4, 6]);
+        assert_eq!(t.replica_set(1), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn degenerate_topologies() {
+        let dp = GroupTopology::data_parallel(8);
+        assert_eq!(dp.group_size(), 1);
+        let mp = GroupTopology::model_parallel(8);
+        assert_eq!(mp.groups, 1);
+        assert_eq!(mp.group_size(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn invalid_group_count_panics() {
+        GroupTopology::new(8, 3);
+    }
+
+    #[test]
+    fn minibatch_shards_cover() {
+        let t = GroupTopology::new(8, 4);
+        let total: usize = (0..4).map(|g| t.minibatch_shard(g, 256).len()).sum();
+        assert_eq!(total, 256);
+    }
+}

@@ -1,0 +1,175 @@
+//! The synchronous-SGD leader: drives K logical workers through one
+//! minibatch step, exchanges gradients through the dedicated comm thread,
+//! and applies SGD per tensor as reductions complete.
+//!
+//! Semantics (the paper's core claim): the K-worker execution is
+//! *equivalent to the serial implementation* — same samples, same
+//! averaged gradient, same update — so convergence is identical (Fig 5).
+//! Workers here are logical ranks executing on the single PJRT CPU
+//! client in turn; gradient exchange and SGD run on the comm thread and
+//! overlap the remaining workers' compute via per-tensor pipelining
+//! (submit-and-forget through the lock-free queue).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+
+use super::comm_thread::{CommHandle, CommOp, CommRequest};
+use super::sharding::MicrobatchPlan;
+use super::state::{ParamStore, SgdConfig};
+
+/// Per-step telemetry.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    pub loss: f64,
+    pub compute_s: f64,
+    /// time the leader was blocked waiting on the comm thread
+    pub comm_wait_s: f64,
+    pub update_s: f64,
+    pub executions: u64,
+}
+
+/// Leader + worker pool + comm thread for one model.
+pub struct SyncSgdCoordinator {
+    pub params: ParamStore,
+    pub plan: MicrobatchPlan,
+    comm: CommHandle,
+    artifact: String,
+}
+
+impl SyncSgdCoordinator {
+    /// `artifact` is a train-kind artifact; params must match its ABI.
+    pub fn new(
+        artifact: &str,
+        params: Vec<Vec<f32>>,
+        plan: MicrobatchPlan,
+        sgd: SgdConfig,
+    ) -> Self {
+        let depth = (params.len() * 2).next_power_of_two();
+        SyncSgdCoordinator {
+            params: ParamStore::new(params, sgd),
+            plan,
+            comm: CommHandle::spawn(depth),
+            artifact: artifact.to_string(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.plan.workers
+    }
+
+    /// Run one synchronous step. `data_for(worker, micro_index,
+    /// global_sample_start)` supplies the non-parameter inputs of one
+    /// microbatch (e.g. images+labels).
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        data_for: &mut dyn FnMut(usize, usize, usize) -> Vec<HostTensor>,
+    ) -> Result<StepStats> {
+        let n_tensors = self.params.n_tensors();
+        let workers = self.plan.workers;
+        let mut stats = StepStats::default();
+
+        // -------- compute phase: every worker, every microbatch --------
+        let t0 = Instant::now();
+        // per-worker accumulated gradient sums, [worker][tensor]
+        let mut grads: Vec<Vec<Vec<f32>>> = (0..workers)
+            .map(|_| self.params.tensors.iter().map(|t| vec![0.0f32; t.len()]).collect())
+            .collect();
+        let mut loss_sum = 0.0f64;
+        // params are constant within the step: convert to literals ONCE
+        // and reuse across all workers x microbatches (§Perf: removes the
+        // dominant host-side copy for large models).
+        let param_lits = rt.params_to_literals(&self.artifact, &self.params.tensors)?;
+        // reused gradient read buffer: copy_raw_to into scratch instead of
+        // allocating a fresh Vec per gradient per microbatch (§Perf)
+        let mut scratch: Vec<Vec<f32>> =
+            self.params.tensors.iter().map(|t| vec![0.0f32; t.len()]).collect();
+        for w in 0..workers {
+            for (m, &start) in self.plan.per_worker[w].clone().iter().enumerate() {
+                let data = data_for(w, m, start);
+                let outs = rt
+                    .execute_raw(&self.artifact, &param_lits, &data)
+                    .with_context(|| format!("worker {w} micro {m}"))?;
+                ensure!(outs.len() == 1 + n_tensors, "train artifact ABI mismatch");
+                loss_sum += outs[0].get_first_element::<f32>()? as f64;
+                for t in 0..n_tensors {
+                    let s = &mut scratch[t];
+                    outs[1 + t].copy_raw_to(s.as_mut_slice())?;
+                    let acc = &mut grads[w][t];
+                    for (a, &v) in acc.iter_mut().zip(s.iter()) {
+                        *a += v;
+                    }
+                }
+                stats.executions += 1;
+            }
+        }
+        stats.compute_s = t0.elapsed().as_secs_f64();
+
+        // -------- exchange + update phase: per-tensor pipelining --------
+        // Regroup to per-tensor buffers and submit each tensor's exchange
+        // the moment it is assembled; apply SGD as completions arrive.
+        let total_micro = self.plan.total_micro() as f32;
+        let t1 = Instant::now();
+        let mut submitted = 0usize;
+        let mut completed = 0usize;
+        let mut update_s = 0.0f64;
+        // move out per-tensor: iterate tensors, stealing each worker's buf
+        for t in 0..n_tensors {
+            let bufs: Vec<Vec<f32>> =
+                grads.iter_mut().map(|per_w| std::mem::take(&mut per_w[t])).collect();
+            let mut req =
+                CommRequest { id: t as u64, op: CommOp::AllReduce, bufs };
+            // submit-and-forget; drain completions opportunistically if
+            // the queue is momentarily full (backpressure)
+            loop {
+                match self.comm.submit(req) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        req = back;
+                        if let Some(done) = self.comm.try_complete() {
+                            let tu = Instant::now();
+                            self.params.apply_tensor(
+                                done.id as usize,
+                                &done.bufs[0],
+                                total_micro,
+                            )?;
+                            update_s += tu.elapsed().as_secs_f64();
+                            completed += 1;
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }
+            submitted += 1;
+            // opportunistic completion processing (keeps queue shallow)
+            while let Some(done) = self.comm.try_complete() {
+                let tu = Instant::now();
+                self.params.apply_tensor(done.id as usize, &done.bufs[0], total_micro)?;
+                update_s += tu.elapsed().as_secs_f64();
+                completed += 1;
+            }
+        }
+        // wait out the tail
+        while completed < submitted {
+            let done = self.comm.wait_one().context("comm thread died")?;
+            let tu = Instant::now();
+            self.params.apply_tensor(done.id as usize, &done.bufs[0], total_micro)?;
+            update_s += tu.elapsed().as_secs_f64();
+            completed += 1;
+        }
+        self.params.step += 1;
+        stats.comm_wait_s = t1.elapsed().as_secs_f64() - update_s;
+        stats.update_s = update_s;
+        stats.loss = loss_sum / self.plan.total_micro() as f64;
+        Ok(stats)
+    }
+
+    /// Tear down the comm thread; returns commands it processed.
+    pub fn shutdown(self) -> u64 {
+        self.comm.shutdown()
+    }
+}

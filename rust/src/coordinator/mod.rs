@@ -1,0 +1,29 @@
+//! The synchronous-SGD coordinator — the paper's system contribution
+//! (PCL-DNN §4), in-process:
+//!
+//! * [`command_queue`] — the lock-free command queue through which the
+//!   compute path submits communication work to the **dedicated
+//!   communication thread** without blocking (submit-and-forget,
+//!   Vaidyanathan et al. 2015).
+//! * [`comm_thread`] — that dedicated thread: drains the queue, runs
+//!   part-reduce / part-broadcast over the worker gradient buffers, and
+//!   posts completions.
+//! * [`state`] — the parameter store + SGD optimizer (the update happens
+//!   here, between part-reduce and part-broadcast, exactly where §3.4
+//!   places it).
+//! * [`sharding`] — minibatch partitioning across workers/microbatches.
+//! * [`leader`] — the synchronous step loop tying workers, queue, and
+//!   state together, with per-tensor pipelining of reduce/update against
+//!   the remaining gradient traffic.
+
+pub mod command_queue;
+pub mod comm_thread;
+pub mod leader;
+pub mod sharding;
+pub mod state;
+
+pub use command_queue::{CommandQueue, PushError};
+pub use comm_thread::{CommHandle, CommOp, CommRequest};
+pub use leader::{StepStats, SyncSgdCoordinator};
+pub use sharding::MicrobatchPlan;
+pub use state::{ParamStore, SgdConfig};

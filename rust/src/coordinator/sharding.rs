@@ -1,0 +1,96 @@
+//! Minibatch partitioning: global minibatch -> workers -> fixed-size
+//! microbatches (the AOT artifacts have a fixed batch dimension, so
+//! workers run `global_mb / (workers * micro)` sequential executions and
+//! accumulate gradients locally before the collective — standard
+//! gradient accumulation, semantics identical to one big batch).
+
+use anyhow::{ensure, Result};
+
+/// The per-step execution plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MicrobatchPlan {
+    pub global_mb: usize,
+    pub workers: usize,
+    pub micro: usize,
+    /// microbatch start offsets per worker, each of length micro
+    pub per_worker: Vec<Vec<usize>>,
+}
+
+impl MicrobatchPlan {
+    /// Build the plan; requires `workers * micro` to divide `global_mb`.
+    pub fn new(global_mb: usize, workers: usize, micro: usize) -> Result<Self> {
+        ensure!(workers >= 1 && micro >= 1, "degenerate plan");
+        ensure!(
+            global_mb % (workers * micro) == 0,
+            "global minibatch {global_mb} not divisible by workers({workers}) x micro({micro})"
+        );
+        let per_w = global_mb / workers;
+        let per_worker = (0..workers)
+            .map(|w| (0..per_w / micro).map(|m| w * per_w + m * micro).collect())
+            .collect();
+        Ok(MicrobatchPlan { global_mb, workers, micro, per_worker })
+    }
+
+    /// Total microbatch executions per step.
+    pub fn total_micro(&self) -> usize {
+        self.global_mb / self.micro
+    }
+
+    /// Microbatches per worker.
+    pub fn micro_per_worker(&self) -> usize {
+        self.total_micro() / self.workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_global_batch_exactly() {
+        let p = MicrobatchPlan::new(16, 4, 2).unwrap();
+        let mut starts: Vec<usize> = p.per_worker.iter().flatten().copied().collect();
+        starts.sort_unstable();
+        assert_eq!(starts, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+        assert_eq!(p.total_micro(), 8);
+        assert_eq!(p.micro_per_worker(), 2);
+    }
+
+    #[test]
+    fn single_worker_sees_all() {
+        let p = MicrobatchPlan::new(16, 1, 4).unwrap();
+        assert_eq!(p.per_worker[0], vec![0, 4, 8, 12]);
+    }
+
+    #[test]
+    fn workers_get_disjoint_contiguous_ranges() {
+        let p = MicrobatchPlan::new(32, 4, 4).unwrap();
+        for (w, starts) in p.per_worker.iter().enumerate() {
+            for s in starts {
+                assert!(*s >= w * 8 && *s < (w + 1) * 8);
+            }
+        }
+    }
+
+    #[test]
+    fn same_data_different_worker_counts() {
+        // The union of sample indices is identical for any worker count —
+        // the precondition for Fig 5 equivalence.
+        let all = |workers| -> Vec<usize> {
+            let p = MicrobatchPlan::new(16, workers, 2).unwrap();
+            let mut v: Vec<usize> =
+                p.per_worker.iter().flatten().flat_map(|&s| s..s + 2).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(all(1), all(2));
+        assert_eq!(all(2), all(4));
+        assert_eq!(all(4), all(8));
+    }
+
+    #[test]
+    fn indivisible_rejected() {
+        assert!(MicrobatchPlan::new(10, 4, 2).is_err());
+        assert!(MicrobatchPlan::new(16, 3, 2).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Parameter store + SGD optimizer state.
+//!
+//! The update lives on the coordinator, not in the AOT graph: §3.4 puts
+//! SGD between part-reduce (gradient sums arrive) and part-broadcast
+//! (updated weights leave). Plain SGD (optional momentum) is the paper's
+//! setting — it changes no hyperparameters, so neither do we on the
+//! paper's workloads; Adam is available for the e2e transformer driver.
+
+use anyhow::{ensure, Result};
+
+/// Optimizer selection. The paper trains with vanilla synchronous SGD
+/// (its point is that NO optimizer/hyperparameter changes are needed to
+/// scale); Adam is provided for the e2e transformer driver, where plain
+/// SGD is a poor fit. Both run on the coordinator between part-reduce
+/// and part-broadcast.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Optimizer {
+    Sgd,
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Optimizer {
+    pub fn adam() -> Self {
+        Optimizer::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// SGD/optimizer hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub optimizer: Optimizer,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 0.02, momentum: 0.0, weight_decay: 0.0, optimizer: Optimizer::Sgd }
+    }
+}
+
+/// All model parameters as flat f32 tensors (manifest spec order).
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub tensors: Vec<Vec<f32>>,
+    velocity: Option<Vec<Vec<f32>>>,
+    /// Adam first/second-moment state, lazily allocated.
+    adam_m: Option<Vec<Vec<f32>>>,
+    adam_v: Option<Vec<Vec<f32>>>,
+    /// per-tensor update counts (Adam bias correction is per update)
+    tensor_steps: Vec<u64>,
+    pub cfg: SgdConfig,
+    /// monotone update counter (each tensor updated once per step)
+    pub step: u64,
+}
+
+impl ParamStore {
+    pub fn new(tensors: Vec<Vec<f32>>, cfg: SgdConfig) -> Self {
+        let zeros = |ts: &Vec<Vec<f32>>| -> Vec<Vec<f32>> {
+            ts.iter().map(|t| vec![0.0; t.len()]).collect()
+        };
+        let velocity = if cfg.momentum != 0.0 && cfg.optimizer == Optimizer::Sgd {
+            Some(zeros(&tensors))
+        } else {
+            None
+        };
+        let (adam_m, adam_v) = if matches!(cfg.optimizer, Optimizer::Adam { .. }) {
+            (Some(zeros(&tensors)), Some(zeros(&tensors)))
+        } else {
+            (None, None)
+        };
+        let n = tensors.len();
+        ParamStore {
+            tensors,
+            velocity,
+            adam_m,
+            adam_v,
+            tensor_steps: vec![0; n],
+            cfg,
+            step: 0,
+        }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Apply SGD to tensor `t` given its summed gradient over
+    /// `grad_scale_inv` microbatches (grad := grad_sum / grad_scale_inv).
+    pub fn apply_tensor(&mut self, t: usize, grad_sum: &[f32], grad_scale_inv: f32) -> Result<()> {
+        ensure!(t < self.tensors.len(), "tensor index {t} out of range");
+        let p = &mut self.tensors[t];
+        ensure!(p.len() == grad_sum.len(), "grad len {} != param len {}", grad_sum.len(), p.len());
+        let scale = 1.0 / grad_scale_inv;
+        let lr = self.cfg.lr;
+        let wd = self.cfg.weight_decay;
+        if let Optimizer::Adam { beta1, beta2, eps } = self.cfg.optimizer {
+            self.tensor_steps[t] += 1;
+            let k = self.tensor_steps[t] as f32;
+            let bc1 = 1.0 - beta1.powf(k);
+            let bc2 = 1.0 - beta2.powf(k);
+            let m = &mut self.adam_m.as_mut().expect("adam state")[t];
+            let v = &mut self.adam_v.as_mut().expect("adam state")[t];
+            for (((w, m), v), &gs) in p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(grad_sum)
+            {
+                let g = gs * scale + wd * *w;
+                *m = beta1 * *m + (1.0 - beta1) * g;
+                *v = beta2 * *v + (1.0 - beta2) * g * g;
+                let mh = *m / bc1;
+                let vh = *v / bc2;
+                *w -= lr * mh / (vh.sqrt() + eps);
+            }
+            return Ok(());
+        }
+        match &mut self.velocity {
+            None => {
+                for (w, &g) in p.iter_mut().zip(grad_sum) {
+                    let g = g * scale + wd * *w;
+                    *w -= lr * g;
+                }
+            }
+            Some(vel) => {
+                let m = self.cfg.momentum;
+                for ((w, v), &g) in p.iter_mut().zip(&mut vel[t]).zip(grad_sum) {
+                    let g = g * scale + wd * *w;
+                    *v = m * *v + g;
+                    *w -= lr * *v;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a full gradient set (tensor order).
+    pub fn apply_all(&mut self, grads: &[Vec<f32>], grad_scale_inv: f32) -> Result<()> {
+        ensure!(grads.len() == self.tensors.len(), "gradient count mismatch");
+        for t in 0..grads.len() {
+            self.apply_tensor(t, &grads[t], grad_scale_inv)?;
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    /// L2 norm over all parameters (drift probe for tests).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_update() {
+        let mut s = ParamStore::new(
+            vec![vec![1.0, 2.0]],
+            SgdConfig { lr: 0.5, momentum: 0.0, weight_decay: 0.0, optimizer: Optimizer::Sgd },
+        );
+        s.apply_all(&[vec![2.0, 4.0]], 2.0).unwrap(); // grads = [1, 2]
+        assert_eq!(s.tensors[0], vec![0.5, 1.0]);
+        assert_eq!(s.step, 1);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let cfg = SgdConfig { lr: 1.0, momentum: 0.5, ..SgdConfig::default() };
+        let mut s = ParamStore::new(vec![vec![0.0]], cfg);
+        s.apply_all(&[vec![1.0]], 1.0).unwrap(); // v=1, w=-1
+        s.apply_all(&[vec![1.0]], 1.0).unwrap(); // v=1.5, w=-2.5
+        assert!((s.tensors[0][0] + 2.5).abs() < 1e-6, "{}", s.tensors[0][0]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let cfg = SgdConfig { lr: 0.1, weight_decay: 0.1, ..SgdConfig::default() };
+        let mut s = ParamStore::new(vec![vec![10.0]], cfg);
+        s.apply_all(&[vec![0.0]], 1.0).unwrap();
+        assert!(s.tensors[0][0] < 10.0);
+    }
+
+    #[test]
+    fn adam_first_step_moves_by_lr() {
+        // bias-corrected Adam's first update is ~lr * sign(g)
+        let cfg = SgdConfig { lr: 0.1, momentum: 0.0, weight_decay: 0.0,
+                              optimizer: Optimizer::adam() };
+        let mut s = ParamStore::new(vec![vec![1.0, -1.0]], cfg);
+        s.apply_all(&[vec![3.0, -0.5]], 1.0).unwrap();
+        assert!((s.tensors[0][0] - (1.0 - 0.1)).abs() < 1e-3, "{}", s.tensors[0][0]);
+        assert!((s.tensors[0][1] - (-1.0 + 0.1)).abs() < 1e-3, "{}", s.tensors[0][1]);
+    }
+
+    #[test]
+    fn adam_adapts_to_gradient_scale() {
+        // constant gradient: per-step movement stays ~lr regardless of |g|
+        let cfg = SgdConfig { lr: 0.01, momentum: 0.0, weight_decay: 0.0,
+                              optimizer: Optimizer::adam() };
+        for g in [1e-3f32, 1.0, 1e3] {
+            let mut s = ParamStore::new(vec![vec![0.0]], cfg);
+            for _ in 0..10 {
+                s.apply_all(&[vec![g]], 1.0).unwrap();
+            }
+            let moved = -s.tensors[0][0];
+            assert!((moved - 0.1).abs() < 0.02, "g={g}: moved {moved}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut s = ParamStore::new(vec![vec![0.0; 3]], SgdConfig::default());
+        assert!(s.apply_all(&[vec![0.0; 2]], 1.0).is_err());
+        assert!(s.apply_all(&[vec![0.0; 3], vec![0.0]], 1.0).is_err());
+    }
+}

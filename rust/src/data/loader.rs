@@ -1,0 +1,123 @@
+//! Prefetching data loader on a dedicated thread (paper §4).
+//!
+//! "The data handling module executes on a dedicated hardware thread" and
+//! "must ensure continuous availability of pre-processed data": a producer
+//! thread fills a bounded channel ahead of the trainer; the trainer's
+//! `next()` is a queue pop, never a generation stall (unless the producer
+//! genuinely can't keep up, which the stats expose).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Handle to a prefetch pipeline producing items of type `T`.
+pub struct Prefetcher<T: Send + 'static> {
+    rx: Option<Receiver<T>>,
+    handle: Option<JoinHandle<()>>,
+    /// consumer-side stall time (waiting on the producer), ns
+    pub stall_ns: std::cell::Cell<u64>,
+    pub fetched: std::cell::Cell<u64>,
+}
+
+impl<T: Send + 'static> Prefetcher<T> {
+    /// Spawn the producer thread. `gen(i)` produces item `i`; `depth` is
+    /// the prefetch queue capacity; `total` items are produced (use
+    /// `u64::MAX` for endless streams).
+    pub fn spawn(depth: usize, total: u64, mut gen: impl FnMut(u64) -> T + Send + 'static) -> Self {
+        let (tx, rx) = sync_channel::<T>(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name("pcl-dnn-data".into())
+            .spawn(move || {
+                for i in 0..total {
+                    let item = gen(i);
+                    if tx.send(item).is_err() {
+                        return; // consumer dropped
+                    }
+                }
+            })
+            .expect("spawning data thread");
+        Prefetcher {
+            rx: Some(rx),
+            handle: Some(handle),
+            stall_ns: std::cell::Cell::new(0),
+            fetched: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Next item (None when the stream is exhausted).
+    pub fn next(&self) -> Option<T> {
+        let t0 = Instant::now();
+        let item = self.rx.as_ref().and_then(|rx| rx.recv().ok());
+        self.stall_ns.set(self.stall_ns.get() + t0.elapsed().as_nanos() as u64);
+        if item.is_some() {
+            self.fetched.set(self.fetched.get() + 1);
+        }
+        item
+    }
+
+    /// Mean consumer stall per fetched item, in microseconds — should be
+    /// ~0 when the data thread keeps up (the paper's requirement).
+    pub fn mean_stall_us(&self) -> f64 {
+        let n = self.fetched.get();
+        if n == 0 {
+            0.0
+        } else {
+            self.stall_ns.get() as f64 / n as f64 / 1e3
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for Prefetcher<T> {
+    fn drop(&mut self) {
+        // Drop the receiver first: the producer's next send fails and the
+        // thread exits, so join cannot hang.
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_in_order() {
+        let p = Prefetcher::spawn(4, 10, |i| i * 2);
+        let got: Vec<u64> = std::iter::from_fn(|| p.next()).collect();
+        assert_eq!(got, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        // producer can only run `depth+1` ahead of the consumer
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let produced = Arc::new(AtomicU64::new(0));
+        let p2 = produced.clone();
+        let p = Prefetcher::spawn(2, 100, move |i| {
+            p2.store(i + 1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(p.next(), Some(0));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let ahead = produced.load(Ordering::SeqCst);
+        assert!(ahead <= 5, "producer ran {ahead} ahead");
+    }
+
+    #[test]
+    fn endless_stream_and_drop() {
+        let p = Prefetcher::spawn(2, u64::MAX, |i| i);
+        assert_eq!(p.next(), Some(0));
+        assert_eq!(p.next(), Some(1));
+        drop(p); // must not hang
+    }
+
+    #[test]
+    fn stall_accounting_runs() {
+        let p = Prefetcher::spawn(2, 5, |i| i);
+        while p.next().is_some() {}
+        assert_eq!(p.fetched.get(), 5);
+    }
+}

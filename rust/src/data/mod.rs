@@ -1,0 +1,18 @@
+//! Data-handling module (paper §4): synthetic datasets with deterministic
+//! generation, plus a prefetching loader that runs on a **dedicated
+//! thread** so data preparation never competes with compute — the paper's
+//! two design requirements for this module.
+//!
+//! Real corpora substitution (DESIGN.md): throughput and scaling depend on
+//! tensor shapes, not pixel/token content, and convergence equivalence
+//! only needs a learnable task — so images are class-conditional templates
+//! plus noise, ASR frames are senone-conditional, and LM text comes from a
+//! fixed synthetic bigram ("Markov") language.
+
+mod corpus;
+mod loader;
+mod synthetic;
+
+pub use corpus::{Corpus, TokenBatch};
+pub use loader::Prefetcher;
+pub use synthetic::{FrameDataset, ImageBatch, ImageDataset};

@@ -1,0 +1,190 @@
+//! Class-conditional synthetic image / ASR-frame datasets.
+//!
+//! Sample `i` is fully determined by `(seed, i)`: label = a deterministic
+//! draw, data = the label's fixed template + per-sample noise. Learnable
+//! (templates are separable), infinite, and identical for every worker and
+//! run — which is what Fig 5's convergence-equivalence experiment needs.
+
+use crate::util::rng::Rng;
+
+/// A batch of images (NHWC flat) + labels.
+#[derive(Debug, Clone)]
+pub struct ImageBatch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+/// Deterministic synthetic image dataset.
+#[derive(Debug, Clone)]
+pub struct ImageDataset {
+    pub image: usize,
+    pub channels: usize,
+    pub classes: usize,
+    seed: u64,
+    templates: Vec<Vec<f32>>,
+    /// Noise amplitude relative to the unit-scale template.
+    pub noise: f32,
+}
+
+impl ImageDataset {
+    pub fn new(image: usize, channels: usize, classes: usize, seed: u64) -> Self {
+        let elems = image * image * channels;
+        let base = Rng::new(seed);
+        let templates = (0..classes)
+            .map(|c| {
+                let mut rng = base.fork(0x7e3a_0000 + c as u64);
+                let mut t = vec![0.0f32; elems];
+                rng.fill_normal(&mut t, 1.0);
+                t
+            })
+            .collect();
+        ImageDataset { image, channels, classes, seed, templates, noise: 0.5 }
+    }
+
+    pub fn sample_elems(&self) -> usize {
+        self.image * self.image * self.channels
+    }
+
+    /// Label of global sample `idx`.
+    pub fn label(&self, idx: u64) -> i32 {
+        let mut r = Rng::new(self.seed).fork(0x1abe_1000 ^ idx);
+        r.below(self.classes as u64) as i32
+    }
+
+    /// Write sample `idx` into `out` (length = sample_elems).
+    pub fn write_sample(&self, idx: u64, out: &mut [f32]) {
+        let label = self.label(idx) as usize;
+        let mut r = Rng::new(self.seed).fork(0x5a3f_2000 ^ idx);
+        let t = &self.templates[label];
+        for (o, &tv) in out.iter_mut().zip(t.iter()) {
+            *o = tv + self.noise * r.normal();
+        }
+    }
+
+    /// Materialize the batch of samples [start, start+n).
+    pub fn batch(&self, start: u64, n: usize) -> ImageBatch {
+        let elems = self.sample_elems();
+        let mut images = vec![0.0f32; n * elems];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let idx = start + i as u64;
+            self.write_sample(idx, &mut images[i * elems..(i + 1) * elems]);
+            labels.push(self.label(idx));
+        }
+        ImageBatch { images, labels, n }
+    }
+}
+
+/// Synthetic ASR frame dataset (CD-DNN: 429-dim frames -> senone ids).
+/// Same construction as images, 1-D feature vectors.
+#[derive(Debug, Clone)]
+pub struct FrameDataset {
+    pub dim: usize,
+    pub senones: usize,
+    seed: u64,
+    templates: Vec<Vec<f32>>,
+    pub noise: f32,
+}
+
+impl FrameDataset {
+    pub fn new(dim: usize, senones: usize, seed: u64) -> Self {
+        let base = Rng::new(seed);
+        let templates = (0..senones)
+            .map(|c| {
+                let mut rng = base.fork(0x0f4a_3000 + c as u64);
+                let mut t = vec![0.0f32; dim];
+                rng.fill_normal(&mut t, 1.0);
+                t
+            })
+            .collect();
+        FrameDataset { dim, senones, seed, templates, noise: 0.5 }
+    }
+
+    pub fn label(&self, idx: u64) -> i32 {
+        let mut r = Rng::new(self.seed).fork(0x1abe_1000 ^ idx);
+        r.below(self.senones as u64) as i32
+    }
+
+    pub fn batch(&self, start: u64, n: usize) -> ImageBatch {
+        let mut frames = vec![0.0f32; n * self.dim];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let idx = start + i as u64;
+            let label = self.label(idx) as usize;
+            let mut r = Rng::new(self.seed).fork(0x5a3f_2000 ^ idx);
+            let t = &self.templates[label];
+            for (o, &tv) in frames[i * self.dim..(i + 1) * self.dim].iter_mut().zip(t.iter()) {
+                *o = tv + self.noise * r.normal();
+            }
+            labels.push(label as i32);
+        }
+        ImageBatch { images: frames, labels, n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_deterministic() {
+        let d = ImageDataset::new(8, 3, 10, 42);
+        let a = d.batch(100, 4);
+        let b = d.batch(100, 4);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let d = ImageDataset::new(8, 3, 10, 42);
+        let a = d.batch(0, 1);
+        let b = d.batch(1, 1);
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let d = ImageDataset::new(4, 1, 10, 7);
+        let mut seen = [false; 10];
+        for i in 0..500 {
+            seen[d.label(i) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn same_class_samples_correlate() {
+        // Two samples of one class must be closer to each other than to a
+        // different class's template (the dataset is learnable).
+        let d = ImageDataset::new(8, 1, 4, 3);
+        let mut by_class: Vec<Vec<u64>> = vec![Vec::new(); 4];
+        for i in 0..200 {
+            by_class[d.label(i) as usize].push(i);
+        }
+        let elems = d.sample_elems();
+        let get = |idx: u64| {
+            let mut v = vec![0.0; elems];
+            d.write_sample(idx, &mut v);
+            v
+        };
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let c0 = &by_class[0];
+        let c1 = &by_class[1];
+        assert!(c0.len() >= 2 && !c1.is_empty());
+        let same = dist(&get(c0[0]), &get(c0[1]));
+        let cross = dist(&get(c0[0]), &get(c1[0]));
+        assert!(same < cross, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn frames_have_right_dims() {
+        let d = FrameDataset::new(429, 128, 1);
+        let b = d.batch(0, 8);
+        assert_eq!(b.images.len(), 8 * 429);
+        assert!(b.labels.iter().all(|&l| (0..128).contains(&l)));
+    }
+}

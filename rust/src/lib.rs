@@ -1,0 +1,33 @@
+//! # pcl-dnn — Distributed Deep Learning Using Synchronous Stochastic Gradient Descent
+//!
+//! Reproduction of Das et al. (Intel PCL, 2016). The crate is the Layer-3
+//! coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (blocked conv / block-SGEMM), authored in
+//!   `python/compile/kernels/`, correctness-checked against pure-jnp refs.
+//! * **L2** — JAX model zoo + train-step functions in `python/compile/`,
+//!   AOT-lowered once to HLO text artifacts (`make artifacts`).
+//! * **L3** — this crate: synchronous-SGD coordination (hybrid data/model
+//!   parallel groups, part-reduce / part-broadcast collectives, a
+//!   dedicated communication thread with a lock-free command queue, a
+//!   dedicated data-handling thread), plus every substrate the paper's
+//!   evaluation needs: an analytic balance-equation engine (paper §2-3), a
+//!   discrete-event cluster/network simulator, and a PJRT runtime that
+//!   executes the AOT artifacts. Python is never on the training path.
+//!
+//! See `DESIGN.md` for the per-experiment index (Table 1, Figs 3-7) and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod analytic;
+pub mod util;
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod runtime;
+pub mod trainer;
+
+/// Crate-wide result type (anyhow).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,448 @@
+//! `repro` — CLI for the PCL-DNN reproduction.
+//!
+//! ```text
+//! repro info                          artifact/model inventory + platform
+//! repro analyze table1                Table 1 (data-parallel scaling limits)
+//! repro analyze cache-blocking        §2.2 brute-force B/F search
+//! repro analyze register-blocking     §2.4 LS/FMA efficiency model
+//! repro analyze hybrid                §3.3 hybrid-parallel optimum
+//! repro analyze fig3                  Fig 3 single-node throughput model
+//! repro analyze kernel-blocking       L1 Pallas tile VMEM/MXU estimates
+//! repro simulate fig4|fig6|fig7       cluster-simulated scaling figures
+//! repro simulate sweep --net vgg_a --platform cori --minibatch 256 ...
+//! repro train --model vgg_tiny --workers 4 --minibatch 16 --steps 100
+//! repro score --model vgg_tiny --batches 20
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
+use pcl_dnn::metrics::Table;
+use pcl_dnn::models::zoo;
+use pcl_dnn::models::NetDescriptor;
+use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::runtime::Runtime;
+use pcl_dnn::trainer::{self, TrainConfig};
+use pcl_dnn::util::cli::Opts;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn net_by_name(name: &str) -> Result<NetDescriptor> {
+    Ok(match name {
+        "vgg_a" => zoo::vgg_a(),
+        "overfeat_fast" => zoo::overfeat_fast(),
+        "cddnn_full" => zoo::cddnn_full(),
+        "vgg_tiny" => zoo::vgg_tiny(),
+        "overfeat_tiny" => zoo::overfeat_tiny(),
+        "cddnn_tiny" => zoo::cddnn_tiny(),
+        "gpt_mini" => zoo::gpt_descriptor("gpt_mini", 384, 6, 128),
+        "gpt_large" => zoo::gpt_descriptor("gpt_large", 768, 12, 4096),
+        _ => bail!("unknown network {name:?}"),
+    })
+}
+
+fn platform_by_name(name: &str) -> Result<Platform> {
+    Ok(match name {
+        "cori" => Platform::cori(),
+        "aws" => Platform::aws(),
+        "endeavor" => Platform::endeavor(),
+        "table1_ethernet" => Platform::table1_ethernet(),
+        "table1_fdr" => Platform::table1_fdr(),
+        _ => bail!("unknown platform {name:?} (cori|aws|endeavor|table1_ethernet|table1_fdr)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let opts = Opts::from_env()?;
+    match opts.pos(0) {
+        Some("info") => info(&opts),
+        Some("analyze") => analyze(&opts),
+        Some("simulate") => simulate(&opts),
+        Some("train") => train(&opts),
+        Some("score") => score(&opts),
+        _ => {
+            eprintln!(
+                "usage: repro <info|analyze|simulate|train|score> ... (see README quickstart)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(opts: &Opts) -> Result<()> {
+    let dir = opts.str_or(
+        "artifacts",
+        pcl_dnn::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    );
+    let rt = Runtime::new(&dir).context("artifacts not built? run `make artifacts`")?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {dir}");
+    let mut t = Table::new(&["artifact", "kind", "model", "batch", "inputs", "outputs"]);
+    for (name, a) in &rt.manifest().artifacts {
+        t.row(vec![
+            name.clone(),
+            a.kind.clone(),
+            a.model.clone().unwrap_or_default(),
+            a.batch.to_string(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    let mut t = Table::new(&["model", "params", "elements"]);
+    for (name, m) in &rt.manifest().models {
+        t.row(vec![name.clone(), m.params.len().to_string(), m.n_elements.to_string()]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn analyze(opts: &Opts) -> Result<()> {
+    match opts.pos(1) {
+        Some("table1") => {
+            println!("# Table 1 — Theoretical scaling of data parallelism");
+            println!("(paper: comp-to-comms 1336 / 336; OverFeat 3 (86) / 2 (128); VGG-A 1 (256) / 1 (256))\n");
+            let platforms = [
+                ("2s9c E5-2666v3 + 10GbE", Platform::table1_ethernet()),
+                ("2s16c E5-2698v3 + FDR", Platform::table1_fdr()),
+            ];
+            let mut t = Table::new(&["", platforms[0].0, platforms[1].0]);
+            t.row(vec![
+                "Comp-to-comms (FLOPs/byte)".into(),
+                format!("{:.0}", platforms[0].1.comp_to_comms()),
+                format!("{:.0}", platforms[1].1.comp_to_comms()),
+            ]);
+            for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+                let cells: Vec<String> = platforms
+                    .iter()
+                    .map(|(_, p)| {
+                        let (mb, n) = scaling::table1_row(&net, p, 256);
+                        format!("{mb} ({n})")
+                    })
+                    .collect();
+                t.row(vec![net.name.clone(), cells[0].clone(), cells[1].clone()]);
+            }
+            t.print();
+            println!("\nconv-trunk comp/comm ratios (paper: OverFeat 208, VGG-A 1456):");
+            for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+                println!("  {}: {:.0}", net.name, net.conv_comp_comm_ratio(1));
+            }
+            Ok(())
+        }
+        Some("cache-blocking") => {
+            let budget = opts.parse_or("budget", 128 * 1024u64)?;
+            let simd = opts.parse_or("simd", 8u64)?;
+            let mb = opts.parse_or("mb", 1u64)?;
+            let net = net_by_name(&opts.str_or("net", "overfeat_fast"))?;
+            let cfg = cache_blocking::SearchCfg { budget, simd, double_buffer: true, max_mb: mb };
+            println!(
+                "# §2.2 cache-blocking search — budget {} KB, SIMD {simd}, max mb {mb}",
+                budget / 1024
+            );
+            let mut t = Table::new(&[
+                "layer",
+                "B/F (row)",
+                "B/F (best)",
+                "blocking (mb,ofm,oh,ow,ifm,kh,kw)",
+                "bytes",
+            ]);
+            for l in net.layers.iter().filter(|l| l.is_conv()) {
+                let row_bf = compute_model::bf_ratio_row(l).unwrap();
+                match cache_blocking::search(l, &cfg) {
+                    Some(b) => t.row(vec![
+                        l.name.clone(),
+                        format!("{row_bf:.3}"),
+                        format!("{:.4}", b.bf),
+                        format!(
+                            "({},{},{},{},{},{},{})",
+                            b.mb_b, b.ofm_b, b.oh_b, b.ow_b, b.ifm_b, b.kh_b, b.kw_b
+                        ),
+                        b.bytes.to_string(),
+                    ]),
+                    None => t.row(vec![
+                        l.name.clone(),
+                        format!("{row_bf:.3}"),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+            t.print();
+            Ok(())
+        }
+        Some("register-blocking") => {
+            println!("# §2.4 register-blocking efficiency (Haswell: 2 VFMA/cyc, latency 5)");
+            println!(
+                "RB bounds: {} <= RB <= {}\n",
+                register_blocking::min_rb(),
+                register_blocking::max_rb()
+            );
+            let m = register_blocking::cycle_model(12, 8, 3);
+            println!(
+                "fwd C5 example (RB=1x12, SW=8, 3 taps): loads {:.0}cyc stores {:.0}cyc FMA {:.0}cyc -> efficiency {:.1}% (paper: 88%)\n",
+                m.load_cycles,
+                m.store_cycles,
+                m.fma_cycles,
+                100.0 * m.efficiency
+            );
+            let mut t = Table::new(&["kernel", "naive 2-D eff", "strategy", "strategy eff"]);
+            for k in [3u64, 5, 7, 11] {
+                let (desc, _, _) = register_blocking::weight_grad_strategy(k);
+                t.row(vec![
+                    format!("{k}x{k}"),
+                    format!("{:.0}%", 100.0 * register_blocking::weight_grad_naive_efficiency(k)),
+                    desc.to_string(),
+                    format!(
+                        "{:.0}%",
+                        100.0 * register_blocking::weight_grad_strategy_efficiency(k)
+                    ),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        Some("hybrid") => {
+            let minibatch = opts.parse_or("minibatch", 256u64)?;
+            let n = opts.parse_or("nodes", 64u64)?;
+            let ofm = opts.parse_or("ofm", 4096u64)?;
+            let ifm = opts.parse_or("ifm", 4096u64)?;
+            let layer = pcl_dnn::models::Layer::fc("fc", ifm, ofm);
+            println!("# §3.3 hybrid parallelism — FC {ifm}x{ofm}, MB={minibatch}, N={n}");
+            println!(
+                "continuous optimum G* = sqrt(N*MB/ofm) = {:.2}",
+                comm_model::optimal_groups_continuous(ofm, minibatch, n)
+            );
+            let mut t = Table::new(&["G", "bytes/node (overlap=0)", "bytes/node (overlap=1)"]);
+            for g in (1..=n).filter(|g| n % g == 0) {
+                t.row(vec![
+                    g.to_string(),
+                    format!("{:.0}", comm_model::hybrid_bytes(&layer, minibatch, n, g, 0.0)),
+                    format!("{:.0}", comm_model::hybrid_bytes(&layer, minibatch, n, g, 1.0)),
+                ]);
+            }
+            t.print();
+            for overlap in [0.0, 1.0] {
+                println!(
+                    "best G (overlap={overlap}): {}",
+                    comm_model::optimal_groups(&layer, minibatch, n, overlap)
+                );
+            }
+            Ok(())
+        }
+        Some("fig3") => {
+            println!("# Fig 3 — single-node throughput model (E5-2698v3)");
+            println!("(paper: OverFeat ~315 FP / ~90 FP+BP; VGG-A ~95 FP / ~30 FP+BP)\n");
+            let m = pcl_dnn::analytic::MachineSpec::e5_2698v3();
+            let mut t = Table::new(&["net", "mode", "MB16", "MB32", "MB64", "MB128", "MB256"]);
+            for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+                for (mode, training) in [("FP", false), ("FP+BP", true)] {
+                    let row = compute_model::fig3_row(&net, &m, training);
+                    let mut cells = vec![net.name.clone(), mode.into()];
+                    cells.extend(row.iter().map(|(_, v)| format!("{v:.0}")));
+                    t.row(cells);
+                }
+            }
+            t.print();
+            Ok(())
+        }
+        Some("kernel-blocking") => {
+            println!("# L1 Pallas kernel tile analysis (TPU estimates; interpret=True on CPU)");
+            let budget = opts.parse_or("vmem", 8u64 << 20)?;
+            let cfg =
+                cache_blocking::SearchCfg { budget, simd: 128, double_buffer: true, max_mb: 8 };
+            let net = net_by_name(&opts.str_or("net", "overfeat_fast"))?;
+            let mut t = Table::new(&[
+                "layer",
+                "tile (mb,ofm,oh,ow,ifm)",
+                "VMEM KB",
+                "HBM B/F",
+                "MXU util",
+            ]);
+            for l in net.layers.iter().filter(|l| l.is_conv()) {
+                if let Some(b) = cache_blocking::search(l, &cfg) {
+                    let mxu = register_blocking::mxu_utilization(
+                        b.mb_b * b.oh_b * b.ow_b,
+                        b.ofm_b,
+                        b.ifm_b * b.kh_b * b.kw_b,
+                    );
+                    t.row(vec![
+                        l.name.clone(),
+                        format!("({},{},{},{},{})", b.mb_b, b.ofm_b, b.oh_b, b.ow_b, b.ifm_b),
+                        format!("{}", b.bytes / 1024),
+                        format!("{:.4}", b.bf),
+                        format!("{:.0}%", 100.0 * mxu),
+                    ]);
+                }
+            }
+            t.print();
+            Ok(())
+        }
+        other => bail!("unknown analyze target {other:?}"),
+    }
+}
+
+fn simulate(opts: &Opts) -> Result<()> {
+    let figure = opts.pos(1).unwrap_or("sweep");
+    match figure {
+        "fig4" => {
+            println!("# Fig 4 — VGG-A scaling on Cori (simulated)");
+            println!("(paper: 90x @128 nodes MB=512 / 2510 img/s; 82% eff @64 nodes MB=256)\n");
+            let p = Platform::cori();
+            for mb in [256u64, 512] {
+                let nodes = [1u64, 2, 4, 8, 16, 32, 64, 128];
+                let curve = scaling_curve(&zoo::vgg_a(), &p, mb, &nodes, true);
+                let mut t = Table::new(&["nodes", "img/s", "speedup", "efficiency"]);
+                for pt in &curve {
+                    t.row(vec![
+                        pt.nodes.to_string(),
+                        format!("{:.0}", pt.images_per_s),
+                        format!("{:.1}x", pt.speedup),
+                        format!("{:.0}%", 100.0 * pt.efficiency),
+                    ]);
+                }
+                println!("minibatch {mb}:");
+                t.print();
+                println!();
+            }
+            Ok(())
+        }
+        "fig6" => {
+            println!("# Fig 6 — OverFeat & VGG-A on AWS EC2, MB=256 (simulated)");
+            println!("(paper @16 nodes: OverFeat 1027 img/s = 11.9x; VGG-A 397 img/s = 14.2x)\n");
+            let p = Platform::aws();
+            let nodes = [1u64, 2, 4, 8, 16];
+            for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
+                let curve = scaling_curve(&net, &p, 256, &nodes, true);
+                let mut t = Table::new(&["nodes", "img/s", "speedup"]);
+                for pt in &curve {
+                    t.row(vec![
+                        pt.nodes.to_string(),
+                        format!("{:.0}", pt.images_per_s),
+                        format!("{:.1}x", pt.speedup),
+                    ]);
+                }
+                println!("{}:", net.name);
+                t.print();
+                println!();
+            }
+            Ok(())
+        }
+        "fig7" => {
+            println!("# Fig 7 — CD-DNN scaling on Endeavor, MB=1024 frames (simulated)");
+            println!("(paper: 4600 f/s @1 node; ~13K @4; 29.5K @16 = 6.4x)\n");
+            let p = Platform::endeavor();
+            let nodes = [1u64, 2, 4, 8, 16];
+            let curve = scaling_curve(&zoo::cddnn_full(), &p, 1024, &nodes, true);
+            let mut t = Table::new(&["nodes", "frames/s", "speedup", "efficiency"]);
+            for pt in &curve {
+                t.row(vec![
+                    pt.nodes.to_string(),
+                    format!("{:.0}", pt.images_per_s),
+                    format!("{:.1}x", pt.speedup),
+                    format!("{:.0}%", 100.0 * pt.efficiency),
+                ]);
+            }
+            t.print();
+            println!("\nablation — pure data parallelism (no hybrid FCs):");
+            let curve = scaling_curve(&zoo::cddnn_full(), &p, 1024, &nodes, false);
+            let mut t = Table::new(&["nodes", "frames/s", "speedup"]);
+            for pt in &curve {
+                t.row(vec![
+                    pt.nodes.to_string(),
+                    format!("{:.0}", pt.images_per_s),
+                    format!("{:.1}x", pt.speedup),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "sweep" => {
+            let net = net_by_name(&opts.str_or("net", "vgg_a"))?;
+            let platform = platform_by_name(&opts.str_or("platform", "cori"))?;
+            let minibatch = opts.parse_or("minibatch", 256u64)?;
+            let max_nodes = opts.parse_or("nodes", 128u64)?;
+            let hybrid = !opts.bool_flag("no-hybrid");
+            let mut nodes = vec![];
+            let mut n = 1u64;
+            while n <= max_nodes {
+                nodes.push(n);
+                n *= 2;
+            }
+            println!(
+                "# sweep — {} on {} ({}), MB={minibatch}, hybrid={hybrid}",
+                net.name, platform.machine.name, platform.fabric.name
+            );
+            let curve = scaling_curve(&net, &platform, minibatch, &nodes, hybrid);
+            let mut t = Table::new(&["nodes", "samples/s", "speedup", "efficiency", "iter ms"]);
+            for (pt, &n) in curve.iter().zip(&nodes) {
+                let r = simulate_training(
+                    &net,
+                    &platform,
+                    &SimConfig { nodes: n, minibatch, hybrid_fc: hybrid, ..Default::default() },
+                );
+                t.row(vec![
+                    pt.nodes.to_string(),
+                    format!("{:.0}", pt.images_per_s),
+                    format!("{:.1}x", pt.speedup),
+                    format!("{:.0}%", 100.0 * pt.efficiency),
+                    format!("{:.1}", r.iteration_s * 1e3),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        other => bail!("unknown figure {other:?} (fig4|fig6|fig7|sweep)"),
+    }
+}
+
+fn train(opts: &Opts) -> Result<()> {
+    let dir = opts.str_or(
+        "artifacts",
+        pcl_dnn::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    );
+    let mut rt = Runtime::new(&dir)?;
+    let cfg = TrainConfig {
+        model: opts.str_or("model", "vgg_tiny"),
+        workers: opts.parse_or("workers", 1usize)?,
+        global_mb: opts.parse_or("minibatch", 16usize)?,
+        steps: opts.parse_or("steps", 50u64)?,
+        lr: opts.parse_or("lr", 0.01f32)?,
+        momentum: opts.parse_or("momentum", 0.0f32)?,
+        seed: opts.parse_or("seed", 0u64)?,
+        log_every: opts.parse_or("log-every", 10u64)?,
+        eval_every: opts.parse_or("eval-every", 0u64)?,
+        optimizer: opts.str_or("optimizer", "sgd"),
+    };
+    let outcome = trainer::train(&mut rt, &cfg)?;
+    println!(
+        "done: {} steps, final loss {:.4}, mean {:.1} samples/s",
+        cfg.steps,
+        outcome.history.final_loss().unwrap_or(f64::NAN),
+        outcome.history.mean_throughput()
+    );
+    if let Some(path) = opts.str_opt("csv") {
+        outcome.history.save_csv(path)?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn score(opts: &Opts) -> Result<()> {
+    let dir = opts.str_or(
+        "artifacts",
+        pcl_dnn::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    );
+    let mut rt = Runtime::new(&dir)?;
+    let model = opts.str_or("model", "vgg_tiny");
+    let batches = opts.parse_or("batches", 20u64)?;
+    let tput = trainer::score_throughput(&mut rt, &model, batches, 0)?;
+    println!("{model}: {tput:.1} samples/s scoring throughput ({batches} batches)");
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Metrics: throughput meters, loss history, and table/CSV emitters used
+//! by the CLI, examples and benches to report experiment results.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// One training-step record (the loss-curve row).
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub images_per_s: f64,
+    pub compute_s: f64,
+    pub comm_wait_s: f64,
+}
+
+/// Accumulates a training run's history.
+#[derive(Debug, Default, Clone)]
+pub struct History {
+    pub records: Vec<StepRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `n` records (noise-robust probe).
+    pub fn tail_loss(&self, n: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let k = n.min(self.records.len());
+        let s: f64 = self.records[self.records.len() - k..].iter().map(|r| r.loss).sum();
+        Some(s / k as f64)
+    }
+
+    pub fn mean_throughput(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.images_per_s).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// CSV: step,loss,images_per_s,compute_s,comm_wait_s
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,images_per_s,compute_s,comm_wait_s\n");
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.6},{:.2},{:.6},{:.6}",
+                r.step, r.loss, r.images_per_s, r.compute_s, r.comm_wait_s
+            );
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Wall-clock throughput meter.
+pub struct Throughput {
+    t0: Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { t0: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        self.items as f64 / self.t0.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+}
+
+/// Fixed-width markdown table printer for experiment reports.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            let _ = write!(out, "|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, " {c:>w$} |", w = w);
+            }
+            let _ = writeln!(out);
+        };
+        line(&self.headers, &widths, &mut out);
+        let _ = write!(out, "|");
+        for w in &widths {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out);
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_tail_and_csv() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.push(StepRecord {
+                step: i,
+                loss: 10.0 - i as f64,
+                images_per_s: 100.0,
+                compute_s: 0.1,
+                comm_wait_s: 0.01,
+            });
+        }
+        assert_eq!(h.final_loss(), Some(1.0));
+        assert_eq!(h.tail_loss(2), Some(1.5));
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 11);
+        assert!(csv.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["nodes", "img/s"]);
+        t.row(vec!["1".into(), "31".into()]);
+        t.row(vec!["128".into(), "3367".into()]);
+        let r = t.render();
+        assert!(r.contains("| nodes |"));
+        assert_eq!(r.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

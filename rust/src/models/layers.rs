@@ -1,0 +1,235 @@
+//! Layer descriptors and their compute/footprint accounting (paper §2.1).
+//!
+//! Every compute layer is the 2k+3-nested loop of Algorithm 1; a
+//! fully-connected layer is the `k_h = k_w = out_h = out_w = 1` special
+//! case. All FLOP counts follow the paper's convention: one
+//! multiply-accumulate = 2 FLOPs, and training = fwd + bprop + wt-grad =
+//! 3x the forward FLOPs (the first layer skips bprop, handled by
+//! [`NetDescriptor::train_flops_per_image`]).
+
+
+
+/// Bytes per element; the paper (and our artifacts) are FP32 throughout.
+pub const SIZE_DATA: u64 = 4;
+
+/// One layer of a network topology.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution: `ifm -> ofm` feature maps, `k x k` kernel.
+    Conv {
+        ifm: u64,
+        ofm: u64,
+        k: u64,
+        stride: u64,
+        /// Output spatial size (post-convolution).
+        out_h: u64,
+        out_w: u64,
+        /// Input spatial size (pre-convolution, post-padding).
+        in_h: u64,
+        in_w: u64,
+    },
+    /// Fully-connected: `in_dim -> out_dim`.
+    Fc { in_dim: u64, out_dim: u64 },
+    /// Max-pooling (no weights; negligible compute, tracked for shapes).
+    Pool { ch: u64, out_h: u64, out_w: u64, window: u64 },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        ifm: u64,
+        ofm: u64,
+        k: u64,
+        stride: u64,
+        in_hw: u64,
+        out_hw: u64,
+    ) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv {
+                ifm,
+                ofm,
+                k,
+                stride,
+                out_h: out_hw,
+                out_w: out_hw,
+                in_h: in_hw,
+                in_w: in_hw,
+            },
+        }
+    }
+
+    pub fn fc(name: &str, in_dim: u64, out_dim: u64) -> Self {
+        Layer { name: name.to_string(), kind: LayerKind::Fc { in_dim, out_dim } }
+    }
+
+    pub fn pool(name: &str, ch: u64, out_hw: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pool { ch, out_h: out_hw, out_w: out_hw, window: 2 },
+        }
+    }
+
+    /// Forward FLOPs for ONE image (2 * MACs, paper §3.1).
+    pub fn fwd_flops(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { ifm, ofm, k, out_h, out_w, .. } => {
+                2 * ifm * ofm * k * k * out_h * out_w
+            }
+            LayerKind::Fc { in_dim, out_dim } => 2 * in_dim * out_dim,
+            LayerKind::Pool { ch, out_h, out_w, window } => ch * out_h * out_w * window * window,
+        }
+    }
+
+    /// Weight (= weight-gradient) element count.
+    pub fn weight_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { ifm, ofm, k, .. } => ifm * ofm * k * k,
+            LayerKind::Fc { in_dim, out_dim } => in_dim * out_dim,
+            LayerKind::Pool { .. } => 0,
+        }
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        SIZE_DATA * self.weight_elems()
+    }
+
+    /// Output activation elements for ONE image.
+    pub fn out_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { ofm, out_h, out_w, .. } => ofm * out_h * out_w,
+            LayerKind::Fc { out_dim, .. } => out_dim,
+            LayerKind::Pool { ch, out_h, out_w, .. } => ch * out_h * out_w,
+        }
+    }
+
+    /// Input activation elements for ONE image.
+    pub fn in_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { ifm, in_h, in_w, .. } => ifm * in_h * in_w,
+            LayerKind::Fc { in_dim, .. } => in_dim,
+            LayerKind::Pool { ch, out_h, out_w, window } => ch * out_h * out_w * window * window,
+        }
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.weight_elems() > 0
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. })
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self.kind, LayerKind::Fc { .. })
+    }
+}
+
+/// A full network topology (ordered input -> output).
+#[derive(Debug, Clone)]
+pub struct NetDescriptor {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl NetDescriptor {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Self {
+        NetDescriptor { name: name.to_string(), layers }
+    }
+
+    /// Forward (scoring) FLOPs per image.
+    pub fn fwd_flops_per_image(&self) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops()).sum()
+    }
+
+    /// Training FLOPs per image: fwd + bprop + wt-grad = 3x fwd, except the
+    /// first weighted layer which skips bprop (paper §3.1: "the first layer
+    /// need not perform backpropagation").
+    pub fn train_flops_per_image(&self) -> u64 {
+        let mut total = 0;
+        let mut first_weighted = true;
+        for l in &self.layers {
+            if !l.is_weighted() {
+                total += l.fwd_flops(); // pool fwd only
+                continue;
+            }
+            let f = l.fwd_flops();
+            total += if first_weighted { 2 * f } else { 3 * f };
+            first_weighted = false;
+        }
+        total
+    }
+
+    /// Total weight (model) bytes.
+    pub fn weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn weight_elems(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems()).sum()
+    }
+
+    /// The convolutional trunk (data-parallel regime in the paper's recipe).
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.is_conv())
+    }
+
+    /// FC head (model/hybrid-parallel regime).
+    pub fn fc_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.is_fc())
+    }
+
+    /// Aggregate *algorithmic* compute-to-communication ratio of the conv
+    /// trunk under data parallelism (paper §3.1 quotes 208 for
+    /// OverFeat-FAST and 1456 for VGG-A): FLOPs per node-byte communicated,
+    /// with overlap=1 send/recv overlap.
+    pub fn conv_comp_comm_ratio(&self, minibatch_per_node: u64) -> f64 {
+        let comp: u64 = self
+            .conv_layers()
+            .map(|l| 3 * l.fwd_flops() * minibatch_per_node)
+            .sum();
+        let comm: u64 = self.conv_layers().map(|l| l.weight_bytes()).sum();
+        comp as f64 / comm as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_is_conv_special_case() {
+        // A 1x1 conv on a 1x1 map with ifm=in, ofm=out must equal the FC.
+        let conv = Layer::conv("c", 512, 1024, 1, 1, 1, 1);
+        let fc = Layer::fc("f", 512, 1024);
+        assert_eq!(conv.fwd_flops(), fc.fwd_flops());
+        assert_eq!(conv.weight_elems(), fc.weight_elems());
+    }
+
+    #[test]
+    fn train_flops_are_3x_fwd_minus_first_layer_bprop() {
+        let net = NetDescriptor::new(
+            "t",
+            vec![
+                Layer::conv("c1", 3, 8, 3, 1, 32, 32),
+                Layer::conv("c2", 8, 8, 3, 1, 32, 32),
+            ],
+        );
+        let f1 = net.layers[0].fwd_flops();
+        let f2 = net.layers[1].fwd_flops();
+        assert_eq!(net.train_flops_per_image(), 2 * f1 + 3 * f2);
+    }
+
+    #[test]
+    fn pool_has_no_weights() {
+        let p = Layer::pool("p", 64, 16);
+        assert_eq!(p.weight_elems(), 0);
+        assert!(!p.is_weighted());
+    }
+}

@@ -1,0 +1,15 @@
+//! Network topology descriptors.
+//!
+//! The analytic engine (paper §2-3) and the cluster simulator work from
+//! *layer descriptors* — shapes only, no weights. The zoo carries both the
+//! paper's full-size topologies (VGG-A, OverFeat-FAST, CD-DNN: used for
+//! Table 1 and Figs 3/4/6/7) and the scaled-down runnable variants that
+//! match the AOT artifacts built by `python/compile/`.
+
+pub mod layers;
+pub mod zoo;
+
+pub use layers::{Layer, LayerKind, NetDescriptor};
+pub use zoo::{
+    cddnn_full, cddnn_tiny, gpt_descriptor, overfeat_fast, overfeat_tiny, vgg_a, vgg_tiny,
+};

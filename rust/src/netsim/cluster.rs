@@ -1,0 +1,368 @@
+//! Per-iteration task DAG for distributed synchronous SGD, simulated on
+//! the discrete-event engine — the machinery behind Figs 4, 6 and 7.
+//!
+//! Representative-node model: all nodes are symmetric in (hybrid) data
+//! parallelism, so we simulate one node's two streams — its compute
+//! pipeline and its dedicated communication thread (§4) — with collective
+//! durations taken from the α-β models over the full node count. The
+//! schedule encodes the paper's §3.1 overlap structure:
+//!
+//! * forward L0..Lk, then backward Lk..L0 with **wt-grad before bprop**;
+//! * the gradient exchange of layer i is submitted to the comm stream the
+//!   moment wt-grad_i retires (submit-and-forget through the command
+//!   queue) and overlaps all remaining backward work and the next
+//!   iteration's forward work up to layer i;
+//! * fwd_i of iteration t+1 depends on update_i (comm + SGD) of t;
+//! * model/hybrid-parallel FC layers additionally exchange activations
+//!   *inside* the fwd/bwd chains (not overlappable — §3.2's weakness).
+//!
+//! Steady-state iteration time is measured between consecutive iteration
+//! boundaries after a warm-up iteration.
+
+
+
+use crate::analytic::comm_model::{self, Strategy};
+use crate::analytic::compute_model;
+use crate::analytic::machine::Platform;
+use crate::models::{Layer, NetDescriptor};
+
+use super::collective;
+use super::engine::{Engine, TaskId};
+
+const COMPUTE: usize = 0;
+const COMM: usize = 1;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub nodes: u64,
+    pub minibatch: u64,
+    /// Send/recv overlap achieved by the comm library (paper assumes 1).
+    pub overlap: f64,
+    /// Iterations to simulate (>= 3; last-minus-previous is reported).
+    pub iterations: usize,
+    /// Per-layer strategy selection: `true` = paper recipe (hybrid FCs),
+    /// `false` = pure data parallelism everywhere (the ablation).
+    pub hybrid_fc: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { nodes: 1, minibatch: 256, overlap: 1.0, iterations: 4, hybrid_fc: true }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub nodes: u64,
+    pub iteration_s: f64,
+    pub images_per_s: f64,
+    /// Fraction of the iteration the compute stream is busy.
+    pub compute_utilization: f64,
+}
+
+/// One point of a scaling curve (Figs 4/6/7).
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub nodes: u64,
+    pub images_per_s: f64,
+    pub speedup: f64,
+    pub efficiency: f64,
+}
+
+fn ns(seconds: f64) -> u64 {
+    (seconds * 1e9).round().max(0.0) as u64
+}
+
+/// Communication seconds for one layer's gradient/weight exchange under
+/// its strategy.
+fn grad_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
+    let fabric = &platform.fabric;
+    let n = cfg.nodes;
+    if n <= 1 || !layer.is_weighted() {
+        return 0.0;
+    }
+    match strategy_for(layer, cfg) {
+        Strategy::Data => {
+            collective::gradient_exchange_s(fabric, layer.weight_bytes(), n)
+        }
+        Strategy::Model => 0.0, // weights stay put; activations move instead
+        Strategy::Hybrid { groups } => {
+            // data-parallel exchange of the 1/G weight shard across groups
+            let shard = layer.weight_bytes() / (n / groups).max(1);
+            collective::gradient_exchange_s(fabric, shard, groups)
+        }
+    }
+}
+
+/// Activation exchange seconds (model/hybrid FC layers, fwd or bwd leg).
+fn act_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
+    let fabric = &platform.fabric;
+    match strategy_for(layer, cfg) {
+        Strategy::Data => 0.0,
+        Strategy::Model => {
+            let bytes = 4 * layer.in_elems() * cfg.minibatch;
+            collective::allgather_s(fabric, bytes, cfg.nodes)
+        }
+        Strategy::Hybrid { groups } => {
+            let group_nodes = (cfg.nodes / groups).max(1);
+            let mb_group = cfg.minibatch / groups;
+            let bytes = 4 * layer.in_elems() * mb_group;
+            collective::allgather_s(fabric, bytes, group_nodes)
+        }
+    }
+}
+
+/// One compute pass of `layer` over `mb` data points, with the same
+/// framework-efficiency and per-pass overhead terms as the Fig 3 model
+/// (so 1-node simulated throughput anchors to the measured single-node
+/// numbers) plus the §2.5 thread-utilization penalty, which bites at the
+/// small per-node minibatches large clusters run at.
+fn pass_time_s(layer: &Layer, m: &crate::analytic::MachineSpec, mb: f64) -> f64 {
+    let util = compute_model::thread_utilization(layer, m, (mb.ceil() as u64).max(1)).max(0.05);
+    let t = compute_model::layer_fwd_time_s(layer, m, 1) * mb / util;
+    t / m.framework_efficiency + m.per_pass_overhead_s
+}
+
+fn strategy_for(layer: &Layer, cfg: &SimConfig) -> Strategy {
+    if !cfg.hybrid_fc || layer.is_conv() || !layer.is_weighted() || cfg.nodes <= 1 {
+        return Strategy::Data;
+    }
+    comm_model::best_strategy(layer, cfg.minibatch, cfg.nodes, cfg.overlap)
+}
+
+/// Simulate `cfg.iterations` of synchronous SGD and return steady-state
+/// timing for the representative node.
+pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConfig) -> SimResult {
+    assert!(cfg.iterations >= 2);
+    let m = &platform.machine;
+    let mb_node = cfg.minibatch as f64 / cfg.nodes as f64;
+    let layers = &net.layers;
+    let k = layers.len();
+
+    let mut eng = Engine::new();
+    // update task of layer i from the previous iteration
+    let mut prev_update: Vec<Option<TaskId>> = vec![None; k];
+    let mut iter_end: Vec<TaskId> = Vec::new();
+
+    for it in 0..cfg.iterations {
+        // ---------------- forward ----------------
+        let mut last_fwd: Option<TaskId> = None;
+        let mut fwd_ids = Vec::with_capacity(k);
+        for (i, l) in layers.iter().enumerate() {
+            let mut deps: Vec<TaskId> = Vec::new();
+            if let Some(p) = last_fwd {
+                deps.push(p);
+            }
+            if let Some(u) = prev_update[i] {
+                deps.push(u);
+            }
+            // model/hybrid layers gather remote activations before compute
+            let act_s = act_exchange_s(l, platform, cfg);
+            let fwd_dep = if act_s > 0.0 {
+                let a = eng.add(
+                    format!("it{it}.act_fwd.{}", l.name),
+                    COMM,
+                    ns(act_s),
+                    &deps,
+                );
+                vec![a]
+            } else {
+                deps
+            };
+            let eff_mb = per_layer_mb(l, cfg, mb_node);
+            let t = pass_time_s(l, m, eff_mb);
+            let id = eng.add(format!("it{it}.fwd.{}", l.name), COMPUTE, ns(t), &fwd_dep);
+            last_fwd = Some(id);
+            fwd_ids.push(id);
+        }
+
+        // ---------------- backward (wt-grad before bprop) ----------------
+        let mut chain = last_fwd.expect("non-empty net");
+        let mut update_ids: Vec<Option<TaskId>> = vec![None; k];
+        let first_weighted = layers.iter().position(|l| l.is_weighted()).unwrap_or(0);
+        for i in (0..k).rev() {
+            let l = &layers[i];
+            if !l.is_weighted() {
+                continue;
+            }
+            let eff_mb = per_layer_mb(l, cfg, mb_node);
+            let per_pass = pass_time_s(l, m, eff_mb);
+            // weight gradient first (enables early comm submission)
+            let wg = eng.add(format!("it{it}.wtgrad.{}", l.name), COMPUTE, ns(per_pass), &[chain]);
+            // submit-and-forget: gradient exchange on the comm stream
+            let ex_s = grad_exchange_s(l, platform, cfg);
+            let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
+            let ex = if ex_s > 0.0 {
+                eng.add(format!("it{it}.partreduce.{}", l.name), COMM, ns(ex_s), &[wg])
+            } else {
+                wg
+            };
+            let up = eng.add(format!("it{it}.sgd.{}", l.name), COMM, ns(sgd_s), &[ex]);
+            update_ids[i] = Some(up);
+            // backpropagation (skipped for the first weighted layer)
+            if i != first_weighted {
+                let act_s = act_exchange_s(l, platform, cfg);
+                let bp = eng.add(format!("it{it}.bprop.{}", l.name), COMPUTE, ns(per_pass), &[wg]);
+                chain = if act_s > 0.0 {
+                    eng.add(format!("it{it}.act_bwd.{}", l.name), COMM, ns(act_s), &[bp])
+                } else {
+                    bp
+                };
+            } else {
+                chain = wg;
+            }
+        }
+        prev_update = update_ids;
+        iter_end.push(chain);
+    }
+
+    let sched = eng.run();
+    // steady state: last iteration boundary minus the previous one, where
+    // an iteration truly ends when its last update lands.
+    let iter_finish = |it: usize| -> u64 {
+        let prefix = format!("it{it}.");
+        (0..eng.len())
+            .filter(|&id| eng.task(id).name.starts_with(&prefix))
+            .map(|id| sched.end_ns[id])
+            .max()
+            .unwrap_or(0)
+    };
+    let t_last = iter_finish(cfg.iterations - 1);
+    let t_prev = iter_finish(cfg.iterations - 2);
+    let iter_s = (t_last - t_prev) as f64 / 1e9;
+
+    // compute-stream utilization over the steady iteration
+    let busy: u64 = (0..eng.len())
+        .filter(|&id| {
+            eng.task(id).resource == COMPUTE
+                && sched.start_ns[id] >= t_prev
+                && sched.end_ns[id] <= t_last
+        })
+        .map(|id| eng.task(id).duration_ns)
+        .sum();
+    let util = busy as f64 / (t_last - t_prev).max(1) as f64;
+
+    SimResult {
+        nodes: cfg.nodes,
+        iteration_s: iter_s,
+        images_per_s: cfg.minibatch as f64 / iter_s,
+        compute_utilization: util.min(1.0),
+    }
+}
+
+/// Effective per-node data points for a layer under its strategy: data
+/// parallel layers see MB/N; model/hybrid layers compute the full (group)
+/// minibatch over a 1/(N/G) feature shard — same FLOPs per node.
+fn per_layer_mb(layer: &Layer, cfg: &SimConfig, mb_node: f64) -> f64 {
+    match strategy_for(layer, cfg) {
+        Strategy::Data => mb_node,
+        Strategy::Model => cfg.minibatch as f64 / cfg.nodes as f64,
+        Strategy::Hybrid { .. } => cfg.minibatch as f64 / cfg.nodes as f64,
+    }
+}
+
+/// Sweep node counts and produce a scaling curve (speedup vs the 1-node
+/// simulation of the same config).
+pub fn scaling_curve(
+    net: &NetDescriptor,
+    platform: &Platform,
+    minibatch: u64,
+    nodes: &[u64],
+    hybrid_fc: bool,
+) -> Vec<ScalingPoint> {
+    let base = simulate_training(
+        net,
+        platform,
+        &SimConfig { nodes: 1, minibatch, hybrid_fc, ..Default::default() },
+    );
+    nodes
+        .iter()
+        .map(|&n| {
+            let r = simulate_training(
+                net,
+                platform,
+                &SimConfig { nodes: n, minibatch, hybrid_fc, ..Default::default() },
+            );
+            ScalingPoint {
+                nodes: n,
+                images_per_s: r.images_per_s,
+                speedup: r.images_per_s / base.images_per_s,
+                efficiency: r.images_per_s / (base.images_per_s * n as f64),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo::{cddnn_full, overfeat_fast, vgg_a};
+
+    #[test]
+    fn single_node_matches_compute_only() {
+        let p = Platform::cori();
+        let r = simulate_training(&vgg_a(), &p, &SimConfig::default());
+        assert!(r.compute_utilization > 0.99, "{}", r.compute_utilization);
+        // ~25-40 img/s on one node (Fig 3/4 anchor)
+        assert!((20.0..50.0).contains(&r.images_per_s), "{}", r.images_per_s);
+    }
+
+    #[test]
+    fn fig4_vgg_scaling_shape() {
+        // Fig 4: VGG-A MB=512 reaches ~90x at 128 Cori nodes (70% eff);
+        // MB=256 ~82% efficiency at 64 nodes.
+        let p = Platform::cori();
+        let curve512 = scaling_curve(&vgg_a(), &p, 512, &[128], true);
+        assert!(
+            (60.0..120.0).contains(&curve512[0].speedup),
+            "128-node speedup {}",
+            curve512[0].speedup
+        );
+        let curve256 = scaling_curve(&vgg_a(), &p, 256, &[64], true);
+        assert!(
+            curve256[0].efficiency > 0.60,
+            "64-node eff {}",
+            curve256[0].efficiency
+        );
+    }
+
+    #[test]
+    fn scaling_is_monotone_in_nodes() {
+        let p = Platform::cori();
+        let curve = scaling_curve(&vgg_a(), &p, 256, &[2, 4, 8, 16, 32, 64], true);
+        for w in curve.windows(2) {
+            assert!(w[1].images_per_s >= w[0].images_per_s * 0.98);
+        }
+    }
+
+    #[test]
+    fn overfeat_scales_worse_than_vgg_on_ethernet() {
+        // Fig 6's observation: VGG-A speedup (14.2x) > OverFeat (11.9x)
+        // at 16 AWS nodes because of its higher flops-per-byte.
+        let p = Platform::aws();
+        let of = scaling_curve(&overfeat_fast(), &p, 256, &[16], true)[0].speedup;
+        let vg = scaling_curve(&vgg_a(), &p, 256, &[16], true)[0].speedup;
+        assert!(vg > of, "vgg {vg} overfeat {of}");
+        assert!((6.0..16.1).contains(&of), "{of}");
+        assert!((10.0..16.1).contains(&vg), "{vg}");
+    }
+
+    #[test]
+    fn cddnn_scales_least() {
+        // Fig 7: CD-DNN reaches only ~6.5x on 16 nodes even on FDR.
+        let p = Platform::endeavor();
+        let dn = scaling_curve(&cddnn_full(), &p, 1024, &[16], true)[0].speedup;
+        assert!((3.0..12.0).contains(&dn), "{dn}");
+        let vg = scaling_curve(&vgg_a(), &p, 256, &[16], true)[0].speedup;
+        assert!(dn < vg);
+    }
+
+    #[test]
+    fn hybrid_fc_beats_pure_data_parallel_for_fc_nets() {
+        // The §3.3 ablation: hybrid on vs off for the FC-dominated CD-DNN.
+        let p = Platform::endeavor();
+        let hybrid = scaling_curve(&cddnn_full(), &p, 1024, &[16], true)[0].speedup;
+        let data = scaling_curve(&cddnn_full(), &p, 1024, &[16], false)[0].speedup;
+        assert!(hybrid > data, "hybrid {hybrid} !> data {data}");
+    }
+}

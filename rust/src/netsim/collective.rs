@@ -1,0 +1,113 @@
+//! α-β cost models for the paper's communication primitives (§3.4).
+//!
+//! * **part-reduce** = reduce-scatter (`MPI_Reduce_scatter`): each node
+//!   ends up owning the fully-reduced 1/N strip of the tensor.
+//! * **part-broadcast** = allgather (`MPI_Allgather`): each node
+//!   broadcasts its owned strip to the group.
+//!
+//! Ring algorithm: N-1 steps of (bytes/N)-sized messages — bandwidth
+//! optimal, the standard choice for large gradient tensors. Butterfly
+//! (recursive halving/doubling): log2(N) steps — latency optimal for
+//! small tensors. `auto` picks the cheaper one, which is what a real MPI
+//! would do and what the paper's "optimized MPI-based communications
+//! library" implies.
+
+use crate::analytic::FabricSpec;
+
+/// Seconds for a ring reduce-scatter of `bytes` over `n` nodes.
+pub fn ring_reduce_scatter_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = (n - 1) as f64;
+    let chunk = bytes as f64 / n as f64;
+    fabric.sw_latency_s + steps * (fabric.latency_s + chunk / fabric.effective_bw_n(n))
+}
+
+/// Seconds for a ring allgather of `bytes` over `n` nodes.
+pub fn ring_allgather_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    ring_reduce_scatter_s(fabric, bytes, n) // symmetric cost
+}
+
+/// Seconds for a butterfly (recursive-halving) reduce-scatter.
+pub fn butterfly_reduce_scatter_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let rounds = (n as f64).log2().ceil();
+    // round k exchanges bytes/2^k; total volume ~ bytes * (1 - 1/N)
+    let volume = bytes as f64 * (1.0 - 1.0 / n as f64);
+    fabric.sw_latency_s + rounds * fabric.latency_s + volume / fabric.effective_bw_n(n)
+}
+
+pub fn butterfly_allgather_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    butterfly_reduce_scatter_s(fabric, bytes, n)
+}
+
+/// Cheapest reduce-scatter (what the tuned library would pick).
+pub fn reduce_scatter_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    ring_reduce_scatter_s(fabric, bytes, n).min(butterfly_reduce_scatter_s(fabric, bytes, n))
+}
+
+pub fn allgather_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    reduce_scatter_s(fabric, bytes, n)
+}
+
+/// Full gradient exchange for data parallelism: part-reduce of gradients,
+/// SGD happens on the owned strip, part-broadcast of updated weights —
+/// §3.4's usage of the two primitives.
+pub fn gradient_exchange_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+    reduce_scatter_s(fabric, bytes, n) + allgather_s(fabric, bytes, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fdr() -> FabricSpec {
+        FabricSpec::fdr_infiniband()
+    }
+
+    #[test]
+    fn single_node_is_free() {
+        assert_eq!(gradient_exchange_s(&fdr(), 1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn butterfly_wins_small_messages_ring_wins_latency() {
+        // tiny tensor, many nodes: butterfly's log2(N) latency beats
+        // ring's N-1 latencies.
+        let f = fdr();
+        let small = 4 * 1024;
+        assert!(
+            butterfly_reduce_scatter_s(&f, small, 128)
+                < ring_reduce_scatter_s(&f, small, 128)
+        );
+    }
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let f = fdr();
+        let a = gradient_exchange_s(&f, 1 << 20, 16);
+        let b = gradient_exchange_s(&f, 1 << 24, 16);
+        assert!(b > 8.0 * a, "{b} vs {a}");
+    }
+
+    #[test]
+    fn volume_term_saturates_with_n() {
+        // Bandwidth term approaches 2*bytes/bw as N grows (ring RS+AG).
+        let f = fdr();
+        let bytes = 64 << 20;
+        let t64 = gradient_exchange_s(&f, bytes, 64);
+        let t128 = gradient_exchange_s(&f, bytes, 128);
+        assert!(t128 < 1.2 * t64, "{t128} vs {t64}");
+    }
+
+    #[test]
+    fn ethernet_slower_than_fdr() {
+        let bytes = 16 << 20;
+        let eth = gradient_exchange_s(&FabricSpec::ethernet_10g(), bytes, 16);
+        let ib = gradient_exchange_s(&fdr(), bytes, 16);
+        assert!(eth > 3.0 * ib);
+    }
+}

@@ -1,0 +1,215 @@
+//! Deterministic discrete-event engine over a task DAG with unary
+//! resources.
+//!
+//! Each task occupies exactly one resource (FIFO, in ready order with id
+//! tie-break) for a fixed duration once all its dependencies completed.
+//! This is sufficient to model the paper's per-node execution: one serial
+//! compute stream plus one serial communication stream (the dedicated
+//! comm thread of §4), with the command-queue handoff being the
+//! compute->comm dependency edge.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+pub type TaskId = usize;
+
+/// A unit of work bound to one resource.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    /// Index of the unary resource this task runs on.
+    pub resource: usize,
+    pub duration_ns: u64,
+    pub deps: Vec<TaskId>,
+}
+
+/// Simulation output: per-task start/end and the makespan.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub start_ns: Vec<u64>,
+    pub end_ns: Vec<u64>,
+    pub makespan_ns: u64,
+}
+
+impl Schedule {
+    pub fn end_of(&self, id: TaskId) -> u64 {
+        self.end_ns[id]
+    }
+}
+
+/// Task-graph builder + runner.
+#[derive(Debug, Default)]
+pub struct Engine {
+    tasks: Vec<Task>,
+    n_resources: usize,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine::default()
+    }
+
+    /// Add a task; returns its id. Dependencies must already exist
+    /// (the DAG is built in topological order by construction).
+    pub fn add(&mut self, name: impl Into<String>, resource: usize, duration_ns: u64,
+               deps: &[TaskId]) -> TaskId {
+        let id = self.tasks.len();
+        for &d in deps {
+            assert!(d < id, "dependency {d} of task {id} does not exist yet");
+        }
+        self.n_resources = self.n_resources.max(resource + 1);
+        self.tasks.push(Task {
+            name: name.into(),
+            resource,
+            duration_ns,
+            deps: deps.to_vec(),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id]
+    }
+
+    /// Run to completion; deterministic for a fixed task list.
+    pub fn run(&self) -> Schedule {
+        let n = self.tasks.len();
+        let mut remaining: Vec<usize> = self.tasks.iter().map(|t| t.deps.len()).collect();
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (id, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                dependents[d].push(id);
+            }
+        }
+        let mut queues: Vec<VecDeque<TaskId>> = vec![VecDeque::new(); self.n_resources];
+        let mut busy_until: Vec<u64> = vec![0; self.n_resources];
+        let mut start = vec![u64::MAX; n];
+        let mut end = vec![u64::MAX; n];
+        // min-heap of (completion_time, task_id)
+        let mut events: BinaryHeap<std::cmp::Reverse<(u64, TaskId)>> = BinaryHeap::new();
+
+        for (id, t) in self.tasks.iter().enumerate() {
+            if t.deps.is_empty() {
+                queues[t.resource].push_back(id);
+            }
+        }
+
+        let try_start_all = |now: u64,
+                                 queues: &mut Vec<VecDeque<TaskId>>,
+                                 busy_until: &mut Vec<u64>,
+                                 start: &mut Vec<u64>,
+                                 end: &mut Vec<u64>,
+                                 events: &mut BinaryHeap<std::cmp::Reverse<(u64, TaskId)>>| {
+            for r in 0..self.n_resources {
+                if busy_until[r] <= now {
+                    if let Some(id) = queues[r].pop_front() {
+                        let s = now.max(busy_until[r]);
+                        let e = s + self.tasks[id].duration_ns;
+                        start[id] = s;
+                        end[id] = e;
+                        busy_until[r] = e;
+                        events.push(std::cmp::Reverse((e, id)));
+                    }
+                }
+            }
+        };
+
+        try_start_all(0, &mut queues, &mut busy_until, &mut start, &mut end, &mut events);
+
+        let mut done = 0usize;
+        while let Some(std::cmp::Reverse((t, id))) = events.pop() {
+            done += 1;
+            for &d in &dependents[id] {
+                remaining[d] -= 1;
+                if remaining[d] == 0 {
+                    queues[self.tasks[d].resource].push_back(d);
+                }
+            }
+            try_start_all(t, &mut queues, &mut busy_until, &mut start, &mut end, &mut events);
+        }
+        assert_eq!(done, n, "deadlock: {done}/{n} tasks completed (cycle in DAG?)");
+        let makespan = end.iter().copied().max().unwrap_or(0);
+        Schedule { start_ns: start, end_ns: end, makespan_ns: makespan }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_chain_sums_durations() {
+        let mut e = Engine::new();
+        let a = e.add("a", 0, 10, &[]);
+        let b = e.add("b", 0, 20, &[a]);
+        let c = e.add("c", 0, 30, &[b]);
+        let s = e.run();
+        assert_eq!(s.end_of(c), 60);
+        assert_eq!(s.makespan_ns, 60);
+    }
+
+    #[test]
+    fn independent_resources_run_in_parallel() {
+        let mut e = Engine::new();
+        e.add("compute", 0, 100, &[]);
+        e.add("comm", 1, 80, &[]);
+        let s = e.run();
+        assert_eq!(s.makespan_ns, 100); // overlapped, not 180
+    }
+
+    #[test]
+    fn same_resource_serializes() {
+        let mut e = Engine::new();
+        e.add("x", 0, 100, &[]);
+        e.add("y", 0, 80, &[]);
+        let s = e.run();
+        assert_eq!(s.makespan_ns, 180);
+    }
+
+    #[test]
+    fn dependency_across_resources_creates_bubble() {
+        // compute 100 -> comm 50 -> compute 10: the second compute waits.
+        let mut e = Engine::new();
+        let a = e.add("fwd", 0, 100, &[]);
+        let c = e.add("xchg", 1, 50, &[a]);
+        let b = e.add("next", 0, 10, &[c]);
+        let s = e.run();
+        assert_eq!(s.start_ns[b], 150);
+        assert_eq!(s.makespan_ns, 160);
+    }
+
+    #[test]
+    fn overlap_hides_comm_when_compute_longer() {
+        // comm issued early overlaps long compute: makespan = compute.
+        let mut e = Engine::new();
+        let g = e.add("wtgrad", 0, 10, &[]);
+        e.add("exchange", 1, 50, &[g]);
+        e.add("more_compute", 0, 100, &[g]);
+        let s = e.run();
+        assert_eq!(s.makespan_ns, 110);
+    }
+
+    #[test]
+    fn fifo_order_is_deterministic() {
+        let mut e = Engine::new();
+        let ids: Vec<_> = (0..10).map(|i| e.add(format!("t{i}"), 0, 5, &[])).collect();
+        let s = e.run();
+        for w in ids.windows(2) {
+            assert!(s.start_ns[w[0]] < s.start_ns[w[1]]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not exist yet")]
+    fn forward_dependency_rejected() {
+        let mut e = Engine::new();
+        e.add("a", 0, 1, &[5]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Discrete-event cluster simulator — the substrate standing in for the
+//! paper's physical testbeds (Cori, AWS EC2, Endeavor; see DESIGN.md
+//! "Hardware substitutions").
+//!
+//! * [`engine`] — a deterministic task-graph discrete-event engine with
+//!   unary resources (a node's compute stream and its dedicated
+//!   communication thread — the paper's §4 software architecture).
+//! * [`collective`] — α-β cost models for the paper's two primitives,
+//!   part-reduce (`MPI_Reduce_scatter`) and part-broadcast
+//!   (`MPI_Allgather`), §3.4.
+//! * [`cluster`] — builds the per-iteration task DAG for synchronous SGD
+//!   (wt-grad before bprop, gradient exchange overlapped into remaining
+//!   backward + next forward) and extracts steady-state iteration time.
+
+pub mod cluster;
+pub mod collective;
+pub mod engine;
+
+pub use cluster::{simulate_training, ScalingPoint, SimConfig, SimResult};
+pub use engine::{Engine, Schedule, Task, TaskId};

@@ -1,0 +1,179 @@
+//! Typed view of `artifacts/manifest.json` — the ABI contract between the
+//! python AOT pipeline and this runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::Dtype;
+
+/// One named input/output of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub batch: usize,
+    pub n_params: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One model: parameter layout + init-params file.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params_file: String,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub n_elements: usize,
+    pub config: BTreeMap<String, Json>,
+}
+
+impl ModelSpec {
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.params.iter().map(|(_, s)| s.clone()).collect()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.as_usize_vec()?,
+        dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        anyhow::ensure!(j.get("version")?.as_usize()? == 1, "unknown manifest version");
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            let inputs: Vec<IoSpec> =
+                a.get("inputs")?.as_arr()?.iter().map(parse_io).collect::<Result<_>>()?;
+            let outputs: Vec<IoSpec> =
+                a.get("outputs")?.as_arr()?.iter().map(parse_io).collect::<Result<_>>()?;
+            let model = match a.get("model")? {
+                Json::Str(s) => Some(s.clone()),
+                _ => None,
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    hlo_file: a.get("hlo")?.as_str()?.to_string(),
+                    kind: a.get("kind")?.as_str()?.to_string(),
+                    model,
+                    batch: a.get("batch")?.as_usize()?,
+                    n_params: a.get("n_params")?.as_usize()?,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models")?.as_obj()? {
+            let params: Vec<(String, Vec<usize>)> = m
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok((p.get("name")?.as_str()?.to_string(), p.get("shape")?.as_usize_vec()?))
+                })
+                .collect::<Result<_>>()?;
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    params_file: m.get("params_file")?.as_str()?.to_string(),
+                    params,
+                    n_elements: m.get("n_elements")?.as_usize()?,
+                    config: m.get("config")?.as_obj()?.clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Load a model's seed-0 initial parameters from its params.bin
+    /// (little-endian f32, spec order).
+    pub fn load_params(&self, model: &str) -> Result<Vec<Vec<f32>>> {
+        let spec = self.model(model)?;
+        let path = self.dir.join(&spec.params_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * spec.n_elements,
+            "params.bin size {} != 4 * {}",
+            bytes.len(),
+            spec.n_elements
+        );
+        let mut out = Vec::with_capacity(spec.params.len());
+        let mut off = 0usize;
+        for (_, shape) in &spec.params {
+            let n: usize = shape.iter().product();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts dir: `$PCL_DNN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("PCL_DNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the training hot path. Python is never involved at
+//! runtime — the rust binary is self-contained once `artifacts/` exists.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::Runtime;
+pub use manifest::{default_artifacts_dir, ArtifactSpec, IoSpec, Manifest, ModelSpec};
+pub use tensor::{Dtype, HostTensor};

@@ -1,0 +1,297 @@
+//! End-to-end trainer: glues the PJRT runtime, the synchronous-SGD
+//! coordinator, and the data-handling thread into the paper's training
+//! loop. Works for every model family in the zoo (CNN images, CD-DNN
+//! frames, GPT tokens) by dispatching on the manifest's model config.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{MicrobatchPlan, SgdConfig, SyncSgdCoordinator};
+use crate::data::{Corpus, FrameDataset, ImageDataset, Prefetcher};
+use crate::metrics::{History, StepRecord};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// model name in the manifest (e.g. "vgg_tiny")
+    pub model: String,
+    pub workers: usize,
+    pub global_mb: usize,
+    pub steps: u64,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// print a log line every N steps (0 = silent)
+    pub log_every: u64,
+    /// run the eval artifact every N steps (0 = never)
+    pub eval_every: u64,
+    /// "sgd" (paper default) or "adam" (e2e transformer driver)
+    pub optimizer: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "vgg_tiny".into(),
+            workers: 1,
+            global_mb: 16,
+            steps: 50,
+            lr: 0.01,
+            momentum: 0.0,
+            seed: 0,
+            log_every: 10,
+            eval_every: 0,
+            optimizer: "sgd".into(),
+        }
+    }
+}
+
+/// What kind of data a model consumes.
+enum Family {
+    Cnn { image: usize, in_ch: usize, classes: usize },
+    Cddnn { in_dim: usize, senones: usize },
+    Gpt { vocab: usize, seq: usize },
+}
+
+fn family(rt: &Runtime, model: &str) -> Result<Family> {
+    let spec = rt.manifest().model(model)?;
+    let ty = spec.config.get("type").context("model config missing 'type'")?.as_str()?;
+    let get = |k: &str| -> Result<usize> {
+        spec.config.get(k).with_context(|| format!("config missing {k}"))?.as_usize()
+    };
+    Ok(match ty {
+        "cnn" => Family::Cnn { image: get("image")?, in_ch: get("in_ch")?, classes: get("classes")? },
+        "cddnn" => Family::Cddnn { in_dim: get("in_dim")?, senones: get("senones")? },
+        "gpt" => Family::Gpt { vocab: get("vocab")?, seq: get("seq")? },
+        _ => bail!("unknown model family {ty:?}"),
+    })
+}
+
+/// A fully prepared microbatch: the non-parameter artifact inputs.
+type Micro = Vec<HostTensor>;
+
+/// Build the per-microbatch data generator for a model family, producing
+/// items in the exact consumption order of the coordinator (worker-major
+/// within a step, steps consecutive). Runs on the dedicated data thread.
+fn spawn_data_thread(
+    fam: &Family,
+    micro: usize,
+    plan: &MicrobatchPlan,
+    steps: u64,
+    seed: u64,
+) -> Prefetcher<Micro> {
+    let total_micro = plan.total_micro() as u64;
+    let global_mb = plan.global_mb as u64;
+    // flatten plan starts in consumption order
+    let starts: Vec<u64> =
+        plan.per_worker.iter().flatten().map(|&s| s as u64).collect();
+    let total_items = steps.saturating_mul(total_micro);
+    match fam {
+        Family::Cnn { image, in_ch, classes } => {
+            let ds = ImageDataset::new(*image, *in_ch, *classes, seed);
+            let (image, in_ch) = (*image, *in_ch);
+            Prefetcher::spawn(8, total_items, move |i| {
+                let step = i / total_micro;
+                let start = step * global_mb + starts[(i % total_micro) as usize];
+                let b = ds.batch(start, micro);
+                vec![
+                    HostTensor::f32(vec![micro, image, image, in_ch], b.images),
+                    HostTensor::i32(vec![micro], b.labels),
+                ]
+            })
+        }
+        Family::Cddnn { in_dim, senones } => {
+            let ds = FrameDataset::new(*in_dim, *senones, seed);
+            let in_dim = *in_dim;
+            Prefetcher::spawn(8, total_items, move |i| {
+                let step = i / total_micro;
+                let start = step * global_mb + starts[(i % total_micro) as usize];
+                let b = ds.batch(start, micro);
+                vec![
+                    HostTensor::f32(vec![micro, in_dim], b.images),
+                    HostTensor::i32(vec![micro], b.labels),
+                ]
+            })
+        }
+        Family::Gpt { vocab, seq } => {
+            let c = Corpus::new(*vocab, seed);
+            let seq = *seq;
+            Prefetcher::spawn(8, total_items, move |i| {
+                let step = i / total_micro;
+                let start = step * global_mb + starts[(i % total_micro) as usize];
+                let b = c.batch(start, micro, seq);
+                vec![HostTensor::i32(vec![micro, seq], b.tokens)]
+            })
+        }
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainOutcome {
+    pub history: History,
+    pub evals: Vec<EvalRecord>,
+    pub final_params: Vec<Vec<f32>>,
+}
+
+/// Validation metrics (CNN eval artifacts return loss/top1/top5).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub top1: f64,
+    pub top5: f64,
+}
+
+/// Train `cfg.model` for `cfg.steps` synchronous steps.
+pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    let artifact = format!("{}_train", cfg.model);
+    let spec = rt.manifest().artifact(&artifact)?.clone();
+    let micro = spec.batch;
+    let fam = family(rt, &cfg.model)?;
+    let plan = MicrobatchPlan::new(cfg.global_mb, cfg.workers, micro).with_context(|| {
+        format!("minibatch {} / workers {} / micro {micro}", cfg.global_mb, cfg.workers)
+    })?;
+    let params = rt.manifest().load_params(&cfg.model)?;
+    let optimizer = match cfg.optimizer.as_str() {
+        "sgd" => crate::coordinator::state::Optimizer::Sgd,
+        "adam" => crate::coordinator::state::Optimizer::adam(),
+        other => bail!("unknown optimizer {other:?} (sgd|adam)"),
+    };
+    let sgd = SgdConfig { lr: cfg.lr, momentum: cfg.momentum, weight_decay: 0.0, optimizer };
+    let mut coord = SyncSgdCoordinator::new(&artifact, params, plan.clone(), sgd);
+
+    let data = spawn_data_thread(&fam, micro, &plan, cfg.steps, cfg.seed);
+    let compile_s = rt.preload(&artifact)?;
+    if cfg.log_every > 0 {
+        println!(
+            "train {}: {} workers, MB={} (micro={}, {} exec/step), compile {:.2}s",
+            cfg.model, cfg.workers, cfg.global_mb, micro, plan.total_micro(), compile_s
+        );
+    }
+
+    let mut history = History::default();
+    let mut evals = Vec::new();
+    for step in 0..cfg.steps {
+        let t0 = std::time::Instant::now();
+        let stats = coord.step(rt, &mut |_w, _m, _start| {
+            data.next().expect("data thread ended early")
+        })?;
+        let dt = t0.elapsed().as_secs_f64();
+        history.push(StepRecord {
+            step,
+            loss: stats.loss,
+            images_per_s: cfg.global_mb as f64 / dt,
+            compute_s: stats.compute_s,
+            comm_wait_s: stats.comm_wait_s,
+        });
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            println!(
+                "  step {:>5}  loss {:.4}  {:>8.1} samples/s  (compute {:.0}ms, comm-wait {:.1}ms, data-stall {:.0}us)",
+                step,
+                stats.loss,
+                cfg.global_mb as f64 / dt,
+                stats.compute_s * 1e3,
+                stats.comm_wait_s * 1e3,
+                data.mean_stall_us(),
+            );
+        }
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            if let Some(e) = evaluate(rt, &cfg.model, &coord.params.tensors, cfg.seed)? {
+                evals.push(EvalRecord { step, ..e });
+                if cfg.log_every > 0 {
+                    if e.top1.is_nan() {
+                        println!("  eval  step {:>5}  loss {:.4}", step, e.loss);
+                    } else {
+                        println!(
+                            "  eval  step {:>5}  loss {:.4}  top1 {:.3}  top5 {:.3}",
+                            step, e.loss, e.top1, e.top5
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let final_params = coord.params.tensors.clone();
+    coord.shutdown();
+    Ok(TrainOutcome { history, evals, final_params })
+}
+
+/// Run the model's eval artifact on a held-out deterministic batch.
+/// Returns None when the model has no eval artifact.
+pub fn evaluate(
+    rt: &mut Runtime,
+    model: &str,
+    params: &[Vec<f32>],
+    seed: u64,
+) -> Result<Option<EvalRecord>> {
+    let name = format!("{model}_eval");
+    if rt.manifest().artifacts.get(&name).is_none() {
+        return Ok(None);
+    }
+    let spec = rt.manifest().artifact(&name)?.clone();
+    let b = spec.batch;
+    let fam = family(rt, model)?;
+    // held-out data: SAME distribution (same seed/templates), but a
+    // sample-index range training never reaches.
+    const HELD_OUT: u64 = 1 << 40;
+    let data: Vec<HostTensor> = match fam {
+        Family::Cnn { image, in_ch, classes } => {
+            let ds = ImageDataset::new(image, in_ch, classes, seed);
+            let batch = ds.batch(HELD_OUT, b);
+            vec![
+                HostTensor::f32(vec![b, image, image, in_ch], batch.images),
+                HostTensor::i32(vec![b], batch.labels),
+            ]
+        }
+        Family::Cddnn { in_dim, senones } => {
+            let ds = FrameDataset::new(in_dim, senones, seed);
+            let batch = ds.batch(HELD_OUT, b);
+            vec![
+                HostTensor::f32(vec![b, in_dim], batch.images),
+                HostTensor::i32(vec![b], batch.labels),
+            ]
+        }
+        Family::Gpt { vocab, seq } => {
+            let c = Corpus::new(vocab, seed);
+            let batch = c.batch(HELD_OUT, b, seq);
+            vec![HostTensor::i32(vec![b, seq], batch.tokens)]
+        }
+    };
+    let out = rt.execute_with_params(&name, params, &data)?;
+    let loss = out[0].scalar()? as f64;
+    let (top1, top5) = if out.len() >= 3 {
+        (out[1].scalar()? as f64, out[2].scalar()? as f64)
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    Ok(Some(EvalRecord { step: 0, loss, top1, top5 }))
+}
+
+/// Scoring (inference) throughput over the fwd artifact — the "FP" bars
+/// of Fig 3, measured for real on the tiny models.
+pub fn score_throughput(rt: &mut Runtime, model: &str, batches: u64, seed: u64) -> Result<f64> {
+    let name = format!("{model}_fwd");
+    let spec = rt.manifest().artifact(&name)?.clone();
+    let b = spec.batch;
+    let fam = family(rt, model)?;
+    let params = rt.manifest().load_params(model)?;
+    rt.preload(&name)?;
+    let data: Vec<HostTensor> = match fam {
+        Family::Cnn { image, in_ch, classes } => {
+            let ds = ImageDataset::new(image, in_ch, classes, seed);
+            let batch = ds.batch(0, b);
+            vec![HostTensor::f32(vec![b, image, image, in_ch], batch.images)]
+        }
+        Family::Cddnn { in_dim, senones } => {
+            let ds = FrameDataset::new(in_dim, senones, seed);
+            let batch = ds.batch(0, b);
+            vec![HostTensor::f32(vec![b, in_dim], batch.images)]
+        }
+        Family::Gpt { .. } => bail!("gpt models have no fwd artifact"),
+    };
+    let t0 = std::time::Instant::now();
+    for _ in 0..batches {
+        rt.execute_with_params(&name, &params, &data)?;
+    }
+    Ok((batches as usize * b) as f64 / t0.elapsed().as_secs_f64())
+}

@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (criterion is unavailable offline). Runs a
+//! closure in timed batches with warmup, reports median/mean/p95 and
+//! ops/sec. All `cargo bench` targets use this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn report(&self) {
+        println!(
+            "  {:<44} {:>12} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            format!("{:.1}/s", self.per_sec()),
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "  {:<44} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "median", "p95", "throughput"
+    );
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, pick an iteration count that fills
+/// ~`budget`, then sample. Returns stats over per-iteration times.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibrate
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as u64;
+    let target = budget.as_nanos() as u64;
+    let samples: u64 = 16;
+    let iters_per_sample = (target / samples / one).clamp(1, 1_000_000);
+
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    per_iter.sort_by(|a, b| a.total_cmp(b));
+    let n = per_iter.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: samples * iters_per_sample,
+        mean_ns: per_iter.iter().sum::<f64>() / n as f64,
+        median_ns: per_iter[n / 2],
+        p95_ns: per_iter[(n * 95 / 100).min(n - 1)],
+        min_ns: per_iter[0],
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p95_ns + 1.0);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn format_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e4).ends_with("us"));
+        assert!(fmt_ns(5.0e7).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,104 @@
+//! Tiny CLI argument parser: `command subcommand --key value --flag`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Opts {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Opts {
+    /// Parse from an iterator of args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Opts> {
+        let mut o = Opts::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    o.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    o.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    o.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                o.positional.push(a);
+            }
+        }
+        Ok(o)
+    }
+
+    pub fn from_env() -> Result<Opts> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow!("--{key}: cannot parse {v:?} as {}", std::any::type_name::<T>())),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Opts {
+        Opts::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let o = parse("train --model vgg_tiny --workers 4 --verbose");
+        assert_eq!(o.pos(0), Some("train"));
+        assert_eq!(o.str_opt("model"), Some("vgg_tiny"));
+        assert_eq!(o.parse_or("workers", 1usize).unwrap(), 4);
+        assert!(o.bool_flag("verbose"));
+        assert!(!o.bool_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let o = parse("simulate fig4 --minibatch=512");
+        assert_eq!(o.parse_or("minibatch", 0u64).unwrap(), 512);
+        assert_eq!(o.pos(1), Some("fig4"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let o = parse("x");
+        assert_eq!(o.parse_or("lr", 0.1f64).unwrap(), 0.1);
+        assert_eq!(o.str_or("model", "vgg_tiny"), "vgg_tiny");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let o = parse("x --n abc");
+        assert!(o.parse_or("n", 3usize).is_err());
+    }
+}

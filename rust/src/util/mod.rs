@@ -1,0 +1,9 @@
+//! In-tree substrates that would normally be external crates. This
+//! workspace builds fully offline (vendor/ holds only `xla` + `anyhow`),
+//! so the JSON codec, deterministic PRNG, CLI parser and micro-bench
+//! harness are implemented here (see DESIGN.md system inventory).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,217 @@
+//! Property-based tests on coordinator invariants (routing/sharding,
+//! batching, state management) and the collectives — randomized with the
+//! in-tree deterministic PRNG (proptest is unavailable offline; shrinking
+//! is traded for printing the failing seed/case).
+
+use pcl_dnn::collectives::{inline, shard_range, threaded, GroupTopology};
+use pcl_dnn::coordinator::{CommandQueue, MicrobatchPlan, ParamStore, SgdConfig};
+use pcl_dnn::util::json::Json;
+use pcl_dnn::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+#[test]
+fn prop_shard_ranges_partition() {
+    let mut rng = Rng::new(0x5a5a);
+    for case in 0..CASES {
+        let n = 1 + rng.below(16) as usize;
+        let len = rng.below(10_000) as usize;
+        let mut covered = 0usize;
+        let mut prev_end = 0usize;
+        for r in 0..n {
+            let s = shard_range(r, n, len);
+            assert_eq!(s.start, prev_end, "case {case}: gap at rank {r}");
+            covered += s.len();
+            prev_end = s.end;
+            // balance: sizes differ by at most one
+            assert!(s.len() + 1 >= len / n && s.len() <= len / n + 1, "case {case}");
+        }
+        assert_eq!(covered, len, "case {case}");
+    }
+}
+
+#[test]
+fn prop_microbatch_plan_is_lossless_permutation() {
+    let mut rng = Rng::new(0xbeef);
+    for case in 0..CASES {
+        let workers = 1 + rng.below(8) as usize;
+        let micro = 1 + rng.below(8) as usize;
+        let per_w = 1 + rng.below(8) as usize;
+        let global = workers * micro * per_w;
+        let plan = MicrobatchPlan::new(global, workers, micro).unwrap();
+        let mut samples: Vec<usize> = plan
+            .per_worker
+            .iter()
+            .flatten()
+            .flat_map(|&s| s..s + micro)
+            .collect();
+        samples.sort_unstable();
+        assert_eq!(samples, (0..global).collect::<Vec<_>>(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_plan_worker_invariance_of_sample_set() {
+    // the Fig 5 precondition for arbitrary random shapes
+    let mut rng = Rng::new(0x41);
+    for _ in 0..CASES {
+        let micro = 1 + rng.below(4) as usize;
+        let base = 1 + rng.below(6) as usize;
+        let global = micro * base * 8;
+        let mut sets: Vec<Vec<usize>> = Vec::new();
+        for workers in [1usize, 2, 4, 8] {
+            let plan = MicrobatchPlan::new(global, workers, micro).unwrap();
+            let mut v: Vec<usize> =
+                plan.per_worker.iter().flatten().flat_map(|&s| s..s + micro).collect();
+            v.sort_unstable();
+            sets.push(v);
+        }
+        assert!(sets.windows(2).all(|w| w[0] == w[1]));
+    }
+}
+
+#[test]
+fn prop_inline_threaded_collectives_bitwise_equal() {
+    let mut rng = Rng::new(0xc011);
+    for case in 0..60 {
+        let ranks = 1 + rng.below(9) as usize;
+        let len = rng.below(3000) as usize;
+        let mut a: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..len).map(|_| rng.normal()).collect())
+            .collect();
+        let mut b = a.clone();
+        inline::allreduce(&mut a);
+        threaded::allreduce(&mut b);
+        assert_eq!(a, b, "case {case} ranks {ranks} len {len}");
+    }
+}
+
+#[test]
+fn prop_allreduce_is_sum_within_fp_tolerance() {
+    let mut rng = Rng::new(0xadd);
+    for case in 0..60 {
+        let ranks = 2 + rng.below(6) as usize;
+        let len = 1 + rng.below(500) as usize;
+        let bufs: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..len).map(|_| rng.normal()).collect())
+            .collect();
+        let want: Vec<f64> = (0..len)
+            .map(|i| bufs.iter().map(|b| b[i] as f64).sum())
+            .collect();
+        let mut got = bufs.clone();
+        inline::allreduce(&mut got);
+        for r in 0..ranks {
+            for i in 0..len {
+                let d = (got[r][i] as f64 - want[i]).abs();
+                assert!(d <= 1e-4 * want[i].abs().max(1.0), "case {case} r{r} i{i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_group_topology_partitions_workers() {
+    let mut rng = Rng::new(0x707);
+    for _ in 0..CASES {
+        let gs = 1 + rng.below(6) as usize;
+        let groups = 1 + rng.below(6) as usize;
+        let t = GroupTopology::new(gs * groups, groups);
+        // every worker in exactly one group; replica sets hit every group
+        let mut count = vec![0usize; t.nodes];
+        for g in 0..t.groups {
+            for w in t.group_members(g) {
+                count[w] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+        for r in 0..t.group_size() {
+            let reps = t.replica_set(r);
+            let gset: std::collections::BTreeSet<usize> =
+                reps.iter().map(|&w| t.group_of(w)).collect();
+            assert_eq!(gset.len(), t.groups);
+            assert!(reps.iter().all(|&w| t.rank_in_group(w) == r));
+        }
+    }
+}
+
+#[test]
+fn prop_sgd_update_linearity() {
+    // applying grads g1 then g2 with lr == applying (g1+g2) with lr when
+    // momentum = 0 — the associativity the gradient-accumulation path
+    // relies on.
+    let mut rng = Rng::new(0x5d5);
+    for case in 0..100 {
+        let len = 1 + rng.below(64) as usize;
+        let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let g1: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let g2: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let cfg = SgdConfig { lr: 0.1, ..SgdConfig::default() };
+        let mut a = ParamStore::new(vec![init.clone()], cfg);
+        a.apply_all(&[g1.clone()], 1.0).unwrap();
+        a.apply_all(&[g2.clone()], 1.0).unwrap();
+        let sum: Vec<f32> = g1.iter().zip(&g2).map(|(x, y)| x + y).collect();
+        let mut b = ParamStore::new(vec![init], cfg);
+        b.apply_all(&[sum], 1.0).unwrap();
+        for (x, y) in a.tensors[0].iter().zip(&b.tensors[0]) {
+            assert!((x - y).abs() < 1e-5, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_command_queue_matches_fifo_model_single_thread() {
+    let mut rng = Rng::new(0x9);
+    for case in 0..CASES {
+        let cap = 2 + rng.below(16) as usize;
+        let q = CommandQueue::new(cap);
+        let mut model = std::collections::VecDeque::new();
+        let mut next = 0u64;
+        for _ in 0..200 {
+            if rng.below(2) == 0 {
+                let ok_model = model.len() < q.capacity();
+                match q.push(next) {
+                    Ok(()) => {
+                        assert!(ok_model, "case {case}: queue accepted beyond capacity");
+                        model.push_back(next);
+                        next += 1;
+                    }
+                    Err(_) => assert!(!ok_model, "case {case}: queue rejected below capacity"),
+                }
+            } else {
+                assert_eq!(q.pop(), model.pop_front(), "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(0x150);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| char::from_u32(32 + rng.below(95) as u32).unwrap())
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
