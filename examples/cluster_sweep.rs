@@ -7,12 +7,22 @@
 //! cargo run --release --example cluster_sweep
 //! ```
 
+use std::collections::BTreeMap;
+
 use pcl_dnn::analytic::machine::{MachineSpec, Platform};
 use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
 use pcl_dnn::models::Layer;
-use pcl_dnn::netsim::cluster::scaling_curve;
+use pcl_dnn::netsim::cluster::{
+    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+};
+use pcl_dnn::netsim::{FleetConfig, Topology};
+use pcl_dnn::util::json::Json;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
 
 fn main() {
     // ---------------- Table 1 ----------------
@@ -87,6 +97,7 @@ fn main() {
     t.print();
 
     // ---------------- Figs 4 / 6 / 7 ----------------
+    let mut bench_curves: BTreeMap<String, Json> = BTreeMap::new();
     for (title, net, platform, mb, nodes, expect) in [
         (
             "Fig 4 — VGG-A on Cori, MB=512",
@@ -141,6 +152,18 @@ fn main() {
             ]);
         }
         t.print();
+        let rows: Vec<Json> = curve
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("nodes".to_string(), num(p.nodes as f64));
+                m.insert("samples_per_s".to_string(), num(p.images_per_s));
+                m.insert("speedup".to_string(), num(p.speedup));
+                m.insert("efficiency".to_string(), num(p.efficiency));
+                Json::Obj(m)
+            })
+            .collect();
+        bench_curves.insert(title.to_string(), Json::Arr(rows));
     }
 
     // ---------------- ablation: hybrid off ----------------
@@ -149,4 +172,102 @@ fn main() {
     let hy = scaling_curve(&zoo::cddnn_full(), &p, 1024, &[16], true)[0].speedup;
     let dp = scaling_curve(&zoo::cddnn_full(), &p, 1024, &[16], false)[0].speedup;
     println!("hybrid {hy:.1}x vs pure-data {dp:.1}x  (the §3.3 claim: hybrid wins for FC nets)");
+
+    // ---------------- full-cluster simulator ----------------
+    println!("\n## Full-cluster simulator — α-β validation + fleet scenarios");
+    let mut full_section = BTreeMap::new();
+
+    // validation: homogeneous contention-free fabric vs analytic model
+    let mut clean = Platform::cori();
+    clean.fabric.congestion_per_doubling = 0.0;
+    let cfg8 = SimConfig { nodes: 8, minibatch: 256, ..Default::default() };
+    let rep = simulate_training(&zoo::vgg_a(), &clean, &cfg8);
+    let full = simulate_training_fleet(&zoo::vgg_a(), &clean, &cfg8, &FleetConfig::homogeneous(8));
+    let delta = (full.iteration_s - rep.iteration_s) / rep.iteration_s;
+    println!(
+        "validation (VGG-A x8, clean fabric): full {:.2} ms vs analytic {:.2} ms ({:+.2}%)",
+        full.iteration_s * 1e3,
+        rep.iteration_s * 1e3,
+        100.0 * delta
+    );
+    let mut vmap = BTreeMap::new();
+    vmap.insert("full_iter_s".to_string(), num(full.iteration_s));
+    vmap.insert("analytic_iter_s".to_string(), num(rep.iteration_s));
+    vmap.insert("rel_delta".to_string(), num(delta));
+    full_section.insert("validation_vgg8".to_string(), Json::Obj(vmap));
+
+    // straggler-skew sweep (VGG-A x8 on Cori)
+    let mut t = Table::new(&["skew", "iter ms", "slowdown", "min util"]);
+    let mut srows = Vec::new();
+    let mut base_s = 0.0;
+    for skew in [0.0, 0.1, 0.25, 0.5, 1.0] {
+        let fc = FleetConfig { nodes: 8, straggler_skew: skew, ..Default::default() };
+        let r = simulate_training_fleet(&zoo::vgg_a(), &clean, &cfg8, &fc);
+        if base_s == 0.0 {
+            base_s = r.iteration_s;
+        }
+        t.row(vec![
+            format!("{skew:.2}"),
+            format!("{:.2}", r.iteration_s * 1e3),
+            format!("{:.2}x", r.iteration_s / base_s),
+            format!("{:.0}%", 100.0 * r.min_compute_utilization),
+        ]);
+        let mut m = BTreeMap::new();
+        m.insert("skew".to_string(), num(skew));
+        m.insert("iter_s".to_string(), num(r.iteration_s));
+        m.insert("slowdown".to_string(), num(r.iteration_s / base_s));
+        srows.push(Json::Obj(m));
+    }
+    println!("straggler sweep (VGG-A x8, Cori):");
+    t.print();
+    full_section.insert("straggler_sweep".to_string(), Json::Arr(srows));
+
+    // oversubscribed-Ethernet contention sweep (CD-DNN hybrid x8 on AWS)
+    let mut aws = Platform::aws();
+    aws.fabric.congestion_per_doubling = 0.0;
+    let cfg_dnn = SimConfig { nodes: 8, minibatch: 1024, ..Default::default() };
+    let flat = simulate_training_fleet(
+        &zoo::cddnn_full(),
+        &aws,
+        &cfg_dnn,
+        &FleetConfig { nodes: 8, topology: Topology::FlatSwitch, ..Default::default() },
+    );
+    let mut t = Table::new(&["core", "iter ms", "vs flat"]);
+    t.row(vec![
+        "flat switch".into(),
+        format!("{:.2}", flat.iteration_s * 1e3),
+        "1.00x".into(),
+    ]);
+    let mut crows = Vec::new();
+    for oversub in [1.0, 2.0, 4.0] {
+        let fc = FleetConfig {
+            nodes: 8,
+            topology: Topology::FatTree { radix: 4, oversub },
+            ..Default::default()
+        };
+        let r = simulate_training_fleet(&zoo::cddnn_full(), &aws, &cfg_dnn, &fc);
+        t.row(vec![
+            format!("fat-tree {oversub}:1"),
+            format!("{:.2}", r.iteration_s * 1e3),
+            format!("{:.2}x", r.iteration_s / flat.iteration_s),
+        ]);
+        let mut m = BTreeMap::new();
+        m.insert("oversub".to_string(), num(oversub));
+        m.insert("iter_s".to_string(), num(r.iteration_s));
+        m.insert("vs_flat".to_string(), num(r.iteration_s / flat.iteration_s));
+        crows.push(Json::Obj(m));
+    }
+    println!("contention sweep (CD-DNN hybrid x8, AWS 10GbE, leaf radix 4):");
+    t.print();
+    full_section.insert("contention_sweep".to_string(), Json::Arr(crows));
+
+    // ---------------- JSON bench trajectory ----------------
+    let mut root = BTreeMap::new();
+    root.insert("curves".to_string(), Json::Obj(bench_curves));
+    root.insert("full_cluster".to_string(), Json::Obj(full_section));
+    let path = "BENCH_cluster_sweep.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

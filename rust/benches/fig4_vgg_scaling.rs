@@ -6,7 +6,10 @@ use std::time::Duration;
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::netsim::cluster::{
+    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+};
+use pcl_dnn::netsim::FleetConfig;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -39,4 +42,29 @@ fn main() {
         }
         t.print();
     }
+
+    // full-cluster vs analytic cross-check (homogeneous, contention-free
+    // fabric: the two fidelities must agree)
+    println!("\n# full-cluster cross-check, VGG-A x16, MB=256, clean fabric");
+    let mut clean = Platform::cori();
+    clean.fabric.congestion_per_doubling = 0.0;
+    let cfg = SimConfig { nodes: 16, minibatch: 256, ..Default::default() };
+    bench("simulate_training_fleet(vgg_a, 16 nodes)", Duration::from_millis(800), || {
+        black_box(simulate_training_fleet(
+            &net,
+            &clean,
+            &cfg,
+            &FleetConfig::homogeneous(16),
+        ));
+    })
+    .report();
+    let full = simulate_training_fleet(&net, &clean, &cfg, &FleetConfig::homogeneous(16));
+    let rep = simulate_training(&net, &clean, &cfg);
+    println!(
+        "full {:.2} ms vs analytic {:.2} ms ({:+.2}%, {} tasks)",
+        full.iteration_s * 1e3,
+        rep.iteration_s * 1e3,
+        100.0 * (full.iteration_s - rep.iteration_s) / rep.iteration_s,
+        full.tasks
+    );
 }

@@ -7,7 +7,10 @@ use std::time::Duration;
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::netsim::cluster::{
+    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+};
+use pcl_dnn::netsim::{FleetConfig, Topology};
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -40,4 +43,50 @@ fn main() {
     let of = scaling_curve(&zoo::overfeat_fast(), &p, 256, &[16], true)[0].speedup;
     let vg = scaling_curve(&zoo::vgg_a(), &p, 256, &[16], true)[0].speedup;
     println!("\n@16 nodes: OverFeat {of:.1}x vs VGG-A {vg:.1}x — VGG wins, as in the paper");
+
+    // full-cluster: oversubscribed Ethernet contention (what §6's cloud
+    // results hide inside their efficiency numbers)
+    println!("\n# full-cluster: OverFeat x16, flat switch vs oversubscribed fat-tree core");
+    let cfg = SimConfig { nodes: 16, minibatch: 256, ..Default::default() };
+    bench("simulate_training_fleet(overfeat, 16 aws nodes)", Duration::from_millis(800), || {
+        black_box(simulate_training_fleet(
+            &zoo::overfeat_fast(),
+            &p,
+            &cfg,
+            &FleetConfig { nodes: 16, ..Default::default() },
+        ));
+    })
+    .report();
+    let flat = simulate_training_fleet(
+        &zoo::overfeat_fast(),
+        &p,
+        &cfg,
+        &FleetConfig { nodes: 16, topology: Topology::FlatSwitch, ..Default::default() },
+    );
+    let mut t = Table::new(&["core", "iter ms", "img/s", "vs flat"]);
+    t.row(vec![
+        "flat switch".into(),
+        format!("{:.1}", flat.iteration_s * 1e3),
+        format!("{:.0}", flat.images_per_s),
+        "1.00x".into(),
+    ]);
+    for oversub in [2.0, 4.0, 8.0] {
+        let r = simulate_training_fleet(
+            &zoo::overfeat_fast(),
+            &p,
+            &cfg,
+            &FleetConfig {
+                nodes: 16,
+                topology: Topology::FatTree { radix: 8, oversub },
+                ..Default::default()
+            },
+        );
+        t.row(vec![
+            format!("fat-tree {oversub}:1"),
+            format!("{:.1}", r.iteration_s * 1e3),
+            format!("{:.0}", r.images_per_s),
+            format!("{:.2}x", r.iteration_s / flat.iteration_s),
+        ]);
+    }
+    t.print();
 }

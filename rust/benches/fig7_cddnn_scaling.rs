@@ -9,7 +9,10 @@ use std::time::Duration;
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::netsim::cluster::{
+    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+};
+use pcl_dnn::netsim::FleetConfig;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -42,4 +45,46 @@ fn main() {
     }
     t.print();
     println!("\n(paper's shape: DNN scales far worse than the CNNs; hybrid > pure data parallel)");
+
+    // full-cluster: straggler + heterogeneous-fleet sensitivity of the
+    // comm-bound ASR workload
+    println!("\n# full-cluster: CD-DNN x16, straggler skew and hetero generations");
+    let cfg = SimConfig { nodes: 16, minibatch: 1024, ..Default::default() };
+    bench("simulate_training_fleet(cddnn, 16 nodes)", Duration::from_millis(800), || {
+        black_box(simulate_training_fleet(
+            &net,
+            &p,
+            &cfg,
+            &FleetConfig { nodes: 16, ..Default::default() },
+        ));
+    })
+    .report();
+    let base = simulate_training_fleet(&net, &p, &cfg, &FleetConfig { nodes: 16, ..Default::default() });
+    let mut t = Table::new(&["fleet", "iter ms", "f/s", "vs homogeneous"]);
+    t.row(vec![
+        "homogeneous".into(),
+        format!("{:.1}", base.iteration_s * 1e3),
+        format!("{:.0}", base.images_per_s),
+        "1.00x".into(),
+    ]);
+    for (label, skew, hetero) in [
+        ("skew 0.25", 0.25, false),
+        ("skew 0.50", 0.50, false),
+        ("hetero (odd nodes 1.3x)", 0.0, true),
+        ("hetero + skew 0.25", 0.25, true),
+    ] {
+        let r = simulate_training_fleet(
+            &net,
+            &p,
+            &cfg,
+            &FleetConfig { nodes: 16, straggler_skew: skew, hetero, ..Default::default() },
+        );
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", r.iteration_s * 1e3),
+            format!("{:.0}", r.images_per_s),
+            format!("{:.2}x", r.iteration_s / base.iteration_s),
+        ]);
+    }
+    t.print();
 }

@@ -10,6 +10,10 @@
 //! repro analyze kernel-blocking       L1 Pallas tile VMEM/MXU estimates
 //! repro simulate fig4|fig6|fig7       cluster-simulated scaling figures
 //! repro simulate sweep --net vgg_a --platform cori --minibatch 256 ...
+//! repro simulate full --nodes 16 --topology fattree --oversub 4 \
+//!     --straggler-skew 0.3 --hetero --fail-at 2    full-cluster simulator
+//! repro simulate stragglers --skews 0,0.2,0.5,1    straggler-skew sweep
+//! repro simulate contention --oversubs 1,2,4,8     fat-tree core sweep
 //! repro train --model vgg_tiny --workers 4 --minibatch 16 --steps 100
 //! repro score --model vgg_tiny --batches 20
 //! ```
@@ -21,7 +25,10 @@ use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_bloc
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
 use pcl_dnn::models::NetDescriptor;
-use pcl_dnn::netsim::cluster::{scaling_curve, simulate_training, SimConfig};
+use pcl_dnn::netsim::cluster::{
+    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+};
+use pcl_dnn::netsim::{FleetConfig, Topology};
 use pcl_dnn::runtime::Runtime;
 use pcl_dnn::trainer::{self, TrainConfig};
 use pcl_dnn::util::cli::Opts;
@@ -398,8 +405,194 @@ fn simulate(opts: &Opts) -> Result<()> {
             t.print();
             Ok(())
         }
-        other => bail!("unknown figure {other:?} (fig4|fig6|fig7|sweep)"),
+        "full" => simulate_full(opts),
+        "stragglers" => simulate_stragglers(opts),
+        "contention" => simulate_contention(opts),
+        other => bail!("unknown figure {other:?} (fig4|fig6|fig7|sweep|full|stragglers|contention)"),
     }
+}
+
+fn topology_from(opts: &Opts) -> Result<Topology> {
+    let radix = opts.parse_or("radix", 8usize)?;
+    let oversub = opts.parse_or("oversub", 2.0f64)?;
+    match opts.str_or("topology", "switched").as_str() {
+        "switched" => Ok(Topology::FullySwitched),
+        "flat" => Ok(Topology::FlatSwitch),
+        "fattree" | "fat-tree" => Ok(Topology::FatTree { radix, oversub }),
+        other => bail!("unknown topology {other:?} (switched|flat|fattree)"),
+    }
+}
+
+fn fleet_from(opts: &Opts, nodes: usize) -> Result<FleetConfig> {
+    Ok(FleetConfig {
+        nodes,
+        topology: topology_from(opts)?,
+        straggler_skew: opts.parse_or("straggler-skew", 0.0f64)?,
+        hetero: opts.bool_flag("hetero"),
+        fail_at: opts
+            .str_opt("fail-at")
+            .map(str::parse::<usize>)
+            .transpose()
+            .map_err(|e| anyhow::anyhow!("--fail-at: {e}"))?,
+        fail_node: opts.parse_or("fail-node", 0usize)?,
+        recovery_s: opts.parse_or("recovery", 5.0f64)?,
+    })
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>> {
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.trim().parse::<T>().map_err(|_| anyhow::anyhow!("--{flag}: bad entry {p:?}")))
+        .collect()
+}
+
+/// One full-cluster simulation with an analytic cross-check.
+fn simulate_full(opts: &Opts) -> Result<()> {
+    let net = net_by_name(&opts.str_or("net", "vgg_a"))?;
+    let platform = platform_by_name(&opts.str_or("platform", "cori"))?;
+    let nodes = opts.parse_or("nodes", 16u64)?;
+    let minibatch = opts.parse_or("minibatch", 256u64)?;
+    let cfg = SimConfig {
+        nodes,
+        minibatch,
+        hybrid_fc: !opts.bool_flag("no-hybrid"),
+        iterations: opts.parse_or("iterations", 4usize)?,
+        ..Default::default()
+    };
+    let fleet = fleet_from(opts, nodes as usize)?;
+    println!(
+        "# full-cluster simulation — {} x{nodes} on {} ({}), MB={minibatch}, topology={}",
+        net.name,
+        platform.machine.name,
+        platform.fabric.name,
+        fleet.topology.tag()
+    );
+    let full = simulate_training_fleet(&net, &platform, &cfg, &fleet);
+    // the α-β cross-check strips congestion_per_doubling: that term is the
+    // representative model's empirical stand-in for the contention the
+    // full simulator models explicitly per link
+    let mut stripped = platform.clone();
+    stripped.fabric.congestion_per_doubling = 0.0;
+    let rep = simulate_training(&net, &stripped, &cfg);
+    let mut t = Table::new(&["", "iter ms", "samples/s", "mean util", "min util"]);
+    t.row(vec![
+        "full-cluster".into(),
+        format!("{:.2}", full.iteration_s * 1e3),
+        format!("{:.0}", full.images_per_s),
+        format!("{:.0}%", 100.0 * full.mean_compute_utilization),
+        format!("{:.0}%", 100.0 * full.min_compute_utilization),
+    ]);
+    t.row(vec![
+        "analytic, no congestion term".into(),
+        format!("{:.2}", rep.iteration_s * 1e3),
+        format!("{:.0}", rep.images_per_s),
+        format!("{:.0}%", 100.0 * rep.compute_utilization),
+        "-".into(),
+    ]);
+    t.print();
+    println!(
+        "{} simulated tasks; full vs α-β delta {:+.1}% (expect ~0 on a homogeneous switched fabric)",
+        full.tasks,
+        100.0 * (full.iteration_s - rep.iteration_s) / rep.iteration_s
+    );
+    Ok(())
+}
+
+/// Straggler-skew sweep: the scenario a representative-node model cannot
+/// express — synchronous SGD at the slowest node's pace.
+fn simulate_stragglers(opts: &Opts) -> Result<()> {
+    let net = net_by_name(&opts.str_or("net", "vgg_a"))?;
+    let platform = platform_by_name(&opts.str_or("platform", "cori"))?;
+    let nodes = opts.parse_or("nodes", 16u64)?;
+    let minibatch = opts.parse_or("minibatch", 256u64)?;
+    let skews: Vec<f64> = parse_list(&opts.str_or("skews", "0,0.1,0.25,0.5,1.0"), "skews")?;
+    let cfg = SimConfig {
+        nodes,
+        minibatch,
+        hybrid_fc: !opts.bool_flag("no-hybrid"),
+        ..Default::default()
+    };
+    println!(
+        "# straggler sweep — {} x{nodes} on {} ({}), MB={minibatch}",
+        net.name, platform.machine.name, platform.fabric.name
+    );
+    let mut t = Table::new(&["skew", "iter ms", "samples/s", "slowdown", "min util"]);
+    let mut base = 0.0;
+    for &skew in &skews {
+        let fleet = FleetConfig {
+            nodes: nodes as usize,
+            topology: topology_from(opts)?,
+            straggler_skew: skew,
+            hetero: opts.bool_flag("hetero"),
+            ..Default::default()
+        };
+        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
+        if base == 0.0 {
+            base = r.iteration_s;
+        }
+        t.row(vec![
+            format!("{skew:.2}"),
+            format!("{:.2}", r.iteration_s * 1e3),
+            format!("{:.0}", r.images_per_s),
+            format!("{:.2}x", r.iteration_s / base),
+            format!("{:.0}%", 100.0 * r.min_compute_utilization),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Oversubscribed-core contention sweep on a fat-tree fabric.
+fn simulate_contention(opts: &Opts) -> Result<()> {
+    let net = net_by_name(&opts.str_or("net", "cddnn_full"))?;
+    let platform = platform_by_name(&opts.str_or("platform", "aws"))?;
+    let nodes = opts.parse_or("nodes", 16u64)?;
+    let minibatch = opts.parse_or("minibatch", 1024u64)?;
+    let radix = opts.parse_or("radix", (nodes as usize / 2).max(2))?;
+    let oversubs: Vec<f64> = parse_list(&opts.str_or("oversubs", "1,2,4,8"), "oversubs")?;
+    let cfg = SimConfig {
+        nodes,
+        minibatch,
+        hybrid_fc: !opts.bool_flag("no-hybrid"),
+        ..Default::default()
+    };
+    println!(
+        "# contention sweep — {} x{nodes} on {} ({}), MB={minibatch}, leaf radix {radix}",
+        net.name, platform.machine.name, platform.fabric.name
+    );
+    let flat = simulate_training_fleet(
+        &net,
+        &platform,
+        &cfg,
+        &FleetConfig {
+            nodes: nodes as usize,
+            topology: Topology::FlatSwitch,
+            ..Default::default()
+        },
+    );
+    let mut t = Table::new(&["core", "iter ms", "samples/s", "vs flat"]);
+    t.row(vec![
+        "flat switch".into(),
+        format!("{:.2}", flat.iteration_s * 1e3),
+        format!("{:.0}", flat.images_per_s),
+        "1.00x".into(),
+    ]);
+    for &oversub in &oversubs {
+        let fleet = FleetConfig {
+            nodes: nodes as usize,
+            topology: Topology::FatTree { radix, oversub },
+            ..Default::default()
+        };
+        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
+        t.row(vec![
+            format!("fat-tree {oversub}:1"),
+            format!("{:.2}", r.iteration_s * 1e3),
+            format!("{:.0}", r.images_per_s),
+            format!("{:.2}x", r.iteration_s / flat.iteration_s),
+        ]);
+    }
+    t.print();
+    Ok(())
 }
 
 fn train(opts: &Opts) -> Result<()> {

@@ -1,11 +1,22 @@
-//! Per-iteration task DAG for distributed synchronous SGD, simulated on
+//! Per-iteration task DAGs for distributed synchronous SGD, simulated on
 //! the discrete-event engine — the machinery behind Figs 4, 6 and 7.
 //!
-//! Representative-node model: all nodes are symmetric in (hybrid) data
-//! parallelism, so we simulate one node's two streams — its compute
-//! pipeline and its dedicated communication thread (§4) — with collective
-//! durations taken from the α-β models over the full node count. The
-//! schedule encodes the paper's §3.1 overlap structure:
+//! Two fidelities share the same per-layer compute/strategy model:
+//!
+//! * [`simulate_training`] — the **representative-node** model: all nodes
+//!   are symmetric, so one node's two streams (compute pipeline +
+//!   dedicated communication thread, §4) are simulated with collective
+//!   durations taken from the α-β models over the full node count. Fast,
+//!   and the analytic cross-check for the full simulator.
+//! * [`simulate_training_fleet`] — the **full-cluster** model: every node
+//!   of a [`Fleet`] gets its own compute and comm streams, collectives
+//!   are expanded into per-message tasks over contended network links,
+//!   and per-node speed skew / heterogeneous generations / failure events
+//!   shape the schedule. This is the model that can express stragglers,
+//!   link contention on oversubscribed fabrics, and rejoin stalls — the
+//!   effects the paper's Ethernet/AWS results (§6) are dominated by.
+//!
+//! Both encode the paper's §3.1 overlap structure:
 //!
 //! * forward L0..Lk, then backward Lk..L0 with **wt-grad before bprop**;
 //! * the gradient exchange of layer i is submitted to the comm stream the
@@ -19,15 +30,17 @@
 //! Steady-state iteration time is measured between consecutive iteration
 //! boundaries after a warm-up iteration.
 
-
-
 use crate::analytic::comm_model::{self, Strategy};
 use crate::analytic::compute_model;
 use crate::analytic::machine::Platform;
+use crate::analytic::FabricSpec;
+use crate::collectives::GroupTopology;
 use crate::models::{Layer, NetDescriptor};
 
-use super::collective;
+use super::collective::{self, CollectiveKind};
 use super::engine::{Engine, TaskId};
+use super::fleet::{Fleet, FleetConfig};
+use super::network::ns;
 
 const COMPUTE: usize = 0;
 const COMM: usize = 1;
@@ -69,8 +82,19 @@ pub struct ScalingPoint {
     pub efficiency: f64,
 }
 
-fn ns(seconds: f64) -> u64 {
-    (seconds * 1e9).round().max(0.0) as u64
+/// Steady-state output of the full-cluster simulator.
+#[derive(Debug, Clone)]
+pub struct FleetSimResult {
+    pub nodes: u64,
+    pub iteration_s: f64,
+    pub images_per_s: f64,
+    /// Mean compute-stream utilization across nodes (steady iteration).
+    pub mean_compute_utilization: f64,
+    /// Utilization of the least-busy node — the one most starved by
+    /// stragglers or contention.
+    pub min_compute_utilization: f64,
+    /// Total tasks simulated (messages + compute + setup).
+    pub tasks: usize,
 }
 
 /// Communication seconds for one layer's gradient/weight exchange under
@@ -131,7 +155,7 @@ fn strategy_for(layer: &Layer, cfg: &SimConfig) -> Strategy {
 }
 
 /// Simulate `cfg.iterations` of synchronous SGD and return steady-state
-/// timing for the representative node.
+/// timing for the representative node (the analytic α-β path).
 pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConfig) -> SimResult {
     assert!(cfg.iterations >= 2);
     let m = &platform.machine;
@@ -234,7 +258,7 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
     // compute-stream utilization over the steady iteration
     let busy: u64 = (0..eng.len())
         .filter(|&id| {
-            eng.task(id).resource == COMPUTE
+            eng.task(id).resource() == COMPUTE
                 && sched.start_ns[id] >= t_prev
                 && sched.end_ns[id] <= t_last
         })
@@ -258,6 +282,377 @@ fn per_layer_mb(layer: &Layer, cfg: &SimConfig, mb_node: f64) -> f64 {
         Strategy::Data => mb_node,
         Strategy::Model => cfg.minibatch as f64 / cfg.nodes as f64,
         Strategy::Hybrid { .. } => cfg.minibatch as f64 / cfg.nodes as f64,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full-cluster simulation
+// ---------------------------------------------------------------------
+
+/// Build one collective over `members` (global node ids) with per-member
+/// gate tasks, FIFO-chained onto each member's command queue
+/// (`last_comm`). Returns the per-member completion tasks.
+#[allow(clippy::too_many_arguments)]
+fn run_collective(
+    eng: &mut Engine,
+    fleet: &Fleet,
+    fabric: &FabricSpec,
+    last_comm: &mut [Vec<TaskId>],
+    label: &str,
+    members: &[usize],
+    bytes: u64,
+    gates: &[Vec<TaskId>],
+    kind: CollectiveKind,
+) -> Vec<TaskId> {
+    let algo = collective::preferred_algorithm(fabric, bytes, members.len() as u64);
+    let comm: Vec<usize> = members.iter().map(|&v| fleet.comm_res(v)).collect();
+    let deps: Vec<Vec<TaskId>> = members
+        .iter()
+        .enumerate()
+        .map(|(j, &v)| {
+            let mut d = gates[j].clone();
+            d.extend(last_comm[v].iter().copied());
+            d
+        })
+        .collect();
+    let built = collective::build_collective(
+        eng, &fleet.net, &comm, label, members, bytes, &deps, kind, algo,
+    );
+    for (j, &v) in members.iter().enumerate() {
+        let mut next = vec![built.last_local[j]];
+        if built.done[j] != built.last_local[j] {
+            next.push(built.done[j]);
+        }
+        last_comm[v] = next;
+    }
+    built.done
+}
+
+/// RS -> strip SGD -> AG over one member set: the §3.4 gradient exchange
+/// as an explicit message schedule. Returns the per-member update task
+/// (the one that releases the next iteration's forward pass).
+#[allow(clippy::too_many_arguments)]
+fn exchange_update(
+    eng: &mut Engine,
+    fleet: &Fleet,
+    fabric: &FabricSpec,
+    last_comm: &mut [Vec<TaskId>],
+    label: &str,
+    members: &[usize],
+    bytes: u64,
+    wg: &[TaskId],
+    sgd_s: f64,
+) -> Vec<TaskId> {
+    let gates: Vec<Vec<TaskId>> = wg.iter().map(|&g| vec![g]).collect();
+    let rs = run_collective(
+        eng, fleet, fabric, last_comm, label, members, bytes, &gates,
+        CollectiveKind::ReduceScatter,
+    );
+    let sgd: Vec<TaskId> = members
+        .iter()
+        .enumerate()
+        .map(|(j, &v)| {
+            let mut d = vec![rs[j]];
+            d.extend(last_comm[v].iter().copied());
+            let id = eng.add(
+                format!("{label}.sgd.{j}"),
+                fleet.comm_res(v),
+                ns(sgd_s * fleet.time_mult[v]),
+                &d,
+            );
+            last_comm[v] = vec![id];
+            id
+        })
+        .collect();
+    let ag_gates: Vec<Vec<TaskId>> = sgd.iter().map(|&s| vec![s]).collect();
+    run_collective(
+        eng, fleet, fabric, last_comm, label, members, bytes, &ag_gates,
+        CollectiveKind::Allgather,
+    )
+}
+
+/// Simulate `cfg.iterations` of synchronous SGD across every node of the
+/// fleet, with collectives expanded to per-message tasks over contended
+/// links. `cfg.nodes` must equal `fleet_cfg.nodes`.
+pub fn simulate_training_fleet(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    fleet_cfg: &FleetConfig,
+) -> FleetSimResult {
+    assert!(cfg.iterations >= 2);
+    assert_eq!(
+        cfg.nodes as usize, fleet_cfg.nodes,
+        "SimConfig.nodes must match FleetConfig.nodes"
+    );
+    let m = &platform.machine;
+    let fabric = &platform.fabric;
+    let fleet = Fleet::new(fleet_cfg, fabric);
+    let n = fleet_cfg.nodes;
+    let mb_node = cfg.minibatch as f64 / cfg.nodes as f64;
+    let layers = &net.layers;
+    let k = layers.len();
+
+    let mut eng = Engine::new();
+    // [node][layer] update task of the previous iteration
+    let mut prev_update: Vec<Vec<Option<TaskId>>> = vec![vec![None; k]; n];
+    // per-node command-queue tail (FIFO chaining of collectives)
+    let mut last_comm: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    // per-iteration candidate end tasks
+    let mut iter_ends: Vec<Vec<TaskId>> = Vec::with_capacity(cfg.iterations);
+    // each node's backward-chain end of the previous iteration
+    let mut prev_chain: Vec<Option<TaskId>> = vec![None; n];
+    // recovery stalls occupy a compute stream but are idle time, not work
+    let mut fail_tasks: Vec<TaskId> = Vec::new();
+    let all_nodes: Vec<usize> = (0..n).collect();
+
+    for it in 0..cfg.iterations {
+        let mut iter_tail: Vec<TaskId> = Vec::new();
+        // failure/rejoin: the failed node stalls for detection + restart +
+        // replay before its forward pass; the synchronous step waits. The
+        // stall is gated on the node's previous iteration so it lands at
+        // the start of iteration `fail_at`, not at simulation time zero.
+        let mut stall: Vec<Option<TaskId>> = vec![None; n];
+        if fleet_cfg.fail_at == Some(it) {
+            let v = fleet_cfg.fail_node.min(n - 1);
+            let deps: Vec<TaskId> = prev_chain[v].into_iter().collect();
+            let id = eng.add(
+                format!("i{it}.fail.n{v}"),
+                fleet.compute_res(v),
+                ns(fleet_cfg.recovery_s),
+                &deps,
+            );
+            fail_tasks.push(id);
+            stall[v] = Some(id);
+        }
+
+        // ---------------- forward ----------------
+        let mut last_fwd: Vec<Option<TaskId>> = vec![None; n];
+        for (i, l) in layers.iter().enumerate() {
+            let strat = strategy_for(l, cfg);
+            let mut gates: Vec<Vec<TaskId>> = Vec::with_capacity(n);
+            for v in 0..n {
+                let mut d = Vec::new();
+                if let Some(p) = last_fwd[v] {
+                    d.push(p);
+                }
+                if let Some(u) = prev_update[v][i] {
+                    d.push(u);
+                }
+                if i == 0 {
+                    if let Some(s) = stall[v] {
+                        d.push(s);
+                    }
+                }
+                gates.push(d);
+            }
+            // model/hybrid layers gather remote activations before compute
+            let fwd_gate: Vec<Vec<TaskId>> = match strat {
+                Strategy::Model if n > 1 => {
+                    let bytes = 4 * l.in_elems() * cfg.minibatch;
+                    let done = run_collective(
+                        &mut eng, &fleet, fabric, &mut last_comm,
+                        &format!("i{it}.af{i}"), &all_nodes, bytes, &gates,
+                        CollectiveKind::Allgather,
+                    );
+                    done.into_iter().map(|d| vec![d]).collect()
+                }
+                Strategy::Hybrid { groups } if n > 1 => {
+                    let topo = GroupTopology::new(n, groups as usize);
+                    let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
+                    let mut out: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+                    for g in 0..topo.groups {
+                        let members = topo.group_members(g);
+                        let ggates: Vec<Vec<TaskId>> =
+                            members.iter().map(|&v| gates[v].clone()).collect();
+                        let done = run_collective(
+                            &mut eng, &fleet, fabric, &mut last_comm,
+                            &format!("i{it}.af{i}.g{g}"), &members, bytes, &ggates,
+                            CollectiveKind::Allgather,
+                        );
+                        for (j, &v) in members.iter().enumerate() {
+                            out[v] = vec![done[j]];
+                        }
+                    }
+                    out
+                }
+                _ => gates,
+            };
+            let eff_mb = per_layer_mb(l, cfg, mb_node);
+            let base_t = pass_time_s(l, m, eff_mb);
+            for v in 0..n {
+                let id = eng.add(
+                    format!("i{it}.f{i}.n{v}"),
+                    fleet.compute_res(v),
+                    ns(base_t * fleet.time_mult[v]),
+                    &fwd_gate[v],
+                );
+                last_fwd[v] = Some(id);
+            }
+        }
+
+        // ---------------- backward (wt-grad before bprop) ----------------
+        let mut chain: Vec<TaskId> =
+            (0..n).map(|v| last_fwd[v].expect("non-empty net")).collect();
+        let mut update_ids: Vec<Vec<Option<TaskId>>> = vec![vec![None; k]; n];
+        let first_weighted = layers.iter().position(|l| l.is_weighted()).unwrap_or(0);
+        for i in (0..k).rev() {
+            let l = &layers[i];
+            if !l.is_weighted() {
+                continue;
+            }
+            let strat = strategy_for(l, cfg);
+            let eff_mb = per_layer_mb(l, cfg, mb_node);
+            let per_pass = pass_time_s(l, m, eff_mb);
+            // weight gradient first (enables early comm submission)
+            let wg: Vec<TaskId> = (0..n)
+                .map(|v| {
+                    eng.add(
+                        format!("i{it}.w{i}.n{v}"),
+                        fleet.compute_res(v),
+                        ns(per_pass * fleet.time_mult[v]),
+                        &[chain[v]],
+                    )
+                })
+                .collect();
+            let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
+            let updates: Vec<TaskId> = match strat {
+                Strategy::Data if n > 1 => exchange_update(
+                    &mut eng, &fleet, fabric, &mut last_comm,
+                    &format!("i{it}.x{i}"), &all_nodes, l.weight_bytes(), &wg, sgd_s,
+                ),
+                Strategy::Hybrid { groups } if n > 1 => {
+                    // data-parallel exchange of the 1/(N/G) weight shard
+                    // across each replica set
+                    let topo = GroupTopology::new(n, groups as usize);
+                    let shard = l.weight_bytes() / topo.group_size() as u64;
+                    let mut out: Vec<TaskId> = vec![0; n];
+                    for r in 0..topo.group_size() {
+                        let members = topo.replica_set(r);
+                        let mwg: Vec<TaskId> = members.iter().map(|&v| wg[v]).collect();
+                        let done = exchange_update(
+                            &mut eng, &fleet, fabric, &mut last_comm,
+                            &format!("i{it}.x{i}.r{r}"), &members, shard, &mwg, sgd_s,
+                        );
+                        for (j, &v) in members.iter().enumerate() {
+                            out[v] = done[j];
+                        }
+                    }
+                    out
+                }
+                _ => {
+                    // no weight exchange (model parallel or single node):
+                    // local SGD on the comm stream
+                    (0..n)
+                        .map(|v| {
+                            let mut d = vec![wg[v]];
+                            d.extend(last_comm[v].iter().copied());
+                            let id = eng.add(
+                                format!("i{it}.sgd{i}.n{v}"),
+                                fleet.comm_res(v),
+                                ns(sgd_s * fleet.time_mult[v]),
+                                &d,
+                            );
+                            last_comm[v] = vec![id];
+                            id
+                        })
+                        .collect()
+                }
+            };
+            for v in 0..n {
+                update_ids[v][i] = Some(updates[v]);
+            }
+            iter_tail.extend(updates.iter().copied());
+            // backpropagation (skipped for the first weighted layer)
+            if i != first_weighted {
+                let bp: Vec<TaskId> = (0..n)
+                    .map(|v| {
+                        eng.add(
+                            format!("i{it}.b{i}.n{v}"),
+                            fleet.compute_res(v),
+                            ns(per_pass * fleet.time_mult[v]),
+                            &[wg[v]],
+                        )
+                    })
+                    .collect();
+                // model/hybrid layers exchange activations on the way back
+                chain = match strat {
+                    Strategy::Model if n > 1 => {
+                        let bytes = 4 * l.in_elems() * cfg.minibatch;
+                        let bgates: Vec<Vec<TaskId>> = bp.iter().map(|&b| vec![b]).collect();
+                        run_collective(
+                            &mut eng, &fleet, fabric, &mut last_comm,
+                            &format!("i{it}.ab{i}"), &all_nodes, bytes, &bgates,
+                            CollectiveKind::Allgather,
+                        )
+                    }
+                    Strategy::Hybrid { groups } if n > 1 => {
+                        let topo = GroupTopology::new(n, groups as usize);
+                        let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
+                        let mut out: Vec<TaskId> = vec![0; n];
+                        for g in 0..topo.groups {
+                            let members = topo.group_members(g);
+                            let bgates: Vec<Vec<TaskId>> =
+                                members.iter().map(|&v| vec![bp[v]]).collect();
+                            let done = run_collective(
+                                &mut eng, &fleet, fabric, &mut last_comm,
+                                &format!("i{it}.ab{i}.g{g}"), &members, bytes, &bgates,
+                                CollectiveKind::Allgather,
+                            );
+                            for (j, &v) in members.iter().enumerate() {
+                                out[v] = done[j];
+                            }
+                        }
+                        out
+                    }
+                    _ => bp,
+                };
+            } else {
+                chain = wg;
+            }
+        }
+        prev_update = update_ids;
+        for v in 0..n {
+            prev_chain[v] = Some(chain[v]);
+        }
+        iter_tail.extend(chain.iter().copied());
+        iter_ends.push(iter_tail);
+    }
+
+    let sched = eng.run();
+    let iter_finish = |it: usize| -> u64 {
+        iter_ends[it].iter().map(|&id| sched.end_ns[id]).max().unwrap_or(0)
+    };
+    let t_last = iter_finish(cfg.iterations - 1);
+    let t_prev = iter_finish(cfg.iterations - 2);
+    let iter_s = ((t_last - t_prev) as f64 / 1e9).max(1e-12);
+
+    // per-node compute utilization over the steady iteration (recovery
+    // stalls hold the stream but are idle time, not work)
+    let mut busy = vec![0u64; n];
+    for id in 0..eng.len() {
+        let r = eng.task(id).resource();
+        if r < 2 * n
+            && r % 2 == 0
+            && sched.start_ns[id] >= t_prev
+            && sched.end_ns[id] <= t_last
+            && !fail_tasks.contains(&id)
+        {
+            busy[r / 2] += eng.task(id).duration_ns;
+        }
+    }
+    let window = (t_last - t_prev).max(1) as f64;
+    let utils: Vec<f64> = busy.iter().map(|&b| (b as f64 / window).min(1.0)).collect();
+    let mean = utils.iter().sum::<f64>() / n as f64;
+    let min = utils.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    FleetSimResult {
+        nodes: cfg.nodes,
+        iteration_s: iter_s,
+        images_per_s: cfg.minibatch as f64 / iter_s,
+        mean_compute_utilization: mean,
+        min_compute_utilization: min,
+        tasks: eng.len(),
     }
 }
 
@@ -364,5 +759,32 @@ mod tests {
         let hybrid = scaling_curve(&cddnn_full(), &p, 1024, &[16], true)[0].speedup;
         let data = scaling_curve(&cddnn_full(), &p, 1024, &[16], false)[0].speedup;
         assert!(hybrid > data, "hybrid {hybrid} !> data {data}");
+    }
+
+    #[test]
+    fn fleet_single_node_matches_representative() {
+        let p = Platform::cori();
+        let cfg = SimConfig::default();
+        let rep = simulate_training(&vgg_a(), &p, &cfg);
+        let full = simulate_training_fleet(
+            &vgg_a(), &p, &cfg, &crate::netsim::FleetConfig::homogeneous(1),
+        );
+        let rel = (rep.iteration_s - full.iteration_s).abs() / rep.iteration_s;
+        assert!(rel < 0.01, "rep {} vs full {}", rep.iteration_s, full.iteration_s);
+    }
+
+    #[test]
+    fn fleet_sim_is_deterministic() {
+        let p = Platform::aws();
+        let cfg = SimConfig { nodes: 4, minibatch: 256, iterations: 3, ..Default::default() };
+        let fc = crate::netsim::FleetConfig {
+            nodes: 4,
+            straggler_skew: 0.25,
+            ..Default::default()
+        };
+        let a = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
+        let b = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
+        assert_eq!(a.iteration_s, b.iteration_s);
+        assert_eq!(a.tasks, b.tasks);
     }
 }

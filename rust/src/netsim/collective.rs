@@ -1,18 +1,38 @@
-//! α-β cost models for the paper's communication primitives (§3.4).
+//! The paper's communication primitives (§3.4), in two fidelities:
 //!
-//! * **part-reduce** = reduce-scatter (`MPI_Reduce_scatter`): each node
-//!   ends up owning the fully-reduced 1/N strip of the tensor.
-//! * **part-broadcast** = allgather (`MPI_Allgather`): each node
-//!   broadcasts its owned strip to the group.
+//! 1. **α-β cost models** — closed-form seconds for part-reduce
+//!    (`MPI_Reduce_scatter`) and part-broadcast (`MPI_Allgather`), used by
+//!    the representative-node simulator and as the analytic cross-check
+//!    for the full-cluster one.
+//! 2. **Schedule builders** — expand the same algorithms into per-message
+//!    task DAGs over the simulated links of a [`Network`], so link
+//!    contention, stragglers and heterogeneous fleets shape the collective
+//!    instead of a single scalar cost.
 //!
 //! Ring algorithm: N-1 steps of (bytes/N)-sized messages — bandwidth
 //! optimal, the standard choice for large gradient tensors. Butterfly
 //! (recursive halving/doubling): log2(N) steps — latency optimal for
-//! small tensors. `auto` picks the cheaper one, which is what a real MPI
-//! would do and what the paper's "optimized MPI-based communications
-//! library" implies.
+//! small tensors. `preferred_algorithm` picks the cheaper one, which is
+//! what a real MPI would do and what the paper's "optimized MPI-based
+//! communications library" implies. Butterfly schedules are built only
+//! for power-of-two groups (tuned libraries fall back to ring otherwise);
+//! the cost model covers non-powers-of-two with Rabenseifner's extra
+//! pre/post round.
 
 use crate::analytic::FabricSpec;
+
+use super::engine::{Engine, TaskId};
+use super::network::{ns, Network};
+
+/// Largest power of two <= n (n >= 1).
+fn prev_pow2(n: u64) -> u64 {
+    debug_assert!(n >= 1);
+    let mut pow = 1u64;
+    while pow * 2 <= n {
+        pow *= 2;
+    }
+    pow
+}
 
 /// Seconds for a ring reduce-scatter of `bytes` over `n` nodes.
 pub fn ring_reduce_scatter_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
@@ -30,13 +50,26 @@ pub fn ring_allgather_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
 }
 
 /// Seconds for a butterfly (recursive-halving) reduce-scatter.
+///
+/// For non-powers-of-two, `floor(log2 n)` halving rounds run among the
+/// largest power-of-two subset after the `n - 2^m` excess ranks fold
+/// their full vector into a partner in one extra pre-round (and pick the
+/// results back up in the allgather's mirror post-round) — one extra
+/// message latency and one extra full traversal of the vector
+/// (Rabenseifner). The previous `ceil(log2 n)` model priced the extra
+/// round's latency but missed its full-vector volume.
 pub fn butterfly_reduce_scatter_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
     if n <= 1 {
         return 0.0;
     }
-    let rounds = (n as f64).log2().ceil();
-    // round k exchanges bytes/2^k; total volume ~ bytes * (1 - 1/N)
-    let volume = bytes as f64 * (1.0 - 1.0 / n as f64);
+    let pow = prev_pow2(n);
+    let mut rounds = pow.trailing_zeros() as f64;
+    // halving rounds move bytes * (1 - 1/pow) over the wire
+    let mut volume = bytes as f64 * (1.0 - 1.0 / pow as f64);
+    if pow != n {
+        rounds += 1.0;
+        volume += bytes as f64;
+    }
     fabric.sw_latency_s + rounds * fabric.latency_s + volume / fabric.effective_bw_n(n)
 }
 
@@ -60,9 +93,228 @@ pub fn gradient_exchange_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
     reduce_scatter_s(fabric, bytes, n) + allgather_s(fabric, bytes, n)
 }
 
+// ---------------------------------------------------------------------
+// Schedule builders: the same algorithms as per-message task DAGs.
+// ---------------------------------------------------------------------
+
+/// Collective algorithm for a schedule build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Ring,
+    Butterfly,
+}
+
+/// Which primitive a schedule implements. Ring schedules are identical
+/// for both; butterfly halves message sizes for reduce-scatter and
+/// doubles them for allgather.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    ReduceScatter,
+    Allgather,
+}
+
+impl CollectiveKind {
+    fn tag(self) -> &'static str {
+        match self {
+            CollectiveKind::ReduceScatter => "rs",
+            CollectiveKind::Allgather => "ag",
+        }
+    }
+}
+
+/// Algorithm a tuned library would pick for this (bytes, group) point:
+/// the cheaper of ring and butterfly by the α-β model, with ring forced
+/// for non-power-of-two groups (the only case the butterfly schedule
+/// builder does not cover).
+pub fn preferred_algorithm(fabric: &FabricSpec, bytes: u64, n: u64) -> Algorithm {
+    if !n.is_power_of_two() {
+        return Algorithm::Ring;
+    }
+    if butterfly_reduce_scatter_s(fabric, bytes, n) < ring_reduce_scatter_s(fabric, bytes, n) {
+        Algorithm::Butterfly
+    } else {
+        Algorithm::Ring
+    }
+}
+
+/// Result of expanding one collective into tasks.
+#[derive(Debug, Clone)]
+pub struct BuiltCollective {
+    /// Per-member task after which that member's result is final.
+    pub done: Vec<TaskId>,
+    /// Per-member last task occupying the member's own comm stream (for
+    /// FIFO command-queue chaining of subsequent collectives).
+    pub last_local: Vec<TaskId>,
+}
+
+/// Expand a reduce-scatter or allgather of `bytes` over `group` (global
+/// node ids) into per-message tasks on `eng`.
+///
+/// Each message occupies the sender's comm stream (`comm_res`), its NIC
+/// tx port, the receiver's rx port, and any shared fabric channels on the
+/// route. `deps[j]` gates member `j`'s participation (e.g. its wt-grad
+/// task plus the previous collective on its command queue); a per-member
+/// setup task charging the fabric's software latency (SWlat) precedes the
+/// first message. On a homogeneous contention-free fabric the resulting
+/// makespan equals the α-β closed form of the same algorithm.
+#[allow(clippy::too_many_arguments)]
+pub fn build_collective(
+    eng: &mut Engine,
+    net: &Network,
+    comm_res: &[usize],
+    label: &str,
+    group: &[usize],
+    bytes: u64,
+    deps: &[Vec<TaskId>],
+    kind: CollectiveKind,
+    algo: Algorithm,
+) -> BuiltCollective {
+    let m = group.len();
+    assert_eq!(comm_res.len(), m);
+    assert_eq!(deps.len(), m);
+    if m <= 1 {
+        // no communication: a zero-duration marker keeps the chaining
+        // structure uniform for callers
+        let id = eng.add(
+            format!("{label}.{}.noop", kind.tag()),
+            comm_res[0],
+            0,
+            &deps[0],
+        );
+        return BuiltCollective { done: vec![id], last_local: vec![id] };
+    }
+
+    // per-member software setup (SWlat) on the member's comm stream
+    let setup: Vec<TaskId> = (0..m)
+        .map(|j| {
+            eng.add(
+                format!("{label}.{}.sw.{j}", kind.tag()),
+                comm_res[j],
+                ns(net.sw_latency_s),
+                &deps[j],
+            )
+        })
+        .collect();
+
+    match algo {
+        Algorithm::Ring => build_ring(eng, net, comm_res, label, group, bytes, &setup, kind),
+        Algorithm::Butterfly => {
+            build_butterfly(eng, net, comm_res, label, group, bytes, &setup, kind)
+        }
+    }
+}
+
+/// Ring: m-1 steps; in step s member j forwards a (bytes/m)-chunk to
+/// j+1. Step s of member j depends on its own previous send (command
+/// order) and on the chunk it received in step s-1 from member j-1.
+#[allow(clippy::too_many_arguments)]
+fn build_ring(
+    eng: &mut Engine,
+    net: &Network,
+    comm_res: &[usize],
+    label: &str,
+    group: &[usize],
+    bytes: u64,
+    setup: &[TaskId],
+    kind: CollectiveKind,
+) -> BuiltCollective {
+    let m = group.len();
+    let chunk = bytes as f64 / m as f64;
+    let mut last: Vec<TaskId> = setup.to_vec();
+    for s in 0..m - 1 {
+        let mut cur = Vec::with_capacity(m);
+        for j in 0..m {
+            let dst = (j + 1) % m;
+            let prev = (j + m - 1) % m;
+            let (route, dur) = net.message(group[j], group[dst], chunk);
+            let mut resources = Vec::with_capacity(route.len() + 1);
+            resources.push(comm_res[j]);
+            resources.extend(route);
+            let task_deps: Vec<TaskId> = if s == 0 {
+                vec![last[j]]
+            } else {
+                vec![last[j], last[prev]]
+            };
+            let id = eng.add_multi(
+                format!("{label}.{}{s}.{j}", kind.tag()),
+                &resources,
+                dur,
+                &task_deps,
+            );
+            cur.push(id);
+        }
+        last = cur;
+    }
+    // member j's result is final once the last incoming chunk (sent by
+    // j-1 in the final step) lands
+    let done: Vec<TaskId> = (0..m).map(|j| last[(j + m - 1) % m]).collect();
+    BuiltCollective { done, last_local: last }
+}
+
+/// Butterfly (recursive halving/doubling) over a power-of-two group:
+/// log2(m) pairwise exchange rounds; reduce-scatter halves message sizes
+/// (bytes/2, bytes/4, ...), allgather doubles them (bytes/m, ...,
+/// bytes/2). Round k of member j depends on its own round k-1 send and on
+/// the round k-1 message it received from its previous partner.
+#[allow(clippy::too_many_arguments)]
+fn build_butterfly(
+    eng: &mut Engine,
+    net: &Network,
+    comm_res: &[usize],
+    label: &str,
+    group: &[usize],
+    bytes: u64,
+    setup: &[TaskId],
+    kind: CollectiveKind,
+) -> BuiltCollective {
+    let m = group.len();
+    assert!(m.is_power_of_two(), "butterfly schedule needs a power-of-two group, got {m}");
+    let rounds = m.trailing_zeros() as usize;
+    let mut last: Vec<TaskId> = setup.to_vec();
+    let mut last_partner: Vec<usize> = (0..m).collect(); // self: no round yet
+    for k in 0..rounds {
+        let (dist, size) = match kind {
+            // halving: highest bit first, bytes/2 then bytes/4 ...
+            CollectiveKind::ReduceScatter => {
+                (m >> (k + 1), bytes as f64 / (1u64 << (k + 1)) as f64)
+            }
+            // doubling: lowest bit first, bytes/m then 2*bytes/m ...
+            CollectiveKind::Allgather => {
+                (1usize << k, bytes as f64 * (1u64 << k) as f64 / m as f64)
+            }
+        };
+        let mut cur = Vec::with_capacity(m);
+        for j in 0..m {
+            let partner = j ^ dist;
+            let (route, dur) = net.message(group[j], group[partner], size);
+            let mut resources = Vec::with_capacity(route.len() + 1);
+            resources.push(comm_res[j]);
+            resources.extend(route);
+            let task_deps: Vec<TaskId> = if k == 0 {
+                vec![last[j]]
+            } else {
+                // own previous send + the message received last round
+                vec![last[j], last[last_partner[j]]]
+            };
+            let id = eng.add_multi(
+                format!("{label}.{}{k}.{j}", kind.tag()),
+                &resources,
+                dur,
+                &task_deps,
+            );
+            cur.push(id);
+        }
+        last_partner = (0..m).map(|j| j ^ dist).collect();
+        last = cur;
+    }
+    let done: Vec<TaskId> = (0..m).map(|j| last[last_partner[j]]).collect();
+    BuiltCollective { done, last_local: last }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::network::Topology;
 
     fn fdr() -> FabricSpec {
         FabricSpec::fdr_infiniband()
@@ -83,6 +335,7 @@ mod tests {
             butterfly_reduce_scatter_s(&f, small, 128)
                 < ring_reduce_scatter_s(&f, small, 128)
         );
+        assert_eq!(preferred_algorithm(&f, small, 128), Algorithm::Butterfly);
     }
 
     #[test]
@@ -109,5 +362,123 @@ mod tests {
         let eth = gradient_exchange_s(&FabricSpec::ethernet_10g(), bytes, 16);
         let ib = gradient_exchange_s(&fdr(), bytes, 16);
         assert!(eth > 3.0 * ib);
+    }
+
+    #[test]
+    fn butterfly_non_pow2_pays_extra_round_and_volume() {
+        // regression for the log2(n).ceil() underestimate: n = 3, 6, 12
+        // must price floor(log2 n) halving rounds plus one full-vector
+        // pre/post round, not just a fractional extra latency.
+        let f = fdr();
+        let bytes = 8u64 << 20;
+        for n in [3u64, 6, 12] {
+            let pow = prev_pow2(n);
+            let bw = f.effective_bw_n(n);
+            let want = f.sw_latency_s
+                + (pow.trailing_zeros() as f64 + 1.0) * f.latency_s
+                + (bytes as f64 * (1.0 - 1.0 / pow as f64) + bytes as f64) / bw;
+            let got = butterfly_reduce_scatter_s(&f, bytes, n);
+            assert!((got - want).abs() / want < 1e-12, "n={n}: {got} vs {want}");
+            // strictly more than the old ceil(log2 n) model charged
+            let old = f.sw_latency_s
+                + (n as f64).log2().ceil() * f.latency_s
+                + bytes as f64 * (1.0 - 1.0 / n as f64) / bw;
+            assert!(got > old, "n={n}: new {got} must exceed old {old}");
+            // and the builder never gets asked for a non-pow2 butterfly
+            assert_eq!(preferred_algorithm(&f, 4 * 1024, n), Algorithm::Ring);
+        }
+        // powers of two are unchanged by the fix
+        let n = 8u64;
+        let want = f.sw_latency_s
+            + 3.0 * f.latency_s
+            + bytes as f64 * (1.0 - 1.0 / 8.0) / f.effective_bw_n(n);
+        let got = butterfly_reduce_scatter_s(&f, bytes, n);
+        assert!((got - want).abs() / want < 1e-12, "{got} vs {want}");
+    }
+
+    /// Contention-free network + engine harness for schedule builds.
+    fn harness(nodes: usize) -> (Engine, Network, Vec<usize>, Vec<usize>, Vec<Vec<TaskId>>) {
+        let mut f = fdr();
+        f.congestion_per_doubling = 0.0;
+        let net = Network::new(Topology::FullySwitched, nodes, &f, 2 * nodes);
+        let eng = Engine::new();
+        let comm: Vec<usize> = (0..nodes).map(|v| 2 * v + 1).collect();
+        let group: Vec<usize> = (0..nodes).collect();
+        let deps: Vec<Vec<TaskId>> = vec![Vec::new(); nodes];
+        (eng, net, comm, group, deps)
+    }
+
+    #[test]
+    fn ring_schedule_matches_alpha_beta_on_clean_fabric() {
+        for n in [2usize, 3, 5, 8] {
+            let (mut eng, net, comm, group, deps) = harness(n);
+            let bytes = 16u64 << 20;
+            let built = build_collective(
+                &mut eng, &net, &comm, "t", &group, bytes, &deps,
+                CollectiveKind::ReduceScatter, Algorithm::Ring,
+            );
+            let sched = eng.run();
+            let mut f = fdr();
+            f.congestion_per_doubling = 0.0;
+            let want = ring_reduce_scatter_s(&f, bytes, n as u64);
+            let got = sched.makespan_ns as f64 / 1e9;
+            assert!((got - want).abs() / want < 0.01, "n={n}: {got} vs {want}");
+            // all members finish simultaneously on a homogeneous fabric
+            let ends: Vec<u64> = built.done.iter().map(|&id| sched.end_ns[id]).collect();
+            assert!(ends.iter().all(|&e| e == ends[0]), "{ends:?}");
+        }
+    }
+
+    #[test]
+    fn butterfly_schedule_matches_alpha_beta_on_clean_fabric() {
+        for n in [2usize, 4, 8, 16] {
+            for kind in [CollectiveKind::ReduceScatter, CollectiveKind::Allgather] {
+                let (mut eng, net, comm, group, deps) = harness(n);
+                let bytes = 4u64 << 20;
+                build_collective(
+                    &mut eng, &net, &comm, "t", &group, bytes, &deps, kind,
+                    Algorithm::Butterfly,
+                );
+                let sched = eng.run();
+                let mut f = fdr();
+                f.congestion_per_doubling = 0.0;
+                let want = butterfly_reduce_scatter_s(&f, bytes, n as u64);
+                let got = sched.makespan_ns as f64 / 1e9;
+                assert!(
+                    (got - want).abs() / want < 0.01,
+                    "n={n} {kind:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_delays_whole_ring() {
+        // one late member gates everyone: the DAG expresses what a scalar
+        // α-β cost cannot.
+        let n = 4usize;
+        let (mut eng, net, comm, group, _) = harness(n);
+        let bytes = 16u64 << 20;
+        let stall = eng.add("stall", 0, ns(0.5), &[]); // 500 ms on node 0's compute
+        let deps: Vec<Vec<TaskId>> =
+            (0..n).map(|j| if j == 0 { vec![stall] } else { Vec::new() }).collect();
+        let built = build_collective(
+            &mut eng, &net, &comm, "t", &group, bytes, &deps,
+            CollectiveKind::ReduceScatter, Algorithm::Ring,
+        );
+        let sched = eng.run();
+        let finish = built.done.iter().map(|&id| sched.end_ns[id]).max().unwrap();
+        assert!(finish >= ns(0.5), "collective cannot finish before the straggler joins");
+    }
+
+    #[test]
+    fn single_member_collective_is_free() {
+        let (mut eng, net, comm, _, _) = harness(2);
+        let built = build_collective(
+            &mut eng, &net, &comm[..1], "t", &[0], 1 << 20, &[Vec::new()],
+            CollectiveKind::Allgather, Algorithm::Ring,
+        );
+        let sched = eng.run();
+        assert_eq!(sched.end_ns[built.done[0]], 0);
     }
 }

@@ -1,29 +1,51 @@
 //! Deterministic discrete-event engine over a task DAG with unary
 //! resources.
 //!
-//! Each task occupies exactly one resource (FIFO, in ready order with id
-//! tie-break) for a fixed duration once all its dependencies completed.
-//! This is sufficient to model the paper's per-node execution: one serial
-//! compute stream plus one serial communication stream (the dedicated
-//! comm thread of §4), with the command-queue handoff being the
-//! compute->comm dependency edge.
+//! A task occupies one or more unary resources **simultaneously** for a
+//! fixed duration once all its dependencies have completed and all its
+//! resources are free. The first resource of a task is its "home" stream
+//! (a node's serial compute pipeline or its dedicated communication
+//! thread, the §4 software architecture); additional resources model
+//! contended network links (NIC tx/rx, oversubscribed fat-tree uplinks),
+//! so a message task holds its sender's injection port and its receiver's
+//! ejection port for its whole flight time.
+//!
+//! Scheduling is work-conserving greedy in (ready-time, task-id) order:
+//! when a task's dependencies complete it joins the ready set stamped
+//! with that time; at every event the ready set is scanned in order and
+//! every task whose full resource set is idle starts. For the
+//! single-resource task graphs the representative-node simulator builds,
+//! this is exactly the per-resource FIFO the previous engine implemented
+//! (ready order with id tie-break), so calibrated results are unchanged.
+//! Because a task acquires all of its resources atomically (no partial
+//! hold-and-wait), the schedule is deadlock-free by construction, and it
+//! is bit-identical across runs for a fixed task list — the determinism
+//! behind Fig 5's "distributed = serial" equivalence argument.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeSet, BinaryHeap};
 
 pub type TaskId = usize;
 
-/// A unit of work bound to one resource.
+/// A unit of work bound to a set of unary resources.
 #[derive(Debug, Clone)]
 pub struct Task {
     pub name: String,
-    /// Index of the unary resource this task runs on.
-    pub resource: usize,
+    /// Unary resources held simultaneously for the whole duration. The
+    /// first entry is the home stream; the rest are links etc.
+    pub resources: Vec<usize>,
     pub duration_ns: u64,
     pub deps: Vec<TaskId>,
 }
 
+impl Task {
+    /// Home resource (first of the resource set).
+    pub fn resource(&self) -> usize {
+        self.resources[0]
+    }
+}
+
 /// Simulation output: per-task start/end and the makespan.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Schedule {
     pub start_ns: Vec<u64>,
     pub end_ns: Vec<u64>,
@@ -48,18 +70,33 @@ impl Engine {
         Engine::default()
     }
 
-    /// Add a task; returns its id. Dependencies must already exist
-    /// (the DAG is built in topological order by construction).
+    /// Add a single-resource task; returns its id. Dependencies must
+    /// already exist (the DAG is built in topological order).
     pub fn add(&mut self, name: impl Into<String>, resource: usize, duration_ns: u64,
                deps: &[TaskId]) -> TaskId {
+        self.add_multi(name, &[resource], duration_ns, deps)
+    }
+
+    /// Add a task occupying every resource in `resources` at once (e.g. a
+    /// message holding sender tx + receiver rx + a shared uplink).
+    pub fn add_multi(&mut self, name: impl Into<String>, resources: &[usize],
+                     duration_ns: u64, deps: &[TaskId]) -> TaskId {
         let id = self.tasks.len();
         for &d in deps {
             assert!(d < id, "dependency {d} of task {id} does not exist yet");
         }
-        self.n_resources = self.n_resources.max(resource + 1);
+        assert!(!resources.is_empty(), "task {id} needs at least one resource");
+        // order-preserving dedup: the first entry stays the home resource
+        let mut res: Vec<usize> = Vec::with_capacity(resources.len());
+        for &r in resources {
+            if !res.contains(&r) {
+                res.push(r);
+            }
+            self.n_resources = self.n_resources.max(r + 1);
+        }
         self.tasks.push(Task {
             name: name.into(),
-            resource,
+            resources: res,
             duration_ns,
             deps: deps.to_vec(),
         });
@@ -72,6 +109,10 @@ impl Engine {
 
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
+    }
+
+    pub fn n_resources(&self) -> usize {
+        self.n_resources
     }
 
     pub fn task(&self, id: TaskId) -> &Task {
@@ -88,40 +129,21 @@ impl Engine {
                 dependents[d].push(id);
             }
         }
-        let mut queues: Vec<VecDeque<TaskId>> = vec![VecDeque::new(); self.n_resources];
         let mut busy_until: Vec<u64> = vec![0; self.n_resources];
         let mut start = vec![u64::MAX; n];
         let mut end = vec![u64::MAX; n];
+        // tasks whose deps are done, ordered by (time they became ready, id)
+        let mut ready: BTreeSet<(u64, TaskId)> = BTreeSet::new();
         // min-heap of (completion_time, task_id)
         let mut events: BinaryHeap<std::cmp::Reverse<(u64, TaskId)>> = BinaryHeap::new();
 
         for (id, t) in self.tasks.iter().enumerate() {
             if t.deps.is_empty() {
-                queues[t.resource].push_back(id);
+                ready.insert((0, id));
             }
         }
 
-        let try_start_all = |now: u64,
-                                 queues: &mut Vec<VecDeque<TaskId>>,
-                                 busy_until: &mut Vec<u64>,
-                                 start: &mut Vec<u64>,
-                                 end: &mut Vec<u64>,
-                                 events: &mut BinaryHeap<std::cmp::Reverse<(u64, TaskId)>>| {
-            for r in 0..self.n_resources {
-                if busy_until[r] <= now {
-                    if let Some(id) = queues[r].pop_front() {
-                        let s = now.max(busy_until[r]);
-                        let e = s + self.tasks[id].duration_ns;
-                        start[id] = s;
-                        end[id] = e;
-                        busy_until[r] = e;
-                        events.push(std::cmp::Reverse((e, id)));
-                    }
-                }
-            }
-        };
-
-        try_start_all(0, &mut queues, &mut busy_until, &mut start, &mut end, &mut events);
+        dispatch(&self.tasks, 0, &mut ready, &mut busy_until, &mut start, &mut end, &mut events);
 
         let mut done = 0usize;
         while let Some(std::cmp::Reverse((t, id))) = events.pop() {
@@ -129,14 +151,45 @@ impl Engine {
             for &d in &dependents[id] {
                 remaining[d] -= 1;
                 if remaining[d] == 0 {
-                    queues[self.tasks[d].resource].push_back(d);
+                    ready.insert((t, d));
                 }
             }
-            try_start_all(t, &mut queues, &mut busy_until, &mut start, &mut end, &mut events);
+            dispatch(&self.tasks, t, &mut ready, &mut busy_until, &mut start, &mut end,
+                     &mut events);
         }
         assert_eq!(done, n, "deadlock: {done}/{n} tasks completed (cycle in DAG?)");
         let makespan = end.iter().copied().max().unwrap_or(0);
         Schedule { start_ns: start, end_ns: end, makespan_ns: makespan }
+    }
+}
+
+/// Start every ready task whose full resource set is idle at `now`,
+/// scanning in (ready-time, id) order.
+fn dispatch(
+    tasks: &[Task],
+    now: u64,
+    ready: &mut BTreeSet<(u64, TaskId)>,
+    busy_until: &mut [u64],
+    start: &mut [u64],
+    end: &mut [u64],
+    events: &mut BinaryHeap<std::cmp::Reverse<(u64, TaskId)>>,
+) {
+    let mut started: Vec<(u64, TaskId)> = Vec::new();
+    for &(ready_at, id) in ready.iter() {
+        let t = &tasks[id];
+        if t.resources.iter().all(|&r| busy_until[r] <= now) {
+            let e = now + t.duration_ns;
+            for &r in &t.resources {
+                busy_until[r] = e;
+            }
+            start[id] = now;
+            end[id] = e;
+            events.push(std::cmp::Reverse((e, id)));
+            started.push((ready_at, id));
+        }
+    }
+    for key in started {
+        ready.remove(&key);
     }
 }
 
@@ -204,6 +257,52 @@ mod tests {
         for w in ids.windows(2) {
             assert!(s.start_ns[w[0]] < s.start_ns[w[1]]);
         }
+    }
+
+    #[test]
+    fn multi_resource_task_serializes_on_shared_link() {
+        // two messages from different senders into the same receiver NIC:
+        // the shared rx resource serializes them.
+        let mut e = Engine::new();
+        let a = e.add_multi("msg0->2", &[0, 10, 12], 100, &[]);
+        let b = e.add_multi("msg1->2", &[1, 11, 12], 100, &[]);
+        let s = e.run();
+        assert_eq!(s.start_ns[a], 0);
+        assert_eq!(s.start_ns[b], 100); // rx (12) busy until 100
+        assert_eq!(s.makespan_ns, 200);
+    }
+
+    #[test]
+    fn multi_resource_disjoint_links_run_in_parallel() {
+        let mut e = Engine::new();
+        e.add_multi("msg0->1", &[0, 10, 11], 100, &[]);
+        e.add_multi("msg2->3", &[2, 12, 13], 100, &[]);
+        let s = e.run();
+        assert_eq!(s.makespan_ns, 100);
+    }
+
+    #[test]
+    fn blocked_task_does_not_stall_other_resources() {
+        // t0 holds link L long; t1 (ready first, wants L) waits, but t2 on
+        // a different resource set starts immediately — work conserving.
+        let mut e = Engine::new();
+        let t0 = e.add_multi("hold", &[0, 5], 100, &[]);
+        let t1 = e.add_multi("wants_link", &[1, 5], 10, &[]);
+        let t2 = e.add("independent", 2, 10, &[]);
+        let s = e.run();
+        assert_eq!(s.start_ns[t0], 0);
+        assert_eq!(s.start_ns[t2], 0);
+        assert_eq!(s.start_ns[t1], 100);
+    }
+
+    #[test]
+    fn duplicate_resources_deduped() {
+        let mut e = Engine::new();
+        let a = e.add_multi("dup", &[3, 3, 3], 50, &[]);
+        let s = e.run();
+        assert_eq!(s.end_of(a), 50);
+        assert_eq!(e.task(a).resources, vec![3]);
+        assert_eq!(e.task(a).resource(), 3);
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Fleet instantiation: N nodes × (compute, comm) streams over a
+//! [`Network`], with optional per-node speed skew (stragglers),
+//! heterogeneous node generations, and failure/rejoin events.
+//!
+//! Engine resource layout: node `v` owns compute stream `2v` and comm
+//! stream `2v+1` (the §4 dedicated communication thread); all network
+//! link resources start at `2N` and are managed by [`Network`].
+
+use crate::analytic::FabricSpec;
+
+use super::network::{Network, Topology};
+
+/// Shape of a simulated fleet.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub nodes: usize,
+    pub topology: Topology,
+    /// Linear straggler ramp: node `i`'s compute (and local SGD) runs
+    /// `1 + skew * i/(N-1)` times slower than node 0. 0 = homogeneous.
+    pub straggler_skew: f64,
+    /// Heterogeneous fleet: every odd node is a 30% slower older
+    /// generation (composes with the straggler ramp).
+    pub hetero: bool,
+    /// Fail `fail_node` at the start of this iteration; the synchronous
+    /// step stalls until the node rejoins after `recovery_s` of
+    /// detection + restart + replay.
+    pub fail_at: Option<usize>,
+    pub fail_node: usize,
+    pub recovery_s: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            nodes: 1,
+            topology: Topology::FullySwitched,
+            straggler_skew: 0.0,
+            hetero: false,
+            fail_at: None,
+            fail_node: 0,
+            recovery_s: 5.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Homogeneous fleet of `nodes` on a fully-switched fabric — the
+    /// configuration that must reproduce the α-β predictions.
+    pub fn homogeneous(nodes: usize) -> Self {
+        FleetConfig { nodes, ..Default::default() }
+    }
+}
+
+/// An instantiated fleet: resource ids + per-node slowdown factors.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub cfg: FleetConfig,
+    pub net: Network,
+    /// Per-node compute-time multiplier (>= 1.0 means slower).
+    pub time_mult: Vec<f64>,
+}
+
+impl Fleet {
+    pub fn new(cfg: &FleetConfig, fabric: &FabricSpec) -> Fleet {
+        assert!(cfg.nodes >= 1, "fleet needs at least one node");
+        assert!(cfg.straggler_skew >= 0.0, "straggler skew must be >= 0");
+        let n = cfg.nodes;
+        let net = Network::new(cfg.topology, n, fabric, 2 * n);
+        let mut time_mult = vec![1.0; n];
+        if n > 1 && cfg.straggler_skew > 0.0 {
+            for (i, m) in time_mult.iter_mut().enumerate() {
+                *m *= 1.0 + cfg.straggler_skew * i as f64 / (n - 1) as f64;
+            }
+        }
+        if cfg.hetero {
+            for m in time_mult.iter_mut().skip(1).step_by(2) {
+                *m *= 1.3;
+            }
+        }
+        Fleet { cfg: cfg.clone(), net, time_mult }
+    }
+
+    /// Serial compute pipeline of node `v`.
+    pub fn compute_res(&self, v: usize) -> usize {
+        debug_assert!(v < self.cfg.nodes);
+        2 * v
+    }
+
+    /// Dedicated communication thread of node `v`.
+    pub fn comm_res(&self, v: usize) -> usize {
+        debug_assert!(v < self.cfg.nodes);
+        2 * v + 1
+    }
+
+    /// Slowest node's time multiplier (the synchronous bottleneck).
+    pub fn max_time_mult(&self) -> f64 {
+        self.time_mult.iter().cloned().fold(1.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_fleet_has_unit_multipliers() {
+        let f = Fleet::new(&FleetConfig::homogeneous(8), &FabricSpec::fdr_infiniband());
+        assert!(f.time_mult.iter().all(|&m| m == 1.0));
+        assert_eq!(f.max_time_mult(), 1.0);
+    }
+
+    #[test]
+    fn straggler_ramp_is_linear_and_bounded() {
+        let cfg = FleetConfig {
+            nodes: 5,
+            straggler_skew: 0.4,
+            ..Default::default()
+        };
+        let f = Fleet::new(&cfg, &FabricSpec::fdr_infiniband());
+        assert_eq!(f.time_mult[0], 1.0);
+        assert!((f.time_mult[4] - 1.4).abs() < 1e-12);
+        for w in f.time_mult.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn hetero_slows_odd_nodes() {
+        let cfg = FleetConfig { nodes: 4, hetero: true, ..Default::default() };
+        let f = Fleet::new(&cfg, &FabricSpec::fdr_infiniband());
+        assert_eq!(f.time_mult, vec![1.0, 1.3, 1.0, 1.3]);
+    }
+
+    #[test]
+    fn resource_ids_do_not_collide_with_network() {
+        let cfg = FleetConfig::homogeneous(6);
+        let f = Fleet::new(&cfg, &FabricSpec::ethernet_10g());
+        for v in 0..6 {
+            assert!(f.compute_res(v) < 12);
+            assert!(f.comm_res(v) < 12);
+            assert!(f.net.tx(v) >= 12);
+            assert!(f.net.rx(v) >= 12);
+        }
+    }
+}

@@ -3,18 +3,34 @@
 //! "Hardware substitutions").
 //!
 //! * [`engine`] — a deterministic task-graph discrete-event engine with
-//!   unary resources (a node's compute stream and its dedicated
-//!   communication thread — the paper's §4 software architecture).
-//! * [`collective`] — α-β cost models for the paper's two primitives,
-//!   part-reduce (`MPI_Reduce_scatter`) and part-broadcast
-//!   (`MPI_Allgather`), §3.4.
-//! * [`cluster`] — builds the per-iteration task DAG for synchronous SGD
-//!   (wt-grad before bprop, gradient exchange overlapped into remaining
-//!   backward + next forward) and extracts steady-state iteration time.
+//!   unary resources; tasks may occupy several resources at once, so a
+//!   message holds its sender's NIC, its receiver's NIC and any shared
+//!   fabric channel for its flight time.
+//! * [`network`] — the topology layer: flat Ethernet switch,
+//!   oversubscribed fat-tree, or fully-switched fabric, instantiated as
+//!   first-class contended link resources.
+//! * [`collective`] — the paper's two primitives, part-reduce
+//!   (`MPI_Reduce_scatter`) and part-broadcast (`MPI_Allgather`), §3.4:
+//!   α-β cost models plus ring / recursive-halving-doubling schedule
+//!   builders that expand them into per-message task DAGs.
+//! * [`fleet`] — N nodes × (compute, comm) streams with per-node speed
+//!   skew (stragglers), heterogeneous generations, and failure/rejoin.
+//! * [`cluster`] — the per-iteration synchronous-SGD DAG (wt-grad before
+//!   bprop, gradient exchange overlapped into remaining backward + next
+//!   forward) in two fidelities: the representative-node α-β model
+//!   ([`cluster::simulate_training`], the analytic cross-check) and the
+//!   full-cluster per-node model ([`cluster::simulate_training_fleet`]).
 
 pub mod cluster;
 pub mod collective;
 pub mod engine;
+pub mod fleet;
+pub mod network;
 
-pub use cluster::{simulate_training, ScalingPoint, SimConfig, SimResult};
+pub use cluster::{
+    simulate_training, simulate_training_fleet, FleetSimResult, ScalingPoint, SimConfig,
+    SimResult,
+};
 pub use engine::{Engine, Schedule, Task, TaskId};
+pub use fleet::{Fleet, FleetConfig};
+pub use network::{Network, Topology};

@@ -1,0 +1,227 @@
+//! Network topology layer: maps node pairs to contended link resources.
+//!
+//! Links are first-class unary resources of the discrete-event engine: a
+//! message from `src` to `dst` occupies the sender's NIC injection port
+//! (tx), the receiver's ejection port (rx), and — on an oversubscribed
+//! fat-tree — one up-channel of the source leaf and one down-channel of
+//! the destination leaf. Contention (many flows crossing an
+//! oversubscribed core, incast into one receiver, a straggler's late
+//! sends) then emerges from resource serialization instead of from the
+//! analytic model's `congestion_per_doubling` fudge factor.
+//!
+//! Calibration note: per-direction link bandwidth is the fabric's
+//! *overlapped-exchange* bandwidth ([`FabricSpec::effective_bw`]), the
+//! same constant the α-β formulas in [`super::collective`] use. With tx
+//! and rx as separate resources, a full-duplex send+recv pair overlaps
+//! naturally, and on a homogeneous contention-free fabric the simulated
+//! collectives converge to the closed-form α-β predictions exactly (the
+//! validation test in `tests/fleet_sim.rs` asserts this within 5%).
+
+use crate::analytic::FabricSpec;
+
+/// Round seconds to engine nanoseconds.
+pub fn ns(seconds: f64) -> u64 {
+    (seconds * 1e9).round().max(0.0) as u64
+}
+
+/// Fabric wiring between the nodes of a fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Topology {
+    /// All N nodes on one commodity Ethernet switch: non-blocking for
+    /// unicast, but every message pays a store-and-forward hop (2α).
+    FlatSwitch,
+    /// Leaf-spine fat-tree with `radix` nodes per leaf switch and an
+    /// oversubscribed core: each leaf exposes `radix / oversub`
+    /// full-rate channels toward the spine. Intra-leaf traffic costs 2α,
+    /// cross-leaf traffic 3α plus the shared channel.
+    FatTree { radix: usize, oversub: f64 },
+    /// Fully provisioned HPC fabric (Aries/FDR-class): per-node dedicated
+    /// paths, contention only at the NICs, single-α messages.
+    FullySwitched,
+}
+
+impl Topology {
+    /// Short tag for labels and JSON output.
+    pub fn tag(&self) -> String {
+        match self {
+            Topology::FlatSwitch => "flat".to_string(),
+            Topology::FatTree { radix, oversub } => format!("fattree{radix}x{oversub}"),
+            Topology::FullySwitched => "switched".to_string(),
+        }
+    }
+}
+
+/// Instantiated link resources for `nodes` endpoints of one fabric.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub topology: Topology,
+    pub nodes: usize,
+    /// Effective per-direction bandwidth of a NIC port, bytes/s.
+    pub nic_bw: f64,
+    /// Per-message wire latency (α), seconds.
+    pub latency_s: f64,
+    /// Per-collective software setup latency (the §3.2 SWlat term).
+    pub sw_latency_s: f64,
+    /// First engine resource id owned by the network.
+    base: usize,
+    /// Fat-tree: number of leaves and full-rate channels per leaf.
+    n_leaves: usize,
+    channels_per_leaf: usize,
+}
+
+impl Network {
+    /// Build the link resources for `nodes` endpoints, starting at engine
+    /// resource id `base` (ids below `base` belong to the fleet's
+    /// compute/comm streams).
+    pub fn new(topology: Topology, nodes: usize, fabric: &FabricSpec, base: usize) -> Network {
+        let (n_leaves, channels_per_leaf) = match topology {
+            Topology::FatTree { radix, oversub } => {
+                assert!(radix >= 1, "fat-tree radix must be >= 1");
+                assert!(oversub >= 1.0, "oversubscription must be >= 1.0");
+                let leaves = (nodes + radix - 1) / radix;
+                let ch = ((radix as f64 / oversub).floor() as usize).max(1);
+                (leaves, ch)
+            }
+            _ => (0, 0),
+        };
+        Network {
+            topology,
+            nodes,
+            nic_bw: fabric.effective_bw(),
+            latency_s: fabric.latency_s,
+            sw_latency_s: fabric.sw_latency_s,
+            base,
+            n_leaves,
+            channels_per_leaf,
+        }
+    }
+
+    /// Total engine resources the network occupies (tx+rx per node, plus
+    /// up+down channels per leaf on a fat-tree).
+    pub fn n_resources(&self) -> usize {
+        2 * self.nodes + 2 * self.n_leaves * self.channels_per_leaf
+    }
+
+    /// NIC injection port of node `v`.
+    pub fn tx(&self, v: usize) -> usize {
+        debug_assert!(v < self.nodes);
+        self.base + 2 * v
+    }
+
+    /// NIC ejection port of node `v`.
+    pub fn rx(&self, v: usize) -> usize {
+        debug_assert!(v < self.nodes);
+        self.base + 2 * v + 1
+    }
+
+    fn leaf_of(&self, v: usize) -> usize {
+        match self.topology {
+            Topology::FatTree { radix, .. } => v / radix,
+            _ => 0,
+        }
+    }
+
+    /// Up-channel `c` of leaf `l`.
+    fn up_channel(&self, l: usize, c: usize) -> usize {
+        self.base + 2 * self.nodes + 2 * l * self.channels_per_leaf + c
+    }
+
+    /// Down-channel `c` of leaf `l`.
+    fn down_channel(&self, l: usize, c: usize) -> usize {
+        self.base + 2 * self.nodes + (2 * l + 1) * self.channels_per_leaf + c
+    }
+
+    /// Link resources and end-to-end latency (seconds) of one message.
+    /// Channel choice is deterministic (hash of endpoint), so schedules
+    /// are bit-identical across runs.
+    pub fn route(&self, src: usize, dst: usize) -> (Vec<usize>, f64) {
+        debug_assert!(src != dst, "self-message {src}->{dst}");
+        match self.topology {
+            Topology::FullySwitched => (vec![self.tx(src), self.rx(dst)], self.latency_s),
+            Topology::FlatSwitch => (vec![self.tx(src), self.rx(dst)], 2.0 * self.latency_s),
+            Topology::FatTree { .. } => {
+                let (ls, ld) = (self.leaf_of(src), self.leaf_of(dst));
+                if ls == ld {
+                    (vec![self.tx(src), self.rx(dst)], 2.0 * self.latency_s)
+                } else {
+                    let up = self.up_channel(ls, src % self.channels_per_leaf);
+                    let down = self.down_channel(ld, dst % self.channels_per_leaf);
+                    (vec![self.tx(src), self.rx(dst), up, down], 3.0 * self.latency_s)
+                }
+            }
+        }
+    }
+
+    /// Resource set + duration (ns) for a `bytes`-sized message.
+    pub fn message(&self, src: usize, dst: usize, bytes: f64) -> (Vec<usize>, u64) {
+        let (resources, lat) = self.route(src, dst);
+        (resources, ns(lat + bytes / self.nic_bw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fdr() -> FabricSpec {
+        FabricSpec::fdr_infiniband()
+    }
+
+    #[test]
+    fn resource_ids_are_disjoint() {
+        let net = Network::new(Topology::FatTree { radix: 4, oversub: 2.0 }, 8, &fdr(), 16);
+        let mut seen = std::collections::BTreeSet::new();
+        for v in 0..8 {
+            assert!(seen.insert(net.tx(v)));
+            assert!(seen.insert(net.rx(v)));
+        }
+        for (src, dst) in [(0usize, 5usize), (1, 6), (4, 2), (7, 0)] {
+            let (res, _) = net.route(src, dst);
+            assert_eq!(res.len(), 4, "cross-leaf route has 4 resources");
+            for r in res {
+                assert!(r >= 16 && r < 16 + net.n_resources());
+                seen.insert(r);
+            }
+        }
+        // all ids at or above base
+        assert!(seen.iter().all(|&r| r >= 16));
+    }
+
+    #[test]
+    fn intra_leaf_skips_core_channels() {
+        let net = Network::new(Topology::FatTree { radix: 4, oversub: 4.0 }, 8, &fdr(), 0);
+        let (res, lat) = net.route(0, 3); // same leaf
+        assert_eq!(res.len(), 2);
+        assert_eq!(lat, 2.0 * net.latency_s);
+        let (res, lat) = net.route(0, 4); // cross leaf
+        assert_eq!(res.len(), 4);
+        assert_eq!(lat, 3.0 * net.latency_s);
+    }
+
+    #[test]
+    fn oversubscription_reduces_channels() {
+        let full = Network::new(Topology::FatTree { radix: 8, oversub: 1.0 }, 16, &fdr(), 0);
+        let over = Network::new(Topology::FatTree { radix: 8, oversub: 4.0 }, 16, &fdr(), 0);
+        assert_eq!(full.channels_per_leaf, 8);
+        assert_eq!(over.channels_per_leaf, 2);
+        assert!(over.n_resources() < full.n_resources());
+    }
+
+    #[test]
+    fn message_duration_matches_alpha_beta() {
+        let f = fdr();
+        let net = Network::new(Topology::FullySwitched, 4, &f, 0);
+        let bytes = 1u64 << 20;
+        let (_, dur) = net.message(0, 1, bytes as f64);
+        let want = ns(f.latency_s + bytes as f64 / f.effective_bw());
+        assert_eq!(dur, want);
+    }
+
+    #[test]
+    fn switched_is_lower_latency_than_flat() {
+        let f = FabricSpec::ethernet_10g();
+        let sw = Network::new(Topology::FullySwitched, 4, &f, 0);
+        let flat = Network::new(Topology::FlatSwitch, 4, &f, 0);
+        assert!(sw.route(0, 1).1 < flat.route(0, 1).1);
+    }
+}

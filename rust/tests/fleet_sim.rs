@@ -1,0 +1,245 @@
+//! Full-cluster simulator validation and scenario coverage.
+//!
+//! * The full per-message simulator must converge to the representative
+//!   α-β prediction on a homogeneous, contention-free fabric (within 5%).
+//! * It must also express what the representative model cannot: straggler
+//!   skew, oversubscribed-fabric contention, heterogeneous fleets, and
+//!   failure/rejoin stalls.
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::models::zoo;
+use pcl_dnn::netsim::cluster::{simulate_training, simulate_training_fleet, SimConfig};
+use pcl_dnn::netsim::{FleetConfig, Topology};
+
+/// Cori with the α-β congestion fudge stripped: the full simulator models
+/// contention explicitly, so the cross-check must too.
+fn contention_free_cori() -> Platform {
+    let mut p = Platform::cori();
+    p.fabric.congestion_per_doubling = 0.0;
+    p
+}
+
+#[test]
+fn full_cluster_matches_alpha_beta_data_parallel() {
+    // The acceptance bar: homogeneous fleet, fully-switched fabric, pure
+    // data parallelism — full-cluster iteration time within 5% of the
+    // representative-node α-β prediction.
+    let p = contention_free_cori();
+    for nodes in [2u64, 4, 8] {
+        let cfg = SimConfig {
+            nodes,
+            minibatch: 256,
+            hybrid_fc: false,
+            ..Default::default()
+        };
+        let rep = simulate_training(&zoo::vgg_a(), &p, &cfg);
+        let full = simulate_training_fleet(
+            &zoo::vgg_a(),
+            &p,
+            &cfg,
+            &FleetConfig::homogeneous(nodes as usize),
+        );
+        let rel = (full.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
+        assert!(
+            rel < 0.05,
+            "nodes={nodes}: full {} vs analytic {} ({:.1}% off)",
+            full.iteration_s,
+            rep.iteration_s,
+            100.0 * rel
+        );
+    }
+}
+
+#[test]
+fn full_cluster_matches_alpha_beta_hybrid() {
+    // Same bar with the paper's hybrid-FC recipe active (replica-set
+    // exchanges + activation allgathers among model-parallel groups).
+    let p = contention_free_cori();
+    let cfg = SimConfig { nodes: 8, minibatch: 256, ..Default::default() };
+    let rep = simulate_training(&zoo::vgg_a(), &p, &cfg);
+    let full =
+        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8));
+    let rel = (full.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
+    assert!(
+        rel < 0.05,
+        "full {} vs analytic {} ({:.1}% off)",
+        full.iteration_s,
+        rep.iteration_s,
+        100.0 * rel
+    );
+}
+
+#[test]
+fn straggler_skew_slows_iterations_monotonically() {
+    // Scenario 1 the representative model cannot express: a linear
+    // straggler ramp. Synchronous SGD runs at the slowest node's pace, so
+    // iteration time must grow with skew and approach the (1 + skew)
+    // compute bound.
+    let p = contention_free_cori();
+    let cfg = SimConfig { nodes: 8, minibatch: 256, hybrid_fc: false, ..Default::default() };
+    let mut prev = 0.0;
+    let base = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8));
+    for skew in [0.0, 0.2, 0.5, 1.0] {
+        let fc = FleetConfig { nodes: 8, straggler_skew: skew, ..Default::default() };
+        let r = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &fc);
+        assert!(
+            r.iteration_s >= prev,
+            "skew {skew}: {} not monotone (prev {prev})",
+            r.iteration_s
+        );
+        prev = r.iteration_s;
+        if skew > 0.0 {
+            // slower than homogeneous, no worse than the full slowdown
+            // applied to everything
+            assert!(r.iteration_s > base.iteration_s, "skew {skew}");
+            assert!(
+                r.iteration_s <= base.iteration_s * (1.0 + skew) * 1.05,
+                "skew {skew}: {} vs bound {}",
+                r.iteration_s,
+                base.iteration_s * (1.0 + skew)
+            );
+            // the fast nodes idle while waiting on the straggler
+            assert!(
+                r.min_compute_utilization < base.min_compute_utilization,
+                "skew {skew}"
+            );
+        }
+    }
+    // a meaningful skew must cost a meaningful fraction of the compute
+    let r = simulate_training_fleet(
+        &zoo::vgg_a(),
+        &p,
+        &cfg,
+        &FleetConfig { nodes: 8, straggler_skew: 1.0, ..Default::default() },
+    );
+    assert!(r.iteration_s > base.iteration_s * 1.3, "{} vs {}", r.iteration_s, base.iteration_s);
+}
+
+#[test]
+fn oversubscribed_ethernet_contention_slows_hybrid_training() {
+    // Scenario 2: an oversubscribed fat-tree core on (virtualized) 10
+    // GbE. Ring exchanges over consecutive ranks are oversubscription-
+    // tolerant (almost all hops stay inside a leaf), but the hybrid
+    // recipe's replica-set exchanges stride across leaves — CD-DNN's
+    // per-rank gradient flows all cross the core concurrently and
+    // serialize on the squeezed uplink channels.
+    let mut p = Platform::aws();
+    p.fabric.congestion_per_doubling = 0.0;
+    let cfg = SimConfig { nodes: 8, minibatch: 1024, ..Default::default() };
+    let baseline = simulate_training_fleet(
+        &zoo::cddnn_full(),
+        &p,
+        &cfg,
+        &FleetConfig { nodes: 8, topology: Topology::FlatSwitch, ..Default::default() },
+    );
+    let mut prev = 0.0;
+    for oversub in [1.0, 2.0, 4.0] {
+        let fc = FleetConfig {
+            nodes: 8,
+            topology: Topology::FatTree { radix: 4, oversub },
+            ..Default::default()
+        };
+        let r = simulate_training_fleet(&zoo::cddnn_full(), &p, &cfg, &fc);
+        assert!(
+            r.iteration_s >= prev * 0.999,
+            "oversub {oversub}: {} not monotone (prev {prev})",
+            r.iteration_s
+        );
+        prev = r.iteration_s;
+    }
+    // a 4:1 core must be measurably slower than the non-blocking switch
+    let squeezed = simulate_training_fleet(
+        &zoo::cddnn_full(),
+        &p,
+        &cfg,
+        &FleetConfig {
+            nodes: 8,
+            topology: Topology::FatTree { radix: 4, oversub: 4.0 },
+            ..Default::default()
+        },
+    );
+    assert!(
+        squeezed.iteration_s > baseline.iteration_s * 1.02,
+        "oversubscribed {} vs flat {}",
+        squeezed.iteration_s,
+        baseline.iteration_s
+    );
+}
+
+#[test]
+fn hetero_fleet_runs_at_slow_generation_pace() {
+    let p = contention_free_cori();
+    let cfg = SimConfig { nodes: 4, minibatch: 256, hybrid_fc: false, ..Default::default() };
+    let homo = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4));
+    let hetero = simulate_training_fleet(
+        &zoo::vgg_a(),
+        &p,
+        &cfg,
+        &FleetConfig { nodes: 4, hetero: true, ..Default::default() },
+    );
+    assert!(hetero.iteration_s > homo.iteration_s * 1.1, "{} vs {}", hetero.iteration_s,
+            homo.iteration_s);
+    assert!(hetero.iteration_s < homo.iteration_s * 1.5);
+}
+
+#[test]
+fn failure_stalls_one_iteration_then_rejoins() {
+    let p = contention_free_cori();
+    // iterations: 0 warmup, 1 fails, steady state measured over the last
+    // two — so the recovery must NOT pollute the steady-state window...
+    let cfg = SimConfig { nodes: 4, minibatch: 256, hybrid_fc: false, iterations: 5,
+                          ..Default::default() };
+    let clean = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4));
+    let failed = simulate_training_fleet(
+        &zoo::vgg_a(),
+        &p,
+        &cfg,
+        &FleetConfig {
+            nodes: 4,
+            fail_at: Some(1),
+            fail_node: 2,
+            recovery_s: 3.0,
+            ..Default::default()
+        },
+    );
+    // steady state after rejoin matches the clean fleet
+    let rel = (failed.iteration_s - clean.iteration_s).abs() / clean.iteration_s;
+    assert!(rel < 0.05, "post-rejoin steady state off by {:.1}%", 100.0 * rel);
+
+    // ...but an iteration window containing the failure pays the stall:
+    // measure with the failure in the last iteration
+    let cfg_tail = SimConfig { iterations: 4, ..cfg.clone() };
+    let hit = simulate_training_fleet(
+        &zoo::vgg_a(),
+        &p,
+        &cfg_tail,
+        &FleetConfig {
+            nodes: 4,
+            fail_at: Some(3),
+            fail_node: 2,
+            recovery_s: 3.0,
+            ..Default::default()
+        },
+    );
+    assert!(
+        hit.iteration_s > clean.iteration_s + 2.5,
+        "failed iteration {} must absorb most of the 3 s recovery (clean {})",
+        hit.iteration_s,
+        clean.iteration_s
+    );
+}
+
+#[test]
+fn fleet_tasks_scale_with_cluster_size() {
+    // sanity: the full simulator really is per-node, per-message
+    let p = contention_free_cori();
+    let mk = |nodes: u64| {
+        let cfg = SimConfig { nodes, minibatch: 256, hybrid_fc: false, iterations: 3,
+                              ..Default::default() };
+        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg,
+                                &FleetConfig::homogeneous(nodes as usize))
+    };
+    let small = mk(2);
+    let big = mk(8);
+    assert!(big.tasks > 4 * small.tasks, "{} vs {}", big.tasks, small.tasks);
+}

@@ -5,6 +5,7 @@
 
 use pcl_dnn::collectives::{inline, shard_range, threaded, GroupTopology};
 use pcl_dnn::coordinator::{CommandQueue, MicrobatchPlan, ParamStore, SgdConfig};
+use pcl_dnn::netsim::Engine;
 use pcl_dnn::util::json::Json;
 use pcl_dnn::util::rng::Rng;
 
@@ -213,5 +214,113 @@ fn prop_json_roundtrip_random_values() {
         let text = v.to_string();
         let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
         assert_eq!(v, back, "case {case}");
+    }
+}
+
+// ------------------------- discrete-event engine -------------------------
+
+/// Random task DAG: multi-resource tasks, random deps on earlier tasks.
+fn random_engine(rng: &mut Rng) -> Engine {
+    let mut e = Engine::new();
+    let n_tasks = 5 + rng.below(60) as usize;
+    let n_res = 1 + rng.below(8) as usize;
+    for id in 0..n_tasks {
+        let n_own = 1 + rng.below(3) as usize;
+        let resources: Vec<usize> =
+            (0..n_own).map(|_| rng.below(n_res as u64) as usize).collect();
+        let dur = rng.below(50);
+        let mut deps: Vec<usize> = Vec::new();
+        if id > 0 {
+            for _ in 0..rng.below(3) {
+                deps.push(rng.below(id as u64) as usize);
+            }
+            deps.sort_unstable();
+            deps.dedup();
+        }
+        e.add_multi(format!("t{id}"), &resources, dur, &deps);
+    }
+    e
+}
+
+#[test]
+fn prop_engine_task_starts_after_all_deps_end() {
+    let mut rng = Rng::new(0xde1);
+    for case in 0..CASES {
+        let e = random_engine(&mut rng);
+        let s = e.run();
+        for id in 0..e.len() {
+            for &d in &e.task(id).deps {
+                assert!(
+                    s.start_ns[id] >= s.end_ns[d],
+                    "case {case}: task {id} starts {} before dep {d} ends {}",
+                    s.start_ns[id],
+                    s.end_ns[d]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_no_overlap_on_any_unary_resource() {
+    let mut rng = Rng::new(0xde2);
+    for case in 0..CASES {
+        let e = random_engine(&mut rng);
+        let s = e.run();
+        let n_res = e.n_resources();
+        for r in 0..n_res {
+            let mut intervals: Vec<(u64, u64)> = (0..e.len())
+                .filter(|&id| e.task(id).resources.contains(&r))
+                .map(|id| (s.start_ns[id], s.end_ns[id]))
+                .filter(|&(a, b)| b > a) // zero-width tasks cannot overlap
+                .collect();
+            intervals.sort_unstable();
+            for w in intervals.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1,
+                    "case {case}: resource {r} double-booked: {:?} then {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_schedule_is_bit_identical_across_runs() {
+    // determinism is load-bearing for Fig 5's "distributed = serial"
+    // equivalence claim
+    let mut rng = Rng::new(0xde3);
+    for case in 0..CASES {
+        let seed = rng.next_u64();
+        let a = random_engine(&mut Rng::new(seed)).run();
+        let e2 = random_engine(&mut Rng::new(seed));
+        let b = e2.run();
+        assert_eq!(a, b, "case {case} seed {seed:#x}");
+        let c = e2.run(); // same engine re-run
+        assert_eq!(a, c, "case {case} re-run");
+    }
+}
+
+#[test]
+fn prop_engine_makespan_bounds() {
+    // makespan >= busiest resource's total work and >= any dependency
+    // chain; makespan <= total work (single-resource serial worst case)
+    let mut rng = Rng::new(0xde4);
+    for case in 0..CASES {
+        let e = random_engine(&mut rng);
+        let s = e.run();
+        let mut per_res = vec![0u64; e.n_resources()];
+        let mut total = 0u64;
+        for id in 0..e.len() {
+            for &r in &e.task(id).resources {
+                per_res[r] += e.task(id).duration_ns;
+            }
+            total += e.task(id).duration_ns;
+        }
+        let busiest = per_res.iter().copied().max().unwrap_or(0);
+        assert!(s.makespan_ns >= busiest, "case {case}");
+        assert!(s.makespan_ns <= total, "case {case}");
     }
 }

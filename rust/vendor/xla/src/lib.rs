@@ -1,0 +1,322 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The L3 runtime executes AOT-lowered HLO artifacts through PJRT when a
+//! real `xla_extension` install is present. This container ships without
+//! it, so this vendored stub keeps the crate building and the non-runtime
+//! layers (analytic models, netsim, coordinator logic) fully testable:
+//!
+//! * [`Literal`] is a **functional** host-side implementation (shape +
+//!   typed storage) — tensor round-trip code and its tests work.
+//! * PJRT entry points ([`PjRtClient::cpu`], [`HloModuleProto`]) return a
+//!   descriptive [`Error`], so `Runtime::new` degrades into a clear
+//!   "PJRT unavailable" failure and artifact-dependent tests skip.
+//!
+//! Swapping the `xla` path dependency in `rust/Cargo.toml` back to the
+//! real bindings restores execution with no source changes.
+
+use std::fmt;
+
+/// Stub error type (the real crate's `xla::Error` equivalent).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: built against the offline xla stub (vendor/xla); install xla_extension and \
+         point the `xla` dependency at the real bindings to execute artifacts"
+    )))
+}
+
+/// Element types the artifact ABI uses (plus enough extras that callers'
+/// catch-all match arms stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Shape of a non-tuple literal: dimensions + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Host element types a [`Literal`] can carry.
+pub trait NativeType: Copy + Sized + private::Sealed {
+    #[doc(hidden)]
+    fn to_storage(v: &[Self]) -> Storage;
+    #[doc(hidden)]
+    fn from_storage(s: &Storage) -> Option<&[Self]>;
+    #[doc(hidden)]
+    fn element_type() -> ElementType;
+}
+
+impl NativeType for f32 {
+    fn to_storage(v: &[f32]) -> Storage {
+        Storage::F32(v.to_vec())
+    }
+
+    fn from_storage(s: &Storage) -> Option<&[f32]> {
+        match s {
+            Storage::F32(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+}
+
+impl NativeType for i32 {
+    fn to_storage(v: &[i32]) -> Storage {
+        Storage::I32(v.to_vec())
+    }
+
+    fn from_storage(s: &Storage) -> Option<&[i32]> {
+        match s {
+            Storage::I32(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+}
+
+/// A host-side tensor value: shape + typed storage (or a tuple).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], storage: T::to_storage(v) }
+    }
+
+    /// Tuple literal (what `return_tuple=True` artifacts produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), storage: Storage::Tuple(parts) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(d) => d.len(),
+            Storage::I32(d) => d.len(),
+            Storage::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error("reshape of a tuple literal".into()));
+        }
+        if want != have {
+            return Err(Error(format!("reshape: {have} elements do not fit {dims:?}")));
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.storage {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+            Storage::Tuple(_) => return Err(Error("array_shape of a tuple literal".into())),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_storage(&self.storage)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error(format!("to_vec: literal is not {:?}", T::element_type())))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("to_tuple of a non-tuple literal".into())),
+        }
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::from_storage(&self.storage)
+            .and_then(|d| d.first().copied())
+            .ok_or_else(|| Error("get_first_element: empty or mistyped literal".into()))
+    }
+
+    /// Copy the raw elements into a caller-owned buffer of exact length.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let src = T::from_storage(&self.storage)
+            .ok_or_else(|| Error(format!("copy_raw_to: literal is not {:?}", T::element_type())))?;
+        if src.len() != dst.len() {
+            return Err(Error(format!(
+                "copy_raw_to: {} elements into a buffer of {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the real bindings).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails with a clear message).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Argument forms `PjRtLoadedExecutable::execute` accepts.
+pub trait ExecuteArg {}
+
+impl ExecuteArg for Literal {}
+impl<'a> ExecuteArg for &'a Literal {}
+
+/// A compiled executable (stub: unobtainable, so methods are unreachable
+/// in practice but keep callers type-checking).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: ExecuteArg>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 3]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape_to_empty_dims() {
+        let l = Literal::vec1(&[4.5f32]).reshape(&[]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 4.5);
+    }
+
+    #[test]
+    fn tuple_and_copy_raw() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32, 2]), Literal::vec1(&[3.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        let mut buf = [0i32; 2];
+        parts[0].copy_raw_to(&mut buf).unwrap();
+        assert_eq!(buf, [1, 2]);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_cleanly_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("offline xla stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
