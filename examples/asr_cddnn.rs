@@ -1,23 +1,25 @@
 //! ASR scenario (paper §5.4): the CD-DNN acoustic model.
 //!
 //! 1. trains the runnable scaled CD-DNN (7 hidden FC layers, the paper's
-//!    depth) on synthetic senone-labeled frames, for real, multi-worker;
+//!    depth) on synthetic senone-labeled frames, for real, multi-worker —
+//!    through the spec API's runtime backend;
 //! 2. reproduces Fig 7's scaling curve for the full-size 7x2048 network
 //!    on the simulated Endeavor cluster, including the hybrid-vs-data
-//!    parallel ablation (FC nets are where hybrid parallelism matters).
+//!    parallel ablation (FC nets are where hybrid parallelism matters) —
+//!    the same `ExperimentSpec` as `specs/fig7.json`, analytic backend.
 //!
 //! ```bash
 //! cargo run --release --example asr_cddnn -- --steps 60
 //! ```
 
-use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::analytic::comm_model;
+use pcl_dnn::experiment::{
+    run_runtime, run_sweep, AnalyticBackend, ExecutionSpec, ExperimentSpec, MinibatchSpec,
+    ModelSpec,
+};
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
 use pcl_dnn::models::Layer;
-use pcl_dnn::netsim::cluster::scaling_curve;
-use pcl_dnn::runtime::Runtime;
-use pcl_dnn::trainer::{train, TrainConfig};
 use pcl_dnn::util::cli::Opts;
 
 fn main() -> anyhow::Result<()> {
@@ -25,38 +27,43 @@ fn main() -> anyhow::Result<()> {
     let steps: u64 = opts.parse_or("steps", 60u64)?;
 
     println!("=== real training: cddnn_tiny (7 hidden FC layers) ===");
-    let mut rt = Runtime::new("artifacts")?;
-    let cfg = TrainConfig {
-        model: "cddnn_tiny".into(),
-        workers: 2,
-        global_mb: 256,
-        steps,
-        lr: 0.05,
-        log_every: (steps / 6).max(1),
+    let train_spec = ExperimentSpec {
+        name: "asr_cddnn_train".into(),
+        model: ModelSpec::Zoo("cddnn_tiny".into()),
+        minibatch: MinibatchSpec { global: 256 },
+        execution: ExecutionSpec {
+            workers: Some(2),
+            steps,
+            lr: 0.05,
+            log_every: (steps / 6).max(1),
+            ..Default::default()
+        },
         ..Default::default()
     };
-    let out = train(&mut rt, &cfg)?;
+    let (report, out) = run_runtime(&train_spec)?;
     println!(
         "frames/s (real, this CPU): {:.0}; loss {:.3} -> {:.3}",
-        out.history.mean_throughput() ,
+        report.samples_per_s,
         out.history.records.first().unwrap().loss,
         out.history.tail_loss(5).unwrap()
     );
 
     println!("\n=== Fig 7: full CD-DNN (429 -> 7x2048 -> 9304) on simulated Endeavor ===");
     println!("(paper: 4600 f/s @1 node, ~13K @4, 29.5K @16 = 6.4x)");
-    let p = Platform::endeavor();
+    let spec = ExperimentSpec::fig7();
+    let mut ablation = spec.clone();
+    ablation.parallelism.mode = "data".into();
     let nodes = [1u64, 2, 4, 8, 16];
-    let hybrid = scaling_curve(&zoo::cddnn_full(), &p, 1024, &nodes, true);
-    let data = scaling_curve(&zoo::cddnn_full(), &p, 1024, &nodes, false);
+    let hybrid = run_sweep(&AnalyticBackend, &spec, &nodes)?;
+    let data = run_sweep(&AnalyticBackend, &ablation, &nodes)?;
     let mut t = Table::new(&["nodes", "hybrid f/s", "speedup", "pure-data f/s", "speedup"]);
     for (h, d) in hybrid.iter().zip(&data) {
         t.row(vec![
             h.nodes.to_string(),
-            format!("{:.0}", h.images_per_s),
-            format!("{:.1}x", h.speedup),
-            format!("{:.0}", d.images_per_s),
-            format!("{:.1}x", d.speedup),
+            format!("{:.0}", h.samples_per_s),
+            format!("{:.1}x", h.speedup.unwrap_or(f64::NAN)),
+            format!("{:.0}", d.samples_per_s),
+            format!("{:.1}x", d.speedup.unwrap_or(f64::NAN)),
         ]);
     }
     t.print();

@@ -1,7 +1,10 @@
 //! Regenerates every analytic table and simulated figure of the paper in
 //! one run (Table 1, §2.2, §2.4, §3.3, Fig 3 model, Figs 4/6/7 curves) —
-//! the programmatic companion to `repro analyze ...` / `repro simulate
-//! ...`, used to fill EXPERIMENTS.md.
+//! the programmatic companion to `repro analyze ...` / `repro run --spec
+//! ...`, used to fill EXPERIMENTS.md. All scaling figures and
+//! full-cluster scenarios go through the spec-driven experiment API;
+//! their reports are written to `BENCH_cluster_sweep.json` in the shared
+//! `ScalingReport` schema.
 //!
 //! ```bash
 //! cargo run --release --example cluster_sweep
@@ -11,17 +14,17 @@ use std::collections::BTreeMap;
 
 use pcl_dnn::analytic::machine::{MachineSpec, Platform};
 use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
+use pcl_dnn::experiment::{
+    curve_table, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
+    ScalingReport,
+};
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
 use pcl_dnn::models::Layer;
-use pcl_dnn::netsim::cluster::{
-    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
-};
-use pcl_dnn::netsim::{FleetConfig, Topology};
 use pcl_dnn::util::json::Json;
 
-fn num(v: f64) -> Json {
-    Json::Num(v)
+fn reports_json(reports: &[ScalingReport]) -> Json {
+    Json::Arr(reports.iter().map(|r| r.to_json()).collect())
 }
 
 fn main() {
@@ -96,113 +99,92 @@ fn main() {
     }
     t.print();
 
-    // ---------------- Figs 4 / 6 / 7 ----------------
+    // ---------------- Figs 4 / 6 / 7 (spec-driven) ----------------
     let mut bench_curves: BTreeMap<String, Json> = BTreeMap::new();
-    for (title, net, platform, mb, nodes, expect) in [
+    let mut fig4_mb256 = ExperimentSpec::fig4();
+    fig4_mb256.minibatch.global = 256;
+    for (title, spec, nodes, expect) in [
         (
             "Fig 4 — VGG-A on Cori, MB=512",
-            zoo::vgg_a(),
-            Platform::cori(),
-            512u64,
+            ExperimentSpec::fig4(),
             vec![1u64, 2, 4, 8, 16, 32, 64, 128],
             "paper: 90x @128, 2510 img/s",
         ),
         (
             "Fig 4 — VGG-A on Cori, MB=256",
-            zoo::vgg_a(),
-            Platform::cori(),
-            256,
+            fig4_mb256,
             vec![1, 2, 4, 8, 16, 32, 64],
             "paper: 82% efficiency @64",
         ),
         (
             "Fig 6 — OverFeat on AWS, MB=256",
-            zoo::overfeat_fast(),
-            Platform::aws(),
-            256,
+            ExperimentSpec::fig6_overfeat(),
             vec![1, 2, 4, 8, 16],
             "paper: 1027 img/s = 11.9x @16",
         ),
         (
             "Fig 6 — VGG-A on AWS, MB=256",
-            zoo::vgg_a(),
-            Platform::aws(),
-            256,
+            ExperimentSpec::fig6_vgg(),
             vec![1, 2, 4, 8, 16],
             "paper: 397 img/s = 14.2x @16",
         ),
         (
             "Fig 7 — CD-DNN on Endeavor, MB=1024",
-            zoo::cddnn_full(),
-            Platform::endeavor(),
-            1024,
+            ExperimentSpec::fig7(),
             vec![1, 2, 4, 8, 16],
             "paper: 4600 f/s @1, 29.5K = 6.4x @16",
         ),
     ] {
         println!("\n## {title}  ({expect})");
-        let curve = scaling_curve(&net, &platform, mb, &nodes, true);
-        let mut t = Table::new(&["nodes", "samples/s", "speedup", "efficiency"]);
-        for p in &curve {
-            t.row(vec![
-                p.nodes.to_string(),
-                format!("{:.0}", p.images_per_s),
-                format!("{:.1}x", p.speedup),
-                format!("{:.0}%", 100.0 * p.efficiency),
-            ]);
-        }
-        t.print();
-        let rows: Vec<Json> = curve
-            .iter()
-            .map(|p| {
-                let mut m = BTreeMap::new();
-                m.insert("nodes".to_string(), num(p.nodes as f64));
-                m.insert("samples_per_s".to_string(), num(p.images_per_s));
-                m.insert("speedup".to_string(), num(p.speedup));
-                m.insert("efficiency".to_string(), num(p.efficiency));
-                Json::Obj(m)
-            })
-            .collect();
-        bench_curves.insert(title.to_string(), Json::Arr(rows));
+        let curve = run_sweep(&AnalyticBackend, &spec, &nodes).unwrap();
+        curve_table(&curve).print();
+        bench_curves.insert(title.to_string(), reports_json(&curve));
     }
 
     // ---------------- ablation: hybrid off ----------------
     println!("\n## Ablation — CD-DNN @16 nodes, hybrid FCs vs pure data parallel");
-    let p = Platform::endeavor();
-    let hy = scaling_curve(&zoo::cddnn_full(), &p, 1024, &[16], true)[0].speedup;
-    let dp = scaling_curve(&zoo::cddnn_full(), &p, 1024, &[16], false)[0].speedup;
+    let fig7 = ExperimentSpec::fig7();
+    let mut fig7_data = fig7.clone();
+    fig7_data.parallelism.mode = "data".into();
+    let hy = AnalyticBackend.run(&fig7).unwrap().speedup.unwrap();
+    let dp = AnalyticBackend.run(&fig7_data).unwrap().speedup.unwrap();
     println!("hybrid {hy:.1}x vs pure-data {dp:.1}x  (the §3.3 claim: hybrid wins for FC nets)");
 
-    // ---------------- full-cluster simulator ----------------
-    println!("\n## Full-cluster simulator — α-β validation + fleet scenarios");
+    // ---------------- full-cluster simulator (spec-driven) ----------------
+    println!("\n## Full-cluster simulator — cross-backend validation + fleet scenarios");
     let mut full_section = BTreeMap::new();
 
-    // validation: homogeneous contention-free fabric vs analytic model
-    let mut clean = Platform::cori();
-    clean.fabric.congestion_per_doubling = 0.0;
-    let cfg8 = SimConfig { nodes: 8, minibatch: 256, ..Default::default() };
-    let rep = simulate_training(&zoo::vgg_a(), &clean, &cfg8);
-    let full = simulate_training_fleet(&zoo::vgg_a(), &clean, &cfg8, &FleetConfig::homogeneous(8));
+    // validation: the SAME spec on both backends, clean fabric
+    let mut clean8 = ExperimentSpec::fig4();
+    clean8.name = "fig4_clean_x8".into();
+    clean8.cluster.nodes = 8;
+    clean8.cluster.congestion = Some(0.0);
+    clean8.minibatch.global = 256;
+    let rep = AnalyticBackend.run(&clean8).unwrap();
+    let full = FleetSimBackend.run(&clean8).unwrap();
     let delta = (full.iteration_s - rep.iteration_s) / rep.iteration_s;
     println!(
-        "validation (VGG-A x8, clean fabric): full {:.2} ms vs analytic {:.2} ms ({:+.2}%)",
+        "validation (VGG-A x8, clean fabric): netsim {:.2} ms vs analytic {:.2} ms ({:+.2}%)",
         full.iteration_s * 1e3,
         rep.iteration_s * 1e3,
         100.0 * delta
     );
-    let mut vmap = BTreeMap::new();
-    vmap.insert("full_iter_s".to_string(), num(full.iteration_s));
-    vmap.insert("analytic_iter_s".to_string(), num(rep.iteration_s));
-    vmap.insert("rel_delta".to_string(), num(delta));
-    full_section.insert("validation_vgg8".to_string(), Json::Obj(vmap));
+    full_section.insert(
+        "validation_vgg8".to_string(),
+        reports_json(&[full.clone(), rep.clone()]),
+    );
 
     // straggler-skew sweep (VGG-A x8 on Cori)
     let mut t = Table::new(&["skew", "iter ms", "slowdown", "min util"]);
     let mut srows = Vec::new();
     let mut base_s = 0.0;
     for skew in [0.0, 0.1, 0.25, 0.5, 1.0] {
-        let fc = FleetConfig { nodes: 8, straggler_skew: skew, ..Default::default() };
-        let r = simulate_training_fleet(&zoo::vgg_a(), &clean, &cfg8, &fc);
+        let mut s = clean8.clone();
+        // the swept parameter is recorded in the report's spec name so
+        // BENCH rows stay distinguishable across the trajectory
+        s.name = format!("straggler_skew_{skew}");
+        s.cluster.straggler_skew = skew;
+        let r = FleetSimBackend.run(&s).unwrap();
         if base_s == 0.0 {
             base_s = r.iteration_s;
         }
@@ -212,50 +194,42 @@ fn main() {
             format!("{:.2}x", r.iteration_s / base_s),
             format!("{:.0}%", 100.0 * r.min_compute_utilization),
         ]);
-        let mut m = BTreeMap::new();
-        m.insert("skew".to_string(), num(skew));
-        m.insert("iter_s".to_string(), num(r.iteration_s));
-        m.insert("slowdown".to_string(), num(r.iteration_s / base_s));
-        srows.push(Json::Obj(m));
+        srows.push(r.to_json());
     }
     println!("straggler sweep (VGG-A x8, Cori):");
     t.print();
     full_section.insert("straggler_sweep".to_string(), Json::Arr(srows));
 
     // oversubscribed-Ethernet contention sweep (CD-DNN hybrid x8 on AWS)
-    let mut aws = Platform::aws();
-    aws.fabric.congestion_per_doubling = 0.0;
-    let cfg_dnn = SimConfig { nodes: 8, minibatch: 1024, ..Default::default() };
-    let flat = simulate_training_fleet(
-        &zoo::cddnn_full(),
-        &aws,
-        &cfg_dnn,
-        &FleetConfig { nodes: 8, topology: Topology::FlatSwitch, ..Default::default() },
-    );
+    let mut dnn8 = ExperimentSpec::fig7();
+    dnn8.name = "fig7_contention_x8".into();
+    dnn8.platform = "aws".into();
+    dnn8.cluster.nodes = 8;
+    dnn8.cluster.congestion = Some(0.0);
+    let mut flat_spec = dnn8.clone();
+    flat_spec.name = "contention_flat".into();
+    flat_spec.cluster.topology = "flat".into();
+    let flat = FleetSimBackend.run(&flat_spec).unwrap();
     let mut t = Table::new(&["core", "iter ms", "vs flat"]);
     t.row(vec![
         "flat switch".into(),
         format!("{:.2}", flat.iteration_s * 1e3),
         "1.00x".into(),
     ]);
-    let mut crows = Vec::new();
+    let mut crows = vec![flat.to_json()];
     for oversub in [1.0, 2.0, 4.0] {
-        let fc = FleetConfig {
-            nodes: 8,
-            topology: Topology::FatTree { radix: 4, oversub },
-            ..Default::default()
-        };
-        let r = simulate_training_fleet(&zoo::cddnn_full(), &aws, &cfg_dnn, &fc);
+        let mut s = dnn8.clone();
+        s.name = format!("contention_fattree_oversub_{oversub}");
+        s.cluster.topology = "fattree".into();
+        s.cluster.radix = 4;
+        s.cluster.oversub = oversub;
+        let r = FleetSimBackend.run(&s).unwrap();
         t.row(vec![
             format!("fat-tree {oversub}:1"),
             format!("{:.2}", r.iteration_s * 1e3),
             format!("{:.2}x", r.iteration_s / flat.iteration_s),
         ]);
-        let mut m = BTreeMap::new();
-        m.insert("oversub".to_string(), num(oversub));
-        m.insert("iter_s".to_string(), num(r.iteration_s));
-        m.insert("vs_flat".to_string(), num(r.iteration_s / flat.iteration_s));
-        crows.push(Json::Obj(m));
+        crows.push(r.to_json());
     }
     println!("contention sweep (CD-DNN hybrid x8, AWS 10GbE, leaf radix 4):");
     t.print();

@@ -4,40 +4,51 @@
 //! algorithm is identical to the single node version."
 //!
 //! Trains tiny-VGG with 1, 2, 4 and 8 workers on the SAME global
-//! minibatch stream and overlays the loss / Top-1 / Top-5 curves. The
-//! only permitted divergence is f32 reassociation across worker gradient
-//! accumulators (the paper's curves "overlap"; so must ours).
+//! minibatch stream — one `ExperimentSpec` with only `execution.workers`
+//! varied, through the runtime backend — and overlays the loss / Top-1 /
+//! Top-5 curves. The only permitted divergence is f32 reassociation
+//! across worker gradient accumulators (the paper's curves "overlap"; so
+//! must ours).
 //!
 //! ```bash
 //! cargo run --release --example convergence_equivalence [-- --steps 60]
 //! ```
 
+use pcl_dnn::experiment::{
+    run_runtime_with, ExecutionSpec, ExperimentSpec, MinibatchSpec, ModelSpec,
+};
 use pcl_dnn::metrics::Table;
 use pcl_dnn::runtime::Runtime;
-use pcl_dnn::trainer::{train, TrainConfig};
 use pcl_dnn::util::cli::Opts;
 
 fn main() -> anyhow::Result<()> {
     let opts = Opts::from_env()?;
     let steps: u64 = opts.parse_or("steps", 60u64)?;
-    let mb: usize = opts.parse_or("minibatch", 32usize)?;
-    let mut rt = Runtime::new("artifacts")?;
+    let mb: u64 = opts.parse_or("minibatch", 32u64)?;
 
+    // one Runtime for all four runs: the compiled-executable cache is
+    // shared, only the worker count varies
+    let mut rt = Runtime::new("artifacts")?;
     let workers = [1usize, 2, 4, 8];
     let mut runs = Vec::new();
     for &w in &workers {
         println!("--- {w} worker(s) ---");
-        let cfg = TrainConfig {
-            model: "vgg_tiny".into(),
-            workers: w,
-            global_mb: mb,
-            steps,
-            lr: 0.01,
-            log_every: steps / 3,
-            eval_every: steps / 3,
+        let spec = ExperimentSpec {
+            name: format!("fig5_w{w}"),
+            model: ModelSpec::Zoo("vgg_tiny".into()),
+            minibatch: MinibatchSpec { global: mb },
+            execution: ExecutionSpec {
+                workers: Some(w),
+                steps,
+                lr: 0.01,
+                log_every: steps / 3,
+                eval_every: steps / 3,
+                ..Default::default()
+            },
             ..Default::default()
         };
-        runs.push((w, train(&mut rt, &cfg)?));
+        let (_report, out) = run_runtime_with(&mut rt, &spec)?;
+        runs.push((w, out));
     }
 
     println!("\n# Fig 5 — loss curves must overlay (same global minibatch stream)");

@@ -2,7 +2,8 @@
 //! with the full stack — AOT JAX/Pallas artifacts, PJRT runtime, the
 //! synchronous-SGD coordinator with its lock-free comm queue, the
 //! dedicated data thread — for a few hundred steps on the synthetic
-//! Markov corpus, logging the loss curve to CSV.
+//! Markov corpus, logging the loss curve to CSV. The run is described by
+//! an `ExperimentSpec` and executed through the runtime backend.
 //!
 //! Default model is gpt_mini (~11.4M params — sized for this 1-core CPU
 //! image; see EXPERIMENTS.md). With `make artifacts-large` and
@@ -13,8 +14,11 @@
 //! ```
 
 use pcl_dnn::data::Corpus;
+use pcl_dnn::experiment::{
+    run_runtime_with, ExecutionSpec, ExperimentSpec, MinibatchSpec, ModelSpec,
+};
 use pcl_dnn::runtime::Runtime;
-use pcl_dnn::trainer::{evaluate, train, TrainConfig};
+use pcl_dnn::trainer::evaluate;
 use pcl_dnn::util::cli::Opts;
 
 fn main() -> anyhow::Result<()> {
@@ -24,11 +28,12 @@ fn main() -> anyhow::Result<()> {
     let workers: usize = opts.parse_or("workers", 2usize)?;
     let csv = opts.str_or("csv", "e2e_transformer_loss.csv");
 
+    // inspect the manifest for the model's shape before building the spec
     let mut rt = Runtime::new("artifacts")?;
-    let spec = rt.manifest().model(&model)?;
-    let vocab = spec.config.get("vocab").unwrap().as_usize()?;
-    let seq = spec.config.get("seq").unwrap().as_usize()?;
-    let n_elems = spec.n_elements;
+    let spec_meta = rt.manifest().model(&model)?;
+    let vocab = spec_meta.config.get("vocab").unwrap().as_usize()?;
+    let seq = spec_meta.config.get("seq").unwrap().as_usize()?;
+    let n_elems = spec_meta.n_elements;
     let micro = rt.manifest().artifact(&format!("{model}_train"))?.batch;
     let global_mb = workers * micro * 2;
     println!(
@@ -38,20 +43,27 @@ fn main() -> anyhow::Result<()> {
     let floor = Corpus::new(vocab, 0).entropy_floor();
     println!("corpus: synthetic Markov language, entropy floor {floor:.3} nats (uniform = {:.3})\n", (vocab as f64).ln());
 
-    let cfg = TrainConfig {
-        model: model.clone(),
-        workers,
-        global_mb,
-        steps,
-        lr: opts.parse_or("lr", 2e-3f32)?,
-        momentum: 0.0,
-        seed: 0,
-        log_every: (steps / 20).max(1),
-        eval_every: (steps / 6).max(1),
-        optimizer: opts.str_or("optimizer", "adam"),
+    let spec = ExperimentSpec {
+        name: "e2e_transformer".into(),
+        model: ModelSpec::Zoo(model.clone()),
+        minibatch: MinibatchSpec { global: global_mb as u64 },
+        execution: ExecutionSpec {
+            workers: Some(workers),
+            steps,
+            lr: opts.parse_or("lr", 2e-3f64)?,
+            momentum: 0.0,
+            seed: 0,
+            log_every: (steps / 20).max(1),
+            eval_every: (steps / 6).max(1),
+            optimizer: opts.str_or("optimizer", "adam"),
+            ..Default::default()
+        },
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let out = train(&mut rt, &cfg)?;
+    // reuse the Runtime already holding the manifest (and, with a real
+    // xla binding, the compiled executables) for both train and eval
+    let (report, out) = run_runtime_with(&mut rt, &spec)?;
     let wall = t0.elapsed().as_secs_f64();
 
     out.history.save_csv(&csv)?;
@@ -63,7 +75,12 @@ fn main() -> anyhow::Result<()> {
     if let Some(e) = evaluate(&mut rt, &model, &out.final_params, 0)? {
         println!("held-out loss: {:.3}", e.loss);
     }
-    println!("wall: {wall:.1}s  |  {:.0} tokens/s  |  mean {:.1} sequences/s", toks / wall, out.history.mean_throughput());
+    println!(
+        "wall: {wall:.1}s  |  {:.0} tokens/s  |  mean {:.1} sequences/s  |  compute {:.0}% of busy time",
+        toks / wall,
+        report.samples_per_s,
+        100.0 * report.mean_compute_utilization
+    );
     println!("loss curve: {csv}");
     anyhow::ensure!(last5 < first - 0.5, "LM failed to learn");
     println!("e2e OK");

@@ -1,45 +1,27 @@
-//! Quickstart: load the AOT artifacts, inspect the platform, train a tiny
-//! VGG for a handful of synchronous-SGD steps across 2 workers, then
-//! measure scoring throughput.
+//! Quickstart: one declarative `ExperimentSpec`, three backends.
+//!
+//! The same spec — VGG-A, 16 Cori nodes, MB=256 — is priced by the
+//! analytic balance equations, simulated per-message by the
+//! full-cluster discrete-event engine, and (when `make artifacts` has
+//! been run with a real `xla` binding) executed on the PJRT runtime.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use pcl_dnn::runtime::Runtime;
-use pcl_dnn::trainer::{score_throughput, train, TrainConfig};
+use pcl_dnn::experiment::{backend_by_name, Backend, ExperimentSpec};
 
 fn main() -> anyhow::Result<()> {
-    let mut rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
-    println!(
-        "artifacts: {} compiled computations, {} models\n",
-        rt.manifest().artifacts.len(),
-        rt.manifest().models.len()
-    );
-
-    // --- train: 20 synchronous steps, 2 workers, global minibatch 16 ---
-    let cfg = TrainConfig {
-        model: "vgg_tiny".into(),
-        workers: 2,
-        global_mb: 16,
-        steps: 20,
-        lr: 0.01,
-        log_every: 5,
-        eval_every: 10,
-        ..Default::default()
-    };
-    let out = train(&mut rt, &cfg)?;
-    println!(
-        "\nloss {:.3} -> {:.3} over {} steps",
-        out.history.records.first().map(|r| r.loss).unwrap_or(f64::NAN),
-        out.history.final_loss().unwrap_or(f64::NAN),
-        cfg.steps
-    );
-
-    // --- score: forward-only throughput (the Fig 3 'FP' path) ---
-    let tput = score_throughput(&mut rt, "vgg_tiny", 10, 0)?;
-    println!("scoring throughput: {tput:.0} images/s");
-    println!("\nquickstart OK");
+    let spec = ExperimentSpec::parse_str(
+        r#"{"name": "quickstart", "model": "vgg_a", "platform": "cori",
+            "cluster": {"nodes": 16}, "minibatch": 256,
+            "execution": {"workers": 2, "steps": 20}}"#,
+    )?;
+    for name in ["analytic", "netsim", "runtime"] {
+        match backend_by_name(name)?.run(&spec) {
+            Ok(r) => println!("{name:>8}: {}", r.to_json()),
+            Err(e) => println!("{name:>8}: skipped ({e})"),
+        }
+    }
     Ok(())
 }

@@ -7,10 +7,9 @@
 
 use std::time::Duration;
 
-use pcl_dnn::analytic::machine::{FabricSpec, Platform};
+use pcl_dnn::analytic::machine::FabricSpec;
 use pcl_dnn::coordinator::{ParamStore, SgdConfig};
-use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::scaling_curve;
+use pcl_dnn::experiment::{AnalyticBackend, Backend, ExperimentSpec};
 use pcl_dnn::netsim::collective;
 use pcl_dnn::runtime::{HostTensor, Runtime};
 use pcl_dnn::util::bench::{bench, black_box, header};
@@ -33,14 +32,16 @@ fn main() {
         );
     }
 
-    // ---- 4. hybrid vs data-parallel FCs (simulated, CD-DNN + VGG) ----
-    for (net, p, mb) in [
-        (zoo::cddnn_full(), Platform::endeavor(), 1024u64),
-        (zoo::vgg_a(), Platform::cori(), 256),
-    ] {
-        let hy = scaling_curve(&net, &p, mb, &[16], true)[0].speedup;
-        let dp = scaling_curve(&net, &p, mb, &[16], false)[0].speedup;
-        println!("  {} @16 nodes: hybrid {hy:.1}x vs pure-data {dp:.1}x", net.name);
+    // ---- 4. hybrid vs data-parallel FCs (spec-driven, CD-DNN + VGG) ----
+    for (model, platform, mb) in
+        [("cddnn_full", "endeavor", 1024u64), ("vgg_a", "cori", 256)]
+    {
+        let spec = ExperimentSpec::of("ablation", model, platform, 16, mb);
+        let mut data = spec.clone();
+        data.parallelism.mode = "data".into();
+        let hy = AnalyticBackend.run(&spec).unwrap().speedup.unwrap();
+        let dp = AnalyticBackend.run(&data).unwrap().speedup.unwrap();
+        println!("  {model} @16 nodes: hybrid {hy:.1}x vs pure-data {dp:.1}x");
     }
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {

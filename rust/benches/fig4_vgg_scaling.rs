@@ -1,67 +1,48 @@
 //! Fig 4 — VGG-A strong scaling on (simulated) Cori, MB 256 and 512.
-//! Regenerates the figure's two curves and times the simulator itself.
+//! Regenerates the figure's two curves through the spec-driven
+//! experiment API and times both backends on the same spec.
 
 use std::time::Duration;
 
-use pcl_dnn::analytic::machine::Platform;
-use pcl_dnn::metrics::Table;
-use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{
-    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+use pcl_dnn::experiment::{
+    curve_table, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
+    MinibatchSpec,
 };
-use pcl_dnn::netsim::FleetConfig;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
     println!("=== fig4_vgg_scaling ===");
-    let p = Platform::cori();
-    let net = zoo::vgg_a();
+    let spec = ExperimentSpec::fig4(); // VGG-A x128 on Cori, MB=512
 
     header();
-    bench("simulate_training(vgg_a, 128 nodes)", Duration::from_millis(500), || {
-        black_box(simulate_training(
-            &net,
-            &p,
-            &SimConfig { nodes: 128, minibatch: 512, ..Default::default() },
-        ));
+    bench("AnalyticBackend::run(fig4, 128 nodes)", Duration::from_millis(500), || {
+        black_box(AnalyticBackend.run(&spec).unwrap());
     })
     .report();
 
     for mb in [256u64, 512] {
         println!("\n# VGG-A on Cori, MB={mb} (paper: 90x @128 for MB=512 / 2510 img/s; 82% @64 for MB=256)");
-        let nodes = [1u64, 2, 4, 8, 16, 32, 64, 128];
-        let curve = scaling_curve(&net, &p, mb, &nodes, true);
-        let mut t = Table::new(&["nodes", "img/s", "speedup", "efficiency"]);
-        for pt in &curve {
-            t.row(vec![
-                pt.nodes.to_string(),
-                format!("{:.0}", pt.images_per_s),
-                format!("{:.1}x", pt.speedup),
-                format!("{:.0}%", 100.0 * pt.efficiency),
-            ]);
-        }
-        t.print();
+        let mut s = spec.clone();
+        s.minibatch = MinibatchSpec { global: mb };
+        let curve = run_sweep(&AnalyticBackend, &s, &[1, 2, 4, 8, 16, 32, 64, 128]).unwrap();
+        curve_table(&curve).print();
     }
 
-    // full-cluster vs analytic cross-check (homogeneous, contention-free
-    // fabric: the two fidelities must agree)
-    println!("\n# full-cluster cross-check, VGG-A x16, MB=256, clean fabric");
-    let mut clean = Platform::cori();
-    clean.fabric.congestion_per_doubling = 0.0;
-    let cfg = SimConfig { nodes: 16, minibatch: 256, ..Default::default() };
-    bench("simulate_training_fleet(vgg_a, 16 nodes)", Duration::from_millis(800), || {
-        black_box(simulate_training_fleet(
-            &net,
-            &clean,
-            &cfg,
-            &FleetConfig::homogeneous(16),
-        ));
+    // full-cluster vs analytic cross-check on the SAME spec (clean
+    // homogeneous switched fabric: the two backends must agree)
+    println!("\n# cross-backend check, VGG-A x16, MB=256, clean fabric");
+    let mut clean = spec.clone();
+    clean.cluster.nodes = 16;
+    clean.cluster.congestion = Some(0.0);
+    clean.minibatch = MinibatchSpec { global: 256 };
+    bench("FleetSimBackend::run(fig4, 16 nodes)", Duration::from_millis(800), || {
+        black_box(FleetSimBackend.run(&clean).unwrap());
     })
     .report();
-    let full = simulate_training_fleet(&net, &clean, &cfg, &FleetConfig::homogeneous(16));
-    let rep = simulate_training(&net, &clean, &cfg);
+    let full = FleetSimBackend.run(&clean).unwrap();
+    let rep = AnalyticBackend.run(&clean).unwrap();
     println!(
-        "full {:.2} ms vs analytic {:.2} ms ({:+.2}%, {} tasks)",
+        "netsim {:.2} ms vs analytic {:.2} ms ({:+.2}%, {} tasks)",
         full.iteration_s * 1e3,
         rep.iteration_s * 1e3,
         100.0 * (full.iteration_s - rep.iteration_s) / rep.iteration_s,

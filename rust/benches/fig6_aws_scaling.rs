@@ -1,90 +1,68 @@
 //! Fig 6 — OverFeat + VGG-A scaling on (simulated) AWS EC2 10GbE with
-//! SR-IOV, MB=256. Paper @16 nodes: OverFeat 1027 img/s (11.9x), VGG-A
-//! 397 img/s (14.2x); VGG scales better thanks to higher flops/byte.
+//! SR-IOV, MB=256, through the spec-driven experiment API. Paper @16
+//! nodes: OverFeat 1027 img/s (11.9x), VGG-A 397 img/s (14.2x); VGG
+//! scales better thanks to higher flops/byte.
 
 use std::time::Duration;
 
-use pcl_dnn::analytic::machine::Platform;
-use pcl_dnn::metrics::Table;
-use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{
-    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+use pcl_dnn::experiment::{
+    curve_table, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
 };
-use pcl_dnn::netsim::{FleetConfig, Topology};
+use pcl_dnn::metrics::Table;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
     println!("=== fig6_aws_scaling ===");
-    let p = Platform::aws();
+    let overfeat = ExperimentSpec::fig6_overfeat();
+    let vgg = ExperimentSpec::fig6_vgg();
+
     header();
-    bench("simulate_training(overfeat, 16 aws nodes)", Duration::from_millis(400), || {
-        black_box(simulate_training(
-            &zoo::overfeat_fast(),
-            &p,
-            &SimConfig { nodes: 16, minibatch: 256, ..Default::default() },
-        ));
+    bench("AnalyticBackend::run(fig6_overfeat, 16 nodes)", Duration::from_millis(400), || {
+        black_box(AnalyticBackend.run(&overfeat).unwrap());
     })
     .report();
 
     let nodes = [1u64, 2, 4, 8, 16];
-    for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
-        println!("\n# {} on AWS, MB=256", net.name);
-        let curve = scaling_curve(&net, &p, 256, &nodes, true);
-        let mut t = Table::new(&["nodes", "img/s", "speedup"]);
-        for pt in &curve {
-            t.row(vec![
-                pt.nodes.to_string(),
-                format!("{:.0}", pt.images_per_s),
-                format!("{:.1}x", pt.speedup),
-            ]);
-        }
-        t.print();
+    let mut at16 = Vec::new();
+    for spec in [&overfeat, &vgg] {
+        println!("\n# {} on AWS, MB=256", spec.model.name());
+        let curve = run_sweep(&AnalyticBackend, spec, &nodes).unwrap();
+        at16.push(curve.last().unwrap().speedup.unwrap_or(f64::NAN));
+        curve_table(&curve).print();
     }
-    let of = scaling_curve(&zoo::overfeat_fast(), &p, 256, &[16], true)[0].speedup;
-    let vg = scaling_curve(&zoo::vgg_a(), &p, 256, &[16], true)[0].speedup;
-    println!("\n@16 nodes: OverFeat {of:.1}x vs VGG-A {vg:.1}x — VGG wins, as in the paper");
+    println!(
+        "\n@16 nodes: OverFeat {:.1}x vs VGG-A {:.1}x — VGG wins, as in the paper",
+        at16[0], at16[1]
+    );
 
     // full-cluster: oversubscribed Ethernet contention (what §6's cloud
-    // results hide inside their efficiency numbers)
-    println!("\n# full-cluster: OverFeat x16, flat switch vs oversubscribed fat-tree core");
-    let cfg = SimConfig { nodes: 16, minibatch: 256, ..Default::default() };
-    bench("simulate_training_fleet(overfeat, 16 aws nodes)", Duration::from_millis(800), || {
-        black_box(simulate_training_fleet(
-            &zoo::overfeat_fast(),
-            &p,
-            &cfg,
-            &FleetConfig { nodes: 16, ..Default::default() },
-        ));
+    // results hide inside their efficiency numbers) — same spec, netsim
+    // backend, topology overridden point-wise
+    println!("\n# netsim backend: OverFeat x16, flat switch vs oversubscribed fat-tree core");
+    bench("FleetSimBackend::run(fig6_overfeat, 16 nodes)", Duration::from_millis(800), || {
+        black_box(FleetSimBackend.run(&overfeat).unwrap());
     })
     .report();
-    let flat = simulate_training_fleet(
-        &zoo::overfeat_fast(),
-        &p,
-        &cfg,
-        &FleetConfig { nodes: 16, topology: Topology::FlatSwitch, ..Default::default() },
-    );
+    let mut flat_spec = overfeat.clone();
+    flat_spec.cluster.topology = "flat".into();
+    let flat = FleetSimBackend.run(&flat_spec).unwrap();
     let mut t = Table::new(&["core", "iter ms", "img/s", "vs flat"]);
     t.row(vec![
         "flat switch".into(),
         format!("{:.1}", flat.iteration_s * 1e3),
-        format!("{:.0}", flat.images_per_s),
+        format!("{:.0}", flat.samples_per_s),
         "1.00x".into(),
     ]);
     for oversub in [2.0, 4.0, 8.0] {
-        let r = simulate_training_fleet(
-            &zoo::overfeat_fast(),
-            &p,
-            &cfg,
-            &FleetConfig {
-                nodes: 16,
-                topology: Topology::FatTree { radix: 8, oversub },
-                ..Default::default()
-            },
-        );
+        let mut s = overfeat.clone();
+        s.cluster.topology = "fattree".into();
+        s.cluster.radix = 8;
+        s.cluster.oversub = oversub;
+        let r = FleetSimBackend.run(&s).unwrap();
         t.row(vec![
             format!("fat-tree {oversub}:1"),
             format!("{:.1}", r.iteration_s * 1e3),
-            format!("{:.0}", r.images_per_s),
+            format!("{:.0}", r.samples_per_s),
             format!("{:.2}x", r.iteration_s / flat.iteration_s),
         ]);
     }

@@ -1,70 +1,59 @@
 //! Fig 7 — CD-DNN (429 -> 7x2048 -> 9304 senones) scaling on (simulated)
-//! Endeavor FDR cluster, MB=1024 frames. Paper: 4600 f/s on one node,
-//! ~13K @4 nodes, 29.5K @16 (6.4x). The FC-dominated DNN is the hardest
-//! scaling case (highest comm-to-compute) — hybrid parallelism is what
-//! keeps it scaling at all (ablation below).
+//! Endeavor FDR cluster, MB=1024 frames, through the spec-driven
+//! experiment API. Paper: 4600 f/s on one node, ~13K @4 nodes, 29.5K
+//! @16 (6.4x). The FC-dominated DNN is the hardest scaling case
+//! (highest comm-to-compute) — hybrid parallelism is what keeps it
+//! scaling at all (ablation below).
 
 use std::time::Duration;
 
-use pcl_dnn::analytic::machine::Platform;
-use pcl_dnn::metrics::Table;
-use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{
-    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
+use pcl_dnn::experiment::{
+    run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
 };
-use pcl_dnn::netsim::FleetConfig;
+use pcl_dnn::metrics::Table;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
     println!("=== fig7_cddnn_scaling ===");
-    let p = Platform::endeavor();
-    let net = zoo::cddnn_full();
+    let spec = ExperimentSpec::fig7(); // CD-DNN x16 on Endeavor, MB=1024
     header();
-    bench("simulate_training(cddnn, 16 nodes)", Duration::from_millis(400), || {
-        black_box(simulate_training(
-            &net,
-            &p,
-            &SimConfig { nodes: 16, minibatch: 1024, ..Default::default() },
-        ));
+    bench("AnalyticBackend::run(fig7, 16 nodes)", Duration::from_millis(400), || {
+        black_box(AnalyticBackend.run(&spec).unwrap());
     })
     .report();
 
     let nodes = [1u64, 2, 4, 8, 16];
-    println!("\n# CD-DNN on Endeavor, MB=1024 (hybrid FCs)");
-    let hybrid = scaling_curve(&net, &p, 1024, &nodes, true);
-    let data = scaling_curve(&net, &p, 1024, &nodes, false);
+    println!("\n# CD-DNN on Endeavor, MB=1024 (hybrid FCs vs pure data parallelism)");
+    let mut ablation = spec.clone();
+    ablation.parallelism.mode = "data".into();
+    let hybrid = run_sweep(&AnalyticBackend, &spec, &nodes).unwrap();
+    let data = run_sweep(&AnalyticBackend, &ablation, &nodes).unwrap();
     let mut t = Table::new(&["nodes", "hybrid f/s", "speedup", "pure-data f/s", "speedup"]);
     for (h, d) in hybrid.iter().zip(&data) {
         t.row(vec![
             h.nodes.to_string(),
-            format!("{:.0}", h.images_per_s),
-            format!("{:.1}x", h.speedup),
-            format!("{:.0}", d.images_per_s),
-            format!("{:.1}x", d.speedup),
+            format!("{:.0}", h.samples_per_s),
+            format!("{:.1}x", h.speedup.unwrap_or(f64::NAN)),
+            format!("{:.0}", d.samples_per_s),
+            format!("{:.1}x", d.speedup.unwrap_or(f64::NAN)),
         ]);
     }
     t.print();
     println!("\n(paper's shape: DNN scales far worse than the CNNs; hybrid > pure data parallel)");
 
     // full-cluster: straggler + heterogeneous-fleet sensitivity of the
-    // comm-bound ASR workload
-    println!("\n# full-cluster: CD-DNN x16, straggler skew and hetero generations");
-    let cfg = SimConfig { nodes: 16, minibatch: 1024, ..Default::default() };
-    bench("simulate_training_fleet(cddnn, 16 nodes)", Duration::from_millis(800), || {
-        black_box(simulate_training_fleet(
-            &net,
-            &p,
-            &cfg,
-            &FleetConfig { nodes: 16, ..Default::default() },
-        ));
+    // comm-bound ASR workload — all spec overrides, netsim backend
+    println!("\n# netsim backend: CD-DNN x16, straggler skew and hetero generations");
+    bench("FleetSimBackend::run(fig7, 16 nodes)", Duration::from_millis(800), || {
+        black_box(FleetSimBackend.run(&spec).unwrap());
     })
     .report();
-    let base = simulate_training_fleet(&net, &p, &cfg, &FleetConfig { nodes: 16, ..Default::default() });
+    let base = FleetSimBackend.run(&spec).unwrap();
     let mut t = Table::new(&["fleet", "iter ms", "f/s", "vs homogeneous"]);
     t.row(vec![
         "homogeneous".into(),
         format!("{:.1}", base.iteration_s * 1e3),
-        format!("{:.0}", base.images_per_s),
+        format!("{:.0}", base.samples_per_s),
         "1.00x".into(),
     ]);
     for (label, skew, hetero) in [
@@ -73,16 +62,14 @@ fn main() {
         ("hetero (odd nodes 1.3x)", 0.0, true),
         ("hetero + skew 0.25", 0.25, true),
     ] {
-        let r = simulate_training_fleet(
-            &net,
-            &p,
-            &cfg,
-            &FleetConfig { nodes: 16, straggler_skew: skew, hetero, ..Default::default() },
-        );
+        let mut s = spec.clone();
+        s.cluster.straggler_skew = skew;
+        s.cluster.hetero = hetero;
+        let r = FleetSimBackend.run(&s).unwrap();
         t.row(vec![
             label.into(),
             format!("{:.1}", r.iteration_s * 1e3),
-            format!("{:.0}", r.images_per_s),
+            format!("{:.0}", r.samples_per_s),
             format!("{:.2}x", r.iteration_s / base.iteration_s),
         ]);
     }

@@ -1,0 +1,322 @@
+//! The three substrates behind `Backend::run`: balance equations,
+//! full-cluster discrete-event simulation, and PJRT execution.
+//!
+//! All three consume the same [`ExperimentSpec`] and produce the same
+//! [`ScalingReport`], which is what makes cross-backend validation (the
+//! paper's own methodology: model → simulate → measure) a one-liner —
+//! see `tests/fleet_sim.rs::cross_backend_consistency_all_models`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::analytic::machine::Platform;
+use crate::netsim::cluster::{simulate_training, simulate_training_fleet, SimConfig};
+use crate::netsim::FleetConfig;
+use crate::runtime::Runtime;
+use crate::trainer::{self, TrainConfig, TrainOutcome};
+
+use super::registry;
+use super::report::ScalingReport;
+use super::spec::ExperimentSpec;
+
+/// A substrate that can answer an [`ExperimentSpec`].
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport>;
+}
+
+/// Registry names accepted by [`backend_by_name`].
+pub const BACKENDS: &[&str] = &["analytic", "netsim", "runtime"];
+
+pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
+    Ok(match name {
+        "analytic" => Box::new(AnalyticBackend),
+        "netsim" | "fleet" => Box::new(FleetSimBackend),
+        "runtime" | "pjrt" => Box::new(RuntimeBackend),
+        _ => bail!("unknown backend {name:?} (available: {})", BACKENDS.join("|")),
+    })
+}
+
+/// Platform with the spec's fabric overrides applied.
+fn resolved_platform(spec: &ExperimentSpec) -> Result<Platform> {
+    let mut p = registry::platform(&spec.platform)?;
+    if let Some(c) = spec.cluster.congestion {
+        p.fabric.congestion_per_doubling = c;
+    }
+    Ok(p)
+}
+
+fn sim_config(spec: &ExperimentSpec, nodes: u64) -> Result<SimConfig> {
+    if nodes == 0 {
+        bail!("cluster.nodes must be >= 1");
+    }
+    if spec.parallelism.iterations < 2 {
+        bail!("parallelism.iterations must be >= 2 (steady state = last minus previous)");
+    }
+    if spec.minibatch.global < nodes {
+        bail!(
+            "minibatch.global ({}) must be >= cluster.nodes ({nodes}): every node needs data",
+            spec.minibatch.global
+        );
+    }
+    Ok(SimConfig {
+        nodes,
+        minibatch: spec.minibatch.global,
+        overlap: spec.parallelism.overlap,
+        iterations: spec.parallelism.iterations,
+        hybrid_fc: spec.parallelism.hybrid_fc()?,
+        collective: registry::collective(&spec.collective)?,
+    })
+}
+
+fn base_report(spec: &ExperimentSpec, backend: &'static str) -> ScalingReport {
+    ScalingReport {
+        spec_name: spec.name.clone(),
+        backend: backend.to_string(),
+        model: spec.model.name().to_string(),
+        platform: spec.platform.clone(),
+        nodes: spec.cluster.nodes,
+        minibatch: spec.minibatch.global,
+        iteration_s: f64::NAN,
+        samples_per_s: f64::NAN,
+        speedup: None,
+        efficiency: None,
+        compute_s: f64::NAN,
+        comm_s: f64::NAN,
+        mean_compute_utilization: f64::NAN,
+        min_compute_utilization: f64::NAN,
+        tasks: 0,
+    }
+}
+
+/// Representative-node balance equations (paper §2–3): one symmetric
+/// node, α-β collective costs over the full node count. Milliseconds to
+/// evaluate, so every run also prices its own 1-node baseline.
+pub struct AnalyticBackend;
+
+impl Backend for AnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport> {
+        let net = spec.model.resolve()?;
+        let platform = resolved_platform(spec)?;
+        let cfg = sim_config(spec, spec.cluster.nodes)?;
+        let r = simulate_training(&net, &platform, &cfg);
+        let base = simulate_training(&net, &platform, &sim_config(spec, 1)?);
+        let speedup = r.images_per_s / base.images_per_s;
+        let mut rep = base_report(spec, "analytic");
+        rep.iteration_s = r.iteration_s;
+        rep.samples_per_s = r.images_per_s;
+        rep.speedup = Some(speedup);
+        rep.efficiency = Some(speedup / cfg.nodes as f64);
+        rep.compute_s = r.compute_utilization * r.iteration_s;
+        rep.comm_s = (1.0 - r.compute_utilization) * r.iteration_s;
+        rep.mean_compute_utilization = r.compute_utilization;
+        rep.min_compute_utilization = r.compute_utilization;
+        Ok(rep)
+    }
+}
+
+fn fleet_config(spec: &ExperimentSpec) -> Result<FleetConfig> {
+    Ok(FleetConfig {
+        nodes: spec.cluster.nodes as usize,
+        topology: registry::topology(
+            &spec.cluster.topology,
+            spec.cluster.radix,
+            spec.cluster.oversub,
+        )?,
+        straggler_skew: spec.cluster.straggler_skew,
+        hetero: spec.cluster.hetero,
+        fail_at: spec.cluster.fail_at,
+        fail_node: spec.cluster.fail_node,
+        recovery_s: spec.cluster.recovery_s,
+    })
+}
+
+/// Full-cluster discrete-event simulation: every node, every message,
+/// every contended link — the substrate for stragglers, heterogeneous
+/// fleets, oversubscribed fabrics and failure/rejoin.
+pub struct FleetSimBackend;
+
+impl Backend for FleetSimBackend {
+    fn name(&self) -> &'static str {
+        "netsim"
+    }
+
+    fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport> {
+        let net = spec.model.resolve()?;
+        let platform = resolved_platform(spec)?;
+        let cfg = sim_config(spec, spec.cluster.nodes)?;
+        let fleet = fleet_config(spec)?;
+        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
+        let base = simulate_training_fleet(
+            &net,
+            &platform,
+            &sim_config(spec, 1)?,
+            &FleetConfig::homogeneous(1),
+        );
+        let speedup = r.images_per_s / base.images_per_s;
+        let mut rep = base_report(spec, "netsim");
+        rep.iteration_s = r.iteration_s;
+        rep.samples_per_s = r.images_per_s;
+        rep.speedup = Some(speedup);
+        rep.efficiency = Some(speedup / cfg.nodes as f64);
+        rep.compute_s = r.mean_compute_utilization * r.iteration_s;
+        rep.comm_s = (1.0 - r.mean_compute_utilization) * r.iteration_s;
+        rep.mean_compute_utilization = r.mean_compute_utilization;
+        rep.min_compute_utilization = r.min_compute_utilization;
+        rep.tasks = r.tasks as u64;
+        Ok(rep)
+    }
+}
+
+/// PJRT execution of the AOT artifacts through the synchronous-SGD
+/// coordinator: `cluster.nodes` shared-memory workers stand in for the
+/// paper's MPI ranks. Needs `make artifacts` (with a real `xla`
+/// binding); the vendored stub errors cleanly otherwise.
+pub struct RuntimeBackend;
+
+impl Backend for RuntimeBackend {
+    fn name(&self) -> &'static str {
+        "runtime"
+    }
+
+    fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport> {
+        Ok(run_runtime(spec)?.0)
+    }
+}
+
+/// The runtime backend's full result: the report plus the training
+/// outcome (loss history, final parameters) for callers that need more
+/// than scaling numbers (the convergence/e2e examples, `repro train`).
+pub fn run_runtime(spec: &ExperimentSpec) -> Result<(ScalingReport, TrainOutcome)> {
+    let mut rt = Runtime::new(&spec.execution.artifacts)
+        .context("artifacts not built? run `make artifacts`")?;
+    run_runtime_with(&mut rt, spec)
+}
+
+/// [`run_runtime`] against an existing [`Runtime`], so callers running
+/// several specs (e.g. the Fig 5 worker sweep) reuse one PJRT client
+/// and its compiled-executable cache instead of recompiling per run.
+pub fn run_runtime_with(
+    rt: &mut Runtime,
+    spec: &ExperimentSpec,
+) -> Result<(ScalingReport, TrainOutcome)> {
+    let cfg = train_config(spec);
+    let out = trainer::train(rt, &cfg)?;
+
+    let mut rep = base_report(spec, "runtime");
+    rep.model = cfg.model.clone();
+    rep.nodes = cfg.workers as u64;
+    rep.minibatch = cfg.global_mb as u64;
+    let n = out.history.records.len();
+    if n > 0 {
+        let mean = |f: fn(&crate::metrics::StepRecord) -> f64| {
+            out.history.records.iter().map(f).sum::<f64>() / n as f64
+        };
+        rep.samples_per_s = out.history.mean_throughput();
+        rep.iteration_s = if rep.samples_per_s > 0.0 {
+            cfg.global_mb as f64 / rep.samples_per_s
+        } else {
+            f64::NAN
+        };
+        rep.compute_s = mean(|r| r.compute_s);
+        rep.comm_s = mean(|r| r.comm_wait_s);
+        let busy = rep.compute_s + rep.comm_s;
+        if busy > 0.0 {
+            rep.mean_compute_utilization = rep.compute_s / busy;
+            rep.min_compute_utilization = rep.mean_compute_utilization;
+        }
+    }
+    Ok((rep, out))
+}
+
+/// Spec → trainer configuration (public so the CLI's `repro train`
+/// alias provably goes through the same translation).
+pub fn train_config(spec: &ExperimentSpec) -> TrainConfig {
+    TrainConfig {
+        model: spec
+            .execution
+            .model
+            .clone()
+            .unwrap_or_else(|| registry::runtime_model_for(spec.model.name()).to_string()),
+        workers: spec.execution.workers.unwrap_or(spec.cluster.nodes.max(1) as usize),
+        global_mb: spec.minibatch.global as usize,
+        steps: spec.execution.steps,
+        lr: spec.execution.lr as f32,
+        momentum: spec.execution.momentum as f32,
+        seed: spec.execution.seed,
+        log_every: spec.execution.log_every,
+        eval_every: spec.execution.eval_every,
+        optimizer: spec.execution.optimizer.clone(),
+    }
+}
+
+/// Run `spec` at each node count (speedup/efficiency stay relative to
+/// the backend's 1-node baseline) — the scaling curves of Figs 4/6/7.
+///
+/// Each point re-prices its own 1-node baseline inside `Backend::run`.
+/// That is deliberate: a 1-node simulation has no collectives and costs
+/// O(layers) tasks — negligible next to the N-node run — and keeping
+/// `run` a pure function of the spec is what makes reports comparable
+/// bit-for-bit across call sites (the alias-equivalence guarantee).
+pub fn run_sweep(
+    backend: &dyn Backend,
+    spec: &ExperimentSpec,
+    nodes: &[u64],
+) -> Result<Vec<ScalingReport>> {
+    nodes
+        .iter()
+        .map(|&n| {
+            let mut s = spec.clone();
+            s.cluster.nodes = n;
+            backend.run(&s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_and_netsim_run_the_same_spec() {
+        let mut spec = ExperimentSpec::of("t", "vgg_a", "cori", 4, 256);
+        spec.parallelism.iterations = 3;
+        let a = AnalyticBackend.run(&spec).unwrap();
+        let f = FleetSimBackend.run(&spec).unwrap();
+        assert_eq!(a.backend, "analytic");
+        assert_eq!(f.backend, "netsim");
+        assert_eq!(a.nodes, 4);
+        assert!(a.samples_per_s > 0.0 && f.samples_per_s > 0.0);
+        assert!(f.tasks > 0 && a.tasks == 0);
+        assert!(a.efficiency.unwrap() > 0.0 && a.efficiency.unwrap() <= 1.01);
+    }
+
+    #[test]
+    fn sweep_reports_monotone_throughput() {
+        let spec = ExperimentSpec::of("t", "vgg_a", "cori", 1, 256);
+        let curve = run_sweep(&AnalyticBackend, &spec, &[1, 2, 4, 8]).unwrap();
+        assert_eq!(curve.len(), 4);
+        assert!((curve[0].speedup.unwrap() - 1.0).abs() < 1e-9);
+        for w in curve.windows(2) {
+            assert!(w[1].samples_per_s >= w[0].samples_per_s * 0.98);
+        }
+    }
+
+    #[test]
+    fn backend_registry_rejects_unknown() {
+        assert!(backend_by_name("fpga").is_err());
+        for b in BACKENDS {
+            assert_eq!(backend_by_name(b).unwrap().name(), *b);
+        }
+    }
+
+    #[test]
+    fn spec_with_unknown_model_errors_with_inventory() {
+        let spec = ExperimentSpec::of("t", "resnet50", "cori", 2, 256);
+        let e = AnalyticBackend.run(&spec).unwrap_err().to_string();
+        assert!(e.contains("vgg_a"), "{e}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Unified experiment API: one declarative [`ExperimentSpec`], three
+//! interchangeable substrates behind the [`Backend`] trait.
+//!
+//! The paper evaluates a *single* synchronous-SGD design across many
+//! (model × cluster × fabric) points; this module makes each such point
+//! a JSON value instead of hand-wired structs:
+//!
+//! * [`spec`] — the serde-able experiment description (model, platform,
+//!   cluster shape, parallelism plan, collective algorithm, minibatch)
+//!   with `--set`-style point overrides. Canonical paper-figure specs
+//!   live both here (builders) and committed under `specs/`.
+//! * [`registry`] — the single name → constructor table for models,
+//!   platforms, topologies and collectives (formerly four copies of
+//!   `match name { ... }` across the CLI, benches and examples).
+//! * [`backend`] — [`AnalyticBackend`] (balance equations),
+//!   [`FleetSimBackend`] (full-cluster discrete-event simulation) and
+//!   [`RuntimeBackend`] (PJRT execution), all `Backend::run(spec) ->
+//!   ScalingReport`.
+//! * [`report`] — [`ScalingReport`], the common result schema, with a
+//!   stable `BENCH_*.json`-shaped serialization pinned by CI.
+
+pub mod backend;
+pub mod registry;
+pub mod report;
+pub mod spec;
+
+pub use backend::{
+    backend_by_name, run_runtime, run_runtime_with, run_sweep, AnalyticBackend, Backend,
+    FleetSimBackend, RuntimeBackend, BACKENDS,
+};
+pub use report::{curve_table, ScalingReport};
+pub use spec::{
+    ClusterSpec, ExecutionSpec, ExperimentSpec, MinibatchSpec, ModelSpec, ParallelismSpec,
+};

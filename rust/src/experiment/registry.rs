@@ -1,0 +1,165 @@
+//! Single source of truth for name → constructor lookups.
+//!
+//! Before the ExperimentSpec refactor, `main.rs`, every `fig*` bench and
+//! several examples each carried their own `match name { ... }` blocks
+//! for models and platforms. They all route here now; unknown names list
+//! what IS available, so a typo in a spec file fails with a useful error.
+
+use anyhow::{bail, Result};
+
+use crate::analytic::machine::Platform;
+use crate::models::{zoo, NetDescriptor};
+use crate::netsim::collective::Choice;
+use crate::netsim::Topology;
+
+fn gpt_mini() -> NetDescriptor {
+    zoo::gpt_descriptor("gpt_mini", 384, 6, 128)
+}
+
+fn gpt_large() -> NetDescriptor {
+    zoo::gpt_descriptor("gpt_large", 768, 12, 4096)
+}
+
+/// Model zoo: the paper's full-size topologies, the runnable tiny
+/// variants matching the AOT artifacts, and the transformer configs.
+pub const MODELS: &[(&str, fn() -> NetDescriptor)] = &[
+    ("vgg_a", zoo::vgg_a),
+    ("overfeat_fast", zoo::overfeat_fast),
+    ("cddnn_full", zoo::cddnn_full),
+    ("vgg_tiny", zoo::vgg_tiny),
+    ("overfeat_tiny", zoo::overfeat_tiny),
+    ("cddnn_tiny", zoo::cddnn_tiny),
+    ("gpt_mini", gpt_mini),
+    ("gpt_large", gpt_large),
+];
+
+/// The paper's evaluation platforms (§5) plus the two Table 1 columns.
+pub const PLATFORMS: &[(&str, fn() -> Platform)] = &[
+    ("cori", Platform::cori),
+    ("aws", Platform::aws),
+    ("endeavor", Platform::endeavor),
+    ("table1_ethernet", Platform::table1_ethernet),
+    ("table1_fdr", Platform::table1_fdr),
+];
+
+pub fn model_names() -> Vec<&'static str> {
+    MODELS.iter().map(|(n, _)| *n).collect()
+}
+
+pub fn platform_names() -> Vec<&'static str> {
+    PLATFORMS.iter().map(|(n, _)| *n).collect()
+}
+
+pub fn model(name: &str) -> Result<NetDescriptor> {
+    for (n, f) in MODELS {
+        if *n == name {
+            return Ok(f());
+        }
+    }
+    bail!("unknown model {name:?} (available: {})", model_names().join("|"))
+}
+
+pub fn platform(name: &str) -> Result<Platform> {
+    for (n, f) in PLATFORMS {
+        if *n == name {
+            return Ok(f());
+        }
+    }
+    bail!("unknown platform {name:?} (available: {})", platform_names().join("|"))
+}
+
+/// Fabric wiring by name; `radix`/`oversub` only matter for `fattree`.
+pub fn topology(name: &str, radix: usize, oversub: f64) -> Result<Topology> {
+    Ok(match name {
+        "switched" | "fully_switched" => Topology::FullySwitched,
+        "flat" | "flat_switch" => Topology::FlatSwitch,
+        "fattree" | "fat-tree" | "fat_tree" => Topology::FatTree { radix, oversub },
+        _ => bail!("unknown topology {name:?} (available: switched|flat|fattree)"),
+    })
+}
+
+/// Canonical spec-file name of a topology (drops fat-tree parameters —
+/// those live in their own spec fields).
+pub fn topology_name(t: &Topology) -> &'static str {
+    match t {
+        Topology::FullySwitched => "switched",
+        Topology::FlatSwitch => "flat",
+        Topology::FatTree { .. } => "fattree",
+    }
+}
+
+pub fn collective(name: &str) -> Result<Choice> {
+    Ok(match name {
+        "auto" => Choice::Auto,
+        "ring" => Choice::Ring,
+        "butterfly" => Choice::Butterfly,
+        _ => bail!("unknown collective {name:?} (available: auto|ring|butterfly)"),
+    })
+}
+
+pub fn collective_name(c: Choice) -> &'static str {
+    match c {
+        Choice::Auto => "auto",
+        Choice::Ring => "ring",
+        Choice::Butterfly => "butterfly",
+    }
+}
+
+/// Manifest (runnable-artifact) model standing in for a zoo topology on
+/// the PJRT runtime backend: the paper's full-size networks map to their
+/// scaled runnable variants; everything else is assumed runnable as-is.
+pub fn runtime_model_for(zoo_name: &str) -> &str {
+    match zoo_name {
+        "vgg_a" => "vgg_tiny",
+        "overfeat_fast" => "overfeat_tiny",
+        "cddnn_full" => "cddnn_tiny",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_model_constructs() {
+        for name in model_names() {
+            let net = model(name).unwrap();
+            assert!(!net.layers.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn every_registered_platform_constructs() {
+        for name in platform_names() {
+            let p = platform(name).unwrap();
+            assert!(p.machine.peak_gflops() > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_names_list_alternatives() {
+        let e = model("vgg_b").unwrap_err().to_string();
+        assert!(e.contains("vgg_a") && e.contains("cddnn_full"), "{e}");
+        let e = platform("cray").unwrap_err().to_string();
+        assert!(e.contains("cori") && e.contains("endeavor"), "{e}");
+        let e = topology("torus", 8, 2.0).unwrap_err().to_string();
+        assert!(e.contains("fattree"), "{e}");
+        let e = collective("allreduce").unwrap_err().to_string();
+        assert!(e.contains("butterfly"), "{e}");
+    }
+
+    #[test]
+    fn topology_names_roundtrip() {
+        for name in ["switched", "flat", "fattree"] {
+            let t = topology(name, 4, 2.0).unwrap();
+            assert_eq!(topology_name(&t), name);
+        }
+    }
+
+    #[test]
+    fn runtime_mapping_targets_runnable_models() {
+        assert_eq!(runtime_model_for("vgg_a"), "vgg_tiny");
+        assert_eq!(runtime_model_for("gpt_mini"), "gpt_mini");
+    }
+}

@@ -1,0 +1,248 @@
+//! `ScalingReport` — the common result schema every backend returns.
+//!
+//! One report = one (spec, backend) run: per-node time breakdown
+//! (compute vs exposed communication), throughput, speedup/efficiency
+//! against the backend's own 1-node baseline, and utilization spread
+//! across the fleet. Serializes to the `BENCH_*.json` object shape
+//! (sorted keys, stable formatting — reports are comparable
+//! bit-for-bit, which the CLI-alias equivalence test relies on).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Field names of the serialized report, sorted — the schema the CI
+/// drift check (`repro schema` vs `specs/report_schema.txt`) pins down.
+pub const SCHEMA_KEYS: &[&str] = &[
+    "backend",
+    "comm_s",
+    "compute_s",
+    "efficiency",
+    "iteration_s",
+    "mean_compute_utilization",
+    "min_compute_utilization",
+    "minibatch",
+    "model",
+    "nodes",
+    "platform",
+    "samples_per_s",
+    "spec",
+    "speedup",
+    "tasks",
+];
+
+#[derive(Debug, Clone)]
+pub struct ScalingReport {
+    /// `ExperimentSpec.name` this report answers.
+    pub spec_name: String,
+    /// Producing backend: `analytic` | `netsim` | `runtime`.
+    pub backend: String,
+    pub model: String,
+    pub platform: String,
+    pub nodes: u64,
+    pub minibatch: u64,
+    /// Steady-state synchronous-SGD iteration seconds.
+    pub iteration_s: f64,
+    pub samples_per_s: f64,
+    /// vs the same backend's 1-node run; `None` where a baseline run is
+    /// not free (the runtime backend).
+    pub speedup: Option<f64>,
+    pub efficiency: Option<f64>,
+    /// Per-node compute seconds inside one iteration.
+    pub compute_s: f64,
+    /// Exposed (non-overlapped) communication seconds inside one
+    /// iteration — what §3.1's overlap recipe failed to hide.
+    pub comm_s: f64,
+    pub mean_compute_utilization: f64,
+    pub min_compute_utilization: f64,
+    /// Discrete-event tasks simulated (0 for closed-form/measured runs).
+    pub tasks: u64,
+}
+
+fn opt_json(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    match j.get(key)? {
+        // emitted non-finite values come back as null (see util::json)
+        Json::Null => Ok(f64::NAN),
+        v => v.as_f64().with_context(|| format!("report field {key:?}")),
+    }
+}
+
+fn get_opt(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key)? {
+        Json::Null => Ok(None),
+        v => Ok(Some(v.as_f64().with_context(|| format!("report field {key:?}"))?)),
+    }
+}
+
+impl ScalingReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("spec".to_string(), Json::Str(self.spec_name.clone()));
+        m.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("platform".to_string(), Json::Str(self.platform.clone()));
+        m.insert("nodes".to_string(), Json::Num(self.nodes as f64));
+        m.insert("minibatch".to_string(), Json::Num(self.minibatch as f64));
+        m.insert("iteration_s".to_string(), Json::Num(self.iteration_s));
+        m.insert("samples_per_s".to_string(), Json::Num(self.samples_per_s));
+        m.insert("speedup".to_string(), opt_json(self.speedup));
+        m.insert("efficiency".to_string(), opt_json(self.efficiency));
+        m.insert("compute_s".to_string(), Json::Num(self.compute_s));
+        m.insert("comm_s".to_string(), Json::Num(self.comm_s));
+        m.insert(
+            "mean_compute_utilization".to_string(),
+            Json::Num(self.mean_compute_utilization),
+        );
+        m.insert(
+            "min_compute_utilization".to_string(),
+            Json::Num(self.min_compute_utilization),
+        );
+        m.insert("tasks".to_string(), Json::Num(self.tasks as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Self::check_schema(j)?;
+        Ok(ScalingReport {
+            spec_name: j.get("spec")?.as_str()?.to_string(),
+            backend: j.get("backend")?.as_str()?.to_string(),
+            model: j.get("model")?.as_str()?.to_string(),
+            platform: j.get("platform")?.as_str()?.to_string(),
+            nodes: j.get("nodes")?.as_u64()?,
+            minibatch: j.get("minibatch")?.as_u64()?,
+            iteration_s: get_f64(j, "iteration_s")?,
+            samples_per_s: get_f64(j, "samples_per_s")?,
+            speedup: get_opt(j, "speedup")?,
+            efficiency: get_opt(j, "efficiency")?,
+            compute_s: get_f64(j, "compute_s")?,
+            comm_s: get_f64(j, "comm_s")?,
+            mean_compute_utilization: get_f64(j, "mean_compute_utilization")?,
+            min_compute_utilization: get_f64(j, "min_compute_utilization")?,
+            tasks: j.get("tasks")?.as_u64()?,
+        })
+    }
+
+    /// Exact key-set check — the CI schema-drift gate.
+    pub fn check_schema(j: &Json) -> Result<()> {
+        let obj = j.as_obj().context("report must be a JSON object")?;
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        if keys != SCHEMA_KEYS {
+            bail!(
+                "report schema drift:\n  expected: {}\n  found:    {}",
+                SCHEMA_KEYS.join(","),
+                keys.join(",")
+            );
+        }
+        Ok(())
+    }
+
+    /// Fraction of the iteration the compute stream is idle waiting on
+    /// communication (the overlap shortfall).
+    pub fn comm_exposed_frac(&self) -> f64 {
+        if self.iteration_s > 0.0 {
+            self.comm_s / self.iteration_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// The standard scaling-curve table (nodes, samples/s, speedup,
+/// efficiency) — one shared formatter for benches, examples and docs so
+/// schema changes propagate from a single place.
+pub fn curve_table(reports: &[ScalingReport]) -> crate::metrics::Table {
+    let mut t = crate::metrics::Table::new(&["nodes", "samples/s", "speedup", "efficiency"]);
+    for r in reports {
+        t.row(vec![
+            r.nodes.to_string(),
+            format!("{:.0}", r.samples_per_s),
+            format!("{:.1}x", r.speedup.unwrap_or(f64::NAN)),
+            format!("{:.0}%", 100.0 * r.efficiency.unwrap_or(f64::NAN)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScalingReport {
+        ScalingReport {
+            spec_name: "fig4".into(),
+            backend: "analytic".into(),
+            model: "vgg_a".into(),
+            platform: "cori".into(),
+            nodes: 128,
+            minibatch: 512,
+            iteration_s: 0.204,
+            samples_per_s: 2510.0,
+            speedup: Some(90.1),
+            efficiency: Some(0.704),
+            compute_s: 0.15,
+            comm_s: 0.054,
+            mean_compute_utilization: 0.73,
+            min_compute_utilization: 0.73,
+            tasks: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_stable() {
+        let r = sample();
+        let text = r.to_json().to_string();
+        let back = ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.nodes, 128);
+        assert_eq!(back.speedup, Some(90.1));
+    }
+
+    #[test]
+    fn optional_fields_serialize_as_null() {
+        let mut r = sample();
+        r.speedup = None;
+        r.efficiency = None;
+        let text = r.to_json().to_string();
+        assert!(text.contains("\"speedup\":null"));
+        let back = ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.speedup, None);
+        assert_eq!(back.efficiency, None);
+    }
+
+    #[test]
+    fn non_finite_values_survive_the_wire_as_nan() {
+        let mut r = sample();
+        r.iteration_s = f64::NAN;
+        let text = r.to_json().to_string();
+        assert!(text.contains("\"iteration_s\":null"), "{text}");
+        let back = ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.iteration_s.is_nan());
+    }
+
+    #[test]
+    fn schema_keys_are_sorted_and_match_serialization() {
+        let mut sorted = SCHEMA_KEYS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, SCHEMA_KEYS, "SCHEMA_KEYS must stay sorted");
+        ScalingReport::check_schema(&sample().to_json()).unwrap();
+    }
+
+    #[test]
+    fn schema_drift_is_detected() {
+        let mut j = match sample().to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        j.insert("extra".to_string(), Json::Num(1.0));
+        assert!(ScalingReport::check_schema(&Json::Obj(j)).is_err());
+    }
+}

@@ -1,0 +1,795 @@
+//! `ExperimentSpec` — one declarative description of a scaling
+//! experiment, runnable on every backend (analytic balance equations,
+//! full-cluster discrete-event simulation, PJRT runtime execution).
+//!
+//! The JSON form is the contract: specs are committed under `specs/`
+//! (one per paper figure), passed to `repro run --spec`, and overridden
+//! point-wise with `--set key=value,...`. Every field has a default, so
+//! a minimal spec is just `{"model": "vgg_a", "platform": "cori"}`.
+//! See `DESIGN.md` ("Unified ExperimentSpec API") for the full schema.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::models::{Layer, LayerKind, NetDescriptor};
+use crate::util::json::Json;
+
+use super::registry;
+
+/// Model selector: a zoo name resolved through the registry, or an
+/// inline layer-by-layer `NetDescriptor` for topologies the zoo lacks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    Zoo(String),
+    Inline(NetDescriptor),
+}
+
+impl ModelSpec {
+    pub fn resolve(&self) -> Result<NetDescriptor> {
+        match self {
+            ModelSpec::Zoo(name) => registry::model(name),
+            ModelSpec::Inline(net) => Ok(net.clone()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            ModelSpec::Zoo(name) => name,
+            ModelSpec::Inline(net) => &net.name,
+        }
+    }
+}
+
+/// Cluster shape: size, fabric wiring, and the fleet imperfections the
+/// full simulator can express (stragglers, mixed generations, failures).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: u64,
+    /// `switched` | `flat` | `fattree` (registry names).
+    pub topology: String,
+    /// Fat-tree leaf radix (ignored elsewhere).
+    pub radix: usize,
+    /// Fat-tree core oversubscription (ignored elsewhere).
+    pub oversub: f64,
+    /// Linear per-node slowdown ramp, 0 = homogeneous.
+    pub straggler_skew: f64,
+    /// Odd nodes are a 30% slower older generation.
+    pub hetero: bool,
+    /// Fail `fail_node` at the start of this iteration (netsim backend).
+    pub fail_at: Option<usize>,
+    pub fail_node: usize,
+    pub recovery_s: f64,
+    /// Override the platform fabric's `congestion_per_doubling` fudge.
+    /// `Some(0.0)` = clean fabric, the setting under which the analytic
+    /// and netsim backends must agree (cross-backend validation).
+    pub congestion: Option<f64>,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        ClusterSpec {
+            nodes: 1,
+            topology: "switched".into(),
+            radix: 8,
+            oversub: 2.0,
+            straggler_skew: 0.0,
+            hetero: false,
+            fail_at: None,
+            fail_node: 0,
+            recovery_s: 5.0,
+            congestion: None,
+        }
+    }
+}
+
+/// Parallelism plan. `hybrid` is the paper's recipe: data parallelism on
+/// the conv trunk, per-layer best of data/model/hybrid (§3.3 optimal
+/// group shape) on the FC head. `data` forces pure data parallelism.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelismSpec {
+    pub mode: String,
+    /// Send/recv overlap achieved by the comm library (paper assumes 1).
+    pub overlap: f64,
+    /// Simulated iterations (steady state = last minus previous).
+    pub iterations: usize,
+}
+
+impl Default for ParallelismSpec {
+    fn default() -> Self {
+        ParallelismSpec { mode: "hybrid".into(), overlap: 1.0, iterations: 4 }
+    }
+}
+
+impl ParallelismSpec {
+    pub fn hybrid_fc(&self) -> Result<bool> {
+        match self.mode.as_str() {
+            "hybrid" => Ok(true),
+            "data" => Ok(false),
+            other => bail!("unknown parallelism mode {other:?} (available: hybrid|data)"),
+        }
+    }
+}
+
+/// Minibatch schedule. Today a single global size; the struct is the
+/// extension point for warmup/ramp schedules (Goyal et al. 2017).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinibatchSpec {
+    pub global: u64,
+}
+
+impl Default for MinibatchSpec {
+    fn default() -> Self {
+        MinibatchSpec { global: 256 }
+    }
+}
+
+/// Knobs that only the PJRT runtime backend consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionSpec {
+    /// Manifest model override (default: `registry::runtime_model_for`
+    /// applied to the spec's model name).
+    pub model: Option<String>,
+    /// Worker count (default: `cluster.nodes`).
+    pub workers: Option<usize>,
+    pub steps: u64,
+    pub lr: f64,
+    pub momentum: f64,
+    pub seed: u64,
+    pub log_every: u64,
+    pub eval_every: u64,
+    pub optimizer: String,
+    pub artifacts: String,
+}
+
+impl Default for ExecutionSpec {
+    fn default() -> Self {
+        ExecutionSpec {
+            model: None,
+            workers: None,
+            steps: 50,
+            lr: 0.01,
+            momentum: 0.0,
+            seed: 0,
+            log_every: 10,
+            eval_every: 0,
+            optimizer: "sgd".into(),
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+/// The unified experiment description (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub model: ModelSpec,
+    pub platform: String,
+    pub cluster: ClusterSpec,
+    pub parallelism: ParallelismSpec,
+    /// `auto` | `ring` | `butterfly` (registry names).
+    pub collective: String,
+    pub minibatch: MinibatchSpec,
+    pub execution: ExecutionSpec,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        ExperimentSpec {
+            name: "experiment".into(),
+            model: ModelSpec::Zoo("vgg_a".into()),
+            platform: "cori".into(),
+            cluster: ClusterSpec::default(),
+            parallelism: ParallelismSpec::default(),
+            collective: "auto".into(),
+            minibatch: MinibatchSpec::default(),
+            execution: ExecutionSpec::default(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON codec
+// ---------------------------------------------------------------------
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn opt_num<T: Into<f64>>(v: Option<T>) -> Json {
+    match v {
+        Some(x) => Json::Num(x.into()),
+        None => Json::Null,
+    }
+}
+
+fn get_f64(obj: &Json, key: &str, default: f64) -> Result<f64> {
+    match obj.opt(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_f64().with_context(|| format!("field {key:?}")),
+    }
+}
+
+fn get_u64(obj: &Json, key: &str, default: u64) -> Result<u64> {
+    match obj.opt(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_u64().with_context(|| format!("field {key:?}")),
+    }
+}
+
+fn get_usize(obj: &Json, key: &str, default: usize) -> Result<usize> {
+    match obj.opt(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_usize().with_context(|| format!("field {key:?}")),
+    }
+}
+
+fn get_bool(obj: &Json, key: &str, default: bool) -> Result<bool> {
+    match obj.opt(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => v.as_bool().with_context(|| format!("field {key:?}")),
+    }
+}
+
+fn get_str(obj: &Json, key: &str, default: &str) -> Result<String> {
+    match obj.opt(key) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(v) => Ok(v.as_str().with_context(|| format!("field {key:?}"))?.to_string()),
+    }
+}
+
+/// Reject misspelled/unknown keys: a typo must fail loudly, not run a
+/// silently different experiment with defaults filled in.
+fn check_keys(obj: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(m) = obj {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown {what} key {k:?} (expected one of: {})", allowed.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A named sub-object of the spec: absent/null means "all defaults",
+/// any non-object value is an error (it would otherwise be silently
+/// ignored and defaulted — same failure mode as a misspelled key).
+fn section<'a>(j: &'a Json, key: &str, empty: &'a Json) -> Result<&'a Json> {
+    match j.opt(key) {
+        None | Some(Json::Null) => Ok(empty),
+        Some(o @ Json::Obj(_)) => Ok(o),
+        Some(other) => bail!("\"{key}\" must be an object, got {other:?}"),
+    }
+}
+
+fn layer_to_json(l: &Layer) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(l.name.clone()));
+    match l.kind {
+        LayerKind::Conv { ifm, ofm, k, stride, out_h, out_w, in_h, in_w } => {
+            m.insert("kind".to_string(), Json::Str("conv".into()));
+            m.insert("ifm".to_string(), num(ifm as f64));
+            m.insert("ofm".to_string(), num(ofm as f64));
+            m.insert("k".to_string(), num(k as f64));
+            m.insert("stride".to_string(), num(stride as f64));
+            m.insert("out_h".to_string(), num(out_h as f64));
+            m.insert("out_w".to_string(), num(out_w as f64));
+            m.insert("in_h".to_string(), num(in_h as f64));
+            m.insert("in_w".to_string(), num(in_w as f64));
+        }
+        LayerKind::Fc { in_dim, out_dim } => {
+            m.insert("kind".to_string(), Json::Str("fc".into()));
+            m.insert("in_dim".to_string(), num(in_dim as f64));
+            m.insert("out_dim".to_string(), num(out_dim as f64));
+        }
+        LayerKind::Pool { ch, out_h, out_w, window } => {
+            m.insert("kind".to_string(), Json::Str("pool".into()));
+            m.insert("ch".to_string(), num(ch as f64));
+            m.insert("out_h".to_string(), num(out_h as f64));
+            m.insert("out_w".to_string(), num(out_w as f64));
+            m.insert("window".to_string(), num(window as f64));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn layer_from_json(j: &Json) -> Result<Layer> {
+    let name = get_str(j, "name", "")?;
+    if name.is_empty() {
+        bail!("layer missing \"name\"");
+    }
+    let kind = match get_str(j, "kind", "")?.as_str() {
+        "conv" => {
+            check_keys(
+                j,
+                &["kind", "name", "ifm", "ofm", "k", "stride", "out_h", "out_w", "in_h", "in_w"],
+                "conv layer",
+            )?;
+            LayerKind::Conv {
+                ifm: j.get("ifm")?.as_u64()?,
+                ofm: j.get("ofm")?.as_u64()?,
+                k: j.get("k")?.as_u64()?,
+                stride: get_u64(j, "stride", 1)?,
+                out_h: j.get("out_h")?.as_u64()?,
+                out_w: j.get("out_w")?.as_u64()?,
+                in_h: j.get("in_h")?.as_u64()?,
+                in_w: j.get("in_w")?.as_u64()?,
+            }
+        }
+        "fc" => {
+            check_keys(j, &["kind", "name", "in_dim", "out_dim"], "fc layer")?;
+            LayerKind::Fc {
+                in_dim: j.get("in_dim")?.as_u64()?,
+                out_dim: j.get("out_dim")?.as_u64()?,
+            }
+        }
+        "pool" => {
+            check_keys(j, &["kind", "name", "ch", "out_h", "out_w", "window"], "pool layer")?;
+            LayerKind::Pool {
+                ch: j.get("ch")?.as_u64()?,
+                out_h: j.get("out_h")?.as_u64()?,
+                out_w: j.get("out_w")?.as_u64()?,
+                window: get_u64(j, "window", 2)?,
+            }
+        }
+        other => bail!("layer {name:?}: unknown kind {other:?} (conv|fc|pool)"),
+    };
+    Ok(Layer { name, kind })
+}
+
+impl ExperimentSpec {
+    /// Terse constructor for the common (model, platform, nodes, MB) case.
+    pub fn of(name: &str, model: &str, platform: &str, nodes: u64, minibatch: u64) -> Self {
+        ExperimentSpec {
+            name: name.into(),
+            model: ModelSpec::Zoo(model.into()),
+            platform: platform.into(),
+            cluster: ClusterSpec { nodes, ..Default::default() },
+            minibatch: MinibatchSpec { global: minibatch },
+            ..Default::default()
+        }
+    }
+
+    // ---- canonical paper-figure specs ---------------------------------
+    // These builders are the single definition of each figure's
+    // configuration: the committed `specs/*.json` files serialize them,
+    // the CLI aliases (`repro simulate fig4` etc.) build them, and
+    // `tests/experiment_api.rs` asserts all three agree bit-for-bit.
+
+    /// Fig 4 headline point: VGG-A on Cori, 128 nodes, MB=512.
+    pub fn fig4() -> Self {
+        ExperimentSpec::of("fig4", "vgg_a", "cori", 128, 512)
+    }
+
+    /// Fig 6, OverFeat-FAST curve endpoint: AWS EC2, 16 nodes, MB=256.
+    pub fn fig6_overfeat() -> Self {
+        ExperimentSpec::of("fig6_overfeat", "overfeat_fast", "aws", 16, 256)
+    }
+
+    /// Fig 6, VGG-A curve endpoint: AWS EC2, 16 nodes, MB=256.
+    pub fn fig6_vgg() -> Self {
+        ExperimentSpec::of("fig6_vgg", "vgg_a", "aws", 16, 256)
+    }
+
+    /// Fig 7: CD-DNN on Endeavor, 16 nodes, MB=1024 frames.
+    pub fn fig7() -> Self {
+        ExperimentSpec::of("fig7", "cddnn_full", "endeavor", 16, 1024)
+    }
+
+    // ---- JSON ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut cluster = BTreeMap::new();
+        cluster.insert("nodes".to_string(), num(self.cluster.nodes as f64));
+        cluster.insert("topology".to_string(), Json::Str(self.cluster.topology.clone()));
+        cluster.insert("radix".to_string(), num(self.cluster.radix as f64));
+        cluster.insert("oversub".to_string(), num(self.cluster.oversub));
+        cluster.insert("straggler_skew".to_string(), num(self.cluster.straggler_skew));
+        cluster.insert("hetero".to_string(), Json::Bool(self.cluster.hetero));
+        cluster.insert(
+            "fail_at".to_string(),
+            opt_num(self.cluster.fail_at.map(|v| v as f64)),
+        );
+        cluster.insert("fail_node".to_string(), num(self.cluster.fail_node as f64));
+        cluster.insert("recovery_s".to_string(), num(self.cluster.recovery_s));
+        cluster.insert("congestion".to_string(), opt_num(self.cluster.congestion));
+
+        let mut par = BTreeMap::new();
+        par.insert("mode".to_string(), Json::Str(self.parallelism.mode.clone()));
+        par.insert("overlap".to_string(), num(self.parallelism.overlap));
+        par.insert("iterations".to_string(), num(self.parallelism.iterations as f64));
+
+        let mut mb = BTreeMap::new();
+        mb.insert("global".to_string(), num(self.minibatch.global as f64));
+
+        let mut exec = BTreeMap::new();
+        exec.insert(
+            "model".to_string(),
+            match &self.execution.model {
+                Some(m) => Json::Str(m.clone()),
+                None => Json::Null,
+            },
+        );
+        exec.insert("workers".to_string(), opt_num(self.execution.workers.map(|v| v as f64)));
+        exec.insert("steps".to_string(), num(self.execution.steps as f64));
+        exec.insert("lr".to_string(), num(self.execution.lr));
+        exec.insert("momentum".to_string(), num(self.execution.momentum));
+        exec.insert("seed".to_string(), num(self.execution.seed as f64));
+        exec.insert("log_every".to_string(), num(self.execution.log_every as f64));
+        exec.insert("eval_every".to_string(), num(self.execution.eval_every as f64));
+        exec.insert("optimizer".to_string(), Json::Str(self.execution.optimizer.clone()));
+        exec.insert("artifacts".to_string(), Json::Str(self.execution.artifacts.clone()));
+
+        let model = match &self.model {
+            ModelSpec::Zoo(name) => Json::Str(name.clone()),
+            ModelSpec::Inline(net) => {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(net.name.clone()));
+                m.insert(
+                    "layers".to_string(),
+                    Json::Arr(net.layers.iter().map(layer_to_json).collect()),
+                );
+                Json::Obj(m)
+            }
+        };
+
+        let mut root = BTreeMap::new();
+        root.insert("name".to_string(), Json::Str(self.name.clone()));
+        root.insert("model".to_string(), model);
+        root.insert("platform".to_string(), Json::Str(self.platform.clone()));
+        root.insert("cluster".to_string(), Json::Obj(cluster));
+        root.insert("parallelism".to_string(), Json::Obj(par));
+        root.insert("collective".to_string(), Json::Str(self.collective.clone()));
+        root.insert("minibatch".to_string(), Json::Obj(mb));
+        root.insert("execution".to_string(), Json::Obj(exec));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        j.as_obj().context("spec must be a JSON object")?;
+        let d = ExperimentSpec::default();
+        check_keys(
+            j,
+            &[
+                "name", "model", "platform", "cluster", "parallelism", "collective",
+                "minibatch", "execution",
+            ],
+            "spec",
+        )?;
+        let model = match j.opt("model") {
+            None | Some(Json::Null) => d.model.clone(),
+            Some(Json::Str(name)) => ModelSpec::Zoo(name.clone()),
+            Some(inline @ Json::Obj(_)) => {
+                check_keys(inline, &["name", "layers"], "inline model")?;
+                let name = get_str(inline, "name", "inline")?;
+                let layers: Result<Vec<Layer>> =
+                    inline.get("layers")?.as_arr()?.iter().map(layer_from_json).collect();
+                let layers = layers.context("inline model layers")?;
+                if layers.is_empty() {
+                    bail!("inline model {name:?} has no layers");
+                }
+                ModelSpec::Inline(NetDescriptor { name, layers })
+            }
+            Some(other) => bail!("\"model\" must be a zoo name or inline object, got {other:?}"),
+        };
+
+        let empty = Json::Obj(BTreeMap::new());
+        let c = section(j, "cluster", &empty)?;
+        check_keys(
+            c,
+            &[
+                "nodes", "topology", "radix", "oversub", "straggler_skew", "hetero",
+                "fail_at", "fail_node", "recovery_s", "congestion",
+            ],
+            "cluster",
+        )?;
+        let cluster = ClusterSpec {
+            nodes: get_u64(c, "nodes", d.cluster.nodes)?,
+            topology: get_str(c, "topology", &d.cluster.topology)?,
+            radix: get_usize(c, "radix", d.cluster.radix)?,
+            oversub: get_f64(c, "oversub", d.cluster.oversub)?,
+            straggler_skew: get_f64(c, "straggler_skew", d.cluster.straggler_skew)?,
+            hetero: get_bool(c, "hetero", d.cluster.hetero)?,
+            fail_at: match c.opt("fail_at") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_usize().context("field \"fail_at\"")?),
+            },
+            fail_node: get_usize(c, "fail_node", d.cluster.fail_node)?,
+            recovery_s: get_f64(c, "recovery_s", d.cluster.recovery_s)?,
+            congestion: match c.opt("congestion") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().context("field \"congestion\"")?),
+            },
+        };
+
+        // validate registry names early: a typo'd topology/collective
+        // must fail at parse time, not only when the netsim backend
+        // first consumes it (the analytic backend never would)
+        registry::topology(&cluster.topology, cluster.radix, cluster.oversub)?;
+
+        let p = section(j, "parallelism", &empty)?;
+        check_keys(p, &["mode", "overlap", "iterations"], "parallelism")?;
+        let parallelism = ParallelismSpec {
+            mode: get_str(p, "mode", &d.parallelism.mode)?,
+            overlap: get_f64(p, "overlap", d.parallelism.overlap)?,
+            iterations: get_usize(p, "iterations", d.parallelism.iterations)?,
+        };
+        parallelism.hybrid_fc()?; // validate early
+
+        let minibatch = match j.opt("minibatch") {
+            None | Some(Json::Null) => d.minibatch.clone(),
+            // shorthand: "minibatch": 512
+            Some(n @ Json::Num(_)) => MinibatchSpec { global: n.as_u64()? },
+            Some(m @ Json::Obj(_)) => {
+                check_keys(m, &["global"], "minibatch")?;
+                MinibatchSpec { global: get_u64(m, "global", d.minibatch.global)? }
+            }
+            Some(other) => bail!("\"minibatch\" must be a number or object, got {other:?}"),
+        };
+
+        let e = section(j, "execution", &empty)?;
+        check_keys(
+            e,
+            &[
+                "model", "workers", "steps", "lr", "momentum", "seed", "log_every",
+                "eval_every", "optimizer", "artifacts",
+            ],
+            "execution",
+        )?;
+        let execution = ExecutionSpec {
+            model: match e.opt("model") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_str().context("field execution.model")?.to_string()),
+            },
+            workers: match e.opt("workers") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_usize().context("field execution.workers")?),
+            },
+            steps: get_u64(e, "steps", d.execution.steps)?,
+            lr: get_f64(e, "lr", d.execution.lr)?,
+            momentum: get_f64(e, "momentum", d.execution.momentum)?,
+            seed: get_u64(e, "seed", d.execution.seed)?,
+            log_every: get_u64(e, "log_every", d.execution.log_every)?,
+            eval_every: get_u64(e, "eval_every", d.execution.eval_every)?,
+            optimizer: get_str(e, "optimizer", &d.execution.optimizer)?,
+            artifacts: get_str(e, "artifacts", &d.execution.artifacts)?,
+        };
+
+        let collective = get_str(j, "collective", &d.collective)?;
+        registry::collective(&collective)?; // validate early
+
+        Ok(ExperimentSpec {
+            name: get_str(j, "name", &d.name)?,
+            model,
+            platform: get_str(j, "platform", &d.platform)?,
+            cluster,
+            parallelism,
+            collective,
+            minibatch,
+            execution,
+        })
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text).context("spec is not valid JSON")?)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("cannot read spec file {path:?}"))?;
+        Self::parse_str(&text).with_context(|| format!("spec file {path:?}"))
+    }
+
+    // ---- point overrides ----------------------------------------------
+
+    /// Apply comma-separated `key=value` overrides (the CLI's `--set`).
+    /// Keys are flat aliases into the nested spec, e.g.
+    /// `nodes=64,minibatch=512,topology=fattree,straggler_skew=0.3`.
+    pub fn apply_set(&mut self, assignments: &str) -> Result<()> {
+        fn parsed<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+            value.parse::<T>().map_err(|_| {
+                anyhow!(
+                    "--set {key}={value}: cannot parse as {}",
+                    std::any::type_name::<T>()
+                )
+            })
+        }
+        for kv in assignments.split(',').filter(|s| !s.is_empty()) {
+            let (key, value) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--set entry {kv:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "name" => self.name = value.into(),
+                "model" => self.model = ModelSpec::Zoo(value.into()),
+                "platform" => self.platform = value.into(),
+                "nodes" => self.cluster.nodes = parsed(key, value)?,
+                "topology" => {
+                    registry::topology(value, self.cluster.radix, self.cluster.oversub)?;
+                    self.cluster.topology = value.into()
+                }
+                "radix" => self.cluster.radix = parsed(key, value)?,
+                "oversub" => self.cluster.oversub = parsed(key, value)?,
+                "straggler_skew" | "straggler-skew" => {
+                    self.cluster.straggler_skew = parsed(key, value)?
+                }
+                "hetero" => {
+                    self.cluster.hetero = match value {
+                        "true" | "1" | "yes" => true,
+                        "false" | "0" | "no" => false,
+                        _ => bail!("--set hetero={value}: expected true|false"),
+                    }
+                }
+                "fail_at" | "fail-at" => {
+                    self.cluster.fail_at =
+                        if value == "none" { None } else { Some(parsed(key, value)?) }
+                }
+                "fail_node" | "fail-node" => self.cluster.fail_node = parsed(key, value)?,
+                "recovery_s" | "recovery" => self.cluster.recovery_s = parsed(key, value)?,
+                "congestion" => {
+                    self.cluster.congestion =
+                        if value == "none" { None } else { Some(parsed(key, value)?) }
+                }
+                "mode" => self.parallelism.mode = value.into(),
+                "overlap" => self.parallelism.overlap = parsed(key, value)?,
+                "iterations" => self.parallelism.iterations = parsed(key, value)?,
+                "collective" => {
+                    registry::collective(value)?;
+                    self.collective = value.into()
+                }
+                "minibatch" | "mb" => self.minibatch.global = parsed(key, value)?,
+                "exec_model" => self.execution.model = Some(value.into()),
+                "workers" => self.execution.workers = Some(parsed(key, value)?),
+                "steps" => self.execution.steps = parsed(key, value)?,
+                "lr" => self.execution.lr = parsed(key, value)?,
+                "momentum" => self.execution.momentum = parsed(key, value)?,
+                "seed" => self.execution.seed = parsed(key, value)?,
+                "log_every" => self.execution.log_every = parsed(key, value)?,
+                "eval_every" => self.execution.eval_every = parsed(key, value)?,
+                "optimizer" => self.execution.optimizer = value.into(),
+                "artifacts" => self.execution.artifacts = value.into(),
+                other => bail!(
+                    "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
+                     radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
+                     congestion, mode, overlap, iterations, collective, workers, steps, lr, \
+                     momentum, seed, log_every, eval_every, optimizer, artifacts, exec_model, name)"
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_all_fields() {
+        let mut s = ExperimentSpec::fig4();
+        s.cluster.topology = "fattree".into();
+        s.cluster.oversub = 4.0;
+        s.cluster.straggler_skew = 0.25;
+        s.cluster.hetero = true;
+        s.cluster.fail_at = Some(2);
+        s.cluster.congestion = Some(0.0);
+        s.parallelism.mode = "data".into();
+        s.collective = "ring".into();
+        s.execution.workers = Some(4);
+        s.execution.model = Some("vgg_tiny".into());
+        let j = s.to_json();
+        let back = ExperimentSpec::from_json(&j).unwrap();
+        assert_eq!(s, back);
+        // and through text + pretty-printer too
+        assert_eq!(ExperimentSpec::parse_str(&j.to_string()).unwrap(), s);
+        assert_eq!(ExperimentSpec::parse_str(&j.pretty()).unwrap(), s);
+    }
+
+    #[test]
+    fn minimal_spec_gets_defaults() {
+        let s = ExperimentSpec::parse_str(r#"{"model": "cddnn_full", "platform": "endeavor"}"#)
+            .unwrap();
+        assert_eq!(s.model, ModelSpec::Zoo("cddnn_full".into()));
+        assert_eq!(s.cluster.nodes, 1);
+        assert_eq!(s.minibatch.global, 256);
+        assert_eq!(s.parallelism.mode, "hybrid");
+        assert_eq!(s.collective, "auto");
+    }
+
+    #[test]
+    fn minibatch_shorthand_number() {
+        let s = ExperimentSpec::parse_str(r#"{"minibatch": 512}"#).unwrap();
+        assert_eq!(s.minibatch.global, 512);
+    }
+
+    #[test]
+    fn inline_model_roundtrips_and_resolves() {
+        let net = NetDescriptor::new(
+            "toy",
+            vec![
+                Layer::conv("c1", 3, 16, 3, 1, 32, 32),
+                Layer::pool("p1", 16, 16),
+                Layer::fc("f1", 4096, 10),
+            ],
+        );
+        let s = ExperimentSpec {
+            model: ModelSpec::Inline(net.clone()),
+            ..Default::default()
+        };
+        let back = ExperimentSpec::parse_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.model.resolve().unwrap(), net);
+        assert_eq!(back.model.name(), "toy");
+    }
+
+    #[test]
+    fn apply_set_overrides_nested_fields() {
+        let mut s = ExperimentSpec::fig4();
+        s.apply_set("nodes=64,minibatch=256,topology=fattree,oversub=4,collective=ring,mode=data")
+            .unwrap();
+        assert_eq!(s.cluster.nodes, 64);
+        assert_eq!(s.minibatch.global, 256);
+        assert_eq!(s.cluster.topology, "fattree");
+        assert_eq!(s.cluster.oversub, 4.0);
+        assert_eq!(s.collective, "ring");
+        assert!(!s.parallelism.hybrid_fc().unwrap());
+    }
+
+    #[test]
+    fn apply_set_rejects_unknown_keys_and_bad_values() {
+        let mut s = ExperimentSpec::default();
+        assert!(s.apply_set("frobnicate=1").is_err());
+        assert!(s.apply_set("nodes=many").is_err());
+        assert!(s.apply_set("nodes").is_err());
+    }
+
+    #[test]
+    fn invalid_mode_is_rejected_at_parse_time() {
+        let e = ExperimentSpec::parse_str(r#"{"parallelism": {"mode": "async"}}"#);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_not_defaulted() {
+        // a typo must fail loudly instead of running a wrong experiment
+        for bad in [
+            r#"{"minibtach": 512}"#,
+            r#"{"cluster": {"straggler_skw": 0.5}}"#,
+            r#"{"parallelism": {"iterations": 4, "overlp": 1}}"#,
+            r#"{"execution": {"step": 10}}"#,
+            r#"{"minibatch": {"globl": 64}}"#,
+        ] {
+            let e = ExperimentSpec::parse_str(bad);
+            assert!(e.is_err(), "accepted {bad}");
+            assert!(
+                format!("{:#}", e.unwrap_err()).contains("unknown"),
+                "wrong error for {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn mistyped_sections_are_rejected_not_defaulted() {
+        // a section of the wrong JSON type must not silently default
+        for bad in [
+            r#"[]"#,
+            r#"{"cluster": 16}"#,
+            r#"{"parallelism": "data"}"#,
+            r#"{"minibatch": "512"}"#,
+            r#"{"execution": true}"#,
+        ] {
+            assert!(ExperimentSpec::parse_str(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn registry_names_validate_at_parse_time() {
+        // the analytic backend never consumes topology/collective, so
+        // waiting for the netsim backend to validate them would let a
+        // typo'd committed spec pass the analytic-only CI job
+        assert!(ExperimentSpec::parse_str(r#"{"cluster": {"topology": "fattre"}}"#).is_err());
+        assert!(ExperimentSpec::parse_str(r#"{"collective": "allreduce"}"#).is_err());
+        let mut s = ExperimentSpec::default();
+        assert!(s.apply_set("topology=torus").is_err());
+        assert!(s.apply_set("collective=nccl").is_err());
+    }
+}

@@ -14,6 +14,10 @@
 //!   evaluation needs: an analytic balance-equation engine (paper §2-3), a
 //!   discrete-event cluster/network simulator, and a PJRT runtime that
 //!   executes the AOT artifacts. Python is never on the training path.
+//!   The three substrates sit behind one declarative interface — the
+//!   [`experiment`] module's `ExperimentSpec` / `Backend` /
+//!   `ScalingReport` triple — so any experiment point runs on any
+//!   substrate and the results compare in one schema.
 //!
 //! See `DESIGN.md` for the per-experiment index (Table 1, Figs 3-7) and
 //! `EXPERIMENTS.md` for measured results.
@@ -23,6 +27,7 @@ pub mod util;
 pub mod collectives;
 pub mod coordinator;
 pub mod data;
+pub mod experiment;
 pub mod metrics;
 pub mod models;
 pub mod netsim;

@@ -1,19 +1,23 @@
-//! `repro` — CLI for the PCL-DNN reproduction.
+//! `repro` — spec-first CLI for the PCL-DNN reproduction.
 //!
 //! ```text
-//! repro info                          artifact/model inventory + platform
-//! repro analyze table1                Table 1 (data-parallel scaling limits)
-//! repro analyze cache-blocking        §2.2 brute-force B/F search
-//! repro analyze register-blocking     §2.4 LS/FMA efficiency model
-//! repro analyze hybrid                §3.3 hybrid-parallel optimum
-//! repro analyze fig3                  Fig 3 single-node throughput model
-//! repro analyze kernel-blocking       L1 Pallas tile VMEM/MXU estimates
-//! repro simulate fig4|fig6|fig7       cluster-simulated scaling figures
-//! repro simulate sweep --net vgg_a --platform cori --minibatch 256 ...
-//! repro simulate full --nodes 16 --topology fattree --oversub 4 \
-//!     --straggler-skew 0.3 --hetero --fail-at 2    full-cluster simulator
-//! repro simulate stragglers --skews 0,0.2,0.5,1    straggler-skew sweep
-//! repro simulate contention --oversubs 1,2,4,8     fat-tree core sweep
+//! repro run --spec specs/fig4.json                 one spec, one backend
+//! repro run --spec specs/fig4.json --backend netsim --set nodes=64,minibatch=256
+//! repro run --spec specs/fig6_vgg.json --sweep-nodes 1,2,4,8,16 --out BENCH_fig6.json
+//! repro schema                                     ScalingReport field list
+//! repro info                                       artifact/model inventory + platform
+//! repro analyze table1|cache-blocking|register-blocking|hybrid|fig3|kernel-blocking
+//! ```
+//!
+//! Experiments are described by `ExperimentSpec` JSON files (see
+//! `specs/` and DESIGN.md) and run on any backend: `analytic` (balance
+//! equations), `netsim` (full-cluster discrete-event simulation) or
+//! `runtime` (PJRT execution). The pre-spec subcommands are kept as
+//! compatibility aliases that build the equivalent spec and print a
+//! deprecation note:
+//!
+//! ```text
+//! repro simulate fig4|fig6|fig7|sweep|full|stragglers|contention ...
 //! repro train --model vgg_tiny --workers 4 --minibatch 16 --steps 100
 //! repro score --model vgg_tiny --batches 20
 //! ```
@@ -22,16 +26,16 @@ use anyhow::{bail, Context, Result};
 
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
+use pcl_dnn::experiment::{
+    backend_by_name, registry, run_runtime, run_sweep, AnalyticBackend, Backend, ExecutionSpec,
+    ExperimentSpec, FleetSimBackend, MinibatchSpec, ModelSpec, ScalingReport,
+};
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
-use pcl_dnn::models::NetDescriptor;
-use pcl_dnn::netsim::cluster::{
-    scaling_curve, simulate_training, simulate_training_fleet, SimConfig,
-};
-use pcl_dnn::netsim::{FleetConfig, Topology};
 use pcl_dnn::runtime::Runtime;
-use pcl_dnn::trainer::{self, TrainConfig};
+use pcl_dnn::trainer;
 use pcl_dnn::util::cli::Opts;
+use pcl_dnn::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -40,34 +44,16 @@ fn main() {
     }
 }
 
-fn net_by_name(name: &str) -> Result<NetDescriptor> {
-    Ok(match name {
-        "vgg_a" => zoo::vgg_a(),
-        "overfeat_fast" => zoo::overfeat_fast(),
-        "cddnn_full" => zoo::cddnn_full(),
-        "vgg_tiny" => zoo::vgg_tiny(),
-        "overfeat_tiny" => zoo::overfeat_tiny(),
-        "cddnn_tiny" => zoo::cddnn_tiny(),
-        "gpt_mini" => zoo::gpt_descriptor("gpt_mini", 384, 6, 128),
-        "gpt_large" => zoo::gpt_descriptor("gpt_large", 768, 12, 4096),
-        _ => bail!("unknown network {name:?}"),
-    })
-}
-
-fn platform_by_name(name: &str) -> Result<Platform> {
-    Ok(match name {
-        "cori" => Platform::cori(),
-        "aws" => Platform::aws(),
-        "endeavor" => Platform::endeavor(),
-        "table1_ethernet" => Platform::table1_ethernet(),
-        "table1_fdr" => Platform::table1_fdr(),
-        _ => bail!("unknown platform {name:?} (cori|aws|endeavor|table1_ethernet|table1_fdr)"),
-    })
-}
-
 fn run() -> Result<()> {
     let opts = Opts::from_env()?;
     match opts.pos(0) {
+        Some("run") => run_spec(&opts),
+        Some("schema") => {
+            for key in pcl_dnn::experiment::report::SCHEMA_KEYS {
+                println!("{key}");
+            }
+            Ok(())
+        }
         Some("info") => info(&opts),
         Some("analyze") => analyze(&opts),
         Some("simulate") => simulate(&opts),
@@ -75,18 +61,104 @@ fn run() -> Result<()> {
         Some("score") => score(&opts),
         _ => {
             eprintln!(
-                "usage: repro <info|analyze|simulate|train|score> ... (see README quickstart)"
+                "usage: repro <run|schema|info|analyze|simulate|train|score> ... \
+                 (see README quickstart; `run --spec specs/<figure>.json` is the main entry)"
             );
             Ok(())
         }
     }
 }
 
-fn info(opts: &Opts) -> Result<()> {
-    let dir = opts.str_or(
+fn default_artifacts(opts: &Opts) -> String {
+    opts.str_or(
         "artifacts",
         pcl_dnn::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    )
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>> {
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.trim().parse::<T>().map_err(|_| anyhow::anyhow!("--{flag}: bad entry {p:?}")))
+        .collect()
+}
+
+fn deprecated(old: &str, spec_form: &str) {
+    eprintln!("note: `repro {old}` is a compatibility alias; prefer `repro {spec_form}`");
+}
+
+// ---------------------------------------------------------------------
+// spec-first entry points
+// ---------------------------------------------------------------------
+
+fn report_table(reports: &[ScalingReport]) {
+    let mut t = Table::new(&[
+        "backend", "nodes", "iter ms", "samples/s", "speedup", "efficiency", "mean util",
+        "min util",
+    ]);
+    for r in reports {
+        t.row(vec![
+            r.backend.clone(),
+            r.nodes.to_string(),
+            format!("{:.2}", r.iteration_s * 1e3),
+            format!("{:.0}", r.samples_per_s),
+            r.speedup.map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".into()),
+            r.efficiency.map(|e| format!("{:.0}%", 100.0 * e)).unwrap_or_else(|| "-".into()),
+            format!("{:.0}%", 100.0 * r.mean_compute_utilization),
+            format!("{:.0}%", 100.0 * r.min_compute_utilization),
+        ]);
+    }
+    t.print();
+}
+
+/// `repro run --spec <file> [--backend b] [--set k=v,...]
+/// [--sweep-nodes 1,2,4] [--json] [--out file] [--check]`
+fn run_spec(opts: &Opts) -> Result<()> {
+    let path = opts
+        .str_opt("spec")
+        .context("--spec <file> is required (committed figures live in specs/)")?;
+    let mut spec = ExperimentSpec::load(path)?;
+    if let Some(sets) = opts.str_opt("set") {
+        spec.apply_set(sets)?;
+    }
+    let backend = backend_by_name(&opts.str_or("backend", "analytic"))?;
+    let reports = match opts.str_opt("sweep-nodes") {
+        Some(list) => run_sweep(backend.as_ref(), &spec, &parse_list::<u64>(list, "sweep-nodes")?)?,
+        None => vec![backend.run(&spec)?],
+    };
+    println!(
+        "# {} — {} on {} ({} backend)",
+        spec.name,
+        spec.model.name(),
+        spec.platform,
+        backend.name()
     );
+    report_table(&reports);
+    let json = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+    if opts.bool_flag("check") {
+        for r in &reports {
+            let round = Json::parse(&r.to_json().to_string())?;
+            ScalingReport::check_schema(&round)?;
+            ScalingReport::from_json(&round)?;
+        }
+        println!("schema check OK ({} report(s))", reports.len());
+    }
+    if opts.bool_flag("json") {
+        println!("{json}");
+    }
+    if let Some(out) = opts.str_opt("out") {
+        std::fs::write(out, format!("{}\n", json.pretty()))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// inventory + analytic tables (not experiments; spec-less by design)
+// ---------------------------------------------------------------------
+
+fn info(opts: &Opts) -> Result<()> {
+    let dir = default_artifacts(opts);
     let rt = Runtime::new(&dir).context("artifacts not built? run `make artifacts`")?;
     println!("platform: {}", rt.platform());
     println!("artifacts dir: {dir}");
@@ -107,6 +179,8 @@ fn info(opts: &Opts) -> Result<()> {
         t.row(vec![name.clone(), m.params.len().to_string(), m.n_elements.to_string()]);
     }
     t.print();
+    println!("\nregistered zoo models: {}", registry::model_names().join(", "));
+    println!("registered platforms:  {}", registry::platform_names().join(", "));
     Ok(())
 }
 
@@ -146,7 +220,7 @@ fn analyze(opts: &Opts) -> Result<()> {
             let budget = opts.parse_or("budget", 128 * 1024u64)?;
             let simd = opts.parse_or("simd", 8u64)?;
             let mb = opts.parse_or("mb", 1u64)?;
-            let net = net_by_name(&opts.str_or("net", "overfeat_fast"))?;
+            let net = registry::model(&opts.str_or("net", "overfeat_fast"))?;
             let cfg = cache_blocking::SearchCfg { budget, simd, double_buffer: true, max_mb: mb };
             println!(
                 "# §2.2 cache-blocking search — budget {} KB, SIMD {simd}, max mb {mb}",
@@ -264,7 +338,7 @@ fn analyze(opts: &Opts) -> Result<()> {
             let budget = opts.parse_or("vmem", 8u64 << 20)?;
             let cfg =
                 cache_blocking::SearchCfg { budget, simd: 128, double_buffer: true, max_mb: 8 };
-            let net = net_by_name(&opts.str_or("net", "overfeat_fast"))?;
+            let net = registry::model(&opts.str_or("net", "overfeat_fast"))?;
             let mut t = Table::new(&[
                 "layer",
                 "tile (mb,ofm,oh,ow,ifm)",
@@ -295,87 +369,93 @@ fn analyze(opts: &Opts) -> Result<()> {
     }
 }
 
+// ---------------------------------------------------------------------
+// compatibility aliases — thin spec builders over the same backends
+// ---------------------------------------------------------------------
+
+/// Spec built from the shared `simulate` flags (`--net`, `--platform`,
+/// `--minibatch`, `--no-hybrid`, topology/fleet knobs).
+fn spec_from_flags(opts: &Opts, net: &str, platform: &str, minibatch: u64) -> Result<ExperimentSpec> {
+    let mut spec = ExperimentSpec::of(
+        "cli",
+        &opts.str_or("net", net),
+        &opts.str_or("platform", platform),
+        opts.parse_or("nodes", 16u64)?,
+        opts.parse_or("minibatch", minibatch)?,
+    );
+    if opts.bool_flag("no-hybrid") {
+        spec.parallelism.mode = "data".into();
+    }
+    spec.parallelism.iterations = opts.parse_or("iterations", spec.parallelism.iterations)?;
+    spec.collective = opts.str_or("collective", "auto");
+    // validated by registry::topology when the backend runs (it also
+    // accepts the fat-tree alias and lists the inventory on a typo)
+    spec.cluster.topology = opts.str_or("topology", "switched");
+    spec.cluster.radix = opts.parse_or("radix", 8usize)?;
+    spec.cluster.oversub = opts.parse_or("oversub", 2.0f64)?;
+    spec.cluster.straggler_skew = opts.parse_or("straggler-skew", 0.0f64)?;
+    spec.cluster.hetero = opts.bool_flag("hetero");
+    spec.cluster.fail_at = opts
+        .str_opt("fail-at")
+        .map(str::parse::<usize>)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--fail-at: {e}"))?;
+    spec.cluster.fail_node = opts.parse_or("fail-node", 0usize)?;
+    spec.cluster.recovery_s = opts.parse_or("recovery", 5.0f64)?;
+    Ok(spec)
+}
+
+fn print_curve(title: &str, reports: &[ScalingReport]) {
+    println!("{title}");
+    report_table(reports);
+    println!();
+}
+
 fn simulate(opts: &Opts) -> Result<()> {
     let figure = opts.pos(1).unwrap_or("sweep");
     match figure {
         "fig4" => {
+            deprecated("simulate fig4", "run --spec specs/fig4.json --sweep-nodes 1,2,...,128");
             println!("# Fig 4 — VGG-A scaling on Cori (simulated)");
             println!("(paper: 90x @128 nodes MB=512 / 2510 img/s; 82% eff @64 nodes MB=256)\n");
-            let p = Platform::cori();
+            let nodes = [1u64, 2, 4, 8, 16, 32, 64, 128];
             for mb in [256u64, 512] {
-                let nodes = [1u64, 2, 4, 8, 16, 32, 64, 128];
-                let curve = scaling_curve(&zoo::vgg_a(), &p, mb, &nodes, true);
-                let mut t = Table::new(&["nodes", "img/s", "speedup", "efficiency"]);
-                for pt in &curve {
-                    t.row(vec![
-                        pt.nodes.to_string(),
-                        format!("{:.0}", pt.images_per_s),
-                        format!("{:.1}x", pt.speedup),
-                        format!("{:.0}%", 100.0 * pt.efficiency),
-                    ]);
-                }
-                println!("minibatch {mb}:");
-                t.print();
-                println!();
+                let mut spec = ExperimentSpec::fig4();
+                spec.minibatch = MinibatchSpec { global: mb };
+                let curve = run_sweep(&AnalyticBackend, &spec, &nodes)?;
+                print_curve(&format!("minibatch {mb}:"), &curve);
             }
             Ok(())
         }
         "fig6" => {
+            deprecated("simulate fig6", "run --spec specs/fig6_overfeat.json (and fig6_vgg.json)");
             println!("# Fig 6 — OverFeat & VGG-A on AWS EC2, MB=256 (simulated)");
             println!("(paper @16 nodes: OverFeat 1027 img/s = 11.9x; VGG-A 397 img/s = 14.2x)\n");
-            let p = Platform::aws();
             let nodes = [1u64, 2, 4, 8, 16];
-            for net in [zoo::overfeat_fast(), zoo::vgg_a()] {
-                let curve = scaling_curve(&net, &p, 256, &nodes, true);
-                let mut t = Table::new(&["nodes", "img/s", "speedup"]);
-                for pt in &curve {
-                    t.row(vec![
-                        pt.nodes.to_string(),
-                        format!("{:.0}", pt.images_per_s),
-                        format!("{:.1}x", pt.speedup),
-                    ]);
-                }
-                println!("{}:", net.name);
-                t.print();
-                println!();
+            for spec in [ExperimentSpec::fig6_overfeat(), ExperimentSpec::fig6_vgg()] {
+                let curve = run_sweep(&AnalyticBackend, &spec, &nodes)?;
+                print_curve(&format!("{}:", spec.model.name()), &curve);
             }
             Ok(())
         }
         "fig7" => {
+            deprecated("simulate fig7", "run --spec specs/fig7.json --sweep-nodes 1,2,4,8,16");
             println!("# Fig 7 — CD-DNN scaling on Endeavor, MB=1024 frames (simulated)");
             println!("(paper: 4600 f/s @1 node; ~13K @4; 29.5K @16 = 6.4x)\n");
-            let p = Platform::endeavor();
             let nodes = [1u64, 2, 4, 8, 16];
-            let curve = scaling_curve(&zoo::cddnn_full(), &p, 1024, &nodes, true);
-            let mut t = Table::new(&["nodes", "frames/s", "speedup", "efficiency"]);
-            for pt in &curve {
-                t.row(vec![
-                    pt.nodes.to_string(),
-                    format!("{:.0}", pt.images_per_s),
-                    format!("{:.1}x", pt.speedup),
-                    format!("{:.0}%", 100.0 * pt.efficiency),
-                ]);
-            }
-            t.print();
-            println!("\nablation — pure data parallelism (no hybrid FCs):");
-            let curve = scaling_curve(&zoo::cddnn_full(), &p, 1024, &nodes, false);
-            let mut t = Table::new(&["nodes", "frames/s", "speedup"]);
-            for pt in &curve {
-                t.row(vec![
-                    pt.nodes.to_string(),
-                    format!("{:.0}", pt.images_per_s),
-                    format!("{:.1}x", pt.speedup),
-                ]);
-            }
-            t.print();
+            let spec = ExperimentSpec::fig7();
+            let curve = run_sweep(&AnalyticBackend, &spec, &nodes)?;
+            print_curve("hybrid FCs (paper recipe):", &curve);
+            let mut ablation = spec.clone();
+            ablation.parallelism.mode = "data".into();
+            let curve = run_sweep(&AnalyticBackend, &ablation, &nodes)?;
+            print_curve("ablation — pure data parallelism (no hybrid FCs):", &curve);
             Ok(())
         }
         "sweep" => {
-            let net = net_by_name(&opts.str_or("net", "vgg_a"))?;
-            let platform = platform_by_name(&opts.str_or("platform", "cori"))?;
-            let minibatch = opts.parse_or("minibatch", 256u64)?;
+            deprecated("simulate sweep", "run --spec <file> --sweep-nodes 1,2,4,...");
+            let spec = spec_from_flags(opts, "vgg_a", "cori", 256)?;
             let max_nodes = opts.parse_or("nodes", 128u64)?;
-            let hybrid = !opts.bool_flag("no-hybrid");
             let mut nodes = vec![];
             let mut n = 1u64;
             while n <= max_nodes {
@@ -383,243 +463,158 @@ fn simulate(opts: &Opts) -> Result<()> {
                 n *= 2;
             }
             println!(
-                "# sweep — {} on {} ({}), MB={minibatch}, hybrid={hybrid}",
-                net.name, platform.machine.name, platform.fabric.name
+                "# sweep — {} on {}, MB={}, mode={}",
+                spec.model.name(),
+                spec.platform,
+                spec.minibatch.global,
+                spec.parallelism.mode
             );
-            let curve = scaling_curve(&net, &platform, minibatch, &nodes, hybrid);
-            let mut t = Table::new(&["nodes", "samples/s", "speedup", "efficiency", "iter ms"]);
-            for (pt, &n) in curve.iter().zip(&nodes) {
-                let r = simulate_training(
-                    &net,
-                    &platform,
-                    &SimConfig { nodes: n, minibatch, hybrid_fc: hybrid, ..Default::default() },
-                );
+            let curve = run_sweep(&AnalyticBackend, &spec, &nodes)?;
+            report_table(&curve);
+            Ok(())
+        }
+        "full" => {
+            deprecated(
+                "simulate full",
+                "run --spec <file> --backend netsim (plus --backend analytic --set congestion=0 \
+                 for the cross-check)",
+            );
+            let spec = spec_from_flags(opts, "vgg_a", "cori", 256)?;
+            println!(
+                "# full-cluster simulation — {} x{} on {}, MB={}, topology={}",
+                spec.model.name(),
+                spec.cluster.nodes,
+                spec.platform,
+                spec.minibatch.global,
+                spec.cluster.topology
+            );
+            let full = FleetSimBackend.run(&spec)?;
+            // the α-β cross-check strips congestion_per_doubling: that term
+            // is the representative model's empirical stand-in for the
+            // contention the full simulator models explicitly per link
+            let mut clean = spec.clone();
+            clean.cluster.congestion = Some(0.0);
+            let rep = AnalyticBackend.run(&clean)?;
+            report_table(&[full.clone(), rep.clone()]);
+            println!(
+                "{} simulated tasks; full vs α-β delta {:+.1}% (expect ~0 on a homogeneous \
+                 switched fabric)",
+                full.tasks,
+                100.0 * (full.iteration_s - rep.iteration_s) / rep.iteration_s
+            );
+            Ok(())
+        }
+        "stragglers" => {
+            deprecated(
+                "simulate stragglers",
+                "run --spec <file> --backend netsim --set straggler_skew=<s>",
+            );
+            let spec = spec_from_flags(opts, "vgg_a", "cori", 256)?;
+            let skews: Vec<f64> = parse_list(&opts.str_or("skews", "0,0.1,0.25,0.5,1.0"), "skews")?;
+            println!(
+                "# straggler sweep — {} x{} on {}, MB={}",
+                spec.model.name(),
+                spec.cluster.nodes,
+                spec.platform,
+                spec.minibatch.global
+            );
+            let mut t = Table::new(&["skew", "iter ms", "samples/s", "slowdown", "min util"]);
+            let mut base = 0.0;
+            for &skew in &skews {
+                let mut s = spec.clone();
+                s.cluster.straggler_skew = skew;
+                let r = FleetSimBackend.run(&s)?;
+                if base == 0.0 {
+                    base = r.iteration_s;
+                }
                 t.row(vec![
-                    pt.nodes.to_string(),
-                    format!("{:.0}", pt.images_per_s),
-                    format!("{:.1}x", pt.speedup),
-                    format!("{:.0}%", 100.0 * pt.efficiency),
-                    format!("{:.1}", r.iteration_s * 1e3),
+                    format!("{skew:.2}"),
+                    format!("{:.2}", r.iteration_s * 1e3),
+                    format!("{:.0}", r.samples_per_s),
+                    format!("{:.2}x", r.iteration_s / base),
+                    format!("{:.0}%", 100.0 * r.min_compute_utilization),
                 ]);
             }
             t.print();
             Ok(())
         }
-        "full" => simulate_full(opts),
-        "stragglers" => simulate_stragglers(opts),
-        "contention" => simulate_contention(opts),
+        "contention" => {
+            deprecated(
+                "simulate contention",
+                "run --spec <file> --backend netsim --set topology=fattree,oversub=<x>",
+            );
+            let mut spec = spec_from_flags(opts, "cddnn_full", "aws", 1024)?;
+            spec.cluster.radix =
+                opts.parse_or("radix", (spec.cluster.nodes as usize / 2).max(2))?;
+            let oversubs: Vec<f64> = parse_list(&opts.str_or("oversubs", "1,2,4,8"), "oversubs")?;
+            println!(
+                "# contention sweep — {} x{} on {}, MB={}, leaf radix {}",
+                spec.model.name(),
+                spec.cluster.nodes,
+                spec.platform,
+                spec.minibatch.global,
+                spec.cluster.radix
+            );
+            let mut flat_spec = spec.clone();
+            flat_spec.cluster.topology = "flat".into();
+            let flat = FleetSimBackend.run(&flat_spec)?;
+            let mut t = Table::new(&["core", "iter ms", "samples/s", "vs flat"]);
+            t.row(vec![
+                "flat switch".into(),
+                format!("{:.2}", flat.iteration_s * 1e3),
+                format!("{:.0}", flat.samples_per_s),
+                "1.00x".into(),
+            ]);
+            for &oversub in &oversubs {
+                let mut s = spec.clone();
+                s.cluster.topology = "fattree".into();
+                s.cluster.oversub = oversub;
+                let r = FleetSimBackend.run(&s)?;
+                t.row(vec![
+                    format!("fat-tree {oversub}:1"),
+                    format!("{:.2}", r.iteration_s * 1e3),
+                    format!("{:.0}", r.samples_per_s),
+                    format!("{:.2}x", r.iteration_s / flat.iteration_s),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
         other => bail!("unknown figure {other:?} (fig4|fig6|fig7|sweep|full|stragglers|contention)"),
     }
 }
 
-fn topology_from(opts: &Opts) -> Result<Topology> {
-    let radix = opts.parse_or("radix", 8usize)?;
-    let oversub = opts.parse_or("oversub", 2.0f64)?;
-    match opts.str_or("topology", "switched").as_str() {
-        "switched" => Ok(Topology::FullySwitched),
-        "flat" => Ok(Topology::FlatSwitch),
-        "fattree" | "fat-tree" => Ok(Topology::FatTree { radix, oversub }),
-        other => bail!("unknown topology {other:?} (switched|flat|fattree)"),
-    }
-}
-
-fn fleet_from(opts: &Opts, nodes: usize) -> Result<FleetConfig> {
-    Ok(FleetConfig {
-        nodes,
-        topology: topology_from(opts)?,
-        straggler_skew: opts.parse_or("straggler-skew", 0.0f64)?,
-        hetero: opts.bool_flag("hetero"),
-        fail_at: opts
-            .str_opt("fail-at")
-            .map(str::parse::<usize>)
-            .transpose()
-            .map_err(|e| anyhow::anyhow!("--fail-at: {e}"))?,
-        fail_node: opts.parse_or("fail-node", 0usize)?,
-        recovery_s: opts.parse_or("recovery", 5.0f64)?,
-    })
-}
-
-fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> Result<Vec<T>> {
-    s.split(',')
-        .filter(|p| !p.is_empty())
-        .map(|p| p.trim().parse::<T>().map_err(|_| anyhow::anyhow!("--{flag}: bad entry {p:?}")))
-        .collect()
-}
-
-/// One full-cluster simulation with an analytic cross-check.
-fn simulate_full(opts: &Opts) -> Result<()> {
-    let net = net_by_name(&opts.str_or("net", "vgg_a"))?;
-    let platform = platform_by_name(&opts.str_or("platform", "cori"))?;
-    let nodes = opts.parse_or("nodes", 16u64)?;
-    let minibatch = opts.parse_or("minibatch", 256u64)?;
-    let cfg = SimConfig {
-        nodes,
-        minibatch,
-        hybrid_fc: !opts.bool_flag("no-hybrid"),
-        iterations: opts.parse_or("iterations", 4usize)?,
-        ..Default::default()
-    };
-    let fleet = fleet_from(opts, nodes as usize)?;
-    println!(
-        "# full-cluster simulation — {} x{nodes} on {} ({}), MB={minibatch}, topology={}",
-        net.name,
-        platform.machine.name,
-        platform.fabric.name,
-        fleet.topology.tag()
-    );
-    let full = simulate_training_fleet(&net, &platform, &cfg, &fleet);
-    // the α-β cross-check strips congestion_per_doubling: that term is the
-    // representative model's empirical stand-in for the contention the
-    // full simulator models explicitly per link
-    let mut stripped = platform.clone();
-    stripped.fabric.congestion_per_doubling = 0.0;
-    let rep = simulate_training(&net, &stripped, &cfg);
-    let mut t = Table::new(&["", "iter ms", "samples/s", "mean util", "min util"]);
-    t.row(vec![
-        "full-cluster".into(),
-        format!("{:.2}", full.iteration_s * 1e3),
-        format!("{:.0}", full.images_per_s),
-        format!("{:.0}%", 100.0 * full.mean_compute_utilization),
-        format!("{:.0}%", 100.0 * full.min_compute_utilization),
-    ]);
-    t.row(vec![
-        "analytic, no congestion term".into(),
-        format!("{:.2}", rep.iteration_s * 1e3),
-        format!("{:.0}", rep.images_per_s),
-        format!("{:.0}%", 100.0 * rep.compute_utilization),
-        "-".into(),
-    ]);
-    t.print();
-    println!(
-        "{} simulated tasks; full vs α-β delta {:+.1}% (expect ~0 on a homogeneous switched fabric)",
-        full.tasks,
-        100.0 * (full.iteration_s - rep.iteration_s) / rep.iteration_s
-    );
-    Ok(())
-}
-
-/// Straggler-skew sweep: the scenario a representative-node model cannot
-/// express — synchronous SGD at the slowest node's pace.
-fn simulate_stragglers(opts: &Opts) -> Result<()> {
-    let net = net_by_name(&opts.str_or("net", "vgg_a"))?;
-    let platform = platform_by_name(&opts.str_or("platform", "cori"))?;
-    let nodes = opts.parse_or("nodes", 16u64)?;
-    let minibatch = opts.parse_or("minibatch", 256u64)?;
-    let skews: Vec<f64> = parse_list(&opts.str_or("skews", "0,0.1,0.25,0.5,1.0"), "skews")?;
-    let cfg = SimConfig {
-        nodes,
-        minibatch,
-        hybrid_fc: !opts.bool_flag("no-hybrid"),
-        ..Default::default()
-    };
-    println!(
-        "# straggler sweep — {} x{nodes} on {} ({}), MB={minibatch}",
-        net.name, platform.machine.name, platform.fabric.name
-    );
-    let mut t = Table::new(&["skew", "iter ms", "samples/s", "slowdown", "min util"]);
-    let mut base = 0.0;
-    for &skew in &skews {
-        let fleet = FleetConfig {
-            nodes: nodes as usize,
-            topology: topology_from(opts)?,
-            straggler_skew: skew,
-            hetero: opts.bool_flag("hetero"),
-            ..Default::default()
-        };
-        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
-        if base == 0.0 {
-            base = r.iteration_s;
-        }
-        t.row(vec![
-            format!("{skew:.2}"),
-            format!("{:.2}", r.iteration_s * 1e3),
-            format!("{:.0}", r.images_per_s),
-            format!("{:.2}x", r.iteration_s / base),
-            format!("{:.0}%", 100.0 * r.min_compute_utilization),
-        ]);
-    }
-    t.print();
-    Ok(())
-}
-
-/// Oversubscribed-core contention sweep on a fat-tree fabric.
-fn simulate_contention(opts: &Opts) -> Result<()> {
-    let net = net_by_name(&opts.str_or("net", "cddnn_full"))?;
-    let platform = platform_by_name(&opts.str_or("platform", "aws"))?;
-    let nodes = opts.parse_or("nodes", 16u64)?;
-    let minibatch = opts.parse_or("minibatch", 1024u64)?;
-    let radix = opts.parse_or("radix", (nodes as usize / 2).max(2))?;
-    let oversubs: Vec<f64> = parse_list(&opts.str_or("oversubs", "1,2,4,8"), "oversubs")?;
-    let cfg = SimConfig {
-        nodes,
-        minibatch,
-        hybrid_fc: !opts.bool_flag("no-hybrid"),
-        ..Default::default()
-    };
-    println!(
-        "# contention sweep — {} x{nodes} on {} ({}), MB={minibatch}, leaf radix {radix}",
-        net.name, platform.machine.name, platform.fabric.name
-    );
-    let flat = simulate_training_fleet(
-        &net,
-        &platform,
-        &cfg,
-        &FleetConfig {
-            nodes: nodes as usize,
-            topology: Topology::FlatSwitch,
-            ..Default::default()
-        },
-    );
-    let mut t = Table::new(&["core", "iter ms", "samples/s", "vs flat"]);
-    t.row(vec![
-        "flat switch".into(),
-        format!("{:.2}", flat.iteration_s * 1e3),
-        format!("{:.0}", flat.images_per_s),
-        "1.00x".into(),
-    ]);
-    for &oversub in &oversubs {
-        let fleet = FleetConfig {
-            nodes: nodes as usize,
-            topology: Topology::FatTree { radix, oversub },
-            ..Default::default()
-        };
-        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
-        t.row(vec![
-            format!("fat-tree {oversub}:1"),
-            format!("{:.2}", r.iteration_s * 1e3),
-            format!("{:.0}", r.images_per_s),
-            format!("{:.2}x", r.iteration_s / flat.iteration_s),
-        ]);
-    }
-    t.print();
-    Ok(())
-}
-
 fn train(opts: &Opts) -> Result<()> {
-    let dir = opts.str_or(
-        "artifacts",
-        pcl_dnn::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
+    deprecated(
+        "train",
+        "run --spec <file> --backend runtime (execution.{workers,steps,lr,...} in the spec)",
     );
-    let mut rt = Runtime::new(&dir)?;
-    let cfg = TrainConfig {
-        model: opts.str_or("model", "vgg_tiny"),
-        workers: opts.parse_or("workers", 1usize)?,
-        global_mb: opts.parse_or("minibatch", 16usize)?,
-        steps: opts.parse_or("steps", 50u64)?,
-        lr: opts.parse_or("lr", 0.01f32)?,
-        momentum: opts.parse_or("momentum", 0.0f32)?,
-        seed: opts.parse_or("seed", 0u64)?,
-        log_every: opts.parse_or("log-every", 10u64)?,
-        eval_every: opts.parse_or("eval-every", 0u64)?,
-        optimizer: opts.str_or("optimizer", "sgd"),
+    let spec = ExperimentSpec {
+        name: "train".into(),
+        model: ModelSpec::Zoo(opts.str_or("model", "vgg_tiny")),
+        minibatch: MinibatchSpec { global: opts.parse_or("minibatch", 16u64)? },
+        execution: ExecutionSpec {
+            model: None,
+            workers: Some(opts.parse_or("workers", 1usize)?),
+            steps: opts.parse_or("steps", 50u64)?,
+            lr: opts.parse_or("lr", 0.01f64)?,
+            momentum: opts.parse_or("momentum", 0.0f64)?,
+            seed: opts.parse_or("seed", 0u64)?,
+            log_every: opts.parse_or("log-every", 10u64)?,
+            eval_every: opts.parse_or("eval-every", 0u64)?,
+            optimizer: opts.str_or("optimizer", "sgd"),
+            artifacts: default_artifacts(opts),
+        },
+        ..Default::default()
     };
-    let outcome = trainer::train(&mut rt, &cfg)?;
+    let (report, outcome) = run_runtime(&spec)?;
     println!(
         "done: {} steps, final loss {:.4}, mean {:.1} samples/s",
-        cfg.steps,
+        spec.execution.steps,
         outcome.history.final_loss().unwrap_or(f64::NAN),
         outcome.history.mean_throughput()
     );
+    report_table(&[report]);
     if let Some(path) = opts.str_opt("csv") {
         outcome.history.save_csv(path)?;
         println!("loss curve written to {path}");
@@ -628,10 +623,7 @@ fn train(opts: &Opts) -> Result<()> {
 }
 
 fn score(opts: &Opts) -> Result<()> {
-    let dir = opts.str_or(
-        "artifacts",
-        pcl_dnn::runtime::default_artifacts_dir().to_str().unwrap_or("artifacts"),
-    );
+    let dir = default_artifacts(opts);
     let mut rt = Runtime::new(&dir)?;
     let model = opts.str_or("model", "vgg_tiny");
     let batches = opts.parse_or("batches", 20u64)?;

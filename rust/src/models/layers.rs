@@ -132,7 +132,7 @@ impl Layer {
 }
 
 /// A full network topology (ordered input -> output).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetDescriptor {
     pub name: String,
     pub layers: Vec<Layer>,

@@ -56,11 +56,23 @@ pub struct SimConfig {
     /// Per-layer strategy selection: `true` = paper recipe (hybrid FCs),
     /// `false` = pure data parallelism everywhere (the ablation).
     pub hybrid_fc: bool,
+    /// Collective-algorithm policy (`Auto` = cheaper of ring/butterfly
+    /// per exchange, the tuned-library behavior; `Ring`/`Butterfly` pin
+    /// it for ablations). Applied consistently to the α-β cost models and
+    /// the per-message schedule builders.
+    pub collective: collective::Choice,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { nodes: 1, minibatch: 256, overlap: 1.0, iterations: 4, hybrid_fc: true }
+        SimConfig {
+            nodes: 1,
+            minibatch: 256,
+            overlap: 1.0,
+            iterations: 4,
+            hybrid_fc: true,
+            collective: collective::Choice::Auto,
+        }
     }
 }
 
@@ -107,13 +119,13 @@ fn grad_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
     }
     match strategy_for(layer, cfg) {
         Strategy::Data => {
-            collective::gradient_exchange_s(fabric, layer.weight_bytes(), n)
+            cfg.collective.gradient_exchange_s(fabric, layer.weight_bytes(), n)
         }
         Strategy::Model => 0.0, // weights stay put; activations move instead
         Strategy::Hybrid { groups } => {
             // data-parallel exchange of the 1/G weight shard across groups
             let shard = layer.weight_bytes() / (n / groups).max(1);
-            collective::gradient_exchange_s(fabric, shard, groups)
+            cfg.collective.gradient_exchange_s(fabric, shard, groups)
         }
     }
 }
@@ -125,13 +137,13 @@ fn act_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
         Strategy::Data => 0.0,
         Strategy::Model => {
             let bytes = 4 * layer.in_elems() * cfg.minibatch;
-            collective::allgather_s(fabric, bytes, cfg.nodes)
+            cfg.collective.allgather_s(fabric, bytes, cfg.nodes)
         }
         Strategy::Hybrid { groups } => {
             let group_nodes = (cfg.nodes / groups).max(1);
             let mb_group = cfg.minibatch / groups;
             let bytes = 4 * layer.in_elems() * mb_group;
-            collective::allgather_s(fabric, bytes, group_nodes)
+            cfg.collective.allgather_s(fabric, bytes, group_nodes)
         }
     }
 }
@@ -297,6 +309,7 @@ fn run_collective(
     eng: &mut Engine,
     fleet: &Fleet,
     fabric: &FabricSpec,
+    choice: collective::Choice,
     last_comm: &mut [Vec<TaskId>],
     label: &str,
     members: &[usize],
@@ -304,7 +317,7 @@ fn run_collective(
     gates: &[Vec<TaskId>],
     kind: CollectiveKind,
 ) -> Vec<TaskId> {
-    let algo = collective::preferred_algorithm(fabric, bytes, members.len() as u64);
+    let algo = choice.algorithm(fabric, bytes, members.len() as u64);
     let comm: Vec<usize> = members.iter().map(|&v| fleet.comm_res(v)).collect();
     let deps: Vec<Vec<TaskId>> = members
         .iter()
@@ -336,6 +349,7 @@ fn exchange_update(
     eng: &mut Engine,
     fleet: &Fleet,
     fabric: &FabricSpec,
+    choice: collective::Choice,
     last_comm: &mut [Vec<TaskId>],
     label: &str,
     members: &[usize],
@@ -345,7 +359,7 @@ fn exchange_update(
 ) -> Vec<TaskId> {
     let gates: Vec<Vec<TaskId>> = wg.iter().map(|&g| vec![g]).collect();
     let rs = run_collective(
-        eng, fleet, fabric, last_comm, label, members, bytes, &gates,
+        eng, fleet, fabric, choice, last_comm, label, members, bytes, &gates,
         CollectiveKind::ReduceScatter,
     );
     let sgd: Vec<TaskId> = members
@@ -366,7 +380,7 @@ fn exchange_update(
         .collect();
     let ag_gates: Vec<Vec<TaskId>> = sgd.iter().map(|&s| vec![s]).collect();
     run_collective(
-        eng, fleet, fabric, last_comm, label, members, bytes, &ag_gates,
+        eng, fleet, fabric, choice, last_comm, label, members, bytes, &ag_gates,
         CollectiveKind::Allgather,
     )
 }
@@ -451,7 +465,7 @@ pub fn simulate_training_fleet(
                 Strategy::Model if n > 1 => {
                     let bytes = 4 * l.in_elems() * cfg.minibatch;
                     let done = run_collective(
-                        &mut eng, &fleet, fabric, &mut last_comm,
+                        &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
                         &format!("i{it}.af{i}"), &all_nodes, bytes, &gates,
                         CollectiveKind::Allgather,
                     );
@@ -466,7 +480,7 @@ pub fn simulate_training_fleet(
                         let ggates: Vec<Vec<TaskId>> =
                             members.iter().map(|&v| gates[v].clone()).collect();
                         let done = run_collective(
-                            &mut eng, &fleet, fabric, &mut last_comm,
+                            &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
                             &format!("i{it}.af{i}.g{g}"), &members, bytes, &ggates,
                             CollectiveKind::Allgather,
                         );
@@ -518,7 +532,7 @@ pub fn simulate_training_fleet(
             let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
             let updates: Vec<TaskId> = match strat {
                 Strategy::Data if n > 1 => exchange_update(
-                    &mut eng, &fleet, fabric, &mut last_comm,
+                    &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
                     &format!("i{it}.x{i}"), &all_nodes, l.weight_bytes(), &wg, sgd_s,
                 ),
                 Strategy::Hybrid { groups } if n > 1 => {
@@ -531,7 +545,7 @@ pub fn simulate_training_fleet(
                         let members = topo.replica_set(r);
                         let mwg: Vec<TaskId> = members.iter().map(|&v| wg[v]).collect();
                         let done = exchange_update(
-                            &mut eng, &fleet, fabric, &mut last_comm,
+                            &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
                             &format!("i{it}.x{i}.r{r}"), &members, shard, &mwg, sgd_s,
                         );
                         for (j, &v) in members.iter().enumerate() {
@@ -581,7 +595,7 @@ pub fn simulate_training_fleet(
                         let bytes = 4 * l.in_elems() * cfg.minibatch;
                         let bgates: Vec<Vec<TaskId>> = bp.iter().map(|&b| vec![b]).collect();
                         run_collective(
-                            &mut eng, &fleet, fabric, &mut last_comm,
+                            &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
                             &format!("i{it}.ab{i}"), &all_nodes, bytes, &bgates,
                             CollectiveKind::Allgather,
                         )
@@ -595,7 +609,7 @@ pub fn simulate_training_fleet(
                             let bgates: Vec<Vec<TaskId>> =
                                 members.iter().map(|&v| vec![bp[v]]).collect();
                             let done = run_collective(
-                                &mut eng, &fleet, fabric, &mut last_comm,
+                                &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
                                 &format!("i{it}.ab{i}.g{g}"), &members, bytes, &bgates,
                                 CollectiveKind::Allgather,
                             );

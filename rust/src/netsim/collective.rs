@@ -93,6 +93,58 @@ pub fn gradient_exchange_s(fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
     reduce_scatter_s(fabric, bytes, n) + allgather_s(fabric, bytes, n)
 }
 
+/// Collective-algorithm selection policy, settable per experiment
+/// (`ExperimentSpec.collective`). `Auto` is what a tuned library does —
+/// the cheaper algorithm per (bytes, group) point; `Ring`/`Butterfly`
+/// pin the algorithm for ablations. Both the α-β cost models and the
+/// per-message schedule builders honor the same policy, so the analytic
+/// and full-cluster backends stay comparable under any setting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Choice {
+    #[default]
+    Auto,
+    Ring,
+    Butterfly,
+}
+
+impl Choice {
+    pub fn reduce_scatter_s(self, fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+        // priced as what the schedule builder actually runs (including
+        // the ring fallback for non-power-of-two groups), so the α-β
+        // backend and the per-message backend agree under every policy
+        match self.algorithm(fabric, bytes, n) {
+            Algorithm::Ring => ring_reduce_scatter_s(fabric, bytes, n),
+            Algorithm::Butterfly => butterfly_reduce_scatter_s(fabric, bytes, n),
+        }
+    }
+
+    pub fn allgather_s(self, fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+        // every algorithm's allgather mirrors its reduce-scatter cost
+        self.reduce_scatter_s(fabric, bytes, n)
+    }
+
+    pub fn gradient_exchange_s(self, fabric: &FabricSpec, bytes: u64, n: u64) -> f64 {
+        self.reduce_scatter_s(fabric, bytes, n) + self.allgather_s(fabric, bytes, n)
+    }
+
+    /// Schedule-builder algorithm for this policy. Butterfly schedules
+    /// only exist for power-of-two groups; like a tuned library, a
+    /// pinned butterfly falls back to ring elsewhere.
+    pub fn algorithm(self, fabric: &FabricSpec, bytes: u64, n: u64) -> Algorithm {
+        match self {
+            Choice::Auto => preferred_algorithm(fabric, bytes, n),
+            Choice::Ring => Algorithm::Ring,
+            Choice::Butterfly => {
+                if n.is_power_of_two() {
+                    Algorithm::Butterfly
+                } else {
+                    Algorithm::Ring
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Schedule builders: the same algorithms as per-message task DAGs.
 // ---------------------------------------------------------------------

@@ -31,6 +31,7 @@ pub use cluster::{
     simulate_training, simulate_training_fleet, FleetSimResult, ScalingPoint, SimConfig,
     SimResult,
 };
+pub use collective::Choice;
 pub use engine::{Engine, Schedule, Task, TaskId};
 pub use fleet::{Fleet, FleetConfig};
 pub use network::{Network, Topology};

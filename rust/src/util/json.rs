@@ -1,5 +1,13 @@
-//! Minimal JSON codec — enough for `artifacts/manifest.json` and the
-//! experiment result files. Recursive-descent parser, no external deps.
+//! Minimal JSON codec — enough for `artifacts/manifest.json`, the
+//! `ExperimentSpec` files under `specs/`, and the `BENCH_*.json` result
+//! files. Recursive-descent parser, no external deps.
+//!
+//! Emission guarantees (what `BENCH_*.json` consumers rely on):
+//! * control characters in strings are `\u`-escaped;
+//! * non-finite floats (NaN/±inf) serialize as `null` — `{}` formatting
+//!   of `f64` would otherwise emit invalid JSON;
+//! * object keys are sorted (BTreeMap), so serialization is stable and
+//!   reports can be compared bit-for-bit.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -58,12 +66,23 @@ impl Json {
         }
     }
 
-    pub fn as_usize(&self) -> Result<usize> {
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
             bail!("not a non-negative integer: {n}");
         }
-        Ok(n as usize)
+        Ok(n as u64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
     }
 
     pub fn as_arr(&self) -> Result<&[Json]> {
@@ -83,6 +102,49 @@ impl Json {
     /// `[1,2,3]` -> `vec![1,2,3]` (for shape lists).
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    /// Human-readable serialization (2-space indent) for committed files
+    /// such as the `specs/` directory. Parses back to the same value.
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        self.pretty_into(&mut s, 0);
+        s
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(depth + 1));
+                    x.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(depth + 1));
+                    out.push_str(&format!("{}: ", Json::Str(k.clone())));
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push('}');
+            }
+            other => out.push_str(&other.to_string()),
+        }
     }
 }
 
@@ -245,7 +307,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // NaN/±inf have no JSON representation; `null` keeps
+                    // the emitted report parseable (readers map it back
+                    // to NaN — see experiment::report).
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -339,6 +406,40 @@ mod tests {
         let j = Json::parse(text).unwrap();
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_finite_floats_emit_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(bad).to_string();
+            assert_eq!(s, "null", "{bad} -> {s}");
+            // the emitted document must stay parseable
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("eff".to_string(), Json::Num(f64::NAN));
+        m.insert("ok".to_string(), Json::Num(1.5));
+        let doc = Json::Obj(m).to_string();
+        assert_eq!(doc, r#"{"eff":null,"ok":1.5}"#);
+        assert!(Json::parse(&doc).is_ok());
+    }
+
+    #[test]
+    fn control_characters_escape_and_roundtrip() {
+        let s = Json::Str("a\u{1}b\u{7}c\u{1f}\n\t".into());
+        let enc = s.to_string();
+        assert!(enc.contains("\\u0001") && enc.contains("\\u0007") && enc.contains("\\u001f"));
+        // no raw control byte may reach the wire
+        assert!(enc.chars().all(|c| c as u32 >= 0x20));
+        assert_eq!(Json::parse(&enc).unwrap(), s);
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let j = Json::parse(r#"{"a":[1,{"b":"x"},null],"c":{},"d":[]}"#).unwrap();
+        let p = j.pretty();
+        assert!(p.contains("\n  \"a\": ["));
+        assert_eq!(Json::parse(&p).unwrap(), j);
     }
 
     #[test]

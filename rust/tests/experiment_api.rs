@@ -1,0 +1,175 @@
+//! Contract tests for the unified ExperimentSpec API:
+//!
+//! * the committed `specs/*.json` files equal the canonical in-code
+//!   builders (so CLI aliases, benches and docs can never drift from
+//!   the committed figures);
+//! * running a spec parsed from disk produces a report bit-identical to
+//!   running the builder spec — the deprecated CLI aliases call the
+//!   builders and `repro run --spec` parses the files, so this IS the
+//!   alias-equivalence guarantee;
+//! * the serialized `ScalingReport` key set matches the pinned
+//!   `specs/report_schema.txt` (CI schema-drift gate, testable offline);
+//! * one spec runs on multiple backends via `Backend::run`.
+
+use pcl_dnn::experiment::{
+    backend_by_name, report::SCHEMA_KEYS, run_sweep, AnalyticBackend, Backend, ExperimentSpec,
+    FleetSimBackend, ScalingReport,
+};
+use pcl_dnn::util::json::Json;
+
+fn spec_path(file: &str) -> String {
+    format!("{}/specs/{file}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn committed_specs_match_canonical_builders() {
+    for (file, builder) in [
+        ("fig4.json", ExperimentSpec::fig4()),
+        ("fig6_overfeat.json", ExperimentSpec::fig6_overfeat()),
+        ("fig6_vgg.json", ExperimentSpec::fig6_vgg()),
+        ("fig7.json", ExperimentSpec::fig7()),
+    ] {
+        let from_file = ExperimentSpec::load(&spec_path(file)).unwrap();
+        assert_eq!(from_file, builder, "specs/{file} drifted from ExperimentSpec builder");
+    }
+}
+
+#[test]
+fn cli_spec_run_is_bit_identical_to_the_alias_path() {
+    // The deprecated aliases (`repro simulate fig7`) run the canonical
+    // builders through Backend::run — exactly what this library call
+    // does. The spec form is the REAL binary: `repro run --spec
+    // specs/fig7.json --json`. Exec it and compare report bytes, so a
+    // drifted hand-built spec anywhere in main.rs fails this test.
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = std::process::Command::new(exe)
+        .args(["run", "--spec", &spec_path("fig7.json"), "--backend", "analytic", "--json"])
+        .output()
+        .expect("repro binary executes");
+    assert!(
+        out.status.success(),
+        "repro run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let json_line = stdout
+        .lines()
+        .rev()
+        .find(|l| l.starts_with('['))
+        .expect("no JSON array line in CLI output");
+    let alias_report = AnalyticBackend.run(&ExperimentSpec::fig7()).unwrap();
+    assert_eq!(json_line, Json::Arr(vec![alias_report.to_json()]).to_string());
+}
+
+#[test]
+fn committed_report_schema_matches_code() {
+    let pinned = std::fs::read_to_string(spec_path("report_schema.txt")).unwrap();
+    let pinned: Vec<&str> = pinned.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(
+        pinned, SCHEMA_KEYS,
+        "specs/report_schema.txt drifted from ScalingReport::SCHEMA_KEYS"
+    );
+}
+
+#[test]
+fn every_committed_spec_runs_on_the_analytic_backend() {
+    // offline mirror of the CI `specs` job
+    for file in ["fig4.json", "fig6_overfeat.json", "fig6_vgg.json", "fig7.json"] {
+        let spec = ExperimentSpec::load(&spec_path(file)).unwrap();
+        let report = AnalyticBackend.run(&spec).unwrap();
+        let round = Json::parse(&report.to_json().to_string()).unwrap();
+        ScalingReport::check_schema(&round).unwrap();
+        let back = ScalingReport::from_json(&round).unwrap();
+        assert_eq!(back.to_json().to_string(), report.to_json().to_string());
+        assert!(report.samples_per_s > 0.0, "{file}");
+    }
+}
+
+#[test]
+fn one_spec_runs_on_analytic_and_netsim_backends() {
+    // the acceptance shape: the SAME spec value through Backend::run on
+    // different substrates, reports in the shared schema
+    let mut spec = ExperimentSpec::load(&spec_path("fig4.json")).unwrap();
+    spec.cluster.nodes = 8; // keep the per-message simulation test-sized
+    spec.parallelism.iterations = 3;
+    for name in ["analytic", "netsim"] {
+        let r = backend_by_name(name).unwrap().run(&spec).unwrap();
+        assert_eq!(r.backend, name);
+        assert_eq!(r.nodes, 8);
+        assert_eq!(r.minibatch, 512);
+        assert_eq!(r.model, "vgg_a");
+        ScalingReport::check_schema(&r.to_json()).unwrap();
+    }
+    // the runtime backend accepts the same spec; without AOT artifacts
+    // (vendored xla stub) it must fail cleanly, not panic
+    if let Err(e) = backend_by_name("runtime").unwrap().run(&spec) {
+        let msg = format!("{e:#}");
+        assert!(msg.contains("artifacts"), "unhelpful runtime error: {msg}");
+    }
+}
+
+#[test]
+fn collective_choice_is_honored_across_backends() {
+    // pinning ring vs butterfly changes the schedule; `auto` must be no
+    // slower than the better pinned choice (it picks per exchange)
+    let mut spec = ExperimentSpec::fig6_overfeat();
+    spec.cluster.nodes = 8;
+    spec.parallelism.iterations = 3;
+    let mut iters = std::collections::BTreeMap::new();
+    for choice in ["auto", "ring", "butterfly"] {
+        let mut s = spec.clone();
+        s.collective = choice.into();
+        iters.insert(choice, AnalyticBackend.run(&s).unwrap().iteration_s);
+    }
+    // 2% slack: auto shortens every comm task vs any pinned choice, but
+    // a DAG makespan is not strictly monotone under greedy scheduling
+    let best_pinned = iters["ring"].min(iters["butterfly"]);
+    assert!(
+        iters["auto"] <= best_pinned * 1.02,
+        "auto {} vs best pinned {best_pinned}",
+        iters["auto"]
+    );
+    // and the fleet backend accepts pinned algorithms too
+    let mut s = spec.clone();
+    s.collective = "ring".into();
+    let ring = FleetSimBackend.run(&s).unwrap();
+    s.collective = "butterfly".into();
+    let bfly = FleetSimBackend.run(&s).unwrap();
+    assert!(ring.tasks != bfly.tasks, "pinned algorithms built identical schedules");
+}
+
+#[test]
+fn sweep_over_committed_fig6_reproduces_paper_ordering() {
+    // Fig 6's claim: VGG-A out-scales OverFeat on Ethernet
+    let of = run_sweep(
+        &AnalyticBackend,
+        &ExperimentSpec::load(&spec_path("fig6_overfeat.json")).unwrap(),
+        &[16],
+    )
+    .unwrap();
+    let vg = run_sweep(
+        &AnalyticBackend,
+        &ExperimentSpec::load(&spec_path("fig6_vgg.json")).unwrap(),
+        &[16],
+    )
+    .unwrap();
+    assert!(vg[0].speedup.unwrap() > of[0].speedup.unwrap());
+}
+
+/// Full acceptance run: `specs/fig4.json` UNCHANGED (128 nodes) on all
+/// three backends. The netsim point expands to >1M message tasks, so
+/// this is `#[ignore]`d from the default suite; run with
+/// `cargo test --release -- --ignored` to execute it.
+#[test]
+#[ignore = "minutes-long full-size netsim run; capability covered at n=8 above"]
+fn fig4_spec_runs_unchanged_on_all_three_backends() {
+    let spec = ExperimentSpec::load(&spec_path("fig4.json")).unwrap();
+    let a = AnalyticBackend.run(&spec).unwrap();
+    assert!(a.speedup.unwrap() > 60.0);
+    let f = FleetSimBackend.run(&spec).unwrap();
+    assert!(f.samples_per_s > 0.0);
+    match backend_by_name("runtime").unwrap().run(&spec) {
+        Ok(r) => assert!(r.samples_per_s > 0.0),
+        Err(e) => assert!(format!("{e:#}").contains("artifacts")),
+    }
+}

@@ -243,3 +243,40 @@ fn fleet_tasks_scale_with_cluster_size() {
     let big = mk(8);
     assert!(big.tasks > 4 * small.tasks, "{} vs {}", big.tasks, small.tasks);
 }
+
+#[test]
+fn cross_backend_consistency_all_models() {
+    // The spec-API form of the validation invariant, extended from the
+    // one wired VGG case to every full-size paper network: on a clean
+    // (congestion override 0) homogeneous fully-switched fabric, the
+    // analytic and netsim backends must report efficiencies within 5%
+    // of each other for the SAME ExperimentSpec at n in {8, 32} — the
+    // paper's own model-vs-measurement methodology, §5-6.
+    use pcl_dnn::experiment::{AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend};
+
+    for (model, platform, mb) in [
+        ("vgg_a", "cori", 256u64),
+        ("overfeat_fast", "aws", 256),
+        ("cddnn_full", "endeavor", 1024),
+    ] {
+        for nodes in [8u64, 32] {
+            let mut spec =
+                ExperimentSpec::of(&format!("xcheck_{model}_{nodes}"), model, platform, nodes, mb);
+            spec.cluster.congestion = Some(0.0);
+            spec.parallelism.iterations = 3;
+            let a = AnalyticBackend.run(&spec).unwrap();
+            let f = FleetSimBackend.run(&spec).unwrap();
+            let (ea, ef) = (a.efficiency.unwrap(), f.efficiency.unwrap());
+            let rel = (ea - ef).abs() / ea.max(1e-9);
+            assert!(
+                rel < 0.05,
+                "{model} x{nodes}: analytic eff {ea:.4} vs netsim eff {ef:.4} ({:.1}% apart; \
+                 iter {} vs {})",
+                100.0 * rel,
+                a.iteration_s,
+                f.iteration_s
+            );
+            assert!(f.tasks > 0 && a.tasks == 0);
+        }
+    }
+}
