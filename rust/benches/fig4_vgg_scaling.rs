@@ -5,9 +5,11 @@
 use std::time::Duration;
 
 use pcl_dnn::experiment::{
-    curve_table, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
+    curve_table, registry, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
     MinibatchSpec,
 };
+use pcl_dnn::netsim::collective::Choice;
+use pcl_dnn::plan::planner;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -48,4 +50,15 @@ fn main() {
         100.0 * (full.iteration_s - rep.iteration_s) / rep.iteration_s,
         full.tasks
     );
+
+    // cross-PR bench trajectory: planner-chosen vs fixed-recipe vs
+    // pure-data efficiency per node count
+    let net = registry::model("vgg_a").unwrap();
+    let platform = registry::platform("cori").unwrap();
+    let rows = [8u64, 16, 32, 64, 128]
+        .iter()
+        .map(|&n| planner::bench_row(&net, &platform, 512, n, Choice::Auto, 3))
+        .collect();
+    planner::merge_bench_plan("BENCH_plan.json", "fig4_vgg_a", rows).unwrap();
+    println!("\nwrote BENCH_plan.json (fig4_vgg_a: auto vs fixed vs data efficiency)");
 }

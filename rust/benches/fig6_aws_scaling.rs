@@ -6,9 +6,11 @@
 use std::time::Duration;
 
 use pcl_dnn::experiment::{
-    curve_table, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
+    curve_table, registry, run_sweep, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
 };
 use pcl_dnn::metrics::Table;
+use pcl_dnn::netsim::collective::Choice;
+use pcl_dnn::plan::planner;
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -67,4 +69,16 @@ fn main() {
         ]);
     }
     t.print();
+
+    // cross-PR bench trajectory: planner vs fixed recipe vs pure data
+    let platform = registry::platform("aws").unwrap();
+    for (key, model) in [("fig6_overfeat", "overfeat_fast"), ("fig6_vgg", "vgg_a")] {
+        let net = registry::model(model).unwrap();
+        let rows = [2u64, 4, 8, 16]
+            .iter()
+            .map(|&n| planner::bench_row(&net, &platform, 256, n, Choice::Auto, 3))
+            .collect();
+        planner::merge_bench_plan("BENCH_plan.json", key, rows).unwrap();
+    }
+    println!("\nwrote BENCH_plan.json (fig6_overfeat + fig6_vgg)");
 }

@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::collectives::{shard_range, GroupTopology};
 use crate::runtime::{HostTensor, Runtime};
 
 use super::comm_thread::{CommHandle, CommOp, CommRequest};
@@ -29,12 +30,19 @@ pub struct StepStats {
     pub comm_wait_s: f64,
     pub update_s: f64,
     pub executions: u64,
+    /// tensors exchanged via a PartitionPlan shard-owner topology
+    /// (model/hybrid layer groups) instead of the plain allreduce
+    pub plan_sharded: u64,
 }
 
 /// Leader + worker pool + comm thread for one model.
 pub struct SyncSgdCoordinator {
     pub params: ParamStore,
     pub plan: MicrobatchPlan,
+    /// Per-tensor exchange topology from the `PartitionPlan`: `None` =
+    /// plain allreduce on the comm thread; `Some` = the plan's
+    /// model/hybrid group shape, executed as a shard-owner exchange.
+    tensor_topos: Vec<Option<GroupTopology>>,
     comm: CommHandle,
     artifact: String,
 }
@@ -47,10 +55,24 @@ impl SyncSgdCoordinator {
         plan: MicrobatchPlan,
         sgd: SgdConfig,
     ) -> Self {
+        Self::with_plan(artifact, params, plan, sgd, Vec::new())
+    }
+
+    /// [`SyncSgdCoordinator::new`] plus a per-tensor exchange topology
+    /// (index-aligned with `params`; missing/`None` entries use the
+    /// plain allreduce path).
+    pub fn with_plan(
+        artifact: &str,
+        params: Vec<Vec<f32>>,
+        plan: MicrobatchPlan,
+        sgd: SgdConfig,
+        tensor_topos: Vec<Option<GroupTopology>>,
+    ) -> Self {
         let depth = (params.len() * 2).next_power_of_two();
         SyncSgdCoordinator {
             params: ParamStore::new(params, sgd),
             plan,
+            tensor_topos,
             comm: CommHandle::spawn(depth),
             artifact: artifact.to_string(),
         }
@@ -118,8 +140,33 @@ impl SyncSgdCoordinator {
         let mut update_s = 0.0f64;
         // move out per-tensor: iterate tensors, stealing each worker's buf
         for t in 0..n_tensors {
-            let bufs: Vec<Vec<f32>> =
+            let mut bufs: Vec<Vec<f32>> =
                 grads.iter_mut().map(|per_w| std::mem::take(&mut per_w[t])).collect();
+            // §3.3 shard-owner exchange for model/hybrid-assigned tensors,
+            // inline over the shared-memory buffers: in-group rank r owns
+            // shard r — its replica-set row reduces the shard, then the
+            // group (conceptually) part-broadcasts it back. With unsharded
+            // artifacts every worker contributes every shard, so the sum
+            // is element-for-element the full allreduce — the plan shapes
+            // ownership (and, on a real fabric, traffic), not the update.
+            if let Some(topo) = self.tensor_topos.get(t).copied().flatten() {
+                let tu = Instant::now();
+                let len = bufs[0].len();
+                let s = topo.group_size();
+                let (first, rest) = bufs.split_first_mut().expect(">=1 worker");
+                for r in 0..s {
+                    let range = shard_range(r, s, len);
+                    for w in rest.iter() {
+                        for (a, &v) in first[range.clone()].iter_mut().zip(&w[range.clone()]) {
+                            *a += v;
+                        }
+                    }
+                }
+                self.params.apply_tensor(t, first, total_micro)?;
+                update_s += tu.elapsed().as_secs_f64();
+                stats.plan_sharded += 1;
+                continue;
+            }
             let mut req =
                 CommRequest { id: t as u64, op: CommOp::AllReduce, bufs };
             // submit-and-forget; drain completions opportunistically if

@@ -9,10 +9,13 @@
 use anyhow::{bail, Context, Result};
 
 use crate::analytic::machine::Platform;
+use crate::models::NetDescriptor;
 use crate::netsim::cluster::{simulate_training, simulate_training_fleet, SimConfig};
 use crate::netsim::FleetConfig;
+use crate::plan::{self, planner, PartitionPlan};
 use crate::runtime::Runtime;
 use crate::trainer::{self, TrainConfig, TrainOutcome};
+use crate::util::json::Json;
 
 use super::registry;
 use super::report::ScalingReport;
@@ -37,7 +40,7 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
 }
 
 /// Platform with the spec's fabric overrides applied.
-fn resolved_platform(spec: &ExperimentSpec) -> Result<Platform> {
+pub fn resolved_platform(spec: &ExperimentSpec) -> Result<Platform> {
     let mut p = registry::platform(&spec.platform)?;
     if let Some(c) = spec.cluster.congestion {
         p.fabric.congestion_per_doubling = c;
@@ -45,7 +48,63 @@ fn resolved_platform(spec: &ExperimentSpec) -> Result<Platform> {
     Ok(p)
 }
 
-fn sim_config(spec: &ExperimentSpec, nodes: u64) -> Result<SimConfig> {
+/// The [`PartitionPlan`] a spec implies at `nodes`: derived per
+/// `parallelism.mode` (`data` | `hybrid` recipe | `auto` planner search)
+/// with the spec's explicit `plan` pins applied on top. Plans are
+/// node-count-specific (hybrid group shapes change with N), so sweeps
+/// re-derive per point.
+pub fn partition_plan(spec: &ExperimentSpec, nodes: u64) -> Result<PartitionPlan> {
+    let net = spec.model.resolve()?;
+    let platform = resolved_platform(spec)?;
+    plan_for(spec, &net, &platform, nodes)
+}
+
+fn plan_for(
+    spec: &ExperimentSpec,
+    net: &NetDescriptor,
+    platform: &Platform,
+    nodes: u64,
+) -> Result<PartitionPlan> {
+    let mb = spec.minibatch.global;
+    let overlap = spec.parallelism.overlap;
+    if nodes <= 1 {
+        // nothing is exchanged at one node: skip the planner search (it
+        // would price three identical pure-data sims for every baseline)
+        // and the pins' group arithmetic (meaningless at N=1) — but still
+        // surface typo'd pin keys/names, so a 1-node smoke run catches
+        // what would fail every multi-node run
+        registry::plan_mode(&spec.parallelism.mode)?;
+        plan::check_pins(&spec.plan, net)?;
+        return Ok(PartitionPlan::empty(nodes.max(1), mb));
+    }
+    let base = match registry::plan_mode(&spec.parallelism.mode)? {
+        "data" => PartitionPlan::data_parallel(net, nodes, mb),
+        "hybrid" => PartitionPlan::paper_recipe(net, nodes, mb, overlap),
+        "auto" => {
+            planner::plan(&planner::PlannerInput {
+                net,
+                platform,
+                nodes,
+                minibatch: mb,
+                overlap,
+                collective: registry::collective(&spec.collective)?,
+                iterations: spec.parallelism.iterations.max(2),
+            })
+            .plan
+        }
+        other => bail!("unhandled parallelism mode {other:?}"),
+    };
+    let resolved = plan::apply_pins(&base, &spec.plan, net)?;
+    resolved.validate(net)?;
+    Ok(resolved)
+}
+
+fn sim_config(
+    spec: &ExperimentSpec,
+    net: &NetDescriptor,
+    platform: &Platform,
+    nodes: u64,
+) -> Result<SimConfig> {
     if nodes == 0 {
         bail!("cluster.nodes must be >= 1");
     }
@@ -61,9 +120,8 @@ fn sim_config(spec: &ExperimentSpec, nodes: u64) -> Result<SimConfig> {
     Ok(SimConfig {
         nodes,
         minibatch: spec.minibatch.global,
-        overlap: spec.parallelism.overlap,
         iterations: spec.parallelism.iterations,
-        hybrid_fc: spec.parallelism.hybrid_fc()?,
+        plan: plan_for(spec, net, platform, nodes)?,
         collective: registry::collective(&spec.collective)?,
     })
 }
@@ -85,6 +143,7 @@ fn base_report(spec: &ExperimentSpec, backend: &'static str) -> ScalingReport {
         mean_compute_utilization: f64::NAN,
         min_compute_utilization: f64::NAN,
         tasks: 0,
+        plan: Json::Null,
     }
 }
 
@@ -101,9 +160,9 @@ impl Backend for AnalyticBackend {
     fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport> {
         let net = spec.model.resolve()?;
         let platform = resolved_platform(spec)?;
-        let cfg = sim_config(spec, spec.cluster.nodes)?;
+        let cfg = sim_config(spec, &net, &platform, spec.cluster.nodes)?;
         let r = simulate_training(&net, &platform, &cfg);
-        let base = simulate_training(&net, &platform, &sim_config(spec, 1)?);
+        let base = simulate_training(&net, &platform, &sim_config(spec, &net, &platform, 1)?);
         let speedup = r.images_per_s / base.images_per_s;
         let mut rep = base_report(spec, "analytic");
         rep.iteration_s = r.iteration_s;
@@ -114,6 +173,7 @@ impl Backend for AnalyticBackend {
         rep.comm_s = (1.0 - r.compute_utilization) * r.iteration_s;
         rep.mean_compute_utilization = r.compute_utilization;
         rep.min_compute_utilization = r.compute_utilization;
+        rep.plan = cfg.plan.to_json();
         Ok(rep)
     }
 }
@@ -147,13 +207,13 @@ impl Backend for FleetSimBackend {
     fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport> {
         let net = spec.model.resolve()?;
         let platform = resolved_platform(spec)?;
-        let cfg = sim_config(spec, spec.cluster.nodes)?;
+        let cfg = sim_config(spec, &net, &platform, spec.cluster.nodes)?;
         let fleet = fleet_config(spec)?;
         let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
         let base = simulate_training_fleet(
             &net,
             &platform,
-            &sim_config(spec, 1)?,
+            &sim_config(spec, &net, &platform, 1)?,
             &FleetConfig::homogeneous(1),
         );
         let speedup = r.images_per_s / base.images_per_s;
@@ -167,6 +227,7 @@ impl Backend for FleetSimBackend {
         rep.mean_compute_utilization = r.mean_compute_utilization;
         rep.min_compute_utilization = r.min_compute_utilization;
         rep.tasks = r.tasks as u64;
+        rep.plan = cfg.plan.to_json();
         Ok(rep)
     }
 }
@@ -203,10 +264,40 @@ pub fn run_runtime_with(
     rt: &mut Runtime,
     spec: &ExperimentSpec,
 ) -> Result<(ScalingReport, TrainOutcome)> {
-    let cfg = train_config(spec);
+    let mut cfg = train_config(spec);
+    // the runtime executes the spec's plan at worker granularity over the
+    // runnable model standing in for the zoo topology (vgg_a -> vgg_tiny
+    // etc.); manifest-only models have no descriptor to plan over and run
+    // plain data-parallel
+    if let Ok(net) = registry::model(&cfg.model) {
+        let platform = resolved_platform(spec)?;
+        let workers = cfg.workers as u64;
+        cfg.plan = match plan_for(spec, &net, &platform, workers) {
+            Ok(p) => Some(p),
+            // pins are usually authored against the full-size model's
+            // layer names; when they don't map onto the substituted
+            // runtime model, fall back to the mode-derived plan rather
+            // than failing a run the other backends accept
+            Err(e) if !spec.plan.is_empty() => {
+                eprintln!(
+                    "note: spec plan pins do not apply to runtime model {:?} ({e:#}); \
+                     using the mode-derived plan",
+                    cfg.model
+                );
+                let mut unpinned = spec.clone();
+                unpinned.plan.clear();
+                Some(plan_for(&unpinned, &net, &platform, workers)?)
+            }
+            Err(e) => return Err(e),
+        };
+    }
     let out = trainer::train(rt, &cfg)?;
 
     let mut rep = base_report(spec, "runtime");
+    rep.plan = match &cfg.plan {
+        Some(p) => p.to_json(),
+        None => Json::Null,
+    };
     rep.model = cfg.model.clone();
     rep.nodes = cfg.workers as u64;
     rep.minibatch = cfg.global_mb as u64;
@@ -250,6 +341,7 @@ pub fn train_config(spec: &ExperimentSpec) -> TrainConfig {
         log_every: spec.execution.log_every,
         eval_every: spec.execution.eval_every,
         optimizer: spec.execution.optimizer.clone(),
+        plan: None,
     }
 }
 

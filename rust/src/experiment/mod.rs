@@ -6,9 +6,13 @@
 //! a JSON value instead of hand-wired structs:
 //!
 //! * [`spec`] — the serde-able experiment description (model, platform,
-//!   cluster shape, parallelism plan, collective algorithm, minibatch)
-//!   with `--set`-style point overrides. Canonical paper-figure specs
-//!   live both here (builders) and committed under `specs/`.
+//!   cluster shape, parallelism mode + explicit plan pins, collective
+//!   algorithm, minibatch) with `--set`-style point overrides (flat or
+//!   dotted paths). Canonical paper-figure specs live both here
+//!   (builders) and committed under `specs/`. The per-layer-group
+//!   `PartitionPlan` each spec implies is resolved by
+//!   [`backend::partition_plan`] (mode-derived or the `crate::plan`
+//!   planner's design-point search) and recorded in every report.
 //! * [`registry`] — the single name → constructor table for models,
 //!   platforms, topologies and collectives (formerly four copies of
 //!   `match name { ... }` across the CLI, benches and examples).
@@ -25,8 +29,8 @@ pub mod report;
 pub mod spec;
 
 pub use backend::{
-    backend_by_name, run_runtime, run_runtime_with, run_sweep, AnalyticBackend, Backend,
-    FleetSimBackend, RuntimeBackend, BACKENDS,
+    backend_by_name, partition_plan, resolved_platform, run_runtime, run_runtime_with, run_sweep,
+    AnalyticBackend, Backend, FleetSimBackend, RuntimeBackend, BACKENDS,
 };
 pub use report::{curve_table, ScalingReport};
 pub use spec::{

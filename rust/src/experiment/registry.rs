@@ -5,7 +5,7 @@
 //! for models and platforms. They all route here now; unknown names list
 //! what IS available, so a typo in a spec file fails with a useful error.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::analytic::machine::Platform;
 use crate::models::{zoo, NetDescriptor};
@@ -88,6 +88,17 @@ pub fn topology_name(t: &Topology) -> &'static str {
     }
 }
 
+/// Parallelism-plan derivation modes (`ExperimentSpec.parallelism.mode`):
+/// `hybrid` = the paper's fixed recipe, `data` = pure data parallelism,
+/// `auto` = the design-point planner (`plan::planner`).
+pub const PLAN_MODES: &[&str] = &["hybrid", "data", "auto"];
+
+pub fn plan_mode(name: &str) -> Result<&'static str> {
+    PLAN_MODES.iter().find(|m| **m == name).copied().ok_or_else(|| {
+        anyhow!("unknown parallelism mode {name:?} (available: {})", PLAN_MODES.join("|"))
+    })
+}
+
 pub fn collective(name: &str) -> Result<Choice> {
     Ok(match name {
         "auto" => Choice::Auto,
@@ -161,5 +172,14 @@ mod tests {
     fn runtime_mapping_targets_runnable_models() {
         assert_eq!(runtime_model_for("vgg_a"), "vgg_tiny");
         assert_eq!(runtime_model_for("gpt_mini"), "gpt_mini");
+    }
+
+    #[test]
+    fn plan_modes_resolve_and_list_inventory() {
+        for m in PLAN_MODES {
+            assert_eq!(plan_mode(m).unwrap(), *m);
+        }
+        let e = plan_mode("async").unwrap_err().to_string();
+        assert!(e.contains("hybrid") && e.contains("auto"), "{e}");
     }
 }

@@ -26,6 +26,7 @@ pub const SCHEMA_KEYS: &[&str] = &[
     "minibatch",
     "model",
     "nodes",
+    "plan",
     "platform",
     "samples_per_s",
     "spec",
@@ -59,6 +60,9 @@ pub struct ScalingReport {
     pub min_compute_utilization: f64,
     /// Discrete-event tasks simulated (0 for closed-form/measured runs).
     pub tasks: u64,
+    /// The `PartitionPlan` the run executed (its canonical JSON form),
+    /// `null` where no plan applies (e.g. manifest-only runtime models).
+    pub plan: Json,
 }
 
 fn opt_json(v: Option<f64>) -> Json {
@@ -107,6 +111,7 @@ impl ScalingReport {
             Json::Num(self.min_compute_utilization),
         );
         m.insert("tasks".to_string(), Json::Num(self.tasks as f64));
+        m.insert("plan".to_string(), self.plan.clone());
         Json::Obj(m)
     }
 
@@ -128,6 +133,7 @@ impl ScalingReport {
             mean_compute_utilization: get_f64(j, "mean_compute_utilization")?,
             min_compute_utilization: get_f64(j, "min_compute_utilization")?,
             tasks: j.get("tasks")?.as_u64()?,
+            plan: j.get("plan")?.clone(),
         })
     }
 
@@ -193,6 +199,7 @@ mod tests {
             mean_compute_utilization: 0.73,
             min_compute_utilization: 0.73,
             tasks: 0,
+            plan: Json::Null,
         }
     }
 

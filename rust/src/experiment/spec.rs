@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::models::{Layer, LayerKind, NetDescriptor};
+use crate::plan::PlanPin;
 use crate::util::json::Json;
 
 use super::registry;
@@ -83,11 +84,15 @@ impl Default for ClusterSpec {
     }
 }
 
-/// Parallelism plan. `hybrid` is the paper's recipe: data parallelism on
-/// the conv trunk, per-layer best of data/model/hybrid (§3.3 optimal
-/// group shape) on the FC head. `data` forces pure data parallelism.
+/// How the per-layer-group `PartitionPlan` is derived. `hybrid` is the
+/// paper's fixed recipe: data parallelism on the conv trunk, per-layer
+/// best of data/model/hybrid (§3.3 optimal group shape) on the FC head.
+/// `data` forces pure data parallelism; `auto` runs the design-point
+/// planner (`plan::planner`). Explicit per-group pins in the spec's
+/// `plan` section override the derived plan either way.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParallelismSpec {
+    /// `hybrid` | `data` | `auto` (registry names).
     pub mode: String,
     /// Send/recv overlap achieved by the comm library (paper assumes 1).
     pub overlap: f64,
@@ -98,16 +103,6 @@ pub struct ParallelismSpec {
 impl Default for ParallelismSpec {
     fn default() -> Self {
         ParallelismSpec { mode: "hybrid".into(), overlap: 1.0, iterations: 4 }
-    }
-}
-
-impl ParallelismSpec {
-    pub fn hybrid_fc(&self) -> Result<bool> {
-        match self.mode.as_str() {
-            "hybrid" => Ok(true),
-            "data" => Ok(false),
-            other => bail!("unknown parallelism mode {other:?} (available: hybrid|data)"),
-        }
     }
 }
 
@@ -170,6 +165,10 @@ pub struct ExperimentSpec {
     /// `auto` | `ring` | `butterfly` (registry names).
     pub collective: String,
     pub minibatch: MinibatchSpec,
+    /// Explicit partition-plan pins applied on top of the mode-derived
+    /// plan: layer-name-prefix -> partial assignment (`plan::PlanPin`).
+    /// Empty = fully mode-derived.
+    pub plan: BTreeMap<String, PlanPin>,
     pub execution: ExecutionSpec,
 }
 
@@ -183,6 +182,7 @@ impl Default for ExperimentSpec {
             parallelism: ParallelismSpec::default(),
             collective: "auto".into(),
             minibatch: MinibatchSpec::default(),
+            plan: BTreeMap::new(),
             execution: ExecutionSpec::default(),
         }
     }
@@ -433,6 +433,12 @@ impl ExperimentSpec {
             }
         };
 
+        let plan = if self.plan.is_empty() {
+            Json::Null
+        } else {
+            Json::Obj(self.plan.iter().map(|(k, p)| (k.clone(), p.to_json())).collect())
+        };
+
         let mut root = BTreeMap::new();
         root.insert("name".to_string(), Json::Str(self.name.clone()));
         root.insert("model".to_string(), model);
@@ -441,6 +447,7 @@ impl ExperimentSpec {
         root.insert("parallelism".to_string(), Json::Obj(par));
         root.insert("collective".to_string(), Json::Str(self.collective.clone()));
         root.insert("minibatch".to_string(), Json::Obj(mb));
+        root.insert("plan".to_string(), plan);
         root.insert("execution".to_string(), Json::Obj(exec));
         Json::Obj(root)
     }
@@ -452,7 +459,7 @@ impl ExperimentSpec {
             j,
             &[
                 "name", "model", "platform", "cluster", "parallelism", "collective",
-                "minibatch", "execution",
+                "minibatch", "plan", "execution",
             ],
             "spec",
         )?;
@@ -514,7 +521,7 @@ impl ExperimentSpec {
             overlap: get_f64(p, "overlap", d.parallelism.overlap)?,
             iterations: get_usize(p, "iterations", d.parallelism.iterations)?,
         };
-        parallelism.hybrid_fc()?; // validate early
+        registry::plan_mode(&parallelism.mode)?; // validate early
 
         let minibatch = match j.opt("minibatch") {
             None | Some(Json::Null) => d.minibatch.clone(),
@@ -558,6 +565,24 @@ impl ExperimentSpec {
         let collective = get_str(j, "collective", &d.collective)?;
         registry::collective(&collective)?; // validate early
 
+        // explicit partition-plan pins (strategy/collective names are
+        // validated by PlanPin::from_json; prefix matching against the
+        // model's layers happens when the plan is resolved)
+        let plan = match j.opt("plan") {
+            None | Some(Json::Null) => BTreeMap::new(),
+            Some(Json::Obj(m)) => {
+                let mut out = BTreeMap::new();
+                for (k, v) in m {
+                    out.insert(
+                        k.clone(),
+                        PlanPin::from_json(v).with_context(|| format!("plan.{k}"))?,
+                    );
+                }
+                out
+            }
+            Some(other) => bail!("\"plan\" must be an object of layer-group pins, got {other:?}"),
+        };
+
         Ok(ExperimentSpec {
             name: get_str(j, "name", &d.name)?,
             model,
@@ -566,6 +591,7 @@ impl ExperimentSpec {
             parallelism,
             collective,
             minibatch,
+            plan,
             execution,
         })
     }
@@ -583,9 +609,125 @@ impl ExperimentSpec {
     // ---- point overrides ----------------------------------------------
 
     /// Apply comma-separated `key=value` overrides (the CLI's `--set`).
-    /// Keys are flat aliases into the nested spec, e.g.
-    /// `nodes=64,minibatch=512,topology=fattree,straggler_skew=0.3`.
+    /// Keys are flat aliases into the nested spec
+    /// (`nodes=64,minibatch=512,topology=fattree`) or dotted paths into
+    /// its sections (`cluster.nodes=64`, `parallelism.mode=data`,
+    /// `minibatch.global=512`, `execution.steps=100`) including
+    /// partition-plan pins (`plan.fc.groups=8`,
+    /// `plan.fc8.strategy=data`). Unknown keys and paths fail listing
+    /// what IS available.
     pub fn apply_set(&mut self, assignments: &str) -> Result<()> {
+        for kv in assignments.split(',').filter(|s| !s.is_empty()) {
+            let (key, value) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--set entry {kv:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key.split_once('.') {
+                Some((section, rest)) => self.set_path(section, rest, value)?,
+                None => self.set_flat(key, value)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Dotted-path `--set`: `<section>.<field>` for the spec sections and
+    /// `plan.<group>.<field>` for partition-plan pins.
+    fn set_path(&mut self, section: &str, rest: &str, value: &str) -> Result<()> {
+        const CLUSTER_KEYS: &[&str] = &[
+            "nodes", "topology", "radix", "oversub", "straggler_skew", "hetero", "fail_at",
+            "fail_node", "recovery_s", "congestion",
+        ];
+        const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations"];
+        const EXECUTION_KEYS: &[&str] = &[
+            "model", "workers", "steps", "lr", "momentum", "seed", "log_every", "eval_every",
+            "optimizer", "artifacts",
+        ];
+        match section {
+            "cluster" => {
+                if !CLUSTER_KEYS.contains(&rest) {
+                    bail!(
+                        "unknown --set key cluster.{rest} (available: {})",
+                        CLUSTER_KEYS.join(", ")
+                    );
+                }
+                self.set_flat(rest, value)
+            }
+            "parallelism" => {
+                if !PARALLELISM_KEYS.contains(&rest) {
+                    bail!(
+                        "unknown --set key parallelism.{rest} (available: {})",
+                        PARALLELISM_KEYS.join(", ")
+                    );
+                }
+                self.set_flat(rest, value)
+            }
+            "minibatch" => {
+                if rest != "global" {
+                    bail!("unknown --set key minibatch.{rest} (available: global)");
+                }
+                self.set_flat("minibatch", value)
+            }
+            "execution" => {
+                if !EXECUTION_KEYS.contains(&rest) {
+                    bail!(
+                        "unknown --set key execution.{rest} (available: {})",
+                        EXECUTION_KEYS.join(", ")
+                    );
+                }
+                if rest == "model" {
+                    self.execution.model = Some(value.into());
+                    Ok(())
+                } else {
+                    self.set_flat(rest, value)
+                }
+            }
+            "plan" => {
+                let (group, field) = rest.split_once('.').ok_or_else(|| {
+                    anyhow!(
+                        "--set plan.<group>.<field>=... (fields: {})",
+                        crate::plan::PIN_FIELDS.join(", ")
+                    )
+                })?;
+                if group.is_empty() {
+                    bail!("--set plan.<group>.<field>: empty group name");
+                }
+                // mutate a copy and insert only once it validates, so a
+                // failed --set cannot leave an invalid or phantom pin
+                let mut pin = self.plan.get(group).cloned().unwrap_or_default();
+                match field {
+                    "strategy" => pin.strategy = Some(value.to_string()),
+                    "groups" => {
+                        pin.groups = Some(value.parse().map_err(|_| {
+                            anyhow!("--set plan.{group}.groups={value}: not an integer")
+                        })?)
+                    }
+                    "collective" => {
+                        registry::collective(value)?;
+                        pin.collective = Some(value.to_string())
+                    }
+                    "overlap" => {
+                        pin.overlap = Some(value.parse().map_err(|_| {
+                            anyhow!("--set plan.{group}.overlap={value}: not a number")
+                        })?)
+                    }
+                    other => bail!(
+                        "unknown --set key plan.{group}.{other} (available: {})",
+                        crate::plan::PIN_FIELDS.join(", ")
+                    ),
+                }
+                pin.validate()?;
+                self.plan.insert(group.to_string(), pin);
+                Ok(())
+            }
+            other => bail!(
+                "unknown --set section {other:?} (available: cluster, parallelism, minibatch, \
+                 execution, plan — e.g. cluster.nodes=64, plan.fc.groups=8)"
+            ),
+        }
+    }
+
+    /// Flat `--set` aliases into the nested spec.
+    fn set_flat(&mut self, key: &str, value: &str) -> Result<()> {
         fn parsed<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
             value.parse::<T>().map_err(|_| {
                 anyhow!(
@@ -594,12 +736,7 @@ impl ExperimentSpec {
                 )
             })
         }
-        for kv in assignments.split(',').filter(|s| !s.is_empty()) {
-            let (key, value) = kv
-                .split_once('=')
-                .ok_or_else(|| anyhow!("--set entry {kv:?} is not key=value"))?;
-            let (key, value) = (key.trim(), value.trim());
-            match key {
+        match key {
                 "name" => self.name = value.into(),
                 "model" => self.model = ModelSpec::Zoo(value.into()),
                 "platform" => self.platform = value.into(),
@@ -630,7 +767,10 @@ impl ExperimentSpec {
                     self.cluster.congestion =
                         if value == "none" { None } else { Some(parsed(key, value)?) }
                 }
-                "mode" => self.parallelism.mode = value.into(),
+                "mode" => {
+                    registry::plan_mode(value)?;
+                    self.parallelism.mode = value.into()
+                }
                 "overlap" => self.parallelism.overlap = parsed(key, value)?,
                 "iterations" => self.parallelism.iterations = parsed(key, value)?,
                 "collective" => {
@@ -652,9 +792,10 @@ impl ExperimentSpec {
                     "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
                      radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
                      congestion, mode, overlap, iterations, collective, workers, steps, lr, \
-                     momentum, seed, log_every, eval_every, optimizer, artifacts, exec_model, name)"
+                     momentum, seed, log_every, eval_every, optimizer, artifacts, exec_model, \
+                     name — or a dotted path like cluster.nodes, parallelism.mode, \
+                     minibatch.global, execution.steps, plan.<group>.<field>)"
                 ),
-            }
         }
         Ok(())
     }
@@ -731,7 +872,95 @@ mod tests {
         assert_eq!(s.cluster.topology, "fattree");
         assert_eq!(s.cluster.oversub, 4.0);
         assert_eq!(s.collective, "ring");
-        assert!(!s.parallelism.hybrid_fc().unwrap());
+        assert_eq!(s.parallelism.mode, "data");
+    }
+
+    #[test]
+    fn apply_set_dotted_paths_reach_nested_fields() {
+        let mut s = ExperimentSpec::fig4();
+        s.apply_set(
+            "cluster.nodes=64,parallelism.mode=data,minibatch.global=256,execution.steps=7",
+        )
+        .unwrap();
+        assert_eq!(s.cluster.nodes, 64);
+        assert_eq!(s.parallelism.mode, "data");
+        assert_eq!(s.minibatch.global, 256);
+        assert_eq!(s.execution.steps, 7);
+        s.apply_set("cluster.straggler_skew=0.25,execution.model=vgg_tiny").unwrap();
+        assert_eq!(s.cluster.straggler_skew, 0.25);
+        assert_eq!(s.execution.model.as_deref(), Some("vgg_tiny"));
+    }
+
+    #[test]
+    fn apply_set_plan_pins_accumulate() {
+        let mut s = ExperimentSpec::fig4();
+        s.apply_set("plan.fc.groups=8,plan.fc.collective=ring,plan.fc8.strategy=data")
+            .unwrap();
+        let fc = &s.plan["fc"];
+        assert_eq!(fc.groups, Some(8));
+        assert_eq!(fc.collective.as_deref(), Some("ring"));
+        assert_eq!(s.plan["fc8"].strategy.as_deref(), Some("data"));
+        // plan pins survive the JSON round trip
+        let back = ExperimentSpec::parse_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn dotted_inventories_stay_in_sync_with_flat_setters() {
+        // every key the dotted-path allowlists advertise must actually be
+        // settable — guards the section consts against drifting from the
+        // set_flat match arms
+        let cases = [
+            ("cluster", "nodes", "4"),
+            ("cluster", "topology", "flat"),
+            ("cluster", "radix", "4"),
+            ("cluster", "oversub", "2"),
+            ("cluster", "straggler_skew", "0.1"),
+            ("cluster", "hetero", "true"),
+            ("cluster", "fail_at", "1"),
+            ("cluster", "fail_node", "0"),
+            ("cluster", "recovery_s", "2.5"),
+            ("cluster", "congestion", "0"),
+            ("parallelism", "mode", "data"),
+            ("parallelism", "overlap", "0.5"),
+            ("parallelism", "iterations", "3"),
+            ("minibatch", "global", "64"),
+            ("execution", "model", "vgg_tiny"),
+            ("execution", "workers", "2"),
+            ("execution", "steps", "5"),
+            ("execution", "lr", "0.1"),
+            ("execution", "momentum", "0.9"),
+            ("execution", "seed", "7"),
+            ("execution", "log_every", "1"),
+            ("execution", "eval_every", "2"),
+            ("execution", "optimizer", "adam"),
+            ("execution", "artifacts", "art"),
+        ];
+        let mut s = ExperimentSpec::default();
+        for (section, key, value) in cases {
+            s.apply_set(&format!("{section}.{key}={value}"))
+                .unwrap_or_else(|e| panic!("{section}.{key}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn apply_set_unknown_paths_list_available_keys() {
+        let mut s = ExperimentSpec::default();
+        let e = format!("{:#}", s.apply_set("cluster.nodez=4").unwrap_err());
+        assert!(e.contains("straggler_skew") && e.contains("topology"), "{e}");
+        let e = format!("{:#}", s.apply_set("parallelism.modes=data").unwrap_err());
+        assert!(e.contains("mode") && e.contains("iterations"), "{e}");
+        let e = format!("{:#}", s.apply_set("plan.fc.group=8").unwrap_err());
+        assert!(e.contains("groups") && e.contains("strategy"), "{e}");
+        let e = format!("{:#}", s.apply_set("orchestra.tempo=4").unwrap_err());
+        assert!(e.contains("cluster") && e.contains("plan"), "{e}");
+        // a pin missing its field errors too
+        assert!(s.apply_set("plan.fc=8").is_err());
+        // bad pin values are rejected by the pin's own validation, and a
+        // failed --set must not leave an invalid or phantom pin behind
+        assert!(s.apply_set("plan.fc.strategy=async").is_err());
+        assert!(s.apply_set("plan.fc2.collective=nccl").is_err());
+        assert!(s.plan.is_empty(), "failed --set left pins: {:?}", s.plan);
     }
 
     #[test]

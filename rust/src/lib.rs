@@ -31,6 +31,7 @@ pub mod experiment;
 pub mod metrics;
 pub mod models;
 pub mod netsim;
+pub mod plan;
 pub mod runtime;
 pub mod trainer;
 

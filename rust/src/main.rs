@@ -4,6 +4,7 @@
 //! repro run --spec specs/fig4.json                 one spec, one backend
 //! repro run --spec specs/fig4.json --backend netsim --set nodes=64,minibatch=256
 //! repro run --spec specs/fig6_vgg.json --sweep-nodes 1,2,4,8,16 --out BENCH_fig6.json
+//! repro plan --spec specs/fig4.json --set nodes=64 [--validate netsim]
 //! repro schema                                     ScalingReport field list
 //! repro info                                       artifact/model inventory + platform
 //! repro analyze table1|cache-blocking|register-blocking|hybrid|fig3|kernel-blocking
@@ -27,11 +28,13 @@ use anyhow::{bail, Context, Result};
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
 use pcl_dnn::experiment::{
-    backend_by_name, registry, run_runtime, run_sweep, AnalyticBackend, Backend, ExecutionSpec,
-    ExperimentSpec, FleetSimBackend, MinibatchSpec, ModelSpec, ScalingReport,
+    backend_by_name, registry, resolved_platform, run_runtime, run_sweep, AnalyticBackend,
+    Backend, ExecutionSpec, ExperimentSpec, FleetSimBackend, MinibatchSpec, ModelSpec,
+    ScalingReport,
 };
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
+use pcl_dnn::plan::{apply_pins, planner, strategy_name, PartitionPlan};
 use pcl_dnn::runtime::Runtime;
 use pcl_dnn::trainer;
 use pcl_dnn::util::cli::Opts;
@@ -48,6 +51,7 @@ fn run() -> Result<()> {
     let opts = Opts::from_env()?;
     match opts.pos(0) {
         Some("run") => run_spec(&opts),
+        Some("plan") => plan_cmd(&opts),
         Some("schema") => {
             for key in pcl_dnn::experiment::report::SCHEMA_KEYS {
                 println!("{key}");
@@ -61,7 +65,7 @@ fn run() -> Result<()> {
         Some("score") => score(&opts),
         _ => {
             eprintln!(
-                "usage: repro <run|schema|info|analyze|simulate|train|score> ... \
+                "usage: repro <run|plan|schema|info|analyze|simulate|train|score> ... \
                  (see README quickstart; `run --spec specs/<figure>.json` is the main entry)"
             );
             Ok(())
@@ -143,6 +147,182 @@ fn run_spec(opts: &Opts) -> Result<()> {
         }
         println!("schema check OK ({} report(s))", reports.len());
     }
+    if opts.bool_flag("json") {
+        println!("{json}");
+    }
+    if let Some(out) = opts.str_opt("out") {
+        std::fs::write(out, format!("{}\n", json.pretty()))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `repro plan --spec <file> [--set k=v,...] [--nodes 8,16,64]
+/// [--validate netsim] [--json] [--out file]
+/// [--check-golden specs/plans/<fig>.json] [--write-golden file]`
+///
+/// Derives the paper-style optimal design point for the spec's network:
+/// per-layer candidate costs (data / model / hybrid at the §3.3 optimal
+/// group count), the chosen `PartitionPlan`, and its analytic cost vs
+/// the fixed recipe and pure data parallelism. `--validate netsim`
+/// replays the chosen plan on the fleet simulator (clean fabric) and
+/// fails if it disagrees with the analytic cost by more than 5%.
+fn plan_cmd(opts: &Opts) -> Result<()> {
+    let path = opts
+        .str_opt("spec")
+        .context("--spec <file> is required (committed figures live in specs/)")?;
+    let mut spec = ExperimentSpec::load(path)?;
+    if let Some(sets) = opts.str_opt("set") {
+        spec.apply_set(sets)?;
+    }
+    let node_list: Vec<u64> = match opts.str_opt("nodes") {
+        Some(list) => parse_list(list, "nodes")?,
+        None => vec![spec.cluster.nodes],
+    };
+    if node_list.iter().any(|&n| n == 0) {
+        bail!("--nodes entries must be >= 1");
+    }
+    if node_list.len() > 1
+        && (opts.str_opt("check-golden").is_some() || opts.str_opt("write-golden").is_some())
+    {
+        bail!(
+            "--check-golden/--write-golden work on a single design point (a golden plan is \
+             derived for one node count); drop --nodes or pass one value"
+        );
+    }
+    let net = spec.model.resolve()?;
+    let platform = resolved_platform(&spec)?;
+    let collective = registry::collective(&spec.collective)?;
+    let mut out_doc: Vec<Json> = Vec::new();
+    for &n in &node_list {
+        let input = planner::PlannerInput {
+            net: &net,
+            platform: &platform,
+            nodes: n,
+            minibatch: spec.minibatch.global,
+            overlap: spec.parallelism.overlap,
+            collective,
+            iterations: spec.parallelism.iterations.max(2),
+        };
+        let search = planner::plan(&input);
+        // explicit spec pins still win over the searched plan
+        let chosen = apply_pins(&search.plan, &spec.plan, &net)?;
+        println!(
+            "# design point — {} x{n} on {}, MB={}",
+            spec.model.name(),
+            spec.platform,
+            spec.minibatch.global
+        );
+        let ms = |c: Option<f64>| c.map(|v| format!("{:.3}", v * 1e3)).unwrap_or_else(|| "-".into());
+        let mut t = Table::new(&["layer", "data ms", "model ms", "hybrid ms", "G*", "chosen"]);
+        for d in &search.decisions {
+            let gstar = d
+                .candidates
+                .iter()
+                .find_map(|c| match c.strategy {
+                    comm_model::Strategy::Hybrid { groups } => Some(groups.to_string()),
+                    _ => None,
+                })
+                .unwrap_or_else(|| "-".into());
+            t.row(vec![
+                d.layer.clone(),
+                ms(d.cost_of("data")),
+                ms(d.cost_of("model")),
+                ms(d.cost_of("hybrid")),
+                gstar,
+                strategy_name(chosen.strategy_for(&d.layer)).to_string(),
+            ]);
+        }
+        t.print();
+        println!("\nchosen plan:");
+        chosen.table().print();
+        let chosen_s = planner::plan_cost_s(&input, &chosen);
+        println!(
+            "analytic: auto {:.2} ms/iter vs fixed recipe {:.2} ms vs pure data {:.2} ms \
+             ({:+.1}% vs recipe)",
+            chosen_s * 1e3,
+            search.recipe_iteration_s * 1e3,
+            search.data_iteration_s * 1e3,
+            100.0 * (chosen_s - search.recipe_iteration_s) / search.recipe_iteration_s
+        );
+        if let Some(backend) = opts.str_opt("validate") {
+            if backend != "netsim" {
+                bail!("--validate {backend}: only netsim is supported");
+            }
+            let mut vspec = spec.clone();
+            vspec.cluster.nodes = n;
+            // clean fabric & fleet: the cross-check compares plan costs,
+            // so strip the α-β congestion fudge (netsim models contention
+            // explicitly) AND the fleet imperfections the analytic model
+            // cannot express (stragglers/hetero/failures)
+            vspec.cluster.congestion = Some(0.0);
+            vspec.cluster.straggler_skew = 0.0;
+            vspec.cluster.hetero = false;
+            vspec.cluster.fail_at = None;
+            // the exact-layer pins fully determine the plan; "data" mode
+            // keeps the backends from re-running the planner search just
+            // to have every layer overwritten by the pins
+            vspec.parallelism.mode = "data".into();
+            vspec.plan = chosen.as_pins();
+            let full = FleetSimBackend.run(&vspec)?;
+            let rep = AnalyticBackend.run(&vspec)?;
+            let delta = (full.iteration_s - rep.iteration_s) / rep.iteration_s;
+            println!(
+                "netsim validation: {:.2} ms vs analytic {:.2} ms ({:+.1}%, {} tasks)",
+                full.iteration_s * 1e3,
+                rep.iteration_s * 1e3,
+                100.0 * delta,
+                full.tasks
+            );
+            if delta.abs() > 0.05 {
+                bail!(
+                    "netsim disagrees with the analytic cost by {:.1}% (> 5%)",
+                    100.0 * delta.abs()
+                );
+            }
+        }
+        if let Some(golden_path) = opts.str_opt("check-golden") {
+            let golden = PartitionPlan::load(golden_path)?;
+            if golden.nodes != n {
+                bail!(
+                    "golden plan {golden_path} was derived for {} nodes, checking {n}",
+                    golden.nodes
+                );
+            }
+            if golden.minibatch != spec.minibatch.global {
+                bail!(
+                    "golden plan {golden_path} was derived for minibatch {}, checking {}",
+                    golden.minibatch,
+                    spec.minibatch.global
+                );
+            }
+            golden.validate(&net)?;
+            let golden_s = planner::plan_cost_s(&input, &golden);
+            if chosen_s > golden_s * 1.005 {
+                bail!(
+                    "plan regression vs {golden_path}: auto plan prices {:.3} ms/iter, \
+                     golden {:.3} ms/iter",
+                    chosen_s * 1e3,
+                    golden_s * 1e3
+                );
+            }
+            if chosen.assignments != golden.assignments {
+                println!(
+                    "note: auto plan differs structurally from {golden_path} but is not worse; \
+                     regenerate with --write-golden to refresh"
+                );
+            } else {
+                println!("golden check OK ({golden_path})");
+            }
+        }
+        if let Some(out) = opts.str_opt("write-golden") {
+            std::fs::write(out, format!("{}\n", chosen.to_json().pretty()))?;
+            println!("wrote {out}");
+        }
+        out_doc.push(chosen.to_json());
+        println!();
+    }
+    let json = if out_doc.len() == 1 { out_doc.remove(0) } else { Json::Arr(out_doc) };
     if opts.bool_flag("json") {
         println!("{json}");
     }

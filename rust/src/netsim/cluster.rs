@@ -30,12 +30,13 @@
 //! Steady-state iteration time is measured between consecutive iteration
 //! boundaries after a warm-up iteration.
 
-use crate::analytic::comm_model::{self, Strategy};
+use crate::analytic::comm_model::Strategy;
 use crate::analytic::compute_model;
 use crate::analytic::machine::Platform;
 use crate::analytic::FabricSpec;
 use crate::collectives::GroupTopology;
 use crate::models::{Layer, NetDescriptor};
+use crate::plan::{planner, PartitionPlan};
 
 use super::collective::{self, CollectiveKind};
 use super::engine::{Engine, TaskId};
@@ -49,17 +50,19 @@ const COMM: usize = 1;
 pub struct SimConfig {
     pub nodes: u64,
     pub minibatch: u64,
-    /// Send/recv overlap achieved by the comm library (paper assumes 1).
-    pub overlap: f64,
     /// Iterations to simulate (>= 3; last-minus-previous is reported).
+    /// (The comm-library send/recv overlap assumption lives in the
+    /// plan's per-group `overlap` — it shapes strategy derivation, not
+    /// the schedule itself.)
     pub iterations: usize,
-    /// Per-layer strategy selection: `true` = paper recipe (hybrid FCs),
-    /// `false` = pure data parallelism everywhere (the ablation).
-    pub hybrid_fc: bool,
-    /// Collective-algorithm policy (`Auto` = cheaper of ring/butterfly
-    /// per exchange, the tuned-library behavior; `Ring`/`Butterfly` pin
-    /// it for ablations). Applied consistently to the α-β cost models and
-    /// the per-message schedule builders.
+    /// The per-layer-group parallelization plan both simulator fidelities
+    /// execute. An empty plan (no assignments) is pure data parallelism.
+    pub plan: PartitionPlan,
+    /// Default collective-algorithm policy (`Auto` = cheaper of
+    /// ring/butterfly per exchange, the tuned-library behavior;
+    /// `Ring`/`Butterfly` pin it for ablations). Plan groups may override
+    /// it per layer group; both the α-β cost models and the per-message
+    /// schedule builders honor the same resolution.
     pub collective: collective::Choice,
 }
 
@@ -68,10 +71,32 @@ impl Default for SimConfig {
         SimConfig {
             nodes: 1,
             minibatch: 256,
-            overlap: 1.0,
             iterations: 4,
-            hybrid_fc: true,
+            plan: PartitionPlan::empty(1, 256),
             collective: collective::Choice::Auto,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Pure data parallelism everywhere (the ablation baseline).
+    pub fn data_parallel(nodes: u64, minibatch: u64) -> Self {
+        SimConfig {
+            nodes,
+            minibatch,
+            plan: PartitionPlan::empty(nodes, minibatch),
+            ..Default::default()
+        }
+    }
+
+    /// The paper's fixed recipe for `net` (§3.1–3.3): data-parallel conv
+    /// trunk, per-layer best of data/model/hybrid on the FC head.
+    pub fn recipe(net: &NetDescriptor, nodes: u64, minibatch: u64) -> Self {
+        SimConfig {
+            nodes,
+            minibatch,
+            plan: PartitionPlan::paper_recipe(net, nodes, minibatch, 1.0),
+            ..Default::default()
         }
     }
 }
@@ -110,42 +135,31 @@ pub struct FleetSimResult {
 }
 
 /// Communication seconds for one layer's gradient/weight exchange under
-/// its strategy.
+/// its plan assignment (the canonical per-strategy α-β arithmetic lives
+/// in `plan::planner`, shared with the design-point search).
 fn grad_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
-    let fabric = &platform.fabric;
-    let n = cfg.nodes;
-    if n <= 1 || !layer.is_weighted() {
+    if cfg.nodes <= 1 || !layer.is_weighted() {
         return 0.0;
     }
-    match strategy_for(layer, cfg) {
-        Strategy::Data => {
-            cfg.collective.gradient_exchange_s(fabric, layer.weight_bytes(), n)
-        }
-        Strategy::Model => 0.0, // weights stay put; activations move instead
-        Strategy::Hybrid { groups } => {
-            // data-parallel exchange of the 1/G weight shard across groups
-            let shard = layer.weight_bytes() / (n / groups).max(1);
-            cfg.collective.gradient_exchange_s(fabric, shard, groups)
-        }
-    }
+    planner::strategy_grad_s(
+        strategy_for(layer, cfg),
+        layer,
+        &platform.fabric,
+        choice_for(layer, cfg),
+        cfg.nodes,
+    )
 }
 
 /// Activation exchange seconds (model/hybrid FC layers, fwd or bwd leg).
 fn act_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
-    let fabric = &platform.fabric;
-    match strategy_for(layer, cfg) {
-        Strategy::Data => 0.0,
-        Strategy::Model => {
-            let bytes = 4 * layer.in_elems() * cfg.minibatch;
-            cfg.collective.allgather_s(fabric, bytes, cfg.nodes)
-        }
-        Strategy::Hybrid { groups } => {
-            let group_nodes = (cfg.nodes / groups).max(1);
-            let mb_group = cfg.minibatch / groups;
-            let bytes = 4 * layer.in_elems() * mb_group;
-            cfg.collective.allgather_s(fabric, bytes, group_nodes)
-        }
-    }
+    planner::strategy_act_leg_s(
+        strategy_for(layer, cfg),
+        layer,
+        &platform.fabric,
+        choice_for(layer, cfg),
+        cfg.nodes,
+        cfg.minibatch,
+    )
 }
 
 /// One compute pass of `layer` over `mb` data points, with the same
@@ -159,17 +173,31 @@ fn pass_time_s(layer: &Layer, m: &crate::analytic::MachineSpec, mb: f64) -> f64 
     t / m.framework_efficiency + m.per_pass_overhead_s
 }
 
+/// The plan's assignment for a layer (single-node and weightless layers
+/// trivially run data-parallel: there is nothing to exchange).
 fn strategy_for(layer: &Layer, cfg: &SimConfig) -> Strategy {
-    if !cfg.hybrid_fc || layer.is_conv() || !layer.is_weighted() || cfg.nodes <= 1 {
+    if !layer.is_weighted() || cfg.nodes <= 1 {
         return Strategy::Data;
     }
-    comm_model::best_strategy(layer, cfg.minibatch, cfg.nodes, cfg.overlap)
+    cfg.plan.strategy_for(&layer.name)
+}
+
+/// Collective policy for a layer's exchanges: the plan group's pinned
+/// choice, falling back to the experiment-level default.
+fn choice_for(layer: &Layer, cfg: &SimConfig) -> collective::Choice {
+    cfg.plan.collective_for(&layer.name).unwrap_or(cfg.collective)
 }
 
 /// Simulate `cfg.iterations` of synchronous SGD and return steady-state
 /// timing for the representative node (the analytic α-β path).
 pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConfig) -> SimResult {
     assert!(cfg.iterations >= 2);
+    debug_assert!(
+        cfg.plan.assignments.is_empty() || cfg.plan.nodes == cfg.nodes,
+        "plan was derived for {} nodes but the simulation runs {}",
+        cfg.plan.nodes,
+        cfg.nodes
+    );
     let m = &platform.machine;
     let mb_node = cfg.minibatch as f64 / cfg.nodes as f64;
     let layers = &net.layers;
@@ -399,6 +427,12 @@ pub fn simulate_training_fleet(
         cfg.nodes as usize, fleet_cfg.nodes,
         "SimConfig.nodes must match FleetConfig.nodes"
     );
+    debug_assert!(
+        cfg.plan.assignments.is_empty() || cfg.plan.nodes == cfg.nodes,
+        "plan was derived for {} nodes but the fleet runs {}",
+        cfg.plan.nodes,
+        cfg.nodes
+    );
     let m = &platform.machine;
     let fabric = &platform.fabric;
     let fleet = Fleet::new(fleet_cfg, fabric);
@@ -444,6 +478,7 @@ pub fn simulate_training_fleet(
         let mut last_fwd: Vec<Option<TaskId>> = vec![None; n];
         for (i, l) in layers.iter().enumerate() {
             let strat = strategy_for(l, cfg);
+            let choice = choice_for(l, cfg);
             let mut gates: Vec<Vec<TaskId>> = Vec::with_capacity(n);
             for v in 0..n {
                 let mut d = Vec::new();
@@ -465,7 +500,7 @@ pub fn simulate_training_fleet(
                 Strategy::Model if n > 1 => {
                     let bytes = 4 * l.in_elems() * cfg.minibatch;
                     let done = run_collective(
-                        &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
+                        &mut eng, &fleet, fabric, choice, &mut last_comm,
                         &format!("i{it}.af{i}"), &all_nodes, bytes, &gates,
                         CollectiveKind::Allgather,
                     );
@@ -480,7 +515,7 @@ pub fn simulate_training_fleet(
                         let ggates: Vec<Vec<TaskId>> =
                             members.iter().map(|&v| gates[v].clone()).collect();
                         let done = run_collective(
-                            &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
+                            &mut eng, &fleet, fabric, choice, &mut last_comm,
                             &format!("i{it}.af{i}.g{g}"), &members, bytes, &ggates,
                             CollectiveKind::Allgather,
                         );
@@ -516,6 +551,7 @@ pub fn simulate_training_fleet(
                 continue;
             }
             let strat = strategy_for(l, cfg);
+            let choice = choice_for(l, cfg);
             let eff_mb = per_layer_mb(l, cfg, mb_node);
             let per_pass = pass_time_s(l, m, eff_mb);
             // weight gradient first (enables early comm submission)
@@ -532,7 +568,7 @@ pub fn simulate_training_fleet(
             let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
             let updates: Vec<TaskId> = match strat {
                 Strategy::Data if n > 1 => exchange_update(
-                    &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
+                    &mut eng, &fleet, fabric, choice, &mut last_comm,
                     &format!("i{it}.x{i}"), &all_nodes, l.weight_bytes(), &wg, sgd_s,
                 ),
                 Strategy::Hybrid { groups } if n > 1 => {
@@ -545,7 +581,7 @@ pub fn simulate_training_fleet(
                         let members = topo.replica_set(r);
                         let mwg: Vec<TaskId> = members.iter().map(|&v| wg[v]).collect();
                         let done = exchange_update(
-                            &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
+                            &mut eng, &fleet, fabric, choice, &mut last_comm,
                             &format!("i{it}.x{i}.r{r}"), &members, shard, &mwg, sgd_s,
                         );
                         for (j, &v) in members.iter().enumerate() {
@@ -595,7 +631,7 @@ pub fn simulate_training_fleet(
                         let bytes = 4 * l.in_elems() * cfg.minibatch;
                         let bgates: Vec<Vec<TaskId>> = bp.iter().map(|&b| vec![b]).collect();
                         run_collective(
-                            &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
+                            &mut eng, &fleet, fabric, choice, &mut last_comm,
                             &format!("i{it}.ab{i}"), &all_nodes, bytes, &bgates,
                             CollectiveKind::Allgather,
                         )
@@ -609,7 +645,7 @@ pub fn simulate_training_fleet(
                             let bgates: Vec<Vec<TaskId>> =
                                 members.iter().map(|&v| vec![bp[v]]).collect();
                             let done = run_collective(
-                                &mut eng, &fleet, fabric, cfg.collective, &mut last_comm,
+                                &mut eng, &fleet, fabric, choice, &mut last_comm,
                                 &format!("i{it}.ab{i}.g{g}"), &members, bytes, &bgates,
                                 CollectiveKind::Allgather,
                             );
@@ -671,18 +707,21 @@ pub fn simulate_training_fleet(
 }
 
 /// Sweep node counts and produce a scaling curve (speedup vs the 1-node
-/// simulation of the same config).
+/// simulation of the same config). `plan_for(n)` supplies the partition
+/// plan at each size — plans are node-count-specific because hybrid
+/// group shapes change with N (use `PartitionPlan::paper_recipe` /
+/// `PartitionPlan::data_parallel` closures for the classic curves).
 pub fn scaling_curve(
     net: &NetDescriptor,
     platform: &Platform,
     minibatch: u64,
     nodes: &[u64],
-    hybrid_fc: bool,
+    plan_for: impl Fn(u64) -> PartitionPlan,
 ) -> Vec<ScalingPoint> {
     let base = simulate_training(
         net,
         platform,
-        &SimConfig { nodes: 1, minibatch, hybrid_fc, ..Default::default() },
+        &SimConfig { nodes: 1, minibatch, plan: plan_for(1), ..Default::default() },
     );
     nodes
         .iter()
@@ -690,7 +729,7 @@ pub fn scaling_curve(
             let r = simulate_training(
                 net,
                 platform,
-                &SimConfig { nodes: n, minibatch, hybrid_fc, ..Default::default() },
+                &SimConfig { nodes: n, minibatch, plan: plan_for(n), ..Default::default() },
             );
             ScalingPoint {
                 nodes: n,
@@ -707,6 +746,11 @@ mod tests {
     use super::*;
     use crate::models::zoo::{cddnn_full, overfeat_fast, vgg_a};
 
+    /// The paper-recipe plan closure for [`scaling_curve`].
+    fn recipe_of(net: &NetDescriptor, mb: u64) -> impl Fn(u64) -> PartitionPlan + '_ {
+        move |n| PartitionPlan::paper_recipe(net, n, mb, 1.0)
+    }
+
     #[test]
     fn single_node_matches_compute_only() {
         let p = Platform::cori();
@@ -721,13 +765,14 @@ mod tests {
         // Fig 4: VGG-A MB=512 reaches ~90x at 128 Cori nodes (70% eff);
         // MB=256 ~82% efficiency at 64 nodes.
         let p = Platform::cori();
-        let curve512 = scaling_curve(&vgg_a(), &p, 512, &[128], true);
+        let net = vgg_a();
+        let curve512 = scaling_curve(&net, &p, 512, &[128], recipe_of(&net, 512));
         assert!(
             (60.0..120.0).contains(&curve512[0].speedup),
             "128-node speedup {}",
             curve512[0].speedup
         );
-        let curve256 = scaling_curve(&vgg_a(), &p, 256, &[64], true);
+        let curve256 = scaling_curve(&net, &p, 256, &[64], recipe_of(&net, 256));
         assert!(
             curve256[0].efficiency > 0.60,
             "64-node eff {}",
@@ -738,7 +783,8 @@ mod tests {
     #[test]
     fn scaling_is_monotone_in_nodes() {
         let p = Platform::cori();
-        let curve = scaling_curve(&vgg_a(), &p, 256, &[2, 4, 8, 16, 32, 64], true);
+        let net = vgg_a();
+        let curve = scaling_curve(&net, &p, 256, &[2, 4, 8, 16, 32, 64], recipe_of(&net, 256));
         for w in curve.windows(2) {
             assert!(w[1].images_per_s >= w[0].images_per_s * 0.98);
         }
@@ -749,8 +795,10 @@ mod tests {
         // Fig 6's observation: VGG-A speedup (14.2x) > OverFeat (11.9x)
         // at 16 AWS nodes because of its higher flops-per-byte.
         let p = Platform::aws();
-        let of = scaling_curve(&overfeat_fast(), &p, 256, &[16], true)[0].speedup;
-        let vg = scaling_curve(&vgg_a(), &p, 256, &[16], true)[0].speedup;
+        let of_net = overfeat_fast();
+        let vg_net = vgg_a();
+        let of = scaling_curve(&of_net, &p, 256, &[16], recipe_of(&of_net, 256))[0].speedup;
+        let vg = scaling_curve(&vg_net, &p, 256, &[16], recipe_of(&vg_net, 256))[0].speedup;
         assert!(vg > of, "vgg {vg} overfeat {of}");
         assert!((6.0..16.1).contains(&of), "{of}");
         assert!((10.0..16.1).contains(&vg), "{vg}");
@@ -760,19 +808,44 @@ mod tests {
     fn cddnn_scales_least() {
         // Fig 7: CD-DNN reaches only ~6.5x on 16 nodes even on FDR.
         let p = Platform::endeavor();
-        let dn = scaling_curve(&cddnn_full(), &p, 1024, &[16], true)[0].speedup;
+        let dn_net = cddnn_full();
+        let dn = scaling_curve(&dn_net, &p, 1024, &[16], recipe_of(&dn_net, 1024))[0].speedup;
         assert!((3.0..12.0).contains(&dn), "{dn}");
-        let vg = scaling_curve(&vgg_a(), &p, 256, &[16], true)[0].speedup;
+        let vg_net = vgg_a();
+        let vg = scaling_curve(&vg_net, &p, 256, &[16], recipe_of(&vg_net, 256))[0].speedup;
         assert!(dn < vg);
     }
 
     #[test]
-    fn hybrid_fc_beats_pure_data_parallel_for_fc_nets() {
-        // The §3.3 ablation: hybrid on vs off for the FC-dominated CD-DNN.
+    fn recipe_plan_beats_pure_data_parallel_for_fc_nets() {
+        // The §3.3 ablation: the hybrid recipe plan vs the all-data plan
+        // for the FC-dominated CD-DNN.
         let p = Platform::endeavor();
-        let hybrid = scaling_curve(&cddnn_full(), &p, 1024, &[16], true)[0].speedup;
-        let data = scaling_curve(&cddnn_full(), &p, 1024, &[16], false)[0].speedup;
+        let net = cddnn_full();
+        let hybrid = scaling_curve(&net, &p, 1024, &[16], recipe_of(&net, 1024))[0].speedup;
+        let data = scaling_curve(&net, &p, 1024, &[16], |n| {
+            PartitionPlan::data_parallel(&net, n, 1024)
+        })[0]
+            .speedup;
         assert!(hybrid > data, "hybrid {hybrid} !> data {data}");
+    }
+
+    #[test]
+    fn per_group_collective_override_is_honored() {
+        // pinning the collective on the FC group must change the α-β
+        // exchange durations vs the (different) pinned alternative
+        let p = Platform::endeavor();
+        let net = cddnn_full();
+        let mut iter_s = Vec::new();
+        for pinned in [collective::Choice::Ring, collective::Choice::Butterfly] {
+            let mut plan = PartitionPlan::paper_recipe(&net, 16, 1024, 1.0);
+            for g in &mut plan.assignments {
+                g.collective = Some(pinned);
+            }
+            let cfg = SimConfig { nodes: 16, minibatch: 1024, plan, ..Default::default() };
+            iter_s.push(simulate_training(&net, &p, &cfg).iteration_s);
+        }
+        assert_ne!(iter_s[0], iter_s[1], "ring vs butterfly made no difference");
     }
 
     #[test]
@@ -790,7 +863,8 @@ mod tests {
     #[test]
     fn fleet_sim_is_deterministic() {
         let p = Platform::aws();
-        let cfg = SimConfig { nodes: 4, minibatch: 256, iterations: 3, ..Default::default() };
+        let cfg =
+            SimConfig { iterations: 3, ..SimConfig::recipe(&overfeat_fast(), 4, 256) };
         let fc = crate::netsim::FleetConfig {
             nodes: 4,
             straggler_skew: 0.25,

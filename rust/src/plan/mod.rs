@@ -1,0 +1,789 @@
+//! First-class parallelization plans (paper §3.1–3.3).
+//!
+//! The paper's headline contribution is not one scaling number but a
+//! *design point* per network: which layer groups run data-parallel,
+//! which run model/hybrid-parallel with what group shape, and which
+//! collective serves each exchange. [`PartitionPlan`] makes that decision
+//! a serde-able value — a per-layer-group assignment of strategy
+//! ([`Strategy`]), collective choice and overlap behavior — consumed
+//! unchanged by every backend:
+//!
+//! * the **analytic** balance equations cost a given plan instead of
+//!   re-deriving the recipe inline (`netsim::cluster::simulate_training`);
+//! * the **netsim** fleet simulator builds its per-message DAG from the
+//!   plan (`simulate_training_fleet`);
+//! * the **runtime** trainer executes the plan's shard-owner exchange
+//!   over the shared-memory gradient buffers (`trainer`/`coordinator`).
+//!
+//! Plans come from three places: the fixed paper recipe
+//! ([`PartitionPlan::paper_recipe`], §3.1–3.3), pure data parallelism
+//! ([`PartitionPlan::data_parallel`], the ablation), or the design-point
+//! search in [`planner`] (`repro plan`, `parallelism.mode = "auto"`).
+//! Specs may also pin explicit per-group assignments ([`PlanPin`],
+//! applied by [`apply_pins`]) on top of any of those.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analytic::comm_model::{self, Strategy};
+use crate::experiment::registry;
+use crate::models::NetDescriptor;
+use crate::netsim::collective::Choice;
+use crate::util::json::Json;
+
+pub mod planner;
+
+/// Registry-style names of the per-layer strategies.
+pub const STRATEGIES: &[&str] = &["data", "model", "hybrid"];
+
+/// Canonical name of a strategy (the plan/spec JSON vocabulary).
+pub fn strategy_name(s: Strategy) -> &'static str {
+    match s {
+        Strategy::Data => "data",
+        Strategy::Model => "model",
+        Strategy::Hybrid { .. } => "hybrid",
+    }
+}
+
+/// One contiguous run of weighted layers sharing an assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerGroup {
+    /// Group label (the first member layer's name) — what reports and
+    /// `--set plan.<name>.<field>` refer to.
+    pub name: String,
+    /// Exact names of the member layers, in network order.
+    pub layers: Vec<String>,
+    pub strategy: Strategy,
+    /// Collective algorithm for this group's exchanges; `None` inherits
+    /// the experiment-level choice.
+    pub collective: Option<Choice>,
+    /// Send/recv overlap assumed when this assignment was derived.
+    pub overlap: f64,
+}
+
+/// A full parallelization plan for one (network, nodes, minibatch) point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionPlan {
+    /// Provenance: `data` | `recipe` | `auto` | `pinned`.
+    pub mode: String,
+    pub nodes: u64,
+    pub minibatch: u64,
+    /// Per-layer-group assignments. Layers not covered — and any plan
+    /// with no assignments at all — run data-parallel.
+    pub assignments: Vec<LayerGroup>,
+}
+
+/// Degenerate hybrid shapes collapse to their named equivalents so that
+/// structurally-equal plans compare equal. Only the exact boundary
+/// shapes collapse (G = N is data parallelism, G = 1 is model
+/// parallelism); out-of-range group counts survive for `validate` to
+/// reject instead of being silently rewritten.
+fn normalize(s: Strategy, nodes: u64) -> Strategy {
+    match s {
+        Strategy::Hybrid { groups } if groups == nodes.max(1) => Strategy::Data,
+        Strategy::Hybrid { groups: 1 } => Strategy::Model,
+        other => other,
+    }
+}
+
+impl PartitionPlan {
+    /// A plan with no assignments: every layer runs data-parallel (the
+    /// default for single-node configs, where nothing is exchanged).
+    pub fn empty(nodes: u64, minibatch: u64) -> Self {
+        PartitionPlan { mode: "data".into(), nodes, minibatch, assignments: Vec::new() }
+    }
+
+    /// Pure data parallelism over every weighted layer (the ablation).
+    pub fn data_parallel(net: &NetDescriptor, nodes: u64, minibatch: u64) -> Self {
+        let per: Vec<_> = net
+            .layers
+            .iter()
+            .filter(|l| l.is_weighted())
+            .map(|l| (l.name.clone(), Strategy::Data, None, 1.0))
+            .collect();
+        Self::from_assignments("data", nodes, minibatch, &per)
+    }
+
+    /// The paper's fixed recipe: data parallelism on the conv trunk,
+    /// per-layer best of data/model/hybrid (§3.2 rule + §3.3 optimal
+    /// group count) on the FC head.
+    pub fn paper_recipe(net: &NetDescriptor, nodes: u64, minibatch: u64, overlap: f64) -> Self {
+        let per: Vec<_> = net
+            .layers
+            .iter()
+            .filter(|l| l.is_weighted())
+            .map(|l| {
+                let s = if nodes <= 1 {
+                    Strategy::Data
+                } else {
+                    comm_model::best_strategy(l, minibatch, nodes, overlap)
+                };
+                (l.name.clone(), s, None, overlap)
+            })
+            .collect();
+        Self::from_assignments("recipe", nodes, minibatch, &per)
+    }
+
+    /// Build a plan from a per-layer assignment list, merging contiguous
+    /// layers with identical assignments into one group (named after the
+    /// group's first layer).
+    pub fn from_assignments(
+        mode: &str,
+        nodes: u64,
+        minibatch: u64,
+        per_layer: &[(String, Strategy, Option<Choice>, f64)],
+    ) -> Self {
+        let mut assignments: Vec<LayerGroup> = Vec::new();
+        for (layer, strategy, collective, overlap) in per_layer {
+            let strategy = normalize(*strategy, nodes);
+            match assignments.last_mut() {
+                Some(g)
+                    if g.strategy == strategy
+                        && g.collective == *collective
+                        && g.overlap == *overlap =>
+                {
+                    g.layers.push(layer.clone());
+                }
+                _ => assignments.push(LayerGroup {
+                    name: layer.clone(),
+                    layers: vec![layer.clone()],
+                    strategy,
+                    collective: *collective,
+                    overlap: *overlap,
+                }),
+            }
+        }
+        PartitionPlan { mode: mode.to_string(), nodes, minibatch, assignments }
+    }
+
+    // ---- lookups ------------------------------------------------------
+
+    pub fn assignment_for(&self, layer: &str) -> Option<&LayerGroup> {
+        self.assignments.iter().find(|g| g.layers.iter().any(|l| l == layer))
+    }
+
+    /// Assignment for a runtime parameter tensor named `<layer>.<suffix>`
+    /// (manifest params are `fc0.w` / `fc0.b` for zoo layer `fc0`, and
+    /// `b0.qkv.w` for the dotted transformer layer `b0.qkv` — so try the
+    /// whole name first, then strip the final segment).
+    pub fn assignment_for_param(&self, param: &str) -> Option<&LayerGroup> {
+        self.assignment_for(param)
+            .or_else(|| param.rsplit_once('.').and_then(|(layer, _)| self.assignment_for(layer)))
+    }
+
+    /// Strategy for a layer; uncovered layers run data-parallel.
+    pub fn strategy_for(&self, layer: &str) -> Strategy {
+        self.assignment_for(layer).map(|g| g.strategy).unwrap_or(Strategy::Data)
+    }
+
+    /// Per-group collective override, if pinned.
+    pub fn collective_for(&self, layer: &str) -> Option<Choice> {
+        self.assignment_for(layer).and_then(|g| g.collective)
+    }
+
+    /// True when every assignment (if any) is plain data parallelism.
+    pub fn is_pure_data(&self) -> bool {
+        self.assignments.iter().all(|g| g.strategy == Strategy::Data)
+    }
+
+    /// Check the plan against a network: every named layer must exist,
+    /// carry weights, and appear once; hybrid group counts must divide
+    /// the node count.
+    pub fn validate(&self, net: &NetDescriptor) -> Result<()> {
+        let mut seen: Vec<&str> = Vec::new();
+        for g in &self.assignments {
+            if g.layers.is_empty() {
+                bail!("plan group {:?} has no layers", g.name);
+            }
+            for lname in &g.layers {
+                let layer = net.layers.iter().find(|l| &l.name == lname).ok_or_else(|| {
+                    anyhow!(
+                        "plan group {:?} names unknown layer {lname:?} of {:?} (weighted \
+                         layers: {})",
+                        g.name,
+                        net.name,
+                        net.layers
+                            .iter()
+                            .filter(|l| l.is_weighted())
+                            .map(|l| l.name.as_str())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                })?;
+                if !layer.is_weighted() {
+                    bail!("plan group {:?}: layer {lname:?} has no weights to partition", g.name);
+                }
+                if seen.contains(&lname.as_str()) {
+                    bail!("layer {lname:?} appears in more than one plan group");
+                }
+                seen.push(lname.as_str());
+            }
+            if let Strategy::Hybrid { groups } = g.strategy {
+                if groups == 0 || groups > self.nodes || self.nodes % groups != 0 {
+                    bail!(
+                        "plan group {:?}: hybrid groups {groups} must divide nodes {}",
+                        g.name,
+                        self.nodes
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The plan as exact-layer spec pins (`ExperimentSpec.plan`), so any
+    /// concrete plan can be forced through a spec — e.g. to replay the
+    /// planner's choice on the netsim backend.
+    pub fn as_pins(&self) -> BTreeMap<String, PlanPin> {
+        let mut pins = BTreeMap::new();
+        for g in &self.assignments {
+            for layer in &g.layers {
+                pins.insert(
+                    layer.clone(),
+                    PlanPin {
+                        strategy: Some(strategy_name(g.strategy).to_string()),
+                        groups: match g.strategy {
+                            Strategy::Hybrid { groups } => Some(groups),
+                            _ => None,
+                        },
+                        collective: g.collective.map(|c| registry::collective_name(c).to_string()),
+                        overlap: Some(g.overlap),
+                    },
+                );
+            }
+        }
+        pins
+    }
+
+    /// Human-readable per-group table (the CLI's plan printout).
+    pub fn table(&self) -> crate::metrics::Table {
+        let mut t = crate::metrics::Table::new(&[
+            "group", "layers", "strategy", "G", "collective", "overlap",
+        ]);
+        for g in &self.assignments {
+            let layers = if g.layers.len() <= 3 {
+                g.layers.join(",")
+            } else {
+                format!("{}..{} ({})", g.layers[0], g.layers[g.layers.len() - 1], g.layers.len())
+            };
+            t.row(vec![
+                g.name.clone(),
+                layers,
+                strategy_name(g.strategy).to_string(),
+                match g.strategy {
+                    Strategy::Hybrid { groups } => groups.to_string(),
+                    _ => "-".into(),
+                },
+                g.collective
+                    .map(|c| registry::collective_name(c).to_string())
+                    .unwrap_or_else(|| "inherit".into()),
+                format!("{}", g.overlap),
+            ]);
+        }
+        t
+    }
+
+    // ---- JSON ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "assignments".to_string(),
+            Json::Arr(self.assignments.iter().map(group_to_json).collect()),
+        );
+        m.insert("minibatch".to_string(), Json::Num(self.minibatch as f64));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        m.insert("nodes".to_string(), Json::Num(self.nodes as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        check_keys(j, &["assignments", "minibatch", "mode", "nodes"], "plan")?;
+        let mut assignments = Vec::new();
+        match j.opt("assignments") {
+            None | Some(Json::Null) => {}
+            Some(a) => {
+                for g in a.as_arr().context("plan \"assignments\"")? {
+                    assignments.push(group_from_json(g)?);
+                }
+            }
+        }
+        Ok(PartitionPlan {
+            mode: j.get("mode")?.as_str()?.to_string(),
+            nodes: j.get("nodes")?.as_u64()?,
+            minibatch: j.get("minibatch")?.as_u64()?,
+            assignments,
+        })
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text).context("plan is not valid JSON")?)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("cannot read plan file {path:?}"))?;
+        Self::parse_str(&text).with_context(|| format!("plan file {path:?}"))
+    }
+}
+
+/// Reject misspelled/unknown keys (same failure contract as spec files).
+fn check_keys(obj: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(m) = obj {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown {what} key {k:?} (expected one of: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    } else {
+        bail!("{what} must be a JSON object, got {obj:?}")
+    }
+}
+
+fn group_to_json(g: &LayerGroup) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "collective".to_string(),
+        match g.collective {
+            Some(c) => Json::Str(registry::collective_name(c).to_string()),
+            None => Json::Null,
+        },
+    );
+    m.insert(
+        "groups".to_string(),
+        match g.strategy {
+            Strategy::Hybrid { groups } => Json::Num(groups as f64),
+            _ => Json::Null,
+        },
+    );
+    m.insert(
+        "layers".to_string(),
+        Json::Arr(g.layers.iter().map(|l| Json::Str(l.clone())).collect()),
+    );
+    m.insert("name".to_string(), Json::Str(g.name.clone()));
+    m.insert("overlap".to_string(), Json::Num(g.overlap));
+    m.insert("strategy".to_string(), Json::Str(strategy_name(g.strategy).to_string()));
+    Json::Obj(m)
+}
+
+fn group_from_json(j: &Json) -> Result<LayerGroup> {
+    check_keys(
+        j,
+        &["collective", "groups", "layers", "name", "overlap", "strategy"],
+        "plan group",
+    )?;
+    let name = j.get("name")?.as_str()?.to_string();
+    let mut layers = Vec::new();
+    for l in j.get("layers")?.as_arr()? {
+        layers.push(l.as_str()?.to_string());
+    }
+    let strategy = match j.get("strategy")?.as_str()? {
+        "data" => Strategy::Data,
+        "model" => Strategy::Model,
+        "hybrid" => match j.opt("groups") {
+            Some(v @ Json::Num(_)) => Strategy::Hybrid { groups: v.as_u64()? },
+            _ => bail!("plan group {name:?}: strategy \"hybrid\" requires \"groups\""),
+        },
+        other => bail!(
+            "plan group {name:?}: unknown strategy {other:?} (available: {})",
+            STRATEGIES.join("|")
+        ),
+    };
+    if !matches!(strategy, Strategy::Hybrid { .. })
+        && matches!(j.opt("groups"), Some(Json::Num(_)))
+    {
+        bail!("plan group {name:?}: \"groups\" only applies to strategy \"hybrid\"");
+    }
+    let collective = match j.opt("collective") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(registry::collective(
+            v.as_str().with_context(|| format!("plan group {name:?} collective"))?,
+        )?),
+    };
+    let overlap = match j.opt("overlap") {
+        None | Some(Json::Null) => 1.0,
+        Some(v) => v.as_f64().with_context(|| format!("plan group {name:?} overlap"))?,
+    };
+    Ok(LayerGroup { name, layers, strategy, collective, overlap })
+}
+
+// ---------------------------------------------------------------------
+// Spec-level pins
+// ---------------------------------------------------------------------
+
+/// One spec-level pin: a partial assignment overriding the mode-derived
+/// plan for every weighted layer whose name starts with the pin's key
+/// (`"fc"` matches `fc6`/`fc7`/`fc8`; more specific keys win).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PlanPin {
+    /// `data` | `model` | `hybrid`; `None` keeps the derived strategy
+    /// (unless `groups` is set, which implies `hybrid`).
+    pub strategy: Option<String>,
+    /// Hybrid group count; omitted = the §3.3 optimum for the layer.
+    pub groups: Option<u64>,
+    /// Collective name (`ring`/`butterfly`/`auto`); `None` inherits.
+    pub collective: Option<String>,
+    pub overlap: Option<f64>,
+}
+
+/// Field names of a pin, sorted (the spec `plan.<group>` sub-schema).
+pub const PIN_FIELDS: &[&str] = &["collective", "groups", "overlap", "strategy"];
+
+impl PlanPin {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "collective".to_string(),
+            match &self.collective {
+                Some(c) => Json::Str(c.clone()),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "groups".to_string(),
+            match self.groups {
+                Some(g) => Json::Num(g as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "overlap".to_string(),
+            match self.overlap {
+                Some(o) => Json::Num(o),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "strategy".to_string(),
+            match &self.strategy {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        check_keys(j, PIN_FIELDS, "plan pin")?;
+        let pin = PlanPin {
+            strategy: match j.opt("strategy") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_str().context("pin strategy")?.to_string()),
+            },
+            groups: match j.opt("groups") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64().context("pin groups")?),
+            },
+            collective: match j.opt("collective") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_str().context("pin collective")?.to_string()),
+            },
+            overlap: match j.opt("overlap") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().context("pin overlap")?),
+            },
+        };
+        pin.validate()?;
+        Ok(pin)
+    }
+
+    /// Registry-style early name validation.
+    pub fn validate(&self) -> Result<()> {
+        if let Some(s) = &self.strategy {
+            if !STRATEGIES.contains(&s.as_str()) {
+                bail!("unknown plan strategy {s:?} (available: {})", STRATEGIES.join("|"));
+            }
+            if s != "hybrid" && self.groups.is_some() {
+                bail!("plan \"groups\" only applies to strategy \"hybrid\"");
+            }
+        }
+        if let Some(c) = &self.collective {
+            registry::collective(c)?;
+        }
+        if self.groups == Some(0) {
+            bail!("plan \"groups\" must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Validate pin keys/values against a network without building a plan:
+/// every key must match at least one weighted layer and every pin's
+/// names must resolve. Used where the plan itself is trivial (1-node
+/// baselines) so a typo'd pin still fails loudly.
+pub fn check_pins(pins: &BTreeMap<String, PlanPin>, net: &NetDescriptor) -> Result<()> {
+    for (key, pin) in pins {
+        pin.validate()?;
+        let matched = net
+            .layers
+            .iter()
+            .any(|l| l.is_weighted() && l.name.starts_with(key.as_str()));
+        if !matched {
+            bail!(
+                "plan key {key:?} matches no weighted layer of {:?} (weighted layers: {})",
+                net.name,
+                net.layers
+                    .iter()
+                    .filter(|l| l.is_weighted())
+                    .map(|l| l.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Apply spec-level pins on top of a mode-derived base plan.
+pub fn apply_pins(
+    base: &PartitionPlan,
+    pins: &BTreeMap<String, PlanPin>,
+    net: &NetDescriptor,
+) -> Result<PartitionPlan> {
+    if pins.is_empty() {
+        return Ok(base.clone());
+    }
+    let (nodes, minibatch) = (base.nodes, base.minibatch);
+    let weighted: Vec<&crate::models::Layer> =
+        net.layers.iter().filter(|l| l.is_weighted()).collect();
+    let mut per: Vec<(String, Strategy, Option<Choice>, f64)> = weighted
+        .iter()
+        .map(|l| match base.assignment_for(&l.name) {
+            Some(g) => (l.name.clone(), g.strategy, g.collective, g.overlap),
+            None => (l.name.clone(), Strategy::Data, None, 1.0),
+        })
+        .collect();
+    // least-specific (shortest) keys first, so `plan.fc` then `plan.fc8`
+    // leaves fc8 with the more specific assignment
+    let mut keys: Vec<&String> = pins.keys().collect();
+    keys.sort_by(|a, b| a.len().cmp(&b.len()).then_with(|| a.cmp(b)));
+    for key in keys {
+        let pin = &pins[key.as_str()];
+        pin.validate()?;
+        let matched: Vec<usize> = per
+            .iter()
+            .enumerate()
+            .filter(|(_, (name, ..))| name.starts_with(key.as_str()))
+            .map(|(i, _)| i)
+            .collect();
+        if matched.is_empty() {
+            bail!(
+                "plan key {key:?} matches no weighted layer of {:?} (weighted layers: {})",
+                net.name,
+                weighted.iter().map(|l| l.name.as_str()).collect::<Vec<_>>().join(", ")
+            );
+        }
+        for i in matched {
+            let layer = weighted[i];
+            let overlap_now = pin.overlap.unwrap_or(per[i].3);
+            let entry = &mut per[i];
+            match pin.strategy.as_deref() {
+                Some("data") => entry.1 = Strategy::Data,
+                Some("model") => entry.1 = Strategy::Model,
+                Some("hybrid") => {
+                    let g = match pin.groups {
+                        Some(g) => g,
+                        None => {
+                            comm_model::optimal_groups(layer, minibatch, nodes.max(1), overlap_now)
+                        }
+                    };
+                    entry.1 = Strategy::Hybrid { groups: g };
+                }
+                Some(other) => bail!(
+                    "unknown plan strategy {other:?} (available: {})",
+                    STRATEGIES.join("|")
+                ),
+                None => {
+                    if let Some(g) = pin.groups {
+                        entry.1 = Strategy::Hybrid { groups: g };
+                    }
+                }
+            }
+            if let Some(c) = &pin.collective {
+                entry.2 = Some(registry::collective(c)?);
+            }
+            if let Some(o) = pin.overlap {
+                entry.3 = o;
+            }
+        }
+    }
+    let plan = PartitionPlan::from_assignments("pinned", nodes, minibatch, &per);
+    plan.validate(net)?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn recipe_matches_best_strategy_per_layer() {
+        let net = zoo::vgg_a();
+        let plan = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);
+        plan.validate(&net).unwrap();
+        for l in net.layers.iter().filter(|l| l.is_weighted()) {
+            let want = comm_model::best_strategy(l, 512, 64, 1.0);
+            assert_eq!(plan.strategy_for(&l.name), want, "{}", l.name);
+        }
+        // conv trunk data-parallel, merged into the leading group
+        let first = &plan.assignments[0];
+        assert_eq!(first.strategy, Strategy::Data);
+        assert!(first.layers.iter().all(|n| n.starts_with("conv")));
+        // FC head is hybrid/model — not data
+        assert_ne!(plan.strategy_for("fc6"), Strategy::Data);
+    }
+
+    #[test]
+    fn uncovered_layers_default_to_data() {
+        let plan = PartitionPlan::empty(8, 256);
+        assert_eq!(plan.strategy_for("anything"), Strategy::Data);
+        assert!(plan.is_pure_data());
+    }
+
+    #[test]
+    fn degenerate_hybrids_normalize() {
+        let per = vec![
+            ("a".to_string(), Strategy::Hybrid { groups: 8 }, None, 1.0),
+            ("b".to_string(), Strategy::Hybrid { groups: 1 }, None, 1.0),
+        ];
+        let plan = PartitionPlan::from_assignments("pinned", 8, 256, &per);
+        assert_eq!(plan.strategy_for("a"), Strategy::Data);
+        assert_eq!(plan.strategy_for("b"), Strategy::Model);
+    }
+
+    #[test]
+    fn contiguous_equal_assignments_merge() {
+        let net = zoo::cddnn_full();
+        let plan = PartitionPlan::data_parallel(&net, 16, 1024);
+        assert_eq!(plan.assignments.len(), 1);
+        assert_eq!(plan.assignments[0].layers.len(), 8);
+        assert_eq!(plan.assignments[0].name, "h0");
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_identical() {
+        let net = zoo::vgg_a();
+        for plan in [
+            PartitionPlan::paper_recipe(&net, 64, 512, 1.0),
+            PartitionPlan::data_parallel(&net, 8, 256),
+            PartitionPlan::empty(1, 256),
+        ] {
+            let text = plan.to_json().to_string();
+            let back = PartitionPlan::parse_str(&text).unwrap();
+            assert_eq!(back, plan);
+            assert_eq!(back.to_json().to_string(), text);
+            // and through the pretty printer (golden-file form)
+            let back2 = PartitionPlan::parse_str(&plan.to_json().pretty()).unwrap();
+            assert_eq!(back2.to_json().to_string(), text);
+        }
+    }
+
+    #[test]
+    fn plan_json_rejects_bad_shapes() {
+        assert!(PartitionPlan::parse_str(r#"{"mode":"data"}"#).is_err()); // missing keys
+        assert!(PartitionPlan::parse_str(
+            r#"{"assignments":[],"minibatch":256,"mode":"data","nodes":8,"extra":1}"#
+        )
+        .is_err());
+        // hybrid without groups
+        let bad = r#"{"assignments":[{"collective":null,"groups":null,"layers":["fc6"],
+            "name":"fc6","overlap":1,"strategy":"hybrid"}],
+            "minibatch":256,"mode":"pinned","nodes":8}"#;
+        assert!(PartitionPlan::parse_str(bad).is_err());
+    }
+
+    #[test]
+    fn validate_catches_unknown_layers_and_bad_groups() {
+        let net = zoo::vgg_a();
+        let mut plan = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);
+        plan.assignments[0].layers.push("nope".into());
+        let e = plan.validate(&net).unwrap_err().to_string();
+        assert!(e.contains("fc6"), "{e}"); // inventory listed
+        let mut plan = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);
+        plan.assignments[1].strategy = Strategy::Hybrid { groups: 7 };
+        assert!(plan.validate(&net).is_err());
+        // pools carry no weights
+        let per = vec![("pool1".to_string(), Strategy::Data, None, 1.0)];
+        let plan = PartitionPlan::from_assignments("pinned", 64, 512, &per);
+        assert!(plan.validate(&net).is_err());
+    }
+
+    #[test]
+    fn pins_override_by_prefix_and_specificity() {
+        let net = zoo::vgg_a();
+        let base = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);
+        let mut pins = BTreeMap::new();
+        pins.insert(
+            "fc".to_string(),
+            PlanPin { groups: Some(8), ..Default::default() },
+        );
+        pins.insert(
+            "fc8".to_string(),
+            PlanPin { strategy: Some("data".into()), ..Default::default() },
+        );
+        let plan = apply_pins(&base, &pins, &net).unwrap();
+        assert_eq!(plan.strategy_for("fc6"), Strategy::Hybrid { groups: 8 });
+        assert_eq!(plan.strategy_for("fc7"), Strategy::Hybrid { groups: 8 });
+        assert_eq!(plan.strategy_for("fc8"), Strategy::Data);
+        // conv trunk untouched
+        assert_eq!(plan.strategy_for("conv1"), Strategy::Data);
+        assert_eq!(plan.mode, "pinned");
+    }
+
+    #[test]
+    fn pins_reject_unknown_keys_groups_and_names() {
+        let net = zoo::vgg_a();
+        let base = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);
+        let mut pins = BTreeMap::new();
+        pins.insert("frobnicate".to_string(), PlanPin::default());
+        let e = apply_pins(&base, &pins, &net).unwrap_err().to_string();
+        assert!(e.contains("conv1") && e.contains("fc8"), "{e}");
+        // group count that does not divide the node count
+        let mut pins = BTreeMap::new();
+        pins.insert("fc6".to_string(), PlanPin { groups: Some(7), ..Default::default() });
+        assert!(apply_pins(&base, &pins, &net).is_err());
+        // out-of-range group count errors loudly instead of silently
+        // collapsing to data parallelism
+        let mut pins = BTreeMap::new();
+        pins.insert("fc6".to_string(), PlanPin { groups: Some(128), ..Default::default() });
+        let e = apply_pins(&base, &pins, &net).unwrap_err().to_string();
+        assert!(e.contains("must divide"), "{e}");
+        // bad names fail validation
+        assert!(PlanPin { strategy: Some("async".into()), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(PlanPin { collective: Some("nccl".into()), ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn as_pins_roundtrips_through_apply() {
+        let net = zoo::vgg_a();
+        let plan = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);
+        let pins = plan.as_pins();
+        let base = PartitionPlan::data_parallel(&net, 64, 512);
+        let back = apply_pins(&base, &pins, &net).unwrap();
+        assert_eq!(back.assignments, plan.assignments);
+    }
+
+    #[test]
+    fn param_names_resolve_to_their_layer() {
+        let net = zoo::vgg_tiny();
+        let plan = PartitionPlan::paper_recipe(&net, 4, 16, 1.0);
+        let via_param = plan.assignment_for_param("fc0.w").map(|g| g.strategy);
+        let via_layer = plan.assignment_for("fc0").map(|g| g.strategy);
+        assert_eq!(via_param, via_layer);
+        assert!(via_param.is_some());
+        // dotted layer names (transformer zoo: layer "b0.qkv", params
+        // "b0.qkv.w"/"b0.qkv.b") must resolve too
+        let gpt = zoo::gpt_descriptor("gpt_mini", 384, 2, 128);
+        let plan = PartitionPlan::data_parallel(&gpt, 4, 16);
+        for p in ["b0.qkv.w", "b0.qkv.b", "b1.mlp2.w", "lm_head.w"] {
+            assert!(plan.assignment_for_param(p).is_some(), "{p}");
+        }
+    }
+}

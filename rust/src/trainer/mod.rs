@@ -5,9 +5,12 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::analytic::comm_model::Strategy;
+use crate::collectives::GroupTopology;
 use crate::coordinator::{MicrobatchPlan, SgdConfig, SyncSgdCoordinator};
 use crate::data::{Corpus, FrameDataset, ImageDataset, Prefetcher};
 use crate::metrics::{History, StepRecord};
+use crate::plan::PartitionPlan;
 use crate::runtime::{HostTensor, Runtime};
 
 /// Training-run configuration.
@@ -27,6 +30,10 @@ pub struct TrainConfig {
     pub eval_every: u64,
     /// "sgd" (paper default) or "adam" (e2e transformer driver)
     pub optimizer: String,
+    /// Partition plan at worker granularity (`plan.nodes == workers`):
+    /// tensors of model/hybrid layer groups take the plan's shard-owner
+    /// exchange path in the coordinator. `None` = pure data parallelism.
+    pub plan: Option<PartitionPlan>,
 }
 
 impl Default for TrainConfig {
@@ -42,6 +49,34 @@ impl Default for TrainConfig {
             log_every: 10,
             eval_every: 0,
             optimizer: "sgd".into(),
+            plan: None,
+        }
+    }
+}
+
+/// Exchange topology for one parameter tensor under the plan (`None` =
+/// plain data-parallel allreduce on the comm thread). Hybrid shapes that
+/// cannot map onto the worker count fall back to data parallelism — the
+/// shared-memory runtime cannot leave a tensor unexchanged.
+fn tensor_topology(
+    plan: Option<&PartitionPlan>,
+    param: &str,
+    workers: usize,
+) -> Option<GroupTopology> {
+    if workers <= 1 {
+        return None;
+    }
+    let group = plan?.assignment_for_param(param)?;
+    match group.strategy {
+        Strategy::Data => None,
+        Strategy::Model => Some(GroupTopology::model_parallel(workers)),
+        Strategy::Hybrid { groups } => {
+            let groups = groups as usize;
+            if groups >= 1 && groups < workers && workers % groups == 0 {
+                Some(GroupTopology::new(workers, groups))
+            } else {
+                None
+            }
         }
     }
 }
@@ -158,7 +193,18 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
         other => bail!("unknown optimizer {other:?} (sgd|adam)"),
     };
     let sgd = SgdConfig { lr: cfg.lr, momentum: cfg.momentum, weight_decay: 0.0, optimizer };
-    let mut coord = SyncSgdCoordinator::new(&artifact, params, plan.clone(), sgd);
+    // plan-directed exchange sharding: map each manifest parameter tensor
+    // onto its layer group's topology (manifest params are named
+    // `<layer>.<suffix>`, zoo layers `<layer>`)
+    let tensor_topos: Vec<Option<GroupTopology>> = rt
+        .manifest()
+        .model(&cfg.model)?
+        .params
+        .iter()
+        .map(|(name, _)| tensor_topology(cfg.plan.as_ref(), name, cfg.workers))
+        .collect();
+    let mut coord =
+        SyncSgdCoordinator::with_plan(&artifact, params, plan.clone(), sgd, tensor_topos);
 
     let data = spawn_data_thread(&fam, micro, &plan, cfg.steps, cfg.seed);
     let compile_s = rt.preload(&artifact)?;
@@ -294,4 +340,45 @@ pub fn score_throughput(rt: &mut Runtime, model: &str, batches: u64, seed: u64) 
         rt.execute_with_params(&name, &params, &data)?;
     }
     Ok((batches as usize * b) as f64 / t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn tensor_topology_maps_params_onto_plan_groups() {
+        // the mapping that routes manifest param tensors onto the plan's
+        // shard-owner exchange: vgg_tiny's FC head prefers model
+        // parallelism at 4 workers / MB 16 (ofm > MB), the conv trunk and
+        // classifier head stay data-parallel
+        let net = zoo::vgg_tiny();
+        let plan = PartitionPlan::paper_recipe(&net, 4, 16, 1.0);
+        let topo = |p: &str| tensor_topology(Some(&plan), p, 4);
+        for p in ["fc0.w", "fc0.b", "fc1.w"] {
+            let t = topo(p).unwrap_or_else(|| panic!("{p} lost its plan topology"));
+            assert_eq!(t.groups, 1, "{p}"); // model-parallel = 1 group of 4
+        }
+        for p in ["conv0.w", "conv3.b", "head.w"] {
+            assert!(topo(p).is_none(), "{p} should take the plain allreduce");
+        }
+        // dotted transformer layer names resolve through the last segment
+        let gpt = zoo::gpt_descriptor("g", 384, 1, 128);
+        let mut per = Vec::new();
+        for l in gpt.layers.iter().filter(|l| l.is_weighted()) {
+            per.push((
+                l.name.clone(),
+                crate::analytic::comm_model::Strategy::Hybrid { groups: 2 },
+                None,
+                1.0,
+            ));
+        }
+        let plan = PartitionPlan::from_assignments("pinned", 4, 16, &per);
+        assert!(tensor_topology(Some(&plan), "b0.qkv.w", 4).is_some());
+        // degenerate inputs fall back to the allreduce path
+        assert!(tensor_topology(None, "fc0.w", 4).is_none());
+        assert!(tensor_topology(Some(&plan), "b0.qkv.w", 1).is_none());
+        assert!(tensor_topology(Some(&plan), "unknown.w", 4).is_none());
+    }
 }

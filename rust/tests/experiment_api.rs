@@ -139,6 +139,38 @@ fn collective_choice_is_honored_across_backends() {
 }
 
 #[test]
+fn reports_record_the_partition_plan() {
+    // every simulation backend records the plan it executed, in the
+    // canonical PartitionPlan JSON (parse-able, node-count-correct)
+    use pcl_dnn::plan::PartitionPlan;
+    let mut spec = ExperimentSpec::load(&spec_path("fig7.json")).unwrap();
+    spec.cluster.nodes = 8;
+    spec.parallelism.iterations = 3;
+    for name in ["analytic", "netsim"] {
+        let r = backend_by_name(name).unwrap().run(&spec).unwrap();
+        let plan = PartitionPlan::from_json(&r.plan).unwrap();
+        assert_eq!(plan.nodes, 8, "{name}");
+        assert_eq!(plan.minibatch, 1024, "{name}");
+        // the CD-DNN FC stack must not be pure data parallel under the
+        // default hybrid recipe
+        assert!(!plan.is_pure_data(), "{name}");
+    }
+}
+
+#[test]
+fn auto_mode_runs_through_the_backend_api() {
+    let mut spec = ExperimentSpec::load(&spec_path("fig4.json")).unwrap();
+    spec.cluster.nodes = 8;
+    spec.parallelism.iterations = 3;
+    spec.parallelism.mode = "auto".into();
+    let auto = AnalyticBackend.run(&spec).unwrap();
+    spec.parallelism.mode = "data".into();
+    let data = AnalyticBackend.run(&spec).unwrap();
+    // the planner's never-worse guarantee, visible through the API
+    assert!(auto.iteration_s <= data.iteration_s * (1.0 + 1e-9));
+}
+
+#[test]
 fn sweep_over_committed_fig6_reproduces_paper_ordering() {
     // Fig 6's claim: VGG-A out-scales OverFeat on Ethernet
     let of = run_sweep(

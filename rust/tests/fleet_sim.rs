@@ -26,12 +26,7 @@ fn full_cluster_matches_alpha_beta_data_parallel() {
     // representative-node α-β prediction.
     let p = contention_free_cori();
     for nodes in [2u64, 4, 8] {
-        let cfg = SimConfig {
-            nodes,
-            minibatch: 256,
-            hybrid_fc: false,
-            ..Default::default()
-        };
+        let cfg = SimConfig::data_parallel(nodes, 256);
         let rep = simulate_training(&zoo::vgg_a(), &p, &cfg);
         let full = simulate_training_fleet(
             &zoo::vgg_a(),
@@ -55,7 +50,7 @@ fn full_cluster_matches_alpha_beta_hybrid() {
     // Same bar with the paper's hybrid-FC recipe active (replica-set
     // exchanges + activation allgathers among model-parallel groups).
     let p = contention_free_cori();
-    let cfg = SimConfig { nodes: 8, minibatch: 256, ..Default::default() };
+    let cfg = SimConfig::recipe(&zoo::vgg_a(), 8, 256);
     let rep = simulate_training(&zoo::vgg_a(), &p, &cfg);
     let full =
         simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8));
@@ -76,7 +71,7 @@ fn straggler_skew_slows_iterations_monotonically() {
     // iteration time must grow with skew and approach the (1 + skew)
     // compute bound.
     let p = contention_free_cori();
-    let cfg = SimConfig { nodes: 8, minibatch: 256, hybrid_fc: false, ..Default::default() };
+    let cfg = SimConfig::data_parallel(8, 256);
     let mut prev = 0.0;
     let base = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8));
     for skew in [0.0, 0.2, 0.5, 1.0] {
@@ -125,7 +120,7 @@ fn oversubscribed_ethernet_contention_slows_hybrid_training() {
     // serialize on the squeezed uplink channels.
     let mut p = Platform::aws();
     p.fabric.congestion_per_doubling = 0.0;
-    let cfg = SimConfig { nodes: 8, minibatch: 1024, ..Default::default() };
+    let cfg = SimConfig::recipe(&zoo::cddnn_full(), 8, 1024);
     let baseline = simulate_training_fleet(
         &zoo::cddnn_full(),
         &p,
@@ -169,7 +164,7 @@ fn oversubscribed_ethernet_contention_slows_hybrid_training() {
 #[test]
 fn hetero_fleet_runs_at_slow_generation_pace() {
     let p = contention_free_cori();
-    let cfg = SimConfig { nodes: 4, minibatch: 256, hybrid_fc: false, ..Default::default() };
+    let cfg = SimConfig::data_parallel(4, 256);
     let homo = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4));
     let hetero = simulate_training_fleet(
         &zoo::vgg_a(),
@@ -187,8 +182,7 @@ fn failure_stalls_one_iteration_then_rejoins() {
     let p = contention_free_cori();
     // iterations: 0 warmup, 1 fails, steady state measured over the last
     // two — so the recovery must NOT pollute the steady-state window...
-    let cfg = SimConfig { nodes: 4, minibatch: 256, hybrid_fc: false, iterations: 5,
-                          ..Default::default() };
+    let cfg = SimConfig { iterations: 5, ..SimConfig::data_parallel(4, 256) };
     let clean = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4));
     let failed = simulate_training_fleet(
         &zoo::vgg_a(),
@@ -234,8 +228,7 @@ fn fleet_tasks_scale_with_cluster_size() {
     // sanity: the full simulator really is per-node, per-message
     let p = contention_free_cori();
     let mk = |nodes: u64| {
-        let cfg = SimConfig { nodes, minibatch: 256, hybrid_fc: false, iterations: 3,
-                              ..Default::default() };
+        let cfg = SimConfig { iterations: 3, ..SimConfig::data_parallel(nodes, 256) };
         simulate_training_fleet(&zoo::vgg_a(), &p, &cfg,
                                 &FleetConfig::homogeneous(nodes as usize))
     };

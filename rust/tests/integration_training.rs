@@ -27,6 +27,7 @@ fn cfg(model: &str, workers: usize, mb: usize, steps: u64) -> TrainConfig {
         log_every: 0,
         eval_every: 0,
         optimizer: "sgd".into(),
+        plan: None,
     }
 }
 

@@ -119,7 +119,7 @@ fn engine_is_deterministic_across_runs() {
 #[test]
 fn simulation_results_are_reproducible() {
     let p = Platform::cori();
-    let cfg = SimConfig { nodes: 64, minibatch: 512, ..Default::default() };
+    let cfg = SimConfig::recipe(&zoo::vgg_a(), 64, 512);
     let a = simulate_training(&zoo::vgg_a(), &p, &cfg);
     let b = simulate_training(&zoo::vgg_a(), &p, &cfg);
     assert_eq!(a.iteration_s, b.iteration_s);
@@ -134,12 +134,12 @@ fn more_iterations_converge_to_steady_state() {
     let short = simulate_training(
         &zoo::vgg_a(),
         &p,
-        &SimConfig { nodes: 32, minibatch: 256, iterations: 3, ..Default::default() },
+        &SimConfig { iterations: 3, ..SimConfig::recipe(&zoo::vgg_a(), 32, 256) },
     );
     let long = simulate_training(
         &zoo::vgg_a(),
         &p,
-        &SimConfig { nodes: 32, minibatch: 256, iterations: 8, ..Default::default() },
+        &SimConfig { iterations: 8, ..SimConfig::recipe(&zoo::vgg_a(), 32, 256) },
     );
     let rel = (short.iteration_s - long.iteration_s).abs() / long.iteration_s;
     assert!(rel < 0.01, "{} vs {}", short.iteration_s, long.iteration_s);
@@ -154,7 +154,7 @@ fn overlap_matters_in_simulation() {
     let r = simulate_training(
         &zoo::overfeat_fast(),
         &p,
-        &SimConfig { nodes: 16, minibatch: 256, iterations: 4, ..Default::default() },
+        &SimConfig { iterations: 4, ..SimConfig::recipe(&zoo::overfeat_fast(), 16, 256) },
     );
     // compute utilization must be meaningful and below 1 at 16 eth nodes
     assert!(r.compute_utilization > 0.3 && r.compute_utilization <= 1.0);
