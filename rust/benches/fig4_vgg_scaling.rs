@@ -9,7 +9,7 @@ use pcl_dnn::experiment::{
     MinibatchSpec,
 };
 use pcl_dnn::netsim::collective::Choice;
-use pcl_dnn::plan::planner;
+use pcl_dnn::plan::{planner, PlanCache};
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -55,9 +55,10 @@ fn main() {
     // pure-data efficiency per node count
     let net = registry::model("vgg_a").unwrap();
     let platform = registry::platform("cori").unwrap();
+    let cache = PlanCache::new(PlanCache::default_dir());
     let rows = [8u64, 16, 32, 64, 128]
         .iter()
-        .map(|&n| planner::bench_row(&net, &platform, 512, n, Choice::Auto, 3))
+        .map(|&n| planner::bench_row(&net, &platform, 512, n, Choice::Auto, 3, Some(&cache)))
         .collect();
     planner::merge_bench_plan("BENCH_plan.json", "fig4_vgg_a", rows).unwrap();
     println!("\nwrote BENCH_plan.json (fig4_vgg_a: auto vs fixed vs data efficiency)");

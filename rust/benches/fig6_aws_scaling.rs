@@ -10,7 +10,7 @@ use pcl_dnn::experiment::{
 };
 use pcl_dnn::metrics::Table;
 use pcl_dnn::netsim::collective::Choice;
-use pcl_dnn::plan::planner;
+use pcl_dnn::plan::{planner, PlanCache};
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -71,12 +71,13 @@ fn main() {
     t.print();
 
     // cross-PR bench trajectory: planner vs fixed recipe vs pure data
+    let cache = PlanCache::new(PlanCache::default_dir());
     let platform = registry::platform("aws").unwrap();
     for (key, model) in [("fig6_overfeat", "overfeat_fast"), ("fig6_vgg", "vgg_a")] {
         let net = registry::model(model).unwrap();
         let rows = [2u64, 4, 8, 16]
             .iter()
-            .map(|&n| planner::bench_row(&net, &platform, 256, n, Choice::Auto, 3))
+            .map(|&n| planner::bench_row(&net, &platform, 256, n, Choice::Auto, 3, Some(&cache)))
             .collect();
         planner::merge_bench_plan("BENCH_plan.json", key, rows).unwrap();
     }

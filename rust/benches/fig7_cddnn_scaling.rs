@@ -12,7 +12,7 @@ use pcl_dnn::experiment::{
 };
 use pcl_dnn::metrics::Table;
 use pcl_dnn::netsim::collective::Choice;
-use pcl_dnn::plan::planner;
+use pcl_dnn::plan::{planner, PlanCache};
 use pcl_dnn::util::bench::{bench, black_box, header};
 
 fn main() {
@@ -79,11 +79,12 @@ fn main() {
 
     // cross-PR bench trajectory: planner vs fixed recipe vs pure data —
     // the CD-DNN is where the gap is widest (FC-dominated, §5.4)
+    let cache = PlanCache::new(PlanCache::default_dir());
     let net = registry::model("cddnn_full").unwrap();
     let platform = registry::platform("endeavor").unwrap();
     let rows = [2u64, 4, 8, 16]
         .iter()
-        .map(|&n| planner::bench_row(&net, &platform, 1024, n, Choice::Auto, 3))
+        .map(|&n| planner::bench_row(&net, &platform, 1024, n, Choice::Auto, 3, Some(&cache)))
         .collect();
     planner::merge_bench_plan("BENCH_plan.json", "fig7_cddnn", rows).unwrap();
     println!("\nwrote BENCH_plan.json (fig7_cddnn)");

@@ -1,0 +1,152 @@
+//! Netsim engine perf harness — the cross-PR trajectory for the
+//! discrete-event fast path. Emits `BENCH_netsim_perf.json`:
+//!
+//! * fig4 fleet DAGs at n ∈ {32, 64, 128}: build wall-ms, run wall-ms,
+//!   tasks simulated/sec for the indexed engine AND for the retained
+//!   reference scheduler on the *same* built DAG (so the speedup column
+//!   is apples-to-apples within one run);
+//! * a netsim node sweep evaluated serially vs in parallel
+//!   (`run_sweep_serial` vs `run_sweep`), wall-ms each.
+//!
+//! The fast path must stay bit-identical to the reference (asserted here
+//! on the n=32 DAG as a smoke check; `tests/engine_oracle.rs` is the
+//! real property suite), so this file is pure measurement.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::experiment::{run_sweep, run_sweep_serial, ExperimentSpec, FleetSimBackend};
+use pcl_dnn::models::zoo;
+use pcl_dnn::netsim::cluster::{build_training_fleet, SimConfig};
+use pcl_dnn::netsim::{collective, reference, FleetConfig};
+use pcl_dnn::plan::PartitionPlan;
+use pcl_dnn::util::json::Json;
+
+fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn main() {
+    println!("=== netsim_perf ===");
+    // clean fabric: same setting the fleet-vs-analytic validations use
+    let mut platform = Platform::cori();
+    platform.fabric.congestion_per_doubling = 0.0;
+    let net = zoo::vgg_a();
+
+    let mut fig4_rows: Vec<Json> = Vec::new();
+    // auto (butterfly-dominated, ~100k tasks) at each size, plus the
+    // ring-pinned ablation of the 128-node point — the O(N^2)-message
+    // DAG (>1M tasks) where the reference full-scan is at its worst
+    let points: &[(u64, collective::Choice)] = &[
+        (32, collective::Choice::Auto),
+        (64, collective::Choice::Auto),
+        (128, collective::Choice::Auto),
+        (128, collective::Choice::Ring),
+    ];
+    for &(nodes, choice) in points {
+        let cfg = SimConfig {
+            nodes,
+            minibatch: 512,
+            iterations: 3,
+            plan: PartitionPlan::paper_recipe(&net, nodes, 512, 1.0),
+            collective: choice,
+        };
+        let fleet = FleetConfig::homogeneous(nodes as usize);
+
+        let t0 = Instant::now();
+        let dag = build_training_fleet(&net, &platform, &cfg, &fleet);
+        let build = t0.elapsed();
+        let tasks = dag.eng.len();
+
+        let t0 = Instant::now();
+        let fast = dag.eng.run();
+        let run = t0.elapsed();
+
+        let t0 = Instant::now();
+        let oracle = reference::run(&dag.eng);
+        let ref_run = t0.elapsed();
+        assert_eq!(fast, oracle, "fig4@{nodes}: fast path diverged from reference");
+
+        let tasks_per_s = tasks as f64 / run.as_secs_f64().max(1e-9);
+        let ref_tasks_per_s = tasks as f64 / ref_run.as_secs_f64().max(1e-9);
+        let tag = match choice {
+            collective::Choice::Ring => "ring",
+            collective::Choice::Butterfly => "butterfly",
+            collective::Choice::Auto => "auto",
+        };
+        println!(
+            "fig4@{nodes:>3} ({tag:>4}): {tasks:>8} tasks | build {:>8.2} ms | run {:>8.2} ms \
+             ({:.2}M tasks/s) | reference {:>9.2} ms ({:.2}M tasks/s) | speedup {:.1}x",
+            ms(build),
+            ms(run),
+            tasks_per_s / 1e6,
+            ms(ref_run),
+            ref_tasks_per_s / 1e6,
+            tasks_per_s / ref_tasks_per_s
+        );
+        let mut row = BTreeMap::new();
+        row.insert("build_ms".to_string(), Json::Num(ms(build)));
+        row.insert("collective".to_string(), Json::Str(tag.to_string()));
+        row.insert("nodes".to_string(), Json::Num(nodes as f64));
+        row.insert("ref_run_ms".to_string(), Json::Num(ms(ref_run)));
+        row.insert("ref_tasks_per_s".to_string(), Json::Num(ref_tasks_per_s));
+        row.insert("run_ms".to_string(), Json::Num(ms(run)));
+        row.insert(
+            "speedup_vs_reference".to_string(),
+            Json::Num(tasks_per_s / ref_tasks_per_s),
+        );
+        row.insert("tasks".to_string(), Json::Num(tasks as f64));
+        row.insert("tasks_per_s".to_string(), Json::Num(tasks_per_s));
+        fig4_rows.push(Json::Obj(row));
+    }
+
+    // sweep parallelism: same spec list through the serial and the
+    // scoped-thread paths (results are bit-identical; only wall differs)
+    let sweep_nodes: Vec<u64> = vec![2, 4, 8, 16, 32];
+    let mut spec = ExperimentSpec::of("netsim_perf_sweep", "vgg_a", "cori", 2, 256);
+    spec.cluster.congestion = Some(0.0);
+    spec.parallelism.iterations = 3;
+
+    let t0 = Instant::now();
+    let serial = run_sweep_serial(&FleetSimBackend, &spec, &sweep_nodes).unwrap();
+    let serial_ms = ms(t0.elapsed());
+    let t0 = Instant::now();
+    let parallel = run_sweep(&FleetSimBackend, &spec, &sweep_nodes).unwrap();
+    let parallel_ms = ms(t0.elapsed());
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "parallel sweep must be bit-identical to serial"
+        );
+    }
+    println!(
+        "sweep x{:?}: serial {serial_ms:.1} ms | parallel {parallel_ms:.1} ms ({:.2}x)",
+        sweep_nodes,
+        serial_ms / parallel_ms.max(1e-9)
+    );
+
+    let mut sweep = BTreeMap::new();
+    sweep.insert(
+        "nodes".to_string(),
+        Json::Arr(sweep_nodes.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    sweep.insert("parallel_ms".to_string(), Json::Num(parallel_ms));
+    sweep.insert("serial_ms".to_string(), Json::Num(serial_ms));
+    sweep.insert(
+        "speedup".to_string(),
+        Json::Num(serial_ms / parallel_ms.max(1e-9)),
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("fig4".to_string(), Json::Arr(fig4_rows));
+    root.insert("sweep".to_string(), Json::Obj(sweep));
+    std::fs::write(
+        "BENCH_netsim_perf.json",
+        format!("{}\n", Json::Obj(root).pretty()),
+    )
+    .unwrap();
+    println!("\nwrote BENCH_netsim_perf.json");
+}

@@ -22,9 +22,19 @@ use super::report::ScalingReport;
 use super::spec::ExperimentSpec;
 
 /// A substrate that can answer an [`ExperimentSpec`].
-pub trait Backend {
+///
+/// `Sync` because sweeps fan points out across scoped threads — all
+/// backends are stateless unit structs, so this costs nothing.
+pub trait Backend: Sync {
     fn name(&self) -> &'static str;
     fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport>;
+
+    /// Whether concurrent `run` calls are safe AND worthwhile. The pure
+    /// simulators are; the runtime backend spawns its own PJRT client +
+    /// worker threads per run, so its sweeps stay serial.
+    fn parallel_sweep_safe(&self) -> bool {
+        true
+    }
 }
 
 /// Registry names accepted by [`backend_by_name`].
@@ -246,6 +256,13 @@ impl Backend for RuntimeBackend {
     fn run(&self, spec: &ExperimentSpec) -> Result<ScalingReport> {
         Ok(run_runtime(spec)?.0)
     }
+
+    fn parallel_sweep_safe(&self) -> bool {
+        // each run spawns a PJRT client and its own worker threads;
+        // concurrent instances would thrash the machine and interleave
+        // training logs
+        false
+    }
 }
 
 /// The runtime backend's full result: the report plus the training
@@ -353,7 +370,31 @@ pub fn train_config(spec: &ExperimentSpec) -> TrainConfig {
 /// O(layers) tasks — negligible next to the N-node run — and keeping
 /// `run` a pure function of the spec is what makes reports comparable
 /// bit-for-bit across call sites (the alias-equivalence guarantee).
+///
+/// Points are independent pure computations, so simulator backends fan
+/// them out across scoped threads (`util::par`; `REPRO_THREADS=1` forces
+/// the serial path). Reports come back in input order and are
+/// bit-identical to [`run_sweep_serial`].
 pub fn run_sweep(
+    backend: &dyn Backend,
+    spec: &ExperimentSpec,
+    nodes: &[u64],
+) -> Result<Vec<ScalingReport>> {
+    if !backend.parallel_sweep_safe() || nodes.len() <= 1 {
+        return run_sweep_serial(backend, spec, nodes);
+    }
+    crate::util::par::parallel_map(nodes, |&n| {
+        let mut s = spec.clone();
+        s.cluster.nodes = n;
+        backend.run(&s)
+    })
+    .into_iter()
+    .collect()
+}
+
+/// [`run_sweep`] pinned to one thread — the timing baseline for the perf
+/// harness and the path non-thread-safe backends always take.
+pub fn run_sweep_serial(
     backend: &dyn Backend,
     spec: &ExperimentSpec,
     nodes: &[u64],
@@ -394,6 +435,19 @@ mod tests {
         assert!((curve[0].speedup.unwrap() - 1.0).abs() < 1e-9);
         for w in curve.windows(2) {
             assert!(w[1].samples_per_s >= w[0].samples_per_s * 0.98);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_serial() {
+        let mut spec = ExperimentSpec::of("t", "vgg_a", "cori", 1, 256);
+        spec.parallelism.iterations = 3;
+        let nodes = [1u64, 2, 4, 8, 16];
+        let par = run_sweep(&FleetSimBackend, &spec, &nodes).unwrap();
+        let ser = run_sweep_serial(&FleetSimBackend, &spec, &nodes).unwrap();
+        assert_eq!(par.len(), ser.len());
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
         }
     }
 

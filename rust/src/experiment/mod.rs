@@ -30,7 +30,7 @@ pub mod spec;
 
 pub use backend::{
     backend_by_name, partition_plan, resolved_platform, run_runtime, run_runtime_with, run_sweep,
-    AnalyticBackend, Backend, FleetSimBackend, RuntimeBackend, BACKENDS,
+    run_sweep_serial, AnalyticBackend, Backend, FleetSimBackend, RuntimeBackend, BACKENDS,
 };
 pub use report::{curve_table, ScalingReport};
 pub use spec::{

@@ -34,7 +34,7 @@ use pcl_dnn::experiment::{
 };
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
-use pcl_dnn::plan::{apply_pins, planner, strategy_name, PartitionPlan};
+use pcl_dnn::plan::{apply_pins, planner, strategy_name, CacheOutcome, PartitionPlan, PlanCache};
 use pcl_dnn::runtime::Runtime;
 use pcl_dnn::trainer;
 use pcl_dnn::util::cli::Opts;
@@ -158,7 +158,7 @@ fn run_spec(opts: &Opts) -> Result<()> {
 }
 
 /// `repro plan --spec <file> [--set k=v,...] [--nodes 8,16,64]
-/// [--validate netsim] [--json] [--out file]
+/// [--validate netsim] [--json] [--out file] [--no-cache]
 /// [--check-golden specs/plans/<fig>.json] [--write-golden file]`
 ///
 /// Derives the paper-style optimal design point for the spec's network:
@@ -167,6 +167,10 @@ fn run_spec(opts: &Opts) -> Result<()> {
 /// the fixed recipe and pure data parallelism. `--validate netsim`
 /// replays the chosen plan on the fleet simulator (clean fabric) and
 /// fails if it disagrees with the analytic cost by more than 5%.
+///
+/// Searches are reused content-addressed from `artifacts/plans/` (see
+/// `plan::cache`; `--no-cache` bypasses both read and write), and a
+/// multi-point `--nodes` list is searched in parallel.
 fn plan_cmd(opts: &Opts) -> Result<()> {
     let path = opts
         .str_opt("spec")
@@ -193,18 +197,41 @@ fn plan_cmd(opts: &Opts) -> Result<()> {
     let net = spec.model.resolve()?;
     let platform = resolved_platform(&spec)?;
     let collective = registry::collective(&spec.collective)?;
+    let cache = if opts.bool_flag("no-cache") {
+        None
+    } else {
+        Some(PlanCache::new(PlanCache::default_dir()))
+    };
+    let input_at = |n: u64| planner::PlannerInput {
+        net: &net,
+        platform: &platform,
+        nodes: n,
+        minibatch: spec.minibatch.global,
+        overlap: spec.parallelism.overlap,
+        collective,
+        iterations: spec.parallelism.iterations.max(2),
+    };
+    // every design point is an independent pure search: fan the --nodes
+    // list out across threads (cache files are per-key, so concurrent
+    // writes never collide)
+    let searches: Vec<(planner::PlanSearch, Option<CacheOutcome>)> =
+        pcl_dnn::util::par::parallel_map(&node_list, |&n| {
+            let input = input_at(n);
+            match &cache {
+                Some(c) => {
+                    let (s, o) = c.plan_cached(spec.model.name(), &input);
+                    (s, Some(o))
+                }
+                None => (planner::plan(&input), None),
+            }
+        });
     let mut out_doc: Vec<Json> = Vec::new();
-    for &n in &node_list {
-        let input = planner::PlannerInput {
-            net: &net,
-            platform: &platform,
-            nodes: n,
-            minibatch: spec.minibatch.global,
-            overlap: spec.parallelism.overlap,
-            collective,
-            iterations: spec.parallelism.iterations.max(2),
-        };
-        let search = planner::plan(&input);
+    for (&n, (search, outcome)) in node_list.iter().zip(&searches) {
+        let input = input_at(n);
+        match outcome {
+            Some(o) => println!("plan cache: {}", o.describe()),
+            None => println!("plan cache: off (--no-cache)"),
+        }
         // explicit spec pins still win over the searched plan
         let chosen = apply_pins(&search.plan, &spec.plan, &net)?;
         println!(

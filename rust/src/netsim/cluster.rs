@@ -15,6 +15,9 @@
 //!   shape the schedule. This is the model that can express stragglers,
 //!   link contention on oversubscribed fabrics, and rejoin stalls — the
 //!   effects the paper's Ethernet/AWS results (§6) are dominated by.
+//!   [`build_training_fleet`] exposes the built DAG so perf harnesses can
+//!   time construction and execution separately (and replay the same DAG
+//!   on the retained reference scheduler).
 //!
 //! Both encode the paper's §3.1 overlap structure:
 //!
@@ -29,6 +32,12 @@
 //!
 //! Steady-state iteration time is measured between consecutive iteration
 //! boundaries after a warm-up iteration.
+//!
+//! DAG-construction hot path: per-member dependency lists and gate lists
+//! live in two reusable [`DepLists`] arenas (no `Vec<Vec<TaskId>>` per
+//! collective), command-queue tails are fixed-size [`Tail`] pairs, and
+//! task labels are interned by the engine — so building a 128-node fig4
+//! iteration allocates O(layers), not O(messages).
 
 use crate::analytic::comm_model::Strategy;
 use crate::analytic::compute_model;
@@ -39,7 +48,7 @@ use crate::models::{Layer, NetDescriptor};
 use crate::plan::{planner, PartitionPlan};
 
 use super::collective::{self, CollectiveKind};
-use super::engine::{Engine, TaskId};
+use super::engine::{DepLists, Engine, Schedule, TaskId};
 use super::fleet::{Fleet, FleetConfig};
 use super::network::ns;
 
@@ -206,12 +215,15 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
     let mut eng = Engine::new();
     // update task of layer i from the previous iteration
     let mut prev_update: Vec<Option<TaskId>> = vec![None; k];
-    let mut iter_end: Vec<TaskId> = Vec::new();
+    // [start, end) task-id range of each iteration (tasks are added in
+    // iteration order, so the ranges are contiguous — this replaces the
+    // old name-prefix scan over every task)
+    let mut iter_ranges: Vec<(usize, usize)> = Vec::with_capacity(cfg.iterations);
 
-    for it in 0..cfg.iterations {
+    for _ in 0..cfg.iterations {
+        let range_start = eng.len();
         // ---------------- forward ----------------
         let mut last_fwd: Option<TaskId> = None;
-        let mut fwd_ids = Vec::with_capacity(k);
         for (i, l) in layers.iter().enumerate() {
             let mut deps: Vec<TaskId> = Vec::new();
             if let Some(p) = last_fwd {
@@ -223,21 +235,15 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
             // model/hybrid layers gather remote activations before compute
             let act_s = act_exchange_s(l, platform, cfg);
             let fwd_dep = if act_s > 0.0 {
-                let a = eng.add(
-                    format!("it{it}.act_fwd.{}", l.name),
-                    COMM,
-                    ns(act_s),
-                    &deps,
-                );
+                let a = eng.add(&format!("act_fwd.{}", l.name), COMM, ns(act_s), &deps);
                 vec![a]
             } else {
                 deps
             };
             let eff_mb = per_layer_mb(l, cfg, mb_node);
             let t = pass_time_s(l, m, eff_mb);
-            let id = eng.add(format!("it{it}.fwd.{}", l.name), COMPUTE, ns(t), &fwd_dep);
+            let id = eng.add(&format!("fwd.{}", l.name), COMPUTE, ns(t), &fwd_dep);
             last_fwd = Some(id);
-            fwd_ids.push(id);
         }
 
         // ---------------- backward (wt-grad before bprop) ----------------
@@ -252,23 +258,23 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
             let eff_mb = per_layer_mb(l, cfg, mb_node);
             let per_pass = pass_time_s(l, m, eff_mb);
             // weight gradient first (enables early comm submission)
-            let wg = eng.add(format!("it{it}.wtgrad.{}", l.name), COMPUTE, ns(per_pass), &[chain]);
+            let wg = eng.add(&format!("wtgrad.{}", l.name), COMPUTE, ns(per_pass), &[chain]);
             // submit-and-forget: gradient exchange on the comm stream
             let ex_s = grad_exchange_s(l, platform, cfg);
             let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
             let ex = if ex_s > 0.0 {
-                eng.add(format!("it{it}.partreduce.{}", l.name), COMM, ns(ex_s), &[wg])
+                eng.add(&format!("partreduce.{}", l.name), COMM, ns(ex_s), &[wg])
             } else {
                 wg
             };
-            let up = eng.add(format!("it{it}.sgd.{}", l.name), COMM, ns(sgd_s), &[ex]);
+            let up = eng.add(&format!("sgd.{}", l.name), COMM, ns(sgd_s), &[ex]);
             update_ids[i] = Some(up);
             // backpropagation (skipped for the first weighted layer)
             if i != first_weighted {
                 let act_s = act_exchange_s(l, platform, cfg);
-                let bp = eng.add(format!("it{it}.bprop.{}", l.name), COMPUTE, ns(per_pass), &[wg]);
+                let bp = eng.add(&format!("bprop.{}", l.name), COMPUTE, ns(per_pass), &[wg]);
                 chain = if act_s > 0.0 {
-                    eng.add(format!("it{it}.act_bwd.{}", l.name), COMM, ns(act_s), &[bp])
+                    eng.add(&format!("act_bwd.{}", l.name), COMM, ns(act_s), &[bp])
                 } else {
                     bp
                 };
@@ -277,19 +283,15 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
             }
         }
         prev_update = update_ids;
-        iter_end.push(chain);
+        iter_ranges.push((range_start, eng.len()));
     }
 
     let sched = eng.run();
     // steady state: last iteration boundary minus the previous one, where
     // an iteration truly ends when its last update lands.
     let iter_finish = |it: usize| -> u64 {
-        let prefix = format!("it{it}.");
-        (0..eng.len())
-            .filter(|&id| eng.task(id).name.starts_with(&prefix))
-            .map(|id| sched.end_ns[id])
-            .max()
-            .unwrap_or(0)
+        let (lo, hi) = iter_ranges[it];
+        (lo..hi).map(|id| sched.end_ns[id]).max().unwrap_or(0)
     };
     let t_last = iter_finish(cfg.iterations - 1);
     let t_prev = iter_finish(cfg.iterations - 2);
@@ -298,11 +300,11 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
     // compute-stream utilization over the steady iteration
     let busy: u64 = (0..eng.len())
         .filter(|&id| {
-            eng.task(id).resource() == COMPUTE
+            eng.resource(id) == COMPUTE
                 && sched.start_ns[id] >= t_prev
                 && sched.end_ns[id] <= t_last
         })
-        .map(|id| eng.task(id).duration_ns)
+        .map(|id| eng.duration_ns(id))
         .sum();
     let util = busy as f64 / (t_last - t_prev).max(1) as f64;
 
@@ -329,99 +331,170 @@ fn per_layer_mb(layer: &Layer, cfg: &SimConfig, mb_node: f64) -> f64 {
 // Full-cluster simulation
 // ---------------------------------------------------------------------
 
-/// Build one collective over `members` (global node ids) with per-member
-/// gate tasks, FIFO-chained onto each member's command queue
-/// (`last_comm`). Returns the per-member completion tasks.
-#[allow(clippy::too_many_arguments)]
-fn run_collective(
-    eng: &mut Engine,
-    fleet: &Fleet,
-    fabric: &FabricSpec,
-    choice: collective::Choice,
-    last_comm: &mut [Vec<TaskId>],
-    label: &str,
-    members: &[usize],
-    bytes: u64,
-    gates: &[Vec<TaskId>],
-    kind: CollectiveKind,
-) -> Vec<TaskId> {
-    let algo = choice.algorithm(fabric, bytes, members.len() as u64);
-    let comm: Vec<usize> = members.iter().map(|&v| fleet.comm_res(v)).collect();
-    let deps: Vec<Vec<TaskId>> = members
-        .iter()
-        .enumerate()
-        .map(|(j, &v)| {
-            let mut d = gates[j].clone();
-            d.extend(last_comm[v].iter().copied());
-            d
-        })
-        .collect();
-    let built = collective::build_collective(
-        eng, &fleet.net, &comm, label, members, bytes, &deps, kind, algo,
-    );
-    for (j, &v) in members.iter().enumerate() {
-        let mut next = vec![built.last_local[j]];
-        if built.done[j] != built.last_local[j] {
-            next.push(built.done[j]);
-        }
-        last_comm[v] = next;
+/// Command-queue tail of one node: the (at most two) tasks subsequent
+/// collectives on that node's comm stream must chain behind. Replaces a
+/// `Vec<TaskId>` per node per exchange.
+#[derive(Debug, Clone, Copy, Default)]
+struct Tail {
+    a: Option<TaskId>,
+    b: Option<TaskId>,
+}
+
+impl Tail {
+    fn one(t: TaskId) -> Tail {
+        Tail { a: Some(t), b: None }
     }
-    built.done
+
+    fn pair(a: TaskId, b: Option<TaskId>) -> Tail {
+        Tail { a: Some(a), b }
+    }
+
+    fn iter(self) -> impl Iterator<Item = TaskId> {
+        self.a.into_iter().chain(self.b)
+    }
 }
 
-/// RS -> strip SGD -> AG over one member set: the §3.4 gradient exchange
-/// as an explicit message schedule. Returns the per-member update task
-/// (the one that releases the next iteration's forward pass).
-#[allow(clippy::too_many_arguments)]
-fn exchange_update(
-    eng: &mut Engine,
-    fleet: &Fleet,
-    fabric: &FabricSpec,
-    choice: collective::Choice,
-    last_comm: &mut [Vec<TaskId>],
-    label: &str,
-    members: &[usize],
-    bytes: u64,
-    wg: &[TaskId],
-    sgd_s: f64,
-) -> Vec<TaskId> {
-    let gates: Vec<Vec<TaskId>> = wg.iter().map(|&g| vec![g]).collect();
-    let rs = run_collective(
-        eng, fleet, fabric, choice, last_comm, label, members, bytes, &gates,
-        CollectiveKind::ReduceScatter,
-    );
-    let sgd: Vec<TaskId> = members
-        .iter()
-        .enumerate()
-        .map(|(j, &v)| {
-            let mut d = vec![rs[j]];
-            d.extend(last_comm[v].iter().copied());
-            let id = eng.add(
-                format!("{label}.sgd.{j}"),
-                fleet.comm_res(v),
-                ns(sgd_s * fleet.time_mult[v]),
-                &d,
+/// A built full-cluster DAG plus the bookkeeping needed to summarize a
+/// schedule: construction and execution are split so perf harnesses can
+/// time them separately and replay the DAG on the reference scheduler.
+#[derive(Debug)]
+pub struct FleetDag {
+    pub eng: Engine,
+    /// Per-iteration candidate end tasks (the iteration is over when the
+    /// last of them retires).
+    iter_ends: Vec<Vec<TaskId>>,
+    /// Recovery stalls: they occupy a compute stream but are idle time.
+    fail_tasks: Vec<TaskId>,
+    nodes: usize,
+    minibatch: u64,
+    iterations: usize,
+}
+
+/// Shared context of the fleet DAG construction: the engine, the fleet
+/// wiring, the per-node command-queue tails and the two reusable
+/// dependency-list arenas (`gates` is indexed by global node id, `deps`
+/// by collective-member position).
+struct DagBuilder<'a> {
+    eng: Engine,
+    fleet: &'a Fleet,
+    fabric: &'a FabricSpec,
+    last_comm: Vec<Tail>,
+    gates: DepLists,
+    deps: DepLists,
+    /// Reusable global-node-indexed id scratch (exchange SGD tasks).
+    node_scratch: Vec<TaskId>,
+    comm_scratch: Vec<usize>,
+}
+
+impl<'a> DagBuilder<'a> {
+    fn new(fleet: &'a Fleet, fabric: &'a FabricSpec) -> DagBuilder<'a> {
+        let n = fleet.cfg.nodes;
+        DagBuilder {
+            eng: Engine::new(),
+            fleet,
+            fabric,
+            last_comm: vec![Tail::default(); n],
+            gates: DepLists::new(),
+            deps: DepLists::new(),
+            node_scratch: vec![0; n],
+            comm_scratch: Vec::with_capacity(n),
+        }
+    }
+
+    /// Reset the gate arena to one single-dependency list per node:
+    /// node `v` gates on `src[v]`.
+    fn gates_single(&mut self, src: &[TaskId]) {
+        self.gates.clear();
+        for &t in src {
+            self.gates.push(t);
+            self.gates.finish_list();
+        }
+    }
+
+    /// Build one collective over `members` (global node ids), gated per
+    /// member on `self.gates.get(v)` plus the member's command-queue
+    /// tail. Returns the per-member completion tasks.
+    fn run_collective(
+        &mut self,
+        choice: collective::Choice,
+        label: &str,
+        members: &[usize],
+        bytes: u64,
+        kind: CollectiveKind,
+    ) -> Vec<TaskId> {
+        let algo = choice.algorithm(self.fabric, bytes, members.len() as u64);
+        self.comm_scratch.clear();
+        self.comm_scratch.extend(members.iter().map(|&v| self.fleet.comm_res(v)));
+        self.deps.clear();
+        for &v in members {
+            for &d in self.gates.get(v) {
+                self.deps.push(d);
+            }
+            for d in self.last_comm[v].iter() {
+                self.deps.push(d);
+            }
+            self.deps.finish_list();
+        }
+        let built = collective::build_collective(
+            &mut self.eng, &self.fleet.net, &self.comm_scratch, label, members, bytes,
+            &self.deps, kind, algo,
+        );
+        for (j, &v) in members.iter().enumerate() {
+            let extra = (built.done[j] != built.last_local[j]).then_some(built.done[j]);
+            self.last_comm[v] = Tail::pair(built.last_local[j], extra);
+        }
+        built.done
+    }
+
+    /// RS -> strip SGD -> AG over one member set: the §3.4 gradient
+    /// exchange as an explicit message schedule. `wg` is indexed by
+    /// global node id. Returns the per-member update task (the one that
+    /// releases the next iteration's forward pass).
+    fn exchange_update(
+        &mut self,
+        choice: collective::Choice,
+        label: &str,
+        members: &[usize],
+        bytes: u64,
+        wg: &[TaskId],
+        sgd_s: f64,
+    ) -> Vec<TaskId> {
+        self.gates_single(wg);
+        let rs = self.run_collective(choice, label, members, bytes, CollectiveKind::ReduceScatter);
+        let sgd_label = format!("{label}.sgd");
+        let mut sgd_global = std::mem::take(&mut self.node_scratch);
+        for (j, &v) in members.iter().enumerate() {
+            let mut d: [TaskId; 3] = [0; 3];
+            d[0] = rs[j];
+            let mut len = 1;
+            for t in self.last_comm[v].iter() {
+                d[len] = t;
+                len += 1;
+            }
+            let id = self.eng.add(
+                &sgd_label,
+                self.fleet.comm_res(v),
+                ns(sgd_s * self.fleet.time_mult[v]),
+                &d[..len],
             );
-            last_comm[v] = vec![id];
-            id
-        })
-        .collect();
-    let ag_gates: Vec<Vec<TaskId>> = sgd.iter().map(|&s| vec![s]).collect();
-    run_collective(
-        eng, fleet, fabric, choice, last_comm, label, members, bytes, &ag_gates,
-        CollectiveKind::Allgather,
-    )
+            self.last_comm[v] = Tail::one(id);
+            sgd_global[v] = id;
+        }
+        self.gates_single(&sgd_global);
+        self.node_scratch = sgd_global;
+        self.run_collective(choice, label, members, bytes, CollectiveKind::Allgather)
+    }
 }
 
-/// Simulate `cfg.iterations` of synchronous SGD across every node of the
-/// fleet, with collectives expanded to per-message tasks over contended
-/// links. `cfg.nodes` must equal `fleet_cfg.nodes`.
-pub fn simulate_training_fleet(
+/// Build the full-cluster DAG for `cfg.iterations` of synchronous SGD:
+/// every node of the fleet, with collectives expanded to per-message
+/// tasks over contended links. `cfg.nodes` must equal `fleet_cfg.nodes`.
+pub fn build_training_fleet(
     net: &NetDescriptor,
     platform: &Platform,
     cfg: &SimConfig,
     fleet_cfg: &FleetConfig,
-) -> FleetSimResult {
+) -> FleetDag {
     assert!(cfg.iterations >= 2);
     assert_eq!(
         cfg.nodes as usize, fleet_cfg.nodes,
@@ -441,11 +514,9 @@ pub fn simulate_training_fleet(
     let layers = &net.layers;
     let k = layers.len();
 
-    let mut eng = Engine::new();
+    let mut b = DagBuilder::new(&fleet, fabric);
     // [node][layer] update task of the previous iteration
     let mut prev_update: Vec<Vec<Option<TaskId>>> = vec![vec![None; k]; n];
-    // per-node command-queue tail (FIFO chaining of collectives)
-    let mut last_comm: Vec<Vec<TaskId>> = vec![Vec::new(); n];
     // per-iteration candidate end tasks
     let mut iter_ends: Vec<Vec<TaskId>> = Vec::with_capacity(cfg.iterations);
     // each node's backward-chain end of the previous iteration
@@ -464,8 +535,8 @@ pub fn simulate_training_fleet(
         if fleet_cfg.fail_at == Some(it) {
             let v = fleet_cfg.fail_node.min(n - 1);
             let deps: Vec<TaskId> = prev_chain[v].into_iter().collect();
-            let id = eng.add(
-                format!("i{it}.fail.n{v}"),
+            let id = b.eng.add(
+                "fail",
                 fleet.compute_res(v),
                 ns(fleet_cfg.recovery_s),
                 &deps,
@@ -479,63 +550,57 @@ pub fn simulate_training_fleet(
         for (i, l) in layers.iter().enumerate() {
             let strat = strategy_for(l, cfg);
             let choice = choice_for(l, cfg);
-            let mut gates: Vec<Vec<TaskId>> = Vec::with_capacity(n);
+            b.gates.clear();
             for v in 0..n {
-                let mut d = Vec::new();
                 if let Some(p) = last_fwd[v] {
-                    d.push(p);
+                    b.gates.push(p);
                 }
                 if let Some(u) = prev_update[v][i] {
-                    d.push(u);
+                    b.gates.push(u);
                 }
                 if i == 0 {
                     if let Some(s) = stall[v] {
-                        d.push(s);
+                        b.gates.push(s);
                     }
                 }
-                gates.push(d);
+                b.gates.finish_list();
             }
             // model/hybrid layers gather remote activations before compute
-            let fwd_gate: Vec<Vec<TaskId>> = match strat {
+            let fwd_src: Option<Vec<TaskId>> = match strat {
                 Strategy::Model if n > 1 => {
                     let bytes = 4 * l.in_elems() * cfg.minibatch;
-                    let done = run_collective(
-                        &mut eng, &fleet, fabric, choice, &mut last_comm,
-                        &format!("i{it}.af{i}"), &all_nodes, bytes, &gates,
+                    Some(b.run_collective(
+                        choice, &format!("af{i}"), &all_nodes, bytes,
                         CollectiveKind::Allgather,
-                    );
-                    done.into_iter().map(|d| vec![d]).collect()
+                    ))
                 }
                 Strategy::Hybrid { groups } if n > 1 => {
                     let topo = GroupTopology::new(n, groups as usize);
                     let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
-                    let mut out: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+                    let mut out: Vec<TaskId> = vec![0; n];
                     for g in 0..topo.groups {
                         let members = topo.group_members(g);
-                        let ggates: Vec<Vec<TaskId>> =
-                            members.iter().map(|&v| gates[v].clone()).collect();
-                        let done = run_collective(
-                            &mut eng, &fleet, fabric, choice, &mut last_comm,
-                            &format!("i{it}.af{i}.g{g}"), &members, bytes, &ggates,
+                        let done = b.run_collective(
+                            choice, &format!("af{i}.g{g}"), &members, bytes,
                             CollectiveKind::Allgather,
                         );
                         for (j, &v) in members.iter().enumerate() {
-                            out[v] = vec![done[j]];
+                            out[v] = done[j];
                         }
                     }
-                    out
+                    Some(out)
                 }
-                _ => gates,
+                _ => None,
             };
             let eff_mb = per_layer_mb(l, cfg, mb_node);
             let base_t = pass_time_s(l, m, eff_mb);
+            let fwd_label = format!("f{i}");
             for v in 0..n {
-                let id = eng.add(
-                    format!("i{it}.f{i}.n{v}"),
-                    fleet.compute_res(v),
-                    ns(base_t * fleet.time_mult[v]),
-                    &fwd_gate[v],
-                );
+                let dur = ns(base_t * fleet.time_mult[v]);
+                let id = match &fwd_src {
+                    Some(done) => b.eng.add(&fwd_label, fleet.compute_res(v), dur, &[done[v]]),
+                    None => b.eng.add(&fwd_label, fleet.compute_res(v), dur, b.gates.get(v)),
+                };
                 last_fwd[v] = Some(id);
             }
         }
@@ -555,10 +620,11 @@ pub fn simulate_training_fleet(
             let eff_mb = per_layer_mb(l, cfg, mb_node);
             let per_pass = pass_time_s(l, m, eff_mb);
             // weight gradient first (enables early comm submission)
+            let wg_label = format!("w{i}");
             let wg: Vec<TaskId> = (0..n)
                 .map(|v| {
-                    eng.add(
-                        format!("i{it}.w{i}.n{v}"),
+                    b.eng.add(
+                        &wg_label,
                         fleet.compute_res(v),
                         ns(per_pass * fleet.time_mult[v]),
                         &[chain[v]],
@@ -567,9 +633,8 @@ pub fn simulate_training_fleet(
                 .collect();
             let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
             let updates: Vec<TaskId> = match strat {
-                Strategy::Data if n > 1 => exchange_update(
-                    &mut eng, &fleet, fabric, choice, &mut last_comm,
-                    &format!("i{it}.x{i}"), &all_nodes, l.weight_bytes(), &wg, sgd_s,
+                Strategy::Data if n > 1 => b.exchange_update(
+                    choice, &format!("x{i}"), &all_nodes, l.weight_bytes(), &wg, sgd_s,
                 ),
                 Strategy::Hybrid { groups } if n > 1 => {
                     // data-parallel exchange of the 1/(N/G) weight shard
@@ -579,10 +644,8 @@ pub fn simulate_training_fleet(
                     let mut out: Vec<TaskId> = vec![0; n];
                     for r in 0..topo.group_size() {
                         let members = topo.replica_set(r);
-                        let mwg: Vec<TaskId> = members.iter().map(|&v| wg[v]).collect();
-                        let done = exchange_update(
-                            &mut eng, &fleet, fabric, choice, &mut last_comm,
-                            &format!("i{it}.x{i}.r{r}"), &members, shard, &mwg, sgd_s,
+                        let done = b.exchange_update(
+                            choice, &format!("x{i}.r{r}"), &members, shard, &wg, sgd_s,
                         );
                         for (j, &v) in members.iter().enumerate() {
                             out[v] = done[j];
@@ -593,17 +656,23 @@ pub fn simulate_training_fleet(
                 _ => {
                     // no weight exchange (model parallel or single node):
                     // local SGD on the comm stream
+                    let sgd_label = format!("sgd{i}");
                     (0..n)
                         .map(|v| {
-                            let mut d = vec![wg[v]];
-                            d.extend(last_comm[v].iter().copied());
-                            let id = eng.add(
-                                format!("i{it}.sgd{i}.n{v}"),
+                            let mut d: [TaskId; 3] = [0; 3];
+                            d[0] = wg[v];
+                            let mut len = 1;
+                            for t in b.last_comm[v].iter() {
+                                d[len] = t;
+                                len += 1;
+                            }
+                            let id = b.eng.add(
+                                &sgd_label,
                                 fleet.comm_res(v),
                                 ns(sgd_s * fleet.time_mult[v]),
-                                &d,
+                                &d[..len],
                             );
-                            last_comm[v] = vec![id];
+                            b.last_comm[v] = Tail::one(id);
                             id
                         })
                         .collect()
@@ -615,10 +684,11 @@ pub fn simulate_training_fleet(
             iter_tail.extend(updates.iter().copied());
             // backpropagation (skipped for the first weighted layer)
             if i != first_weighted {
+                let bp_label = format!("b{i}");
                 let bp: Vec<TaskId> = (0..n)
                     .map(|v| {
-                        eng.add(
-                            format!("i{it}.b{i}.n{v}"),
+                        b.eng.add(
+                            &bp_label,
                             fleet.compute_res(v),
                             ns(per_pass * fleet.time_mult[v]),
                             &[wg[v]],
@@ -629,10 +699,9 @@ pub fn simulate_training_fleet(
                 chain = match strat {
                     Strategy::Model if n > 1 => {
                         let bytes = 4 * l.in_elems() * cfg.minibatch;
-                        let bgates: Vec<Vec<TaskId>> = bp.iter().map(|&b| vec![b]).collect();
-                        run_collective(
-                            &mut eng, &fleet, fabric, choice, &mut last_comm,
-                            &format!("i{it}.ab{i}"), &all_nodes, bytes, &bgates,
+                        b.gates_single(&bp);
+                        b.run_collective(
+                            choice, &format!("ab{i}"), &all_nodes, bytes,
                             CollectiveKind::Allgather,
                         )
                     }
@@ -640,13 +709,11 @@ pub fn simulate_training_fleet(
                         let topo = GroupTopology::new(n, groups as usize);
                         let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
                         let mut out: Vec<TaskId> = vec![0; n];
+                        b.gates_single(&bp);
                         for g in 0..topo.groups {
                             let members = topo.group_members(g);
-                            let bgates: Vec<Vec<TaskId>> =
-                                members.iter().map(|&v| vec![bp[v]]).collect();
-                            let done = run_collective(
-                                &mut eng, &fleet, fabric, choice, &mut last_comm,
-                                &format!("i{it}.ab{i}.g{g}"), &members, bytes, &bgates,
+                            let done = b.run_collective(
+                                choice, &format!("ab{i}.g{g}"), &members, bytes,
                                 CollectiveKind::Allgather,
                             );
                             for (j, &v) in members.iter().enumerate() {
@@ -669,26 +736,38 @@ pub fn simulate_training_fleet(
         iter_ends.push(iter_tail);
     }
 
-    let sched = eng.run();
+    FleetDag {
+        eng: b.eng,
+        iter_ends,
+        fail_tasks,
+        nodes: n,
+        minibatch: cfg.minibatch,
+        iterations: cfg.iterations,
+    }
+}
+
+/// Steady-state summary of one executed fleet schedule.
+pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
+    let n = dag.nodes;
     let iter_finish = |it: usize| -> u64 {
-        iter_ends[it].iter().map(|&id| sched.end_ns[id]).max().unwrap_or(0)
+        dag.iter_ends[it].iter().map(|&id| sched.end_ns[id]).max().unwrap_or(0)
     };
-    let t_last = iter_finish(cfg.iterations - 1);
-    let t_prev = iter_finish(cfg.iterations - 2);
+    let t_last = iter_finish(dag.iterations - 1);
+    let t_prev = iter_finish(dag.iterations - 2);
     let iter_s = ((t_last - t_prev) as f64 / 1e9).max(1e-12);
 
     // per-node compute utilization over the steady iteration (recovery
     // stalls hold the stream but are idle time, not work)
     let mut busy = vec![0u64; n];
-    for id in 0..eng.len() {
-        let r = eng.task(id).resource();
+    for id in 0..dag.eng.len() {
+        let r = dag.eng.resource(id);
         if r < 2 * n
             && r % 2 == 0
             && sched.start_ns[id] >= t_prev
             && sched.end_ns[id] <= t_last
-            && !fail_tasks.contains(&id)
+            && !dag.fail_tasks.contains(&id)
         {
-            busy[r / 2] += eng.task(id).duration_ns;
+            busy[r / 2] += dag.eng.duration_ns(id);
         }
     }
     let window = (t_last - t_prev).max(1) as f64;
@@ -697,13 +776,27 @@ pub fn simulate_training_fleet(
     let min = utils.iter().cloned().fold(f64::INFINITY, f64::min);
 
     FleetSimResult {
-        nodes: cfg.nodes,
+        nodes: n as u64,
         iteration_s: iter_s,
-        images_per_s: cfg.minibatch as f64 / iter_s,
+        images_per_s: dag.minibatch as f64 / iter_s,
         mean_compute_utilization: mean,
         min_compute_utilization: min,
-        tasks: eng.len(),
+        tasks: dag.eng.len(),
     }
+}
+
+/// Simulate `cfg.iterations` of synchronous SGD across every node of the
+/// fleet, with collectives expanded to per-message tasks over contended
+/// links. `cfg.nodes` must equal `fleet_cfg.nodes`.
+pub fn simulate_training_fleet(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    fleet_cfg: &FleetConfig,
+) -> FleetSimResult {
+    let dag = build_training_fleet(net, platform, cfg, fleet_cfg);
+    let sched = dag.eng.run();
+    summarize_fleet(&dag, &sched)
 }
 
 /// Sweep node counts and produce a scaling curve (speedup vs the 1-node
@@ -874,5 +967,18 @@ mod tests {
         let b = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
         assert_eq!(a.iteration_s, b.iteration_s);
         assert_eq!(a.tasks, b.tasks);
+    }
+
+    #[test]
+    fn fleet_dag_replays_identically_on_the_reference_engine() {
+        // the fleet DAG is the real workload the oracle must agree on —
+        // not just random graphs
+        let p = Platform::aws();
+        let cfg = SimConfig { iterations: 3, ..SimConfig::recipe(&overfeat_fast(), 4, 256) };
+        let fc = crate::netsim::FleetConfig::homogeneous(4);
+        let dag = build_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
+        let fast = dag.eng.run();
+        let oracle = crate::netsim::reference::run(&dag.eng);
+        assert_eq!(fast, oracle);
     }
 }

@@ -21,7 +21,7 @@
 
 use crate::analytic::FabricSpec;
 
-use super::engine::{Engine, TaskId};
+use super::engine::{DepLists, Engine, TaskId};
 use super::network::{ns, Network};
 
 /// Largest power of two <= n (n >= 1).
@@ -204,11 +204,12 @@ pub struct BuiltCollective {
 ///
 /// Each message occupies the sender's comm stream (`comm_res`), its NIC
 /// tx port, the receiver's rx port, and any shared fabric channels on the
-/// route. `deps[j]` gates member `j`'s participation (e.g. its wt-grad
-/// task plus the previous collective on its command queue); a per-member
-/// setup task charging the fabric's software latency (SWlat) precedes the
-/// first message. On a homogeneous contention-free fabric the resulting
-/// makespan equals the α-β closed form of the same algorithm.
+/// route. `deps.get(j)` gates member `j`'s participation (e.g. its
+/// wt-grad task plus the previous collective on its command queue); a
+/// per-member setup task charging the fabric's software latency (SWlat)
+/// precedes the first message. On a homogeneous contention-free fabric
+/// the resulting makespan equals the α-β closed form of the same
+/// algorithm.
 #[allow(clippy::too_many_arguments)]
 pub fn build_collective(
     eng: &mut Engine,
@@ -217,7 +218,7 @@ pub fn build_collective(
     label: &str,
     group: &[usize],
     bytes: u64,
-    deps: &[Vec<TaskId>],
+    deps: &DepLists,
     kind: CollectiveKind,
     algo: Algorithm,
 ) -> BuiltCollective {
@@ -228,24 +229,19 @@ pub fn build_collective(
         // no communication: a zero-duration marker keeps the chaining
         // structure uniform for callers
         let id = eng.add(
-            format!("{label}.{}.noop", kind.tag()),
+            &format!("{label}.{}.noop", kind.tag()),
             comm_res[0],
             0,
-            &deps[0],
+            deps.get(0),
         );
         return BuiltCollective { done: vec![id], last_local: vec![id] };
     }
 
-    // per-member software setup (SWlat) on the member's comm stream
+    // per-member software setup (SWlat) on the member's comm stream; one
+    // interned label shared by the whole group
+    let sw_label = format!("{label}.{}.sw", kind.tag());
     let setup: Vec<TaskId> = (0..m)
-        .map(|j| {
-            eng.add(
-                format!("{label}.{}.sw.{j}", kind.tag()),
-                comm_res[j],
-                ns(net.sw_latency_s),
-                &deps[j],
-            )
-        })
+        .map(|j| eng.add(&sw_label, comm_res[j], ns(net.sw_latency_s), deps.get(j)))
         .collect();
 
     match algo {
@@ -273,29 +269,28 @@ fn build_ring(
     let m = group.len();
     let chunk = bytes as f64 / m as f64;
     let mut last: Vec<TaskId> = setup.to_vec();
+    let mut cur: Vec<TaskId> = Vec::with_capacity(m);
     for s in 0..m - 1 {
-        let mut cur = Vec::with_capacity(m);
+        // one interned label per step, shared by all m messages
+        let step_label = format!("{label}.{}{s}", kind.tag());
+        cur.clear();
         for j in 0..m {
             let dst = (j + 1) % m;
             let prev = (j + m - 1) % m;
             let (route, dur) = net.message(group[j], group[dst], chunk);
-            let mut resources = Vec::with_capacity(route.len() + 1);
-            resources.push(comm_res[j]);
-            resources.extend(route);
-            let task_deps: Vec<TaskId> = if s == 0 {
-                vec![last[j]]
+            let mut resources = [0usize; 5];
+            resources[0] = comm_res[j];
+            let links = route.as_slice();
+            resources[1..1 + links.len()].copy_from_slice(links);
+            let resources = &resources[..1 + links.len()];
+            let id = if s == 0 {
+                eng.add_multi(&step_label, resources, dur, &[last[j]])
             } else {
-                vec![last[j], last[prev]]
+                eng.add_multi(&step_label, resources, dur, &[last[j], last[prev]])
             };
-            let id = eng.add_multi(
-                format!("{label}.{}{s}.{j}", kind.tag()),
-                &resources,
-                dur,
-                &task_deps,
-            );
             cur.push(id);
         }
-        last = cur;
+        std::mem::swap(&mut last, &mut cur);
     }
     // member j's result is final once the last incoming chunk (sent by
     // j-1 in the final step) lands
@@ -323,6 +318,7 @@ fn build_butterfly(
     assert!(m.is_power_of_two(), "butterfly schedule needs a power-of-two group, got {m}");
     let rounds = m.trailing_zeros() as usize;
     let mut last: Vec<TaskId> = setup.to_vec();
+    let mut cur: Vec<TaskId> = Vec::with_capacity(m);
     let mut last_partner: Vec<usize> = (0..m).collect(); // self: no round yet
     for k in 0..rounds {
         let (dist, size) = match kind {
@@ -335,29 +331,29 @@ fn build_butterfly(
                 (1usize << k, bytes as f64 * (1u64 << k) as f64 / m as f64)
             }
         };
-        let mut cur = Vec::with_capacity(m);
+        // one interned label per round, shared by all m messages
+        let round_label = format!("{label}.{}{k}", kind.tag());
+        cur.clear();
         for j in 0..m {
             let partner = j ^ dist;
             let (route, dur) = net.message(group[j], group[partner], size);
-            let mut resources = Vec::with_capacity(route.len() + 1);
-            resources.push(comm_res[j]);
-            resources.extend(route);
-            let task_deps: Vec<TaskId> = if k == 0 {
-                vec![last[j]]
+            let mut resources = [0usize; 5];
+            resources[0] = comm_res[j];
+            let links = route.as_slice();
+            resources[1..1 + links.len()].copy_from_slice(links);
+            let resources = &resources[..1 + links.len()];
+            let id = if k == 0 {
+                eng.add_multi(&round_label, resources, dur, &[last[j]])
             } else {
                 // own previous send + the message received last round
-                vec![last[j], last[last_partner[j]]]
+                eng.add_multi(&round_label, resources, dur, &[last[j], last[last_partner[j]]])
             };
-            let id = eng.add_multi(
-                format!("{label}.{}{k}.{j}", kind.tag()),
-                &resources,
-                dur,
-                &task_deps,
-            );
             cur.push(id);
         }
-        last_partner = (0..m).map(|j| j ^ dist).collect();
-        last = cur;
+        for (j, p) in last_partner.iter_mut().enumerate() {
+            *p = j ^ dist;
+        }
+        std::mem::swap(&mut last, &mut cur);
     }
     let done: Vec<TaskId> = (0..m).map(|j| last[last_partner[j]]).collect();
     BuiltCollective { done, last_local: last }
@@ -449,14 +445,17 @@ mod tests {
     }
 
     /// Contention-free network + engine harness for schedule builds.
-    fn harness(nodes: usize) -> (Engine, Network, Vec<usize>, Vec<usize>, Vec<Vec<TaskId>>) {
+    fn harness(nodes: usize) -> (Engine, Network, Vec<usize>, Vec<usize>, DepLists) {
         let mut f = fdr();
         f.congestion_per_doubling = 0.0;
         let net = Network::new(Topology::FullySwitched, nodes, &f, 2 * nodes);
         let eng = Engine::new();
         let comm: Vec<usize> = (0..nodes).map(|v| 2 * v + 1).collect();
         let group: Vec<usize> = (0..nodes).collect();
-        let deps: Vec<Vec<TaskId>> = vec![Vec::new(); nodes];
+        let mut deps = DepLists::new();
+        for _ in 0..nodes {
+            deps.push_list([]);
+        }
         (eng, net, comm, group, deps)
     }
 
@@ -512,8 +511,14 @@ mod tests {
         let (mut eng, net, comm, group, _) = harness(n);
         let bytes = 16u64 << 20;
         let stall = eng.add("stall", 0, ns(0.5), &[]); // 500 ms on node 0's compute
-        let deps: Vec<Vec<TaskId>> =
-            (0..n).map(|j| if j == 0 { vec![stall] } else { Vec::new() }).collect();
+        let mut deps = DepLists::new();
+        for j in 0..n {
+            if j == 0 {
+                deps.push_list([stall]);
+            } else {
+                deps.push_list([]);
+            }
+        }
         let built = build_collective(
             &mut eng, &net, &comm, "t", &group, bytes, &deps,
             CollectiveKind::ReduceScatter, Algorithm::Ring,
@@ -526,8 +531,10 @@ mod tests {
     #[test]
     fn single_member_collective_is_free() {
         let (mut eng, net, comm, _, _) = harness(2);
+        let mut deps = DepLists::new();
+        deps.push_list([]);
         let built = build_collective(
-            &mut eng, &net, &comm[..1], "t", &[0], 1 << 20, &[Vec::new()],
+            &mut eng, &net, &comm[..1], "t", &[0], 1 << 20, &deps,
             CollectiveKind::Allgather, Algorithm::Ring,
         );
         let sched = eng.run();

@@ -12,37 +12,40 @@
 //!
 //! Scheduling is work-conserving greedy in (ready-time, task-id) order:
 //! when a task's dependencies complete it joins the ready set stamped
-//! with that time; at every event the ready set is scanned in order and
-//! every task whose full resource set is idle starts. For the
-//! single-resource task graphs the representative-node simulator builds,
-//! this is exactly the per-resource FIFO the previous engine implemented
-//! (ready order with id tie-break), so calibrated results are unchanged.
+//! with that time; at every event the startable ready tasks are scanned
+//! in that order and every task whose full resource set is idle starts.
 //! Because a task acquires all of its resources atomically (no partial
 //! hold-and-wait), the schedule is deadlock-free by construction, and it
 //! is bit-identical across runs for a fixed task list — the determinism
 //! behind Fig 5's "distributed = serial" equivalence argument.
+//!
+//! ## Fast path
+//!
+//! The engine stores the DAG in flat CSR-style arrays — one shared arena
+//! for dependencies and one for resource sets, with interned labels
+//! instead of a `String` per task — and dispatches through per-resource
+//! ready queues instead of rescanning the whole ready set at every
+//! completion event:
+//!
+//! * a ready task that cannot start immediately is parked in the queue of
+//!   **every** resource it needs (multi-resource tasks join each queue,
+//!   guarded by a started bitmap so a task that starts via one queue is
+//!   skipped in the others);
+//! * each running task registers a `(end_time, resource)` free event per
+//!   resource it holds; a dispatch at time `t` only re-examines the
+//!   queues of resources whose free events have matured (`end <= t`),
+//!   which is exactly the set of waiters whose blocking state can have
+//!   changed — everything else stays parked untouched;
+//! * candidates from those queues plus the newly-ready tasks are merged
+//!   in global (ready-time, id) order and started greedily against live
+//!   `busy_until` state, which reproduces the reference full-scan
+//!   semantics bit-for-bit (`super::reference` is the retained oracle;
+//!   `tests/engine_oracle.rs` proves the equivalence on randomized
+//!   multi-resource DAGs).
 
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::{BinaryHeap, HashMap};
 
 pub type TaskId = usize;
-
-/// A unit of work bound to a set of unary resources.
-#[derive(Debug, Clone)]
-pub struct Task {
-    pub name: String,
-    /// Unary resources held simultaneously for the whole duration. The
-    /// first entry is the home stream; the rest are links etc.
-    pub resources: Vec<usize>,
-    pub duration_ns: u64,
-    pub deps: Vec<TaskId>,
-}
-
-impl Task {
-    /// Home resource (first of the resource set).
-    pub fn resource(&self) -> usize {
-        self.resources[0]
-    }
-}
 
 /// Simulation output: per-task start/end and the makespan.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -58,138 +61,377 @@ impl Schedule {
     }
 }
 
-/// Task-graph builder + runner.
-#[derive(Debug, Default)]
+/// Reusable per-member dependency lists backed by one shared arena — the
+/// DAG builders' replacement for a `Vec<Vec<TaskId>>` per collective
+/// (`clear` + refill recycles the allocation across layers/iterations).
+#[derive(Debug, Clone)]
+pub struct DepLists {
+    items: Vec<TaskId>,
+    offs: Vec<u32>,
+}
+
+impl Default for DepLists {
+    fn default() -> Self {
+        DepLists::new()
+    }
+}
+
+impl DepLists {
+    pub fn new() -> Self {
+        DepLists { items: Vec::new(), offs: vec![0] }
+    }
+
+    /// Drop all lists, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.offs.truncate(1);
+    }
+
+    /// Append one dependency to the currently-open list.
+    pub fn push(&mut self, dep: TaskId) {
+        self.items.push(dep);
+    }
+
+    /// Close the currently-open list (it becomes list `len() - 1`).
+    pub fn finish_list(&mut self) {
+        self.offs.push(self.items.len() as u32);
+    }
+
+    /// Append a whole list in one call.
+    pub fn push_list(&mut self, deps: impl IntoIterator<Item = TaskId>) {
+        self.items.extend(deps);
+        self.finish_list();
+    }
+
+    /// Number of closed lists.
+    pub fn len(&self) -> usize {
+        self.offs.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, j: usize) -> &[TaskId] {
+        &self.items[self.offs[j] as usize..self.offs[j + 1] as usize]
+    }
+}
+
+/// Word-per-64 bitmap guarding "already started" checks in the
+/// per-resource queues.
+#[derive(Debug)]
+struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    fn with_len(n: usize) -> Self {
+        BitSet { words: vec![0; n.div_ceil(64)] }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        self.words[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize) {
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+}
+
+/// Task-graph builder + runner (CSR task storage, see module docs).
+#[derive(Debug)]
 pub struct Engine {
-    tasks: Vec<Task>,
     n_resources: usize,
+    durations: Vec<u64>,
+    /// Resource sets, CSR: task `i` holds `res_arena[res_off[i]..res_off[i+1]]`.
+    res_off: Vec<u32>,
+    res_arena: Vec<usize>,
+    /// Dependencies, CSR (same layout).
+    dep_off: Vec<u32>,
+    dep_arena: Vec<TaskId>,
+    /// Interned label per task (labels repeat across iterations/members).
+    label_of: Vec<u32>,
+    label_pool: Vec<String>,
+    label_index: HashMap<String, u32>,
+    /// Scratch for deduping large resource sets without allocating.
+    dedup_scratch: Vec<usize>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
 }
 
 impl Engine {
     pub fn new() -> Self {
-        Engine::default()
+        Engine {
+            n_resources: 0,
+            durations: Vec::new(),
+            res_off: vec![0],
+            res_arena: Vec::new(),
+            dep_off: vec![0],
+            dep_arena: Vec::new(),
+            label_of: Vec::new(),
+            label_pool: Vec::new(),
+            label_index: HashMap::new(),
+            dedup_scratch: Vec::new(),
+        }
     }
 
     /// Add a single-resource task; returns its id. Dependencies must
     /// already exist (the DAG is built in topological order).
-    pub fn add(&mut self, name: impl Into<String>, resource: usize, duration_ns: u64,
+    pub fn add(&mut self, label: &str, resource: usize, duration_ns: u64,
                deps: &[TaskId]) -> TaskId {
-        self.add_multi(name, &[resource], duration_ns, deps)
+        self.add_multi(label, &[resource], duration_ns, deps)
     }
 
     /// Add a task occupying every resource in `resources` at once (e.g. a
     /// message holding sender tx + receiver rx + a shared uplink).
-    pub fn add_multi(&mut self, name: impl Into<String>, resources: &[usize],
-                     duration_ns: u64, deps: &[TaskId]) -> TaskId {
-        let id = self.tasks.len();
+    pub fn add_multi(&mut self, label: &str, resources: &[usize], duration_ns: u64,
+                     deps: &[TaskId]) -> TaskId {
+        let id = self.durations.len();
         for &d in deps {
             assert!(d < id, "dependency {d} of task {id} does not exist yet");
         }
         assert!(!resources.is_empty(), "task {id} needs at least one resource");
-        // order-preserving dedup: the first entry stays the home resource
-        let mut res: Vec<usize> = Vec::with_capacity(resources.len());
-        for &r in resources {
-            if !res.contains(&r) {
-                res.push(r);
+        // order-preserving dedup straight into the shared arena: the first
+        // entry stays the home resource. Small sets (the 1-3 resource
+        // common case) use an in-place window scan — no allocation, no
+        // O(k^2) blowup for the rare large set, which goes through a
+        // sorted scratch instead.
+        let start = self.res_arena.len();
+        if resources.len() <= 8 {
+            for &r in resources {
+                if !self.res_arena[start..].contains(&r) {
+                    self.res_arena.push(r);
+                }
+                self.n_resources = self.n_resources.max(r + 1);
             }
-            self.n_resources = self.n_resources.max(r + 1);
+        } else {
+            self.dedup_scratch.clear();
+            for &r in resources {
+                match self.dedup_scratch.binary_search(&r) {
+                    Ok(_) => {}
+                    Err(pos) => {
+                        self.dedup_scratch.insert(pos, r);
+                        self.res_arena.push(r);
+                    }
+                }
+                self.n_resources = self.n_resources.max(r + 1);
+            }
         }
-        self.tasks.push(Task {
-            name: name.into(),
-            resources: res,
-            duration_ns,
-            deps: deps.to_vec(),
-        });
+        self.res_off.push(self.res_arena.len() as u32);
+        self.dep_arena.extend_from_slice(deps);
+        self.dep_off.push(self.dep_arena.len() as u32);
+        let lid = match self.label_index.get(label) {
+            Some(&i) => i,
+            None => {
+                let i = self.label_pool.len() as u32;
+                self.label_index.insert(label.to_string(), i);
+                self.label_pool.push(label.to_string());
+                i
+            }
+        };
+        self.label_of.push(lid);
+        self.durations.push(duration_ns);
         id
     }
 
     pub fn len(&self) -> usize {
-        self.tasks.len()
+        self.durations.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.tasks.is_empty()
+        self.durations.is_empty()
     }
 
     pub fn n_resources(&self) -> usize {
         self.n_resources
     }
 
-    pub fn task(&self, id: TaskId) -> &Task {
-        &self.tasks[id]
+    /// Interned label of a task (not necessarily unique — builders share
+    /// labels across iterations and collective members).
+    pub fn label(&self, id: TaskId) -> &str {
+        &self.label_pool[self.label_of[id] as usize]
+    }
+
+    /// Full resource set of a task (home resource first).
+    pub fn resources(&self, id: TaskId) -> &[usize] {
+        &self.res_arena[self.res_off[id] as usize..self.res_off[id + 1] as usize]
+    }
+
+    /// Home resource (first of the resource set).
+    pub fn resource(&self, id: TaskId) -> usize {
+        self.res_arena[self.res_off[id] as usize]
+    }
+
+    pub fn duration_ns(&self, id: TaskId) -> u64 {
+        self.durations[id]
+    }
+
+    pub fn deps(&self, id: TaskId) -> &[TaskId] {
+        &self.dep_arena[self.dep_off[id] as usize..self.dep_off[id + 1] as usize]
+    }
+
+    /// Dependents of every task, CSR (built by counting sort so each
+    /// task's dependents are sorted ascending — the order the dispatch
+    /// tie-break relies on).
+    pub(crate) fn dependents(&self) -> (Vec<u32>, Vec<TaskId>) {
+        let n = self.len();
+        let mut off = vec![0u32; n + 1];
+        for &d in &self.dep_arena {
+            off[d + 1] += 1;
+        }
+        for i in 0..n {
+            off[i + 1] += off[i];
+        }
+        let mut cursor: Vec<u32> = off[..n].to_vec();
+        let mut arena: Vec<TaskId> = vec![0; self.dep_arena.len()];
+        for id in 0..n {
+            for &d in self.deps(id) {
+                arena[cursor[d] as usize] = id;
+                cursor[d] += 1;
+            }
+        }
+        (off, arena)
     }
 
     /// Run to completion; deterministic for a fixed task list.
     pub fn run(&self) -> Schedule {
-        let n = self.tasks.len();
-        let mut remaining: Vec<usize> = self.tasks.iter().map(|t| t.deps.len()).collect();
-        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
-        for (id, t) in self.tasks.iter().enumerate() {
-            for &d in &t.deps {
-                dependents[d].push(id);
+        let n = self.len();
+        let mut st = RunState::new(self);
+        for id in 0..n {
+            if self.deps(id).is_empty() {
+                st.newly_ready.push(id);
             }
         }
-        let mut busy_until: Vec<u64> = vec![0; self.n_resources];
-        let mut start = vec![u64::MAX; n];
-        let mut end = vec![u64::MAX; n];
-        // tasks whose deps are done, ordered by (time they became ready, id)
-        let mut ready: BTreeSet<(u64, TaskId)> = BTreeSet::new();
-        // min-heap of (completion_time, task_id)
-        let mut events: BinaryHeap<std::cmp::Reverse<(u64, TaskId)>> = BinaryHeap::new();
-
-        for (id, t) in self.tasks.iter().enumerate() {
-            if t.deps.is_empty() {
-                ready.insert((0, id));
-            }
-        }
-
-        dispatch(&self.tasks, 0, &mut ready, &mut busy_until, &mut start, &mut end, &mut events);
-
+        st.dispatch(self, 0);
+        let (dep_off, dependents) = self.dependents();
+        let mut remaining: Vec<u32> =
+            (0..n).map(|id| self.deps(id).len() as u32).collect();
         let mut done = 0usize;
-        while let Some(std::cmp::Reverse((t, id))) = events.pop() {
+        while let Some(std::cmp::Reverse((t, id))) = st.events.pop() {
             done += 1;
-            for &d in &dependents[id] {
+            let lo = dep_off[id] as usize;
+            let hi = dep_off[id + 1] as usize;
+            for &d in &dependents[lo..hi] {
                 remaining[d] -= 1;
                 if remaining[d] == 0 {
-                    ready.insert((t, d));
+                    st.newly_ready.push(d);
                 }
             }
-            dispatch(&self.tasks, t, &mut ready, &mut busy_until, &mut start, &mut end,
-                     &mut events);
+            st.dispatch(self, t);
         }
         assert_eq!(done, n, "deadlock: {done}/{n} tasks completed (cycle in DAG?)");
-        let makespan = end.iter().copied().max().unwrap_or(0);
-        Schedule { start_ns: start, end_ns: end, makespan_ns: makespan }
+        let makespan = st.end.iter().copied().max().unwrap_or(0);
+        Schedule { start_ns: st.start, end_ns: st.end, makespan_ns: makespan }
     }
 }
 
-/// Start every ready task whose full resource set is idle at `now`,
-/// scanning in (ready-time, id) order.
-fn dispatch(
-    tasks: &[Task],
-    now: u64,
-    ready: &mut BTreeSet<(u64, TaskId)>,
-    busy_until: &mut [u64],
-    start: &mut [u64],
-    end: &mut [u64],
-    events: &mut BinaryHeap<std::cmp::Reverse<(u64, TaskId)>>,
-) {
-    let mut started: Vec<(u64, TaskId)> = Vec::new();
-    for &(ready_at, id) in ready.iter() {
-        let t = &tasks[id];
-        if t.resources.iter().all(|&r| busy_until[r] <= now) {
-            let e = now + t.duration_ns;
-            for &r in &t.resources {
-                busy_until[r] = e;
-            }
-            start[id] = now;
-            end[id] = e;
-            events.push(std::cmp::Reverse((e, id)));
-            started.push((ready_at, id));
+/// Mutable scheduler state of one `Engine::run` (see module docs for the
+/// indexed-dispatch design).
+struct RunState {
+    busy_until: Vec<u64>,
+    start: Vec<u64>,
+    end: Vec<u64>,
+    started: BitSet,
+    queued: BitSet,
+    /// Per-resource queues of parked (ready_time, id); entries are
+    /// appended in nondecreasing key order, so each queue stays sorted.
+    queue: Vec<Vec<(u64, TaskId)>>,
+    qhead: Vec<usize>,
+    /// Min-heap of task completion events.
+    events: BinaryHeap<std::cmp::Reverse<(u64, TaskId)>>,
+    /// Min-heap of (time a resource occupation ends, resource): matured
+    /// entries name the only queues a dispatch needs to re-examine.
+    frees: BinaryHeap<std::cmp::Reverse<(u64, u32)>>,
+    // scratch reused across dispatches
+    newly_ready: Vec<TaskId>,
+    candidates: Vec<(u64, TaskId)>,
+    /// Dedup stamp: a task may sit in several examined queues at once.
+    stamp: Vec<u32>,
+    round: u32,
+}
+
+impl RunState {
+    fn new(eng: &Engine) -> RunState {
+        let n = eng.len();
+        RunState {
+            busy_until: vec![0; eng.n_resources],
+            start: vec![u64::MAX; n],
+            end: vec![u64::MAX; n],
+            started: BitSet::with_len(n),
+            queued: BitSet::with_len(n),
+            queue: vec![Vec::new(); eng.n_resources],
+            qhead: vec![0; eng.n_resources],
+            events: BinaryHeap::new(),
+            frees: BinaryHeap::new(),
+            newly_ready: Vec::new(),
+            candidates: Vec::new(),
+            stamp: vec![0; n],
+            round: 0,
         }
     }
-    for key in started {
-        ready.remove(&key);
+
+    /// Start every startable task at `now`: merge the waiters of every
+    /// resource freed since the last dispatch with the newly-ready tasks,
+    /// in global (ready-time, id) order, against live `busy_until` state.
+    fn dispatch(&mut self, eng: &Engine, now: u64) {
+        self.round += 1;
+        self.candidates.clear();
+        while let Some(&std::cmp::Reverse((t, r))) = self.frees.peek() {
+            if t > now {
+                break;
+            }
+            self.frees.pop();
+            let r = r as usize;
+            let q = &self.queue[r];
+            let mut h = self.qhead[r];
+            while h < q.len() && self.started.get(q[h].1) {
+                h += 1;
+            }
+            self.qhead[r] = h;
+            for &(rt, id) in &q[h..] {
+                if !self.started.get(id) && self.stamp[id] != self.round {
+                    self.stamp[id] = self.round;
+                    self.candidates.push((rt, id));
+                }
+            }
+        }
+        for &id in &self.newly_ready {
+            if self.stamp[id] != self.round {
+                self.stamp[id] = self.round;
+                self.candidates.push((now, id));
+            }
+        }
+        self.newly_ready.clear();
+        self.candidates.sort_unstable();
+        for i in 0..self.candidates.len() {
+            let id = self.candidates[i].1;
+            let res = eng.resources(id);
+            if res.iter().all(|&r| self.busy_until[r] <= now) {
+                let e = now + eng.durations[id];
+                for &r in res {
+                    self.busy_until[r] = e;
+                    self.frees.push(std::cmp::Reverse((e, r as u32)));
+                }
+                self.start[id] = now;
+                self.end[id] = e;
+                self.started.set(id);
+                self.events.push(std::cmp::Reverse((e, id)));
+            } else if !self.queued.get(id) {
+                // blocked for the first time: park in every queue of its
+                // resource set (pushes happen in sorted candidate order
+                // at time `now`, preserving each queue's order)
+                self.queued.set(id);
+                for &r in res {
+                    self.queue[r].push((now, id));
+                }
+            }
+        }
     }
 }
 
@@ -252,7 +494,7 @@ mod tests {
     #[test]
     fn fifo_order_is_deterministic() {
         let mut e = Engine::new();
-        let ids: Vec<_> = (0..10).map(|i| e.add(format!("t{i}"), 0, 5, &[])).collect();
+        let ids: Vec<_> = (0..10).map(|i| e.add(&format!("t{i}"), 0, 5, &[])).collect();
         let s = e.run();
         for w in ids.windows(2) {
             assert!(s.start_ns[w[0]] < s.start_ns[w[1]]);
@@ -301,8 +543,53 @@ mod tests {
         let a = e.add_multi("dup", &[3, 3, 3], 50, &[]);
         let s = e.run();
         assert_eq!(s.end_of(a), 50);
-        assert_eq!(e.task(a).resources, vec![3]);
-        assert_eq!(e.task(a).resource(), 3);
+        assert_eq!(e.resources(a), &[3]);
+        assert_eq!(e.resource(a), 3);
+    }
+
+    #[test]
+    fn large_resource_sets_dedup_in_order() {
+        // > 8 entries exercises the sorted-scratch path; first occurrence
+        // order (home resource first) must be preserved.
+        let mut e = Engine::new();
+        let a = e.add_multi("wide", &[9, 1, 9, 4, 1, 7, 4, 2, 9, 1, 3], 5, &[]);
+        assert_eq!(e.resources(a), &[9, 1, 4, 7, 2, 3]);
+        assert_eq!(e.resource(a), 9);
+    }
+
+    #[test]
+    fn labels_are_interned_and_shared() {
+        let mut e = Engine::new();
+        let a = e.add("exchange", 0, 1, &[]);
+        let b = e.add("exchange", 1, 1, &[]);
+        let c = e.add("sgd", 0, 1, &[a]);
+        assert_eq!(e.label(a), "exchange");
+        assert_eq!(e.label(b), "exchange");
+        assert_eq!(e.label(c), "sgd");
+    }
+
+    #[test]
+    fn zero_duration_tasks_do_not_block_the_stream() {
+        let mut e = Engine::new();
+        let a = e.add("marker", 0, 0, &[]);
+        let b = e.add("work", 0, 10, &[]);
+        let s = e.run();
+        assert_eq!(s.end_ns[a], 0);
+        assert_eq!(s.start_ns[b], 0); // the zero-width marker left res 0 idle
+        assert_eq!(s.makespan_ns, 10);
+    }
+
+    #[test]
+    fn parked_task_resumes_when_last_resource_frees() {
+        // t needs both 0 and 1, freed at different times; it must start
+        // when the LATER one frees.
+        let mut e = Engine::new();
+        e.add("hold0", 0, 50, &[]);
+        e.add("hold1", 1, 80, &[]);
+        let t = e.add_multi("both", &[0, 1], 10, &[]);
+        let s = e.run();
+        assert_eq!(s.start_ns[t], 80);
+        assert_eq!(s.makespan_ns, 90);
     }
 
     #[test]
@@ -310,5 +597,22 @@ mod tests {
     fn forward_dependency_rejected() {
         let mut e = Engine::new();
         e.add("a", 0, 1, &[5]);
+    }
+
+    #[test]
+    fn dep_lists_recycle() {
+        let mut d = DepLists::new();
+        d.push_list([1, 2, 3]);
+        d.push(7);
+        d.finish_list();
+        d.push_list([]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.get(0), &[1, 2, 3]);
+        assert_eq!(d.get(1), &[7]);
+        assert_eq!(d.get(2), &[] as &[TaskId]);
+        d.clear();
+        assert!(d.is_empty());
+        d.push_list([9]);
+        assert_eq!(d.get(0), &[9]);
     }
 }

@@ -20,18 +20,21 @@
 //!   forward) in two fidelities: the representative-node α-β model
 //!   ([`cluster::simulate_training`], the analytic cross-check) and the
 //!   full-cluster per-node model ([`cluster::simulate_training_fleet`]).
+//! * [`reference`] — the retained pre-optimization full-scan scheduler,
+//!   the bit-identicality oracle for the engine's indexed fast path.
 
 pub mod cluster;
 pub mod collective;
 pub mod engine;
 pub mod fleet;
 pub mod network;
+pub mod reference;
 
 pub use cluster::{
     simulate_training, simulate_training_fleet, FleetSimResult, ScalingPoint, SimConfig,
     SimResult,
 };
 pub use collective::Choice;
-pub use engine::{Engine, Schedule, Task, TaskId};
+pub use engine::{DepLists, Engine, Schedule, TaskId};
 pub use fleet::{Fleet, FleetConfig};
 pub use network::{Network, Topology};

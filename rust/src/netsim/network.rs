@@ -134,28 +134,66 @@ impl Network {
     /// Link resources and end-to-end latency (seconds) of one message.
     /// Channel choice is deterministic (hash of endpoint), so schedules
     /// are bit-identical across runs.
-    pub fn route(&self, src: usize, dst: usize) -> (Vec<usize>, f64) {
+    pub fn route(&self, src: usize, dst: usize) -> (Route, f64) {
         debug_assert!(src != dst, "self-message {src}->{dst}");
         match self.topology {
-            Topology::FullySwitched => (vec![self.tx(src), self.rx(dst)], self.latency_s),
-            Topology::FlatSwitch => (vec![self.tx(src), self.rx(dst)], 2.0 * self.latency_s),
+            Topology::FullySwitched => {
+                (Route::two(self.tx(src), self.rx(dst)), self.latency_s)
+            }
+            Topology::FlatSwitch => {
+                (Route::two(self.tx(src), self.rx(dst)), 2.0 * self.latency_s)
+            }
             Topology::FatTree { .. } => {
                 let (ls, ld) = (self.leaf_of(src), self.leaf_of(dst));
                 if ls == ld {
-                    (vec![self.tx(src), self.rx(dst)], 2.0 * self.latency_s)
+                    (Route::two(self.tx(src), self.rx(dst)), 2.0 * self.latency_s)
                 } else {
                     let up = self.up_channel(ls, src % self.channels_per_leaf);
                     let down = self.down_channel(ld, dst % self.channels_per_leaf);
-                    (vec![self.tx(src), self.rx(dst), up, down], 3.0 * self.latency_s)
+                    (
+                        Route::four(self.tx(src), self.rx(dst), up, down),
+                        3.0 * self.latency_s,
+                    )
                 }
             }
         }
     }
 
     /// Resource set + duration (ns) for a `bytes`-sized message.
-    pub fn message(&self, src: usize, dst: usize, bytes: f64) -> (Vec<usize>, u64) {
+    pub fn message(&self, src: usize, dst: usize, bytes: f64) -> (Route, u64) {
         let (resources, lat) = self.route(src, dst);
         (resources, ns(lat + bytes / self.nic_bw))
+    }
+}
+
+/// Fixed-capacity link set of one message (≤ 4 links on every topology) —
+/// a stack value instead of a `Vec` per message, which matters when a
+/// 128-node fig4 iteration expands to hundreds of thousands of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    links: [usize; 4],
+    len: u8,
+}
+
+impl Route {
+    fn two(a: usize, b: usize) -> Route {
+        Route { links: [a, b, 0, 0], len: 2 }
+    }
+
+    fn four(a: usize, b: usize, c: usize, d: usize) -> Route {
+        Route { links: [a, b, c, d], len: 4 }
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.links[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
     }
 }
 
@@ -178,7 +216,7 @@ mod tests {
         for (src, dst) in [(0usize, 5usize), (1, 6), (4, 2), (7, 0)] {
             let (res, _) = net.route(src, dst);
             assert_eq!(res.len(), 4, "cross-leaf route has 4 resources");
-            for r in res {
+            for &r in res.as_slice() {
                 assert!(r >= 16 && r < 16 + net.n_resources());
                 seen.insert(r);
             }

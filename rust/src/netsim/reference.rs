@@ -1,0 +1,104 @@
+//! Retained reference scheduler — the original O(events × ready-set)
+//! dispatch loop, kept as the oracle for the indexed fast path in
+//! [`super::engine`].
+//!
+//! [`run`] executes the exact pre-optimization algorithm over the same
+//! CSR task storage: a single global ready set ordered by (ready-time,
+//! task-id), rescanned in full at every completion event, starting every
+//! task whose whole resource set is idle. The fast path must produce
+//! **bit-identical** [`Schedule`]s — `tests/engine_oracle.rs` asserts
+//! this over randomized multi-resource DAGs, and `bench_netsim_perf`
+//! measures the two against each other on the fig4 fleet DAGs.
+
+use std::collections::{BTreeSet, BinaryHeap};
+
+use super::engine::{Engine, Schedule, TaskId};
+
+/// Run `eng` to completion with the reference full-scan dispatch.
+pub fn run(eng: &Engine) -> Schedule {
+    let n = eng.len();
+    let mut remaining: Vec<usize> = (0..n).map(|id| eng.deps(id).len()).collect();
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for id in 0..n {
+        for &d in eng.deps(id) {
+            dependents[d].push(id);
+        }
+    }
+    let mut busy_until: Vec<u64> = vec![0; eng.n_resources()];
+    let mut start = vec![u64::MAX; n];
+    let mut end = vec![u64::MAX; n];
+    // tasks whose deps are done, ordered by (time they became ready, id)
+    let mut ready: BTreeSet<(u64, TaskId)> = BTreeSet::new();
+    // min-heap of (completion_time, task_id)
+    let mut events: BinaryHeap<std::cmp::Reverse<(u64, TaskId)>> = BinaryHeap::new();
+
+    for id in 0..n {
+        if eng.deps(id).is_empty() {
+            ready.insert((0, id));
+        }
+    }
+
+    dispatch(eng, 0, &mut ready, &mut busy_until, &mut start, &mut end, &mut events);
+
+    let mut done = 0usize;
+    while let Some(std::cmp::Reverse((t, id))) = events.pop() {
+        done += 1;
+        for &d in &dependents[id] {
+            remaining[d] -= 1;
+            if remaining[d] == 0 {
+                ready.insert((t, d));
+            }
+        }
+        dispatch(eng, t, &mut ready, &mut busy_until, &mut start, &mut end, &mut events);
+    }
+    assert_eq!(done, n, "deadlock: {done}/{n} tasks completed (cycle in DAG?)");
+    let makespan = end.iter().copied().max().unwrap_or(0);
+    Schedule { start_ns: start, end_ns: end, makespan_ns: makespan }
+}
+
+/// Start every ready task whose full resource set is idle at `now`,
+/// scanning the whole ready set in (ready-time, id) order.
+fn dispatch(
+    eng: &Engine,
+    now: u64,
+    ready: &mut BTreeSet<(u64, TaskId)>,
+    busy_until: &mut [u64],
+    start: &mut [u64],
+    end: &mut [u64],
+    events: &mut BinaryHeap<std::cmp::Reverse<(u64, TaskId)>>,
+) {
+    let mut started: Vec<(u64, TaskId)> = Vec::new();
+    for &(ready_at, id) in ready.iter() {
+        let res = eng.resources(id);
+        if res.iter().all(|&r| busy_until[r] <= now) {
+            let e = now + eng.duration_ns(id);
+            for &r in res {
+                busy_until[r] = e;
+            }
+            start[id] = now;
+            end[id] = e;
+            events.push(std::cmp::Reverse((e, id)));
+            started.push((ready_at, id));
+        }
+    }
+    for key in started {
+        ready.remove(&key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_matches_fast_path_on_a_contended_dag() {
+        let mut e = Engine::new();
+        let a = e.add_multi("m0", &[0, 10, 12], 100, &[]);
+        let b = e.add_multi("m1", &[1, 11, 12], 100, &[]);
+        let c = e.add("tail", 2, 30, &[a, b]);
+        let fast = e.run();
+        let oracle = run(&e);
+        assert_eq!(fast, oracle);
+        assert_eq!(oracle.start_ns[c], 200);
+    }
+}

@@ -1,0 +1,433 @@
+//! Content-addressed cache for [`PlanSearch`] results under
+//! `artifacts/plans/` (the ROADMAP "caching planner results" item).
+//!
+//! `repro plan`, the fig4/6/7 benches and the CI plan job all re-derive
+//! the same design points; the search itself is pure, so its result is a
+//! function of exactly: the resolved network, the resolved platform
+//! (machine + fabric, including any spec congestion override), the node
+//! count, the global minibatch, the assumed send/recv overlap, the
+//! collective policy and the pricing iteration count. The cache key is a
+//! canonical JSON object over those inputs — the network and platform
+//! enter as content fingerprints, not names, so an edited zoo model or a
+//! retuned fabric constant misses instead of serving a stale plan — plus
+//! a compile-time fingerprint of the planner/cost-model source itself,
+//! so a cache directory that survives a code change (CI `restore-keys`,
+//! a local checkout after `git pull`) invalidates automatically.
+//!
+//! Layout: one file per key,
+//! `<dir>/<model>_<fabric>_n<nodes>_mb<minibatch>_<hash16>.json`,
+//! holding `{ "key": ..., "search": ... }`. A lookup re-checks the full
+//! embedded key (not just the filename hash), and any unreadable,
+//! unparseable or mismatched file is treated as a miss — corruption
+//! recomputes, never crashes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::analytic::comm_model::Strategy;
+use crate::experiment::registry;
+use crate::util::json::Json;
+
+use super::planner::{CandidateCost, LayerDecision, PlanSearch, PlannerInput};
+use super::{strategy_name, PartitionPlan};
+
+/// FNV-1a 64 over the canonical key bytes (stable, dependency-free).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Compile-time fingerprint of the code that *produces* a `PlanSearch`:
+/// the planner itself, the plan construction/normalization logic, the
+/// end-to-end pricing simulator and every cost model it consults
+/// (compute pass times, α-β collectives, group topology). Embedding the
+/// source text means any algorithm change invalidates every cached entry
+/// automatically — without it, a cache restored across commits (the CI
+/// `plan` job's `restore-keys` fallback, or a local `artifacts/plans/`
+/// surviving a `git pull`) would keep serving pre-change searches and
+/// mask planner regressions from the golden gate.
+fn code_fingerprint() -> u64 {
+    fnv1a(
+        concat!(
+            include_str!("planner.rs"),
+            include_str!("mod.rs"),
+            include_str!("../netsim/engine.rs"),
+            include_str!("../netsim/cluster.rs"),
+            include_str!("../netsim/collective.rs"),
+            include_str!("../analytic/machine.rs"),
+            include_str!("../analytic/comm_model.rs"),
+            include_str!("../analytic/compute_model.rs"),
+            include_str!("../collectives/topology.rs"),
+        )
+        .as_bytes(),
+    )
+}
+
+/// A resolved cache key: the canonical key document plus the file name
+/// it addresses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheKey {
+    pub key: Json,
+    pub file: String,
+}
+
+/// Where a cached search came from (the CLI's hit/miss line).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheOutcome {
+    Hit(PathBuf),
+    /// Computed fresh and written for next time.
+    Miss(PathBuf),
+    /// Computed fresh but the write failed (read-only checkout, full
+    /// disk) — the next invocation will recompute again.
+    Unwritable(PathBuf),
+}
+
+/// On-disk plan-search cache rooted at one directory.
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    dir: PathBuf,
+}
+
+impl PlanCache {
+    pub fn new(dir: impl Into<PathBuf>) -> PlanCache {
+        PlanCache { dir: dir.into() }
+    }
+
+    /// The conventional location: `<artifacts>/plans/`.
+    pub fn default_dir() -> PathBuf {
+        crate::runtime::default_artifacts_dir().join("plans")
+    }
+
+    /// Canonical content key of one design point. `model` is the zoo (or
+    /// inline) model name — display only; the addressed content is the
+    /// resolved network and platform, which enter as `Debug`-format
+    /// fingerprints (stable for fixed struct definitions, and any field
+    /// change is exactly when a recompute is wanted).
+    pub fn key(model: &str, input: &PlannerInput) -> CacheKey {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "code_fingerprint".to_string(),
+            Json::Str(format!("{:016x}", code_fingerprint())),
+        );
+        m.insert("collective".to_string(),
+                 Json::Str(registry::collective_name(input.collective).to_string()));
+        m.insert("fabric".to_string(), Json::Str(input.platform.fabric.name.clone()));
+        m.insert("iterations".to_string(), Json::Num(input.iterations as f64));
+        m.insert("minibatch".to_string(), Json::Num(input.minibatch as f64));
+        m.insert("model".to_string(), Json::Str(model.to_string()));
+        m.insert(
+            "net_fingerprint".to_string(),
+            Json::Str(format!("{:016x}", fnv1a(format!("{:?}", input.net).as_bytes()))),
+        );
+        m.insert("nodes".to_string(), Json::Num(input.nodes as f64));
+        m.insert("overlap".to_string(), Json::Num(input.overlap));
+        m.insert(
+            "platform_fingerprint".to_string(),
+            Json::Str(format!("{:016x}", fnv1a(format!("{:?}", input.platform).as_bytes()))),
+        );
+        let key = Json::Obj(m);
+        let hash = fnv1a(key.to_string().as_bytes());
+        // keep the file name readable and shell-safe: model names may be
+        // inline descriptors, fabric names contain spaces
+        let tag = |s: &str| -> String {
+            s.chars()
+                .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+                .take(24)
+                .collect()
+        };
+        let file = format!(
+            "{}_{}_n{}_mb{}_{hash:016x}.json",
+            tag(model),
+            tag(&input.platform.fabric.name),
+            input.nodes,
+            input.minibatch
+        );
+        CacheKey { key, file }
+    }
+
+    pub fn path_for(&self, key: &CacheKey) -> PathBuf {
+        self.dir.join(&key.file)
+    }
+
+    /// Cached search for `key`, or `None` on any miss — absent file,
+    /// unparseable JSON, or an embedded key that does not match (hash
+    /// collision or stale schema).
+    pub fn lookup(&self, key: &CacheKey) -> Option<PlanSearch> {
+        let path = self.path_for(key);
+        let text = std::fs::read_to_string(&path).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.opt("key") != Some(&key.key) {
+            return None;
+        }
+        search_from_json(doc.opt("search")?).ok()
+    }
+
+    /// Persist `search` under `key` (creates the cache dir on demand).
+    pub fn store(&self, key: &CacheKey, search: &PlanSearch) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("cannot create plan cache dir {:?}", self.dir))?;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("key".to_string(), key.key.clone());
+        m.insert("search".to_string(), search_to_json(search));
+        let path = self.path_for(key);
+        std::fs::write(&path, format!("{}\n", Json::Obj(m).pretty()))
+            .with_context(|| format!("cannot write plan cache file {path:?}"))?;
+        Ok(path)
+    }
+
+    /// The planner search through the cache: reuse a stored result when
+    /// the content key matches, otherwise run the search and store it.
+    /// Store failures degrade to an uncached search (a warning, not an
+    /// error — a read-only checkout must still plan).
+    pub fn plan_cached(&self, model: &str, input: &PlannerInput) -> (PlanSearch, CacheOutcome) {
+        let key = Self::key(model, input);
+        if let Some(search) = self.lookup(&key) {
+            return (search, CacheOutcome::Hit(self.path_for(&key)));
+        }
+        let search = super::planner::plan(input);
+        let outcome = match self.store(&key, &search) {
+            Ok(p) => CacheOutcome::Miss(p),
+            Err(e) => {
+                eprintln!("note: plan cache write failed ({e:#}); continuing uncached");
+                CacheOutcome::Unwritable(self.path_for(&key))
+            }
+        };
+        (search, outcome)
+    }
+}
+
+impl CacheOutcome {
+    /// One-line summary for the CLI (`plan cache: hit <path>`).
+    pub fn describe(&self) -> String {
+        match self {
+            CacheOutcome::Hit(p) => format!("hit {}", display_path(p)),
+            CacheOutcome::Miss(p) => format!("miss (wrote {})", display_path(p)),
+            CacheOutcome::Unwritable(p) => {
+                format!("miss (write failed, not cached: {})", display_path(p))
+            }
+        }
+    }
+}
+
+fn display_path(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}
+
+// ---------------------------------------------------------------------
+// PlanSearch serialization
+// ---------------------------------------------------------------------
+
+fn strategy_to_json(s: Strategy) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "groups".to_string(),
+        match s {
+            Strategy::Hybrid { groups } => Json::Num(groups as f64),
+            _ => Json::Null,
+        },
+    );
+    m.insert("strategy".to_string(), Json::Str(strategy_name(s).to_string()));
+    Json::Obj(m)
+}
+
+fn strategy_from_json(j: &Json) -> Result<Strategy> {
+    Ok(match j.get("strategy")?.as_str()? {
+        "data" => Strategy::Data,
+        "model" => Strategy::Model,
+        "hybrid" => Strategy::Hybrid { groups: j.get("groups")?.as_u64()? },
+        other => anyhow::bail!("unknown cached strategy {other:?}"),
+    })
+}
+
+pub fn search_to_json(s: &PlanSearch) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("chosen_iteration_s".to_string(), Json::Num(s.chosen_iteration_s));
+    m.insert("data_iteration_s".to_string(), Json::Num(s.data_iteration_s));
+    m.insert(
+        "decisions".to_string(),
+        Json::Arr(
+            s.decisions
+                .iter()
+                .map(|d| {
+                    let mut dm = std::collections::BTreeMap::new();
+                    dm.insert(
+                        "candidates".to_string(),
+                        Json::Arr(
+                            d.candidates
+                                .iter()
+                                .map(|c| {
+                                    let mut cm = match strategy_to_json(c.strategy) {
+                                        Json::Obj(cm) => cm,
+                                        _ => unreachable!("strategy serializes to an object"),
+                                    };
+                                    cm.insert("comm_s".to_string(), Json::Num(c.comm_s));
+                                    Json::Obj(cm)
+                                })
+                                .collect(),
+                        ),
+                    );
+                    dm.insert("chosen".to_string(), strategy_to_json(d.chosen));
+                    dm.insert("layer".to_string(), Json::Str(d.layer.clone()));
+                    Json::Obj(dm)
+                })
+                .collect(),
+        ),
+    );
+    m.insert("plan".to_string(), s.plan.to_json());
+    m.insert("recipe_iteration_s".to_string(), Json::Num(s.recipe_iteration_s));
+    Json::Obj(m)
+}
+
+pub fn search_from_json(j: &Json) -> Result<PlanSearch> {
+    let mut decisions = Vec::new();
+    for d in j.get("decisions")?.as_arr()? {
+        let mut candidates = Vec::new();
+        for c in d.get("candidates")?.as_arr()? {
+            candidates.push(CandidateCost {
+                strategy: strategy_from_json(c)?,
+                comm_s: c.get("comm_s")?.as_f64()?,
+            });
+        }
+        decisions.push(LayerDecision {
+            layer: d.get("layer")?.as_str()?.to_string(),
+            candidates,
+            chosen: strategy_from_json(d.get("chosen")?)?,
+        });
+    }
+    Ok(PlanSearch {
+        plan: PartitionPlan::from_json(j.get("plan")?)?,
+        decisions,
+        chosen_iteration_s: j.get("chosen_iteration_s")?.as_f64()?,
+        data_iteration_s: j.get("data_iteration_s")?.as_f64()?,
+        recipe_iteration_s: j.get("recipe_iteration_s")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::machine::Platform;
+    use crate::models::zoo;
+    use crate::netsim::collective::Choice;
+
+    fn tmp_dir(salt: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "pcl_dnn_plan_cache_{salt}_{}",
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn input<'a>(net: &'a crate::models::NetDescriptor, p: &'a Platform) -> PlannerInput<'a> {
+        PlannerInput {
+            net,
+            platform: p,
+            nodes: 8,
+            minibatch: 256,
+            overlap: 1.0,
+            collective: Choice::Auto,
+            iterations: 3,
+        }
+    }
+
+    #[test]
+    fn miss_then_hit_returns_the_same_search() {
+        let dir = tmp_dir("roundtrip");
+        let cache = PlanCache::new(&dir);
+        let net = zoo::vgg_a();
+        let p = Platform::cori();
+        let inp = input(&net, &p);
+        let (first, o1) = cache.plan_cached("vgg_a", &inp);
+        assert!(matches!(o1, CacheOutcome::Miss(_)), "{o1:?}");
+        let (second, o2) = cache.plan_cached("vgg_a", &inp);
+        assert!(matches!(o2, CacheOutcome::Hit(_)), "{o2:?}");
+        assert_eq!(first, second);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn key_distinguishes_every_input_dimension() {
+        let net = zoo::vgg_a();
+        let p = Platform::cori();
+        let base = PlanCache::key("vgg_a", &input(&net, &p));
+        let mut other = input(&net, &p);
+        other.nodes = 16;
+        assert_ne!(base, PlanCache::key("vgg_a", &other));
+        let mut other = input(&net, &p);
+        other.minibatch = 512;
+        assert_ne!(base, PlanCache::key("vgg_a", &other));
+        let mut other = input(&net, &p);
+        other.collective = Choice::Ring;
+        assert_ne!(base, PlanCache::key("vgg_a", &other));
+        let mut other = input(&net, &p);
+        other.overlap = 0.5;
+        assert_ne!(base, PlanCache::key("vgg_a", &other));
+        // a retuned fabric constant changes the platform fingerprint
+        let mut p2 = Platform::cori();
+        p2.fabric.latency_s *= 2.0;
+        assert_ne!(base, PlanCache::key("vgg_a", &input(&net, &p2)));
+        // a different network under the same name misses too
+        let of = zoo::overfeat_fast();
+        assert_ne!(base, PlanCache::key("vgg_a", &input(&of, &p)));
+    }
+
+    #[test]
+    fn corrupted_cache_file_recomputes_instead_of_crashing() {
+        let dir = tmp_dir("corrupt");
+        let cache = PlanCache::new(&dir);
+        let net = zoo::vgg_a();
+        let p = Platform::cori();
+        let inp = input(&net, &p);
+        let key = PlanCache::key("vgg_a", &inp);
+        for garbage in ["", "not json at all", "{\"key\": 1}", "[1,2,3]"] {
+            std::fs::write(cache.path_for(&key), garbage).unwrap();
+            assert!(cache.lookup(&key).is_none(), "garbage {garbage:?} must miss");
+            let (search, outcome) = cache.plan_cached("vgg_a", &inp);
+            assert!(matches!(outcome, CacheOutcome::Miss(_)));
+            assert!(!search.plan.mode.is_empty());
+            // the recompute repaired the file: next call hits
+            let (_, o2) = cache.plan_cached("vgg_a", &inp);
+            assert!(matches!(o2, CacheOutcome::Hit(_)));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn write_failure_reports_unwritable_not_miss() {
+        let dir = tmp_dir("unwritable");
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, "not a directory").unwrap();
+        // cache dir nested under a regular file: create_dir_all must fail
+        // for any user (chmod tricks are a no-op under root)
+        let cache = PlanCache::new(blocker.join("plans"));
+        let net = zoo::vgg_a();
+        let p = Platform::cori();
+        let (search, outcome) = cache.plan_cached("vgg_a", &input(&net, &p));
+        assert!(matches!(outcome, CacheOutcome::Unwritable(_)), "{outcome:?}");
+        assert!(!search.plan.mode.is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn search_json_roundtrips_exactly() {
+        let net = zoo::cddnn_full();
+        let p = Platform::endeavor();
+        let mut inp = input(&net, &p);
+        inp.nodes = 16;
+        inp.minibatch = 1024;
+        let search = crate::plan::planner::plan(&inp);
+        let back = search_from_json(&search_to_json(&search)).unwrap();
+        assert_eq!(back, search);
+        // byte-stable serialization (BTreeMap keys + shortest-float repr)
+        assert_eq!(search_to_json(&back).to_string(), search_to_json(&search).to_string());
+    }
+}

@@ -32,7 +32,10 @@ use crate::models::NetDescriptor;
 use crate::netsim::collective::Choice;
 use crate::util::json::Json;
 
+pub mod cache;
 pub mod planner;
+
+pub use cache::{CacheOutcome, PlanCache};
 
 /// Registry-style names of the per-layer strategies.
 pub const STRATEGIES: &[&str] = &["data", "model", "hybrid"];

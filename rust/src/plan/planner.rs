@@ -52,7 +52,7 @@ pub struct PlannerInput<'a> {
 }
 
 /// One scored candidate for one layer.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CandidateCost {
     pub strategy: Strategy,
     /// α-β communication seconds per iteration attributable to the layer.
@@ -60,7 +60,7 @@ pub struct CandidateCost {
 }
 
 /// The per-layer design-point row (the `repro plan` table).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerDecision {
     pub layer: String,
     /// Candidates in evaluation order: data, then (where the §3.2 rule
@@ -79,8 +79,10 @@ impl LayerDecision {
 }
 
 /// Search output: the chosen plan plus everything needed to report the
-/// paper-style design-point table.
-#[derive(Debug, Clone)]
+/// paper-style design-point table. (Serializable via `plan::cache` —
+/// `repro plan`, the benches and CI reuse searches content-addressed
+/// under `artifacts/plans/`.)
+#[derive(Debug, Clone, PartialEq)]
 pub struct PlanSearch {
     /// The winning plan (mode `auto`).
     pub plan: PartitionPlan,
@@ -232,6 +234,9 @@ pub fn plan(input: &PlannerInput) -> PlanSearch {
 
 /// One BENCH_plan.json row: planner-chosen vs fixed-recipe vs pure-data
 /// efficiency at `nodes` (all relative to the 1-node data-parallel sim).
+/// With a [`cache::PlanCache`](super::PlanCache) the search is reused
+/// content-addressed from `artifacts/plans/` instead of re-derived per
+/// bench invocation.
 pub fn bench_row(
     net: &NetDescriptor,
     platform: &Platform,
@@ -239,10 +244,14 @@ pub fn bench_row(
     nodes: u64,
     collective: Choice,
     iterations: usize,
+    cache: Option<&super::PlanCache>,
 ) -> Json {
     let input =
         PlannerInput { net, platform, nodes, minibatch, overlap: 1.0, collective, iterations };
-    let search = plan(&input);
+    let search = match cache {
+        Some(c) => c.plan_cached(&net.name, &input).0,
+        None => plan(&input),
+    };
     let base = plan_cost_s(
         &PlannerInput { nodes: 1, ..input },
         &PartitionPlan::empty(1, minibatch),
@@ -353,7 +362,7 @@ mod tests {
     fn bench_row_has_the_three_efficiencies() {
         let net = zoo::vgg_a();
         let p = Platform::cori();
-        let row = bench_row(&net, &p, 256, 8, Choice::Auto, 3);
+        let row = bench_row(&net, &p, 256, 8, Choice::Auto, 3, None);
         for k in ["auto_efficiency", "data_efficiency", "fixed_efficiency", "nodes"] {
             assert!(row.get(k).unwrap().as_f64().unwrap() > 0.0, "{k}");
         }

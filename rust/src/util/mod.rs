@@ -6,4 +6,5 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod rng;

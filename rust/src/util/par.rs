@@ -1,0 +1,90 @@
+//! Scoped-thread parallel map — the crate is fully offline (no rayon),
+//! so sweep-level parallelism is a small `std::thread::scope` work queue.
+//!
+//! Sweep points (one `ExperimentSpec` run per node count, one planner
+//! search per design point) are independent pure computations, so
+//! results are returned in input order and are bit-identical to the
+//! serial evaluation. `REPRO_THREADS` caps the worker count (`1` forces
+//! serial execution — useful for timing baselines and debugging).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: `REPRO_THREADS` if set (min 1), else the machine's
+/// available parallelism.
+pub fn workers() -> usize {
+    if let Ok(v) = std::env::var("REPRO_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item, fanning out across up to [`workers`] scoped
+/// threads. Output order matches input order; with one worker (or one
+/// item) this degenerates to a plain serial map, so parallel and serial
+/// results are interchangeable.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = workers().min(n);
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<U>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let u = f(&items[i]);
+                out.lock().unwrap()[i] = Some(u);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|u| u.expect("worker completed every claimed item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_all_items() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u64> = Vec::new();
+        assert!(parallel_map(&empty, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u64], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn matches_serial_map_on_nontrivial_work() {
+        let items: Vec<u64> = (0..64).collect();
+        let f = |&x: &u64| (0..1000u64).fold(x, |a, b| a.wrapping_mul(31).wrapping_add(b));
+        let serial: Vec<u64> = items.iter().map(f).collect();
+        assert_eq!(parallel_map(&items, f), serial);
+    }
+
+    #[test]
+    fn workers_is_at_least_one() {
+        assert!(workers() >= 1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Oracle equivalence for the discrete-event engine's indexed fast path.
+//!
+//! The engine in `netsim::engine` dispatches through per-resource ready
+//! queues; `netsim::reference` retains the original full-ready-set scan.
+//! The two must produce **bit-identical** `Schedule`s — same start, same
+//! end, same makespan for every task — on any DAG, because the schedule
+//! is the measurement instrument behind every netsim figure and the
+//! determinism claim behind Fig 5. These property tests drive both over
+//! randomized multi-resource DAGs (seeded via `util::rng`) shaped to hit
+//! the dispatch corner cases: shared links, zero-duration markers,
+//! same-time completions and deep dependency fan-in.
+
+use pcl_dnn::netsim::{reference, Engine};
+use pcl_dnn::util::rng::Rng;
+
+/// Random task DAG tuned for contention: few resources, many tasks, a
+/// mix of multi-resource messages, zero-duration markers and duplicate
+/// durations (to force same-time completion events).
+fn random_engine(rng: &mut Rng, n_tasks: usize, n_res: usize) -> Engine {
+    let mut e = Engine::new();
+    for id in 0..n_tasks {
+        let n_own = 1 + rng.below(3) as usize;
+        let resources: Vec<usize> =
+            (0..n_own).map(|_| rng.below(n_res as u64) as usize).collect();
+        // durations from a tiny alphabet so completions frequently tie
+        let dur = match rng.below(5) {
+            0 => 0,
+            1 => 10,
+            2 => 10,
+            3 => 25,
+            _ => rng.below(100),
+        };
+        let mut deps: Vec<usize> = Vec::new();
+        if id > 0 {
+            for _ in 0..rng.below(4) {
+                deps.push(rng.below(id as u64) as usize);
+            }
+            deps.sort_unstable();
+            deps.dedup();
+        }
+        e.add_multi(&format!("t{id}"), &resources, dur, &deps);
+    }
+    e
+}
+
+#[test]
+fn fast_path_is_bit_identical_to_reference_on_random_dags() {
+    let mut rng = Rng::new(0x0eac1e);
+    for case in 0..300 {
+        let n_tasks = 5 + rng.below(120) as usize;
+        let n_res = 1 + rng.below(10) as usize;
+        let e = random_engine(&mut rng, n_tasks, n_res);
+        let fast = e.run();
+        let oracle = reference::run(&e);
+        assert_eq!(
+            fast, oracle,
+            "case {case}: fast path diverged from reference ({n_tasks} tasks, {n_res} res)"
+        );
+    }
+}
+
+#[test]
+fn fast_path_matches_reference_under_heavy_contention() {
+    // one or two resources, long task lists: every dispatch decision is
+    // a contended one, so any ordering slip shows up immediately
+    let mut rng = Rng::new(0x5eed);
+    for case in 0..60 {
+        let n_tasks = 50 + rng.below(200) as usize;
+        let n_res = 1 + rng.below(2) as usize;
+        let e = random_engine(&mut rng, n_tasks, n_res);
+        assert_eq!(e.run(), reference::run(&e), "case {case}");
+    }
+}
+
+#[test]
+fn fast_path_matches_reference_on_independent_roots() {
+    // no dependencies at all: the initial dispatch must drain the whole
+    // ready set in (0, id) order exactly like the reference scan
+    let mut rng = Rng::new(0x1005);
+    for case in 0..40 {
+        let n_res = 1 + rng.below(4) as usize;
+        let mut e = Engine::new();
+        for id in 0..80 {
+            let r = rng.below(n_res as u64) as usize;
+            e.add(&format!("r{id}"), r, rng.below(30), &[]);
+        }
+        assert_eq!(e.run(), reference::run(&e), "case {case}");
+    }
+}
+
+#[test]
+fn fast_path_matches_reference_on_fleet_like_shape() {
+    // the fleet builder's structure in miniature: per-node compute/comm
+    // streams plus shared tx/rx link resources, ring-ish message chains
+    let mut rng = Rng::new(0xf1ee7);
+    for case in 0..40 {
+        let nodes = 2 + rng.below(6) as usize;
+        let mut e = Engine::new();
+        let mut last: Vec<usize> = (0..nodes)
+            .map(|v| e.add(&format!("c{v}"), 2 * v, 50 + rng.below(40), &[]))
+            .collect();
+        for step in 0..nodes - 1 {
+            let mut cur = Vec::with_capacity(nodes);
+            for j in 0..nodes {
+                let dst = (j + 1) % nodes;
+                let prev = (j + nodes - 1) % nodes;
+                // comm stream + sender tx + receiver rx
+                let res = [2 * j + 1, 2 * nodes + 2 * j, 2 * nodes + 2 * dst + 1];
+                let deps: Vec<usize> = if step == 0 {
+                    vec![last[j]]
+                } else {
+                    vec![last[j], last[prev]]
+                };
+                cur.push(e.add_multi(&format!("m{step}"), &res, 20 + rng.below(10), &deps));
+            }
+            last = cur;
+        }
+        assert_eq!(e.run(), reference::run(&e), "case {case} nodes {nodes}");
+    }
+}

@@ -238,6 +238,34 @@ fn fleet_tasks_scale_with_cluster_size() {
 }
 
 #[test]
+fn fig4_netsim_smoke_at_128_nodes() {
+    // The paper's largest design point, end to end on the full
+    // per-message simulator: VGG-A x128 on a clean Cori fabric with the
+    // fixed recipe plan — ~100k tasks under auto (butterfly) collectives
+    // (the ring-pinned >1M-message ablation of the same point runs in
+    // bench_netsim_perf). The bar is loose on purpose — the 5% analytic
+    // agreement is asserted at n in {8,32,64} above; here we pin that
+    // the 128-node expansion completes and lands in the Fig 4 ballpark
+    // (determinism is covered per-engine by the oracle suite).
+    let p = contention_free_cori();
+    let net = zoo::vgg_a();
+    let cfg = SimConfig { iterations: 3, ..SimConfig::recipe(&net, 128, 512) };
+    let full = simulate_training_fleet(&net, &p, &cfg, &FleetConfig::homogeneous(128));
+    // ~100k tasks under auto (butterfly) collectives; the ring ablation
+    // of the same point is the >1M-message case the perf bench times
+    assert!(full.tasks > 50_000, "expected a full per-message expansion, got {}", full.tasks);
+    let rep = simulate_training(&net, &p, &cfg);
+    let rel = (full.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
+    assert!(
+        rel < 0.10,
+        "fig4@128: full {} vs analytic {} ({:.1}% off)",
+        full.iteration_s,
+        rep.iteration_s,
+        100.0 * rel
+    );
+}
+
+#[test]
 fn cross_backend_consistency_all_models() {
     // The spec-API form of the validation invariant, extended from the
     // one wired VGG case to every full-size paper network: on a clean
@@ -247,12 +275,14 @@ fn cross_backend_consistency_all_models() {
     // paper's own model-vs-measurement methodology, §5-6.
     use pcl_dnn::experiment::{AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend};
 
+    // n=64 was #[ignore]-tier before the engine's indexed dispatch; it
+    // now runs in the default suite alongside 8 and 32
     for (model, platform, mb) in [
         ("vgg_a", "cori", 256u64),
         ("overfeat_fast", "aws", 256),
         ("cddnn_full", "endeavor", 1024),
     ] {
-        for nodes in [8u64, 32] {
+        for nodes in [8u64, 32, 64] {
             let mut spec =
                 ExperimentSpec::of(&format!("xcheck_{model}_{nodes}"), model, platform, nodes, mb);
             spec.cluster.congestion = Some(0.0);

@@ -101,7 +101,7 @@ fn engine_is_deterministic_across_runs() {
         let mut prev = None;
         for i in 0..50 {
             let deps: Vec<_> = prev.into_iter().collect();
-            let id = e.add(format!("t{i}"), i % 3, 7 + (i as u64 * 13) % 40, &deps);
+            let id = e.add(&format!("t{i}"), i % 3, 7 + (i as u64 * 13) % 40, &deps);
             if i % 4 != 0 {
                 prev = Some(id);
             } else {

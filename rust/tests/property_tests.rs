@@ -237,7 +237,7 @@ fn random_engine(rng: &mut Rng) -> Engine {
             deps.sort_unstable();
             deps.dedup();
         }
-        e.add_multi(format!("t{id}"), &resources, dur, &deps);
+        e.add_multi(&format!("t{id}"), &resources, dur, &deps);
     }
     e
 }
@@ -249,7 +249,7 @@ fn prop_engine_task_starts_after_all_deps_end() {
         let e = random_engine(&mut rng);
         let s = e.run();
         for id in 0..e.len() {
-            for &d in &e.task(id).deps {
+            for &d in e.deps(id) {
                 assert!(
                     s.start_ns[id] >= s.end_ns[d],
                     "case {case}: task {id} starts {} before dep {d} ends {}",
@@ -270,7 +270,7 @@ fn prop_engine_no_overlap_on_any_unary_resource() {
         let n_res = e.n_resources();
         for r in 0..n_res {
             let mut intervals: Vec<(u64, u64)> = (0..e.len())
-                .filter(|&id| e.task(id).resources.contains(&r))
+                .filter(|&id| e.resources(id).contains(&r))
                 .map(|id| (s.start_ns[id], s.end_ns[id]))
                 .filter(|&(a, b)| b > a) // zero-width tasks cannot overlap
                 .collect();
@@ -314,10 +314,10 @@ fn prop_engine_makespan_bounds() {
         let mut per_res = vec![0u64; e.n_resources()];
         let mut total = 0u64;
         for id in 0..e.len() {
-            for &r in &e.task(id).resources {
-                per_res[r] += e.task(id).duration_ns;
+            for &r in e.resources(id) {
+                per_res[r] += e.duration_ns(id);
             }
-            total += e.task(id).duration_ns;
+            total += e.duration_ns(id);
         }
         let busiest = per_res.iter().copied().max().unwrap_or(0);
         assert!(s.makespan_ns >= busiest, "case {case}");
