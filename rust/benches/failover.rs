@@ -1,0 +1,85 @@
+//! Failover frontier bench — the replan-vs-stall-vs-shrink tradeoff
+//! across the paper's three networks and a node-count sweep, measured
+//! on the full-cluster simulator. Emits `BENCH_failover.json`:
+//! one row per (network, nodes, policy) with the measured disruption,
+//! the itemized replan/redistribution charges and the post-failure
+//! efficiency at the surviving node count — the cross-PR trajectory for
+//! the recovery model.
+
+use std::collections::BTreeMap;
+
+use pcl_dnn::experiment::{Backend, ExperimentSpec, FleetSimBackend, RecoveryReport};
+use pcl_dnn::util::json::Json;
+
+fn main() {
+    println!("=== failover ===");
+    let networks: &[(&str, &str, u64)] = &[
+        ("vgg_a", "cori", 512),
+        ("overfeat_fast", "aws", 256),
+        ("cddnn_full", "endeavor", 1024),
+    ];
+    let nodes_grid: &[u64] = &[8, 16, 32];
+    let policies: &[&str] = &["stall", "replan", "shrink"];
+
+    let mut root = BTreeMap::new();
+    for &(model, platform, mb) in networks {
+        println!("\n# {model} on {platform}, MB={mb} (fail_at=1, fail_node=0)");
+        let mut rows: Vec<Json> = Vec::new();
+        for &nodes in nodes_grid {
+            for &policy in policies {
+                let mut spec = ExperimentSpec::of(
+                    &format!("failover_{model}_{nodes}_{policy}"),
+                    model,
+                    platform,
+                    nodes,
+                    mb,
+                );
+                spec.cluster.fail_at = Some(1);
+                spec.cluster.fail_node = 0;
+                spec.cluster.recovery = policy.into();
+                spec.parallelism.iterations = 5;
+                let rep = FleetSimBackend.run(&spec).expect("failover spec runs");
+                let rec = RecoveryReport::from_json(&rep.recovery)
+                    .expect("failure spec reports recovery");
+                println!(
+                    "  x{nodes:>3} {policy:>6}: stall {:>7.3} s | replan {:>6.3} s | \
+                     redist {:>6.3} s | post eff {:>5.1}% ({} nodes, {} tasks)",
+                    rec.stall_s,
+                    rec.replan_s,
+                    rec.redistribution_s,
+                    100.0 * rec.post_efficiency,
+                    rec.nodes_after,
+                    rep.tasks
+                );
+                let mut row = BTreeMap::new();
+                row.insert("nodes".to_string(), Json::Num(nodes as f64));
+                row.insert("nodes_after".to_string(), Json::Num(rec.nodes_after as f64));
+                row.insert("policy".to_string(), Json::Str(policy.to_string()));
+                row.insert("post_efficiency".to_string(), Json::Num(rec.post_efficiency));
+                row.insert(
+                    "post_iteration_s".to_string(),
+                    Json::Num(rec.post_iteration_s),
+                );
+                row.insert(
+                    "post_samples_per_s".to_string(),
+                    Json::Num(rec.post_samples_per_s),
+                );
+                row.insert(
+                    "redistribution_s".to_string(),
+                    Json::Num(rec.redistribution_s),
+                );
+                row.insert("replan_s".to_string(), Json::Num(rec.replan_s));
+                row.insert("stall_s".to_string(), Json::Num(rec.stall_s));
+                row.insert("tasks".to_string(), Json::Num(rep.tasks as f64));
+                rows.push(Json::Obj(row));
+            }
+        }
+        root.insert(model.to_string(), Json::Arr(rows));
+    }
+    std::fs::write(
+        "BENCH_failover.json",
+        format!("{}\n", Json::Obj(root).pretty()),
+    )
+    .unwrap();
+    println!("\nwrote BENCH_failover.json");
+}

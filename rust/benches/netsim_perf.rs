@@ -51,6 +51,7 @@ fn main() {
             iterations: 3,
             plan: PartitionPlan::paper_recipe(&net, nodes, 512, 1.0),
             collective: choice,
+            degraded_plan: None,
         };
         let fleet = FleetConfig::homogeneous(nodes as usize);
 

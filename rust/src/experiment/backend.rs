@@ -10,15 +10,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::analytic::machine::Platform;
 use crate::models::NetDescriptor;
-use crate::netsim::cluster::{simulate_training, simulate_training_fleet, SimConfig};
-use crate::netsim::FleetConfig;
-use crate::plan::{self, planner, PartitionPlan};
+use crate::netsim::cluster::{self, simulate_training, simulate_training_fleet, SimConfig};
+use crate::netsim::{FleetConfig, RecoveryPolicy};
+use crate::plan::{self, planner, PartitionPlan, PlanCache};
 use crate::runtime::Runtime;
 use crate::trainer::{self, TrainConfig, TrainOutcome};
 use crate::util::json::Json;
 
 use super::registry;
-use super::report::ScalingReport;
+use super::report::{RecoveryReport, ScalingReport};
 use super::spec::ExperimentSpec;
 
 /// A substrate that can answer an [`ExperimentSpec`].
@@ -109,6 +109,117 @@ fn plan_for(
     Ok(resolved)
 }
 
+/// Spec-build-time validation of the failure event: an out-of-range
+/// `fail_node` or a `fail_at` past the simulated window would otherwise
+/// silently model a no-op failure (the fleet builder clamps/ignores).
+fn check_failure_event(spec: &ExperimentSpec) -> Result<()> {
+    if let Some(fail_at) = spec.cluster.fail_at {
+        let nodes = spec.cluster.nodes;
+        if spec.cluster.fail_node as u64 >= nodes {
+            bail!(
+                "cluster.fail_node ({}) is out of range for the {nodes}-node cluster \
+                 (valid: 0..={}) — the failure event would silently be a no-op",
+                spec.cluster.fail_node,
+                nodes.saturating_sub(1)
+            );
+        }
+        // fail_at == iterations-1 would put the failure iteration inside
+        // the steady-state measurement window itself (last minus
+        // previous), silently reporting the disruption as throughput
+        if fail_at.saturating_add(2) > spec.parallelism.iterations {
+            bail!(
+                "cluster.fail_at ({fail_at}) must leave at least one full iteration after \
+                 the failure (fail_at + 2 <= parallelism.iterations = {}) or the event \
+                 would pollute the steady-state window; raise parallelism.iterations \
+                 (fail_at + 3 also leaves a warm-up iteration) or lower fail_at",
+                spec.parallelism.iterations
+            );
+        }
+        registry::recovery_policy(&spec.cluster.recovery)?;
+    }
+    Ok(())
+}
+
+/// The plan a `replan` recovery re-derives for the degraded node count:
+/// mode-respecting (`data`/`hybrid` recipe at N-1; `auto` runs the
+/// planner search through the content-addressed cache, keyed by the
+/// degraded N — so an auto+replan run touches `artifacts/plans/` as a
+/// deliberate side effect, mirroring what a real coordinator would
+/// reuse across repeated failures; the pre-failure N-node search stays
+/// uncached like every other backend run). Spec-level pins are *not*
+/// re-applied — they were authored for the original node count, and
+/// hybrid pin shapes are generally invalid at N-1 (the recovery report
+/// records both plans).
+fn replan_plan(
+    spec: &ExperimentSpec,
+    net: &NetDescriptor,
+    platform: &Platform,
+    degraded: u64,
+) -> Result<PartitionPlan> {
+    let mb = spec.minibatch.global;
+    if degraded <= 1 {
+        return Ok(PartitionPlan::empty(degraded.max(1), mb));
+    }
+    let overlap = spec.parallelism.overlap;
+    Ok(match registry::plan_mode(&spec.parallelism.mode)? {
+        "data" => PartitionPlan::data_parallel(net, degraded, mb),
+        "hybrid" => PartitionPlan::paper_recipe(net, degraded, mb, overlap),
+        "auto" => {
+            let input = planner::PlannerInput {
+                net,
+                platform,
+                nodes: degraded,
+                minibatch: mb,
+                overlap,
+                collective: registry::collective(&spec.collective)?,
+                iterations: spec.parallelism.iterations.max(2),
+            };
+            let cache = PlanCache::new(PlanCache::default_dir());
+            cache.plan_cached(spec.model.name(), &input).0.plan
+        }
+        other => bail!("unhandled parallelism mode {other:?}"),
+    })
+}
+
+/// The degraded-fleet plan a failure-bearing spec implies under its
+/// recovery policy (`None` for stall / 1-node fleets: the plan is
+/// unchanged).
+fn degraded_plan_for(
+    spec: &ExperimentSpec,
+    net: &NetDescriptor,
+    platform: &Platform,
+    plan_before: &PartitionPlan,
+    nodes: u64,
+) -> Result<Option<PartitionPlan>> {
+    if spec.cluster.fail_at.is_none() || nodes <= 1 {
+        return Ok(None);
+    }
+    let degraded = match registry::recovery_policy(&spec.cluster.recovery)? {
+        RecoveryPolicy::Stall => return Ok(None),
+        RecoveryPolicy::Shrink => plan_before.renormalize_for(nodes - 1),
+        RecoveryPolicy::Replan => replan_plan(spec, net, platform, nodes - 1)?,
+    };
+    degraded.validate(net)?;
+    Ok(Some(degraded))
+}
+
+/// The (pre-failure, post-failure) partition plans a failure-bearing
+/// spec implies — the pair every recovery report records. Errors when
+/// the spec carries no failure event.
+pub fn recovery_plans(spec: &ExperimentSpec) -> Result<(PartitionPlan, PartitionPlan)> {
+    spec.cluster
+        .fail_at
+        .context("spec has no failure event (cluster.fail_at is null)")?;
+    check_failure_event(spec)?;
+    let net = spec.model.resolve()?;
+    let platform = resolved_platform(spec)?;
+    let nodes = spec.cluster.nodes;
+    let before = plan_for(spec, &net, &platform, nodes)?;
+    let after = degraded_plan_for(spec, &net, &platform, &before, nodes)?
+        .unwrap_or_else(|| before.clone());
+    Ok((before, after))
+}
+
 fn sim_config(
     spec: &ExperimentSpec,
     net: &NetDescriptor,
@@ -127,12 +238,24 @@ fn sim_config(
             spec.minibatch.global
         );
     }
+    check_failure_event(spec)?;
+    let plan = plan_for(spec, net, platform, nodes)?;
+    // the degraded plan applies when this SimConfig runs at the spec's
+    // node count — which includes every sweep point (run_sweep rewrites
+    // cluster.nodes per point, so each point models its own failure);
+    // only the backends' internal 1-node baseline call is exempt
+    let degraded_plan = if nodes == spec.cluster.nodes {
+        degraded_plan_for(spec, net, platform, &plan, nodes)?
+    } else {
+        None
+    };
     Ok(SimConfig {
         nodes,
         minibatch: spec.minibatch.global,
         iterations: spec.parallelism.iterations,
-        plan: plan_for(spec, net, platform, nodes)?,
+        plan,
         collective: registry::collective(&spec.collective)?,
+        degraded_plan,
     })
 }
 
@@ -154,6 +277,7 @@ fn base_report(spec: &ExperimentSpec, backend: &'static str) -> ScalingReport {
         min_compute_utilization: f64::NAN,
         tasks: 0,
         plan: Json::Null,
+        recovery: Json::Null,
     }
 }
 
@@ -184,6 +308,71 @@ impl Backend for AnalyticBackend {
         rep.mean_compute_utilization = r.compute_utilization;
         rep.min_compute_utilization = r.compute_utilization;
         rep.plan = cfg.plan.to_json();
+        // α-β pricing of the failure event: the same recovery policies
+        // the fleet simulator executes, in closed form (the cross-check)
+        if spec.cluster.fail_at.is_some() {
+            let policy = registry::recovery_policy(&spec.cluster.recovery)?;
+            let fabric = &platform.fabric;
+            let nodes = cfg.nodes;
+            let choice = cfg.collective;
+            let (nodes_after, post, plan_after, stall_s, replan_s, redist_s) =
+                match (&cfg.degraded_plan, policy) {
+                    (Some(degraded), _) => {
+                        let post_cfg = SimConfig {
+                            nodes: nodes - 1,
+                            plan: degraded.clone(),
+                            degraded_plan: None,
+                            ..cfg.clone()
+                        };
+                        let post = simulate_training(&net, &platform, &post_cfg);
+                        let replan_s = if policy == RecoveryPolicy::Replan {
+                            cluster::replan_coordination_s(fabric, nodes - 1)
+                        } else {
+                            0.0
+                        };
+                        let redist_s =
+                            cluster::redistribution_s(fabric, choice, &net, nodes, nodes - 1);
+                        let stall_s = cluster::DETECT_FRAC * spec.cluster.recovery_s
+                            + replan_s
+                            + redist_s;
+                        (nodes - 1, post, degraded.to_json(), stall_s, replan_s, redist_s)
+                    }
+                    // stall (or a 1-node fleet, which cannot shrink):
+                    // the node rejoins, the steady state is the main run
+                    _ => (
+                        nodes,
+                        r.clone(),
+                        cfg.plan.to_json(),
+                        spec.cluster.recovery_s,
+                        0.0,
+                        0.0,
+                    ),
+                };
+            // report the policy actually modeled: a 1-node fleet cannot
+            // shrink, so it degrades to stall exactly like the fleet
+            // simulator does (the cross-check is field-by-field)
+            let effective_policy = if cfg.degraded_plan.is_some() {
+                spec.cluster.recovery.clone()
+            } else {
+                "stall".to_string()
+            };
+            rep.recovery = RecoveryReport {
+                policy: effective_policy,
+                fail_at: spec.cluster.fail_at.unwrap_or(0) as u64,
+                fail_node: spec.cluster.fail_node as u64,
+                nodes_before: nodes,
+                nodes_after,
+                stall_s,
+                replan_s,
+                redistribution_s: redist_s,
+                post_iteration_s: post.iteration_s,
+                post_samples_per_s: post.images_per_s,
+                post_efficiency: (post.images_per_s / base.images_per_s) / nodes_after as f64,
+                plan_before: cfg.plan.to_json(),
+                plan_after,
+            }
+            .to_json();
+        }
         Ok(rep)
     }
 }
@@ -201,6 +390,7 @@ fn fleet_config(spec: &ExperimentSpec) -> Result<FleetConfig> {
         fail_at: spec.cluster.fail_at,
         fail_node: spec.cluster.fail_node,
         recovery_s: spec.cluster.recovery_s,
+        recovery: registry::recovery_policy(&spec.cluster.recovery)?,
     })
 }
 
@@ -238,6 +428,31 @@ impl Backend for FleetSimBackend {
         rep.min_compute_utilization = r.min_compute_utilization;
         rep.tasks = r.tasks as u64;
         rep.plan = cfg.plan.to_json();
+        // measured failure recovery: the steady-state window after the
+        // split IS the post-failure fleet, so the main run's numbers
+        // feed the section directly
+        if let Some(out) = &r.recovery {
+            rep.recovery = RecoveryReport {
+                policy: registry::recovery_policy_name(out.policy).to_string(),
+                fail_at: spec.cluster.fail_at.unwrap_or(0) as u64,
+                fail_node: spec.cluster.fail_node as u64,
+                nodes_before: cfg.nodes,
+                nodes_after: out.nodes_after,
+                stall_s: out.stall_s,
+                replan_s: out.replan_s,
+                redistribution_s: out.redistribution_s,
+                post_iteration_s: r.iteration_s,
+                post_samples_per_s: r.images_per_s,
+                post_efficiency: (r.images_per_s / base.images_per_s)
+                    / out.nodes_after as f64,
+                plan_before: cfg.plan.to_json(),
+                plan_after: match &out.plan_after {
+                    Some(p) => p.to_json(),
+                    None => cfg.plan.to_json(),
+                },
+            }
+            .to_json();
+        }
         Ok(rep)
     }
 }
@@ -449,6 +664,66 @@ mod tests {
         for (a, b) in par.iter().zip(&ser) {
             assert_eq!(a.to_json().to_string(), b.to_json().to_string());
         }
+    }
+
+    #[test]
+    fn failure_events_are_validated_at_spec_build_time() {
+        // out-of-range fail_node: today this would silently model a
+        // no-op failure; it must fail with a context-rich error instead
+        let mut spec = ExperimentSpec::of("t", "vgg_a", "cori", 4, 256);
+        spec.cluster.fail_at = Some(1);
+        spec.cluster.fail_node = 7;
+        for b in [&AnalyticBackend as &dyn Backend, &FleetSimBackend] {
+            let e = format!("{:#}", b.run(&spec).unwrap_err());
+            assert!(e.contains("fail_node") && e.contains('7') && e.contains('4'), "{e}");
+        }
+        // fail_at past the simulated window never fires
+        let mut spec = ExperimentSpec::of("t", "vgg_a", "cori", 4, 256);
+        spec.cluster.fail_at = Some(9);
+        let e = format!("{:#}", AnalyticBackend.run(&spec).unwrap_err());
+        assert!(e.contains("fail_at") && e.contains("iterations"), "{e}");
+        // a clean spec with the same fields unset still runs
+        let spec = ExperimentSpec::of("t", "vgg_a", "cori", 4, 256);
+        AnalyticBackend.run(&spec).unwrap();
+    }
+
+    #[test]
+    fn recovery_sections_appear_only_on_failure_specs() {
+        use crate::experiment::report::RecoveryReport;
+        let mut spec = ExperimentSpec::of("t", "vgg_a", "cori", 4, 256);
+        spec.parallelism.iterations = 5;
+        let clean = AnalyticBackend.run(&spec).unwrap();
+        assert_eq!(clean.recovery, Json::Null);
+        spec.cluster.fail_at = Some(1);
+        for policy in ["stall", "replan", "shrink"] {
+            spec.cluster.recovery = policy.into();
+            let rep = AnalyticBackend.run(&spec).unwrap();
+            let rec = RecoveryReport::from_json(&rep.recovery).unwrap();
+            assert_eq!(rec.policy, policy);
+            assert_eq!(rec.nodes_before, 4);
+            assert_eq!(rec.nodes_after, if policy == "stall" { 4 } else { 3 });
+            assert!(rec.stall_s > 0.0);
+            assert!(rec.post_efficiency > 0.0 && rec.post_efficiency <= 1.01);
+        }
+    }
+
+    #[test]
+    fn recovery_plans_pair_is_valid_at_the_degraded_count() {
+        let net = registry::model("vgg_a").unwrap();
+        let mut spec = ExperimentSpec::of("t", "vgg_a", "cori", 16, 512);
+        spec.cluster.fail_at = Some(1);
+        spec.cluster.recovery = "replan".into();
+        let (before, after) = recovery_plans(&spec).unwrap();
+        assert_eq!(before.nodes, 16);
+        assert_eq!(after.nodes, 15);
+        after.validate(&net).unwrap();
+        // stall keeps the plan
+        spec.cluster.recovery = "stall".into();
+        let (before, after) = recovery_plans(&spec).unwrap();
+        assert_eq!(before, after);
+        // no failure event -> no plans to pair
+        spec.cluster.fail_at = None;
+        assert!(recovery_plans(&spec).is_err());
     }
 
     #[test]

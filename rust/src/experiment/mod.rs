@@ -29,10 +29,11 @@ pub mod report;
 pub mod spec;
 
 pub use backend::{
-    backend_by_name, partition_plan, resolved_platform, run_runtime, run_runtime_with, run_sweep,
-    run_sweep_serial, AnalyticBackend, Backend, FleetSimBackend, RuntimeBackend, BACKENDS,
+    backend_by_name, partition_plan, recovery_plans, resolved_platform, run_runtime,
+    run_runtime_with, run_sweep, run_sweep_serial, AnalyticBackend, Backend, FleetSimBackend,
+    RuntimeBackend, BACKENDS,
 };
-pub use report::{curve_table, ScalingReport};
+pub use report::{curve_table, RecoveryReport, ScalingReport};
 pub use spec::{
     ClusterSpec, ExecutionSpec, ExperimentSpec, MinibatchSpec, ModelSpec, ParallelismSpec,
 };

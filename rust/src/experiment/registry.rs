@@ -10,7 +10,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::analytic::machine::Platform;
 use crate::models::{zoo, NetDescriptor};
 use crate::netsim::collective::Choice;
-use crate::netsim::Topology;
+use crate::netsim::{RecoveryPolicy, Topology};
 
 fn gpt_mini() -> NetDescriptor {
     zoo::gpt_descriptor("gpt_mini", 384, 6, 128)
@@ -99,6 +99,33 @@ pub fn plan_mode(name: &str) -> Result<&'static str> {
     })
 }
 
+/// Failure-recovery policies (`ExperimentSpec.cluster.recovery`):
+/// `stall` = wait out detection + restart + replay and resume at N,
+/// `replan` = drop to N-1 and re-derive the partition plan for the
+/// degraded node count, `shrink` = drop to N-1 keeping the original
+/// plan re-normalized per the §3.3 degenerate-shape rule.
+pub const RECOVERY_POLICIES: &[&str] = &["stall", "replan", "shrink"];
+
+pub fn recovery_policy(name: &str) -> Result<RecoveryPolicy> {
+    Ok(match name {
+        "stall" => RecoveryPolicy::Stall,
+        "replan" => RecoveryPolicy::Replan,
+        "shrink" => RecoveryPolicy::Shrink,
+        _ => bail!(
+            "unknown recovery policy {name:?} (available: {})",
+            RECOVERY_POLICIES.join("|")
+        ),
+    })
+}
+
+pub fn recovery_policy_name(p: RecoveryPolicy) -> &'static str {
+    match p {
+        RecoveryPolicy::Stall => "stall",
+        RecoveryPolicy::Replan => "replan",
+        RecoveryPolicy::Shrink => "shrink",
+    }
+}
+
 pub fn collective(name: &str) -> Result<Choice> {
     Ok(match name {
         "auto" => Choice::Auto,
@@ -172,6 +199,16 @@ mod tests {
     fn runtime_mapping_targets_runnable_models() {
         assert_eq!(runtime_model_for("vgg_a"), "vgg_tiny");
         assert_eq!(runtime_model_for("gpt_mini"), "gpt_mini");
+    }
+
+    #[test]
+    fn recovery_policies_resolve_and_roundtrip() {
+        for name in RECOVERY_POLICIES {
+            let p = recovery_policy(name).unwrap();
+            assert_eq!(recovery_policy_name(p), *name);
+        }
+        let e = recovery_policy("reboot").unwrap_err().to_string();
+        assert!(e.contains("stall") && e.contains("replan") && e.contains("shrink"), "{e}");
     }
 
     #[test]

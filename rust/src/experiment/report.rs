@@ -28,6 +28,7 @@ pub const SCHEMA_KEYS: &[&str] = &[
     "nodes",
     "plan",
     "platform",
+    "recovery",
     "samples_per_s",
     "spec",
     "speedup",
@@ -63,6 +64,10 @@ pub struct ScalingReport {
     /// The `PartitionPlan` the run executed (its canonical JSON form),
     /// `null` where no plan applies (e.g. manifest-only runtime models).
     pub plan: Json,
+    /// Failure-recovery section ([`RecoveryReport`] JSON) when the spec
+    /// carried a failure event; `null` on clean runs and on backends
+    /// that cannot express failures (runtime).
+    pub recovery: Json,
 }
 
 fn opt_json(v: Option<f64>) -> Json {
@@ -112,6 +117,7 @@ impl ScalingReport {
         );
         m.insert("tasks".to_string(), Json::Num(self.tasks as f64));
         m.insert("plan".to_string(), self.plan.clone());
+        m.insert("recovery".to_string(), self.recovery.clone());
         Json::Obj(m)
     }
 
@@ -134,6 +140,7 @@ impl ScalingReport {
             min_compute_utilization: get_f64(j, "min_compute_utilization")?,
             tasks: j.get("tasks")?.as_u64()?,
             plan: j.get("plan")?.clone(),
+            recovery: j.get("recovery")?.clone(),
         })
     }
 
@@ -159,6 +166,106 @@ impl ScalingReport {
         } else {
             f64::NAN
         }
+    }
+}
+
+/// The failure-recovery section of a [`ScalingReport`]: what one
+/// failure event cost under the spec's `cluster.recovery` policy and
+/// what the fleet looked like afterwards. Both simulation backends emit
+/// it in this shape — the netsim numbers are measured from the executed
+/// schedule, the analytic ones are the α-β charges — which is what
+/// makes the replan-vs-stall cross-check a field-by-field comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryReport {
+    /// `stall` | `replan` | `shrink` (registry names).
+    pub policy: String,
+    pub fail_at: u64,
+    pub fail_node: u64,
+    pub nodes_before: u64,
+    /// Active nodes after the event (N for stall, N-1 otherwise).
+    pub nodes_after: u64,
+    /// Total disruption seconds attributable to the event (stall's full
+    /// recovery window, or detection + replan + redistribution).
+    pub stall_s: f64,
+    /// Charged replan-coordination seconds (`replan` only; a component
+    /// of `stall_s`, itemized).
+    pub replan_s: f64,
+    /// Charged weight-redistribution seconds (`shrink`/`replan`;
+    /// likewise itemized).
+    pub redistribution_s: f64,
+    /// Post-failure steady-state iteration seconds.
+    pub post_iteration_s: f64,
+    pub post_samples_per_s: f64,
+    /// Post-failure speedup over the backend's 1-node baseline divided
+    /// by the *surviving* node count — the policy's tail throughput per
+    /// remaining node.
+    pub post_efficiency: f64,
+    /// `PartitionPlan` JSON before and after the event.
+    pub plan_before: Json,
+    pub plan_after: Json,
+}
+
+/// Field names of the serialized recovery section, sorted.
+pub const RECOVERY_KEYS: &[&str] = &[
+    "fail_at",
+    "fail_node",
+    "nodes_after",
+    "nodes_before",
+    "plan_after",
+    "plan_before",
+    "policy",
+    "post_efficiency",
+    "post_iteration_s",
+    "post_samples_per_s",
+    "redistribution_s",
+    "replan_s",
+    "stall_s",
+];
+
+impl RecoveryReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("policy".to_string(), Json::Str(self.policy.clone()));
+        m.insert("fail_at".to_string(), Json::Num(self.fail_at as f64));
+        m.insert("fail_node".to_string(), Json::Num(self.fail_node as f64));
+        m.insert("nodes_before".to_string(), Json::Num(self.nodes_before as f64));
+        m.insert("nodes_after".to_string(), Json::Num(self.nodes_after as f64));
+        m.insert("stall_s".to_string(), Json::Num(self.stall_s));
+        m.insert("replan_s".to_string(), Json::Num(self.replan_s));
+        m.insert("redistribution_s".to_string(), Json::Num(self.redistribution_s));
+        m.insert("post_iteration_s".to_string(), Json::Num(self.post_iteration_s));
+        m.insert("post_samples_per_s".to_string(), Json::Num(self.post_samples_per_s));
+        m.insert("post_efficiency".to_string(), Json::Num(self.post_efficiency));
+        m.insert("plan_before".to_string(), self.plan_before.clone());
+        m.insert("plan_after".to_string(), self.plan_after.clone());
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().context("recovery section must be a JSON object")?;
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        if keys != RECOVERY_KEYS {
+            bail!(
+                "recovery schema drift:\n  expected: {}\n  found:    {}",
+                RECOVERY_KEYS.join(","),
+                keys.join(",")
+            );
+        }
+        Ok(RecoveryReport {
+            policy: j.get("policy")?.as_str()?.to_string(),
+            fail_at: j.get("fail_at")?.as_u64()?,
+            fail_node: j.get("fail_node")?.as_u64()?,
+            nodes_before: j.get("nodes_before")?.as_u64()?,
+            nodes_after: j.get("nodes_after")?.as_u64()?,
+            stall_s: get_f64(j, "stall_s")?,
+            replan_s: get_f64(j, "replan_s")?,
+            redistribution_s: get_f64(j, "redistribution_s")?,
+            post_iteration_s: get_f64(j, "post_iteration_s")?,
+            post_samples_per_s: get_f64(j, "post_samples_per_s")?,
+            post_efficiency: get_f64(j, "post_efficiency")?,
+            plan_before: j.get("plan_before")?.clone(),
+            plan_after: j.get("plan_after")?.clone(),
+        })
     }
 }
 
@@ -200,6 +307,7 @@ mod tests {
             min_compute_utilization: 0.73,
             tasks: 0,
             plan: Json::Null,
+            recovery: Json::Null,
         }
     }
 
@@ -241,6 +349,46 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, SCHEMA_KEYS, "SCHEMA_KEYS must stay sorted");
         ScalingReport::check_schema(&sample().to_json()).unwrap();
+    }
+
+    #[test]
+    fn recovery_section_roundtrips_and_pins_its_keys() {
+        let mut sorted = RECOVERY_KEYS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, RECOVERY_KEYS, "RECOVERY_KEYS must stay sorted");
+        let rec = RecoveryReport {
+            policy: "replan".into(),
+            fail_at: 1,
+            fail_node: 2,
+            nodes_before: 32,
+            nodes_after: 31,
+            stall_s: 1.35,
+            replan_s: 0.05,
+            redistribution_s: 0.3,
+            post_iteration_s: 0.21,
+            post_samples_per_s: 2438.0,
+            post_efficiency: 0.72,
+            plan_before: Json::Null,
+            plan_after: Json::Null,
+        };
+        let text = rec.to_json().to_string();
+        let back = RecoveryReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.to_json().to_string(), text);
+        // a drifted key set is rejected, not silently defaulted
+        let mut m = match rec.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("stall_s");
+        assert!(RecoveryReport::from_json(&Json::Obj(m)).is_err());
+        // and a report carrying the section round-trips through the wire
+        let mut rep = sample();
+        rep.recovery = rec.to_json();
+        let round = Json::parse(&rep.to_json().to_string()).unwrap();
+        ScalingReport::check_schema(&round).unwrap();
+        let back = ScalingReport::from_json(&round).unwrap();
+        assert_eq!(RecoveryReport::from_json(&back.recovery).unwrap(), rec);
     }
 
     #[test]

@@ -61,6 +61,12 @@ pub struct ClusterSpec {
     pub fail_at: Option<usize>,
     pub fail_node: usize,
     pub recovery_s: f64,
+    /// Failure-recovery policy: `stall` (wait out detection + restart +
+    /// replay at full N — the classic behavior) | `replan` (drop to N-1
+    /// and re-derive the partition plan for the degraded node count) |
+    /// `shrink` (drop to N-1 keeping the original plan re-normalized per
+    /// the §3.3 degenerate-shape rule). Registry names.
+    pub recovery: String,
     /// Override the platform fabric's `congestion_per_doubling` fudge.
     /// `Some(0.0)` = clean fabric, the setting under which the analytic
     /// and netsim backends must agree (cross-backend validation).
@@ -79,6 +85,7 @@ impl Default for ClusterSpec {
             fail_at: None,
             fail_node: 0,
             recovery_s: 5.0,
+            recovery: "stall".into(),
             congestion: None,
         }
     }
@@ -392,6 +399,7 @@ impl ExperimentSpec {
         );
         cluster.insert("fail_node".to_string(), num(self.cluster.fail_node as f64));
         cluster.insert("recovery_s".to_string(), num(self.cluster.recovery_s));
+        cluster.insert("recovery".to_string(), Json::Str(self.cluster.recovery.clone()));
         cluster.insert("congestion".to_string(), opt_num(self.cluster.congestion));
 
         let mut par = BTreeMap::new();
@@ -486,7 +494,7 @@ impl ExperimentSpec {
             c,
             &[
                 "nodes", "topology", "radix", "oversub", "straggler_skew", "hetero",
-                "fail_at", "fail_node", "recovery_s", "congestion",
+                "fail_at", "fail_node", "recovery_s", "recovery", "congestion",
             ],
             "cluster",
         )?;
@@ -503,16 +511,19 @@ impl ExperimentSpec {
             },
             fail_node: get_usize(c, "fail_node", d.cluster.fail_node)?,
             recovery_s: get_f64(c, "recovery_s", d.cluster.recovery_s)?,
+            recovery: get_str(c, "recovery", &d.cluster.recovery)?,
             congestion: match c.opt("congestion") {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(v.as_f64().context("field \"congestion\"")?),
             },
         };
 
-        // validate registry names early: a typo'd topology/collective
-        // must fail at parse time, not only when the netsim backend
-        // first consumes it (the analytic backend never would)
+        // validate registry names early: a typo'd topology/collective/
+        // recovery policy must fail at parse time, not only when the
+        // netsim backend first consumes it (the analytic backend's spec
+        // job would otherwise let a typo'd committed spec through)
         registry::topology(&cluster.topology, cluster.radix, cluster.oversub)?;
+        registry::recovery_policy(&cluster.recovery)?;
 
         let p = section(j, "parallelism", &empty)?;
         check_keys(p, &["mode", "overlap", "iterations"], "parallelism")?;
@@ -635,7 +646,7 @@ impl ExperimentSpec {
     fn set_path(&mut self, section: &str, rest: &str, value: &str) -> Result<()> {
         const CLUSTER_KEYS: &[&str] = &[
             "nodes", "topology", "radix", "oversub", "straggler_skew", "hetero", "fail_at",
-            "fail_node", "recovery_s", "congestion",
+            "fail_node", "recovery_s", "recovery", "congestion",
         ];
         const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations"];
         const EXECUTION_KEYS: &[&str] = &[
@@ -762,7 +773,23 @@ impl ExperimentSpec {
                         if value == "none" { None } else { Some(parsed(key, value)?) }
                 }
                 "fail_node" | "fail-node" => self.cluster.fail_node = parsed(key, value)?,
-                "recovery_s" | "recovery" => self.cluster.recovery_s = parsed(key, value)?,
+                "recovery_s" => self.cluster.recovery_s = parsed(key, value)?,
+                "recovery" => {
+                    // this key used to alias recovery_s; steer anyone
+                    // still passing seconds to the renamed knob
+                    registry::recovery_policy(value).map_err(|e| {
+                        if value.parse::<f64>().is_ok() {
+                            anyhow!(
+                                "--set recovery={value}: \"recovery\" is now the policy \
+                                 (stall|replan|shrink); use recovery_s={value} for the \
+                                 recovery-seconds knob"
+                            )
+                        } else {
+                            e
+                        }
+                    })?;
+                    self.cluster.recovery = value.into()
+                }
                 "congestion" => {
                     self.cluster.congestion =
                         if value == "none" { None } else { Some(parsed(key, value)?) }
@@ -791,9 +818,9 @@ impl ExperimentSpec {
                 other => bail!(
                     "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
                      radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
-                     congestion, mode, overlap, iterations, collective, workers, steps, lr, \
-                     momentum, seed, log_every, eval_every, optimizer, artifacts, exec_model, \
-                     name — or a dotted path like cluster.nodes, parallelism.mode, \
+                     recovery, congestion, mode, overlap, iterations, collective, workers, \
+                     steps, lr, momentum, seed, log_every, eval_every, optimizer, artifacts, \
+                     exec_model, name — or a dotted path like cluster.nodes, parallelism.mode, \
                      minibatch.global, execution.steps, plan.<group>.<field>)"
                 ),
         }
@@ -813,6 +840,7 @@ mod tests {
         s.cluster.straggler_skew = 0.25;
         s.cluster.hetero = true;
         s.cluster.fail_at = Some(2);
+        s.cluster.recovery = "replan".into();
         s.cluster.congestion = Some(0.0);
         s.parallelism.mode = "data".into();
         s.collective = "ring".into();
@@ -920,6 +948,7 @@ mod tests {
             ("cluster", "fail_at", "1"),
             ("cluster", "fail_node", "0"),
             ("cluster", "recovery_s", "2.5"),
+            ("cluster", "recovery", "shrink"),
             ("cluster", "congestion", "0"),
             ("parallelism", "mode", "data"),
             ("parallelism", "overlap", "0.5"),
@@ -1020,5 +1049,19 @@ mod tests {
         let mut s = ExperimentSpec::default();
         assert!(s.apply_set("topology=torus").is_err());
         assert!(s.apply_set("collective=nccl").is_err());
+        // recovery policies are registry names too
+        let e = ExperimentSpec::parse_str(r#"{"cluster": {"recovery": "reboot"}}"#)
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("stall") && msg.contains("replan") && msg.contains("shrink"),
+            "{msg}"
+        );
+        assert!(s.apply_set("cluster.recovery=reboot").is_err());
+        s.apply_set("recovery=replan").unwrap();
+        assert_eq!(s.cluster.recovery, "replan");
+        // the seconds knob kept its explicit name
+        s.apply_set("recovery_s=7.5").unwrap();
+        assert_eq!(s.cluster.recovery_s, 7.5);
     }
 }

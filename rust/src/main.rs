@@ -5,6 +5,7 @@
 //! repro run --spec specs/fig4.json --backend netsim --set nodes=64,minibatch=256
 //! repro run --spec specs/fig6_vgg.json --sweep-nodes 1,2,4,8,16 --out BENCH_fig6.json
 //! repro plan --spec specs/fig4.json --set nodes=64 [--validate netsim]
+//! repro failover --spec specs/fig4.json --policies stall,replan,shrink
 //! repro schema                                     ScalingReport field list
 //! repro info                                       artifact/model inventory + platform
 //! repro analyze table1|cache-blocking|register-blocking|hybrid|fig3|kernel-blocking
@@ -52,6 +53,7 @@ fn run() -> Result<()> {
     match opts.pos(0) {
         Some("run") => run_spec(&opts),
         Some("plan") => plan_cmd(&opts),
+        Some("failover") => failover(&opts),
         Some("schema") => {
             for key in pcl_dnn::experiment::report::SCHEMA_KEYS {
                 println!("{key}");
@@ -65,7 +67,7 @@ fn run() -> Result<()> {
         Some("score") => score(&opts),
         _ => {
             eprintln!(
-                "usage: repro <run|plan|schema|info|analyze|simulate|train|score> ... \
+                "usage: repro <run|plan|failover|schema|info|analyze|simulate|train|score> ... \
                  (see README quickstart; `run --spec specs/<figure>.json` is the main entry)"
             );
             Ok(())
@@ -350,6 +352,136 @@ fn plan_cmd(opts: &Opts) -> Result<()> {
         println!();
     }
     let json = if out_doc.len() == 1 { out_doc.remove(0) } else { Json::Arr(out_doc) };
+    if opts.bool_flag("json") {
+        println!("{json}");
+    }
+    if let Some(out) = opts.str_opt("out") {
+        std::fs::write(out, format!("{}\n", json.pretty()))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `repro failover --spec <file> [--set k=v,...]
+/// [--policies stall,replan,shrink] [--backend netsim] [--no-cross-check]
+/// [--json] [--out file]`
+///
+/// Sweep the failure-recovery policies over one spec: for each policy
+/// the spec runs with `cluster.recovery` overridden, and the report's
+/// recovery section (disruption seconds, itemized replan/redistribution
+/// charges, post-failure efficiency at the surviving node count) is
+/// tabulated. A spec without a failure event gets a default one
+/// injected (`fail_at = 1`, `fail_node` as committed) so the committed
+/// figure specs sweep as-is. Unless `--no-cross-check`, each netsim row
+/// is paired with the analytic backend's α-β pricing of the same
+/// policy and the post-failure-efficiency delta is printed.
+fn failover(opts: &Opts) -> Result<()> {
+    let path = opts
+        .str_opt("spec")
+        .context("--spec <file> is required (committed figures live in specs/)")?;
+    let mut spec = ExperimentSpec::load(path)?;
+    if let Some(sets) = opts.str_opt("set") {
+        spec.apply_set(sets)?;
+    }
+    if spec.cluster.fail_at.is_none() {
+        spec.cluster.fail_at = Some(1);
+        println!(
+            "note: spec has no failure event; injecting fail_at=1 (fail_node {})",
+            spec.cluster.fail_node
+        );
+    }
+    // a clean post-failure steady window needs the transition iteration
+    // plus a warm-up iteration before the last-minus-previous window
+    let min_iters = spec.cluster.fail_at.unwrap_or(0).saturating_add(3);
+    if spec.parallelism.iterations < min_iters {
+        println!(
+            "note: raising parallelism.iterations {} -> {min_iters} for a clean \
+             post-failure steady window",
+            spec.parallelism.iterations
+        );
+        spec.parallelism.iterations = min_iters;
+    }
+    let policies: Vec<String> = opts
+        .str_or("policies", "stall,replan,shrink")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().to_string())
+        .collect();
+    for p in &policies {
+        registry::recovery_policy(p)?;
+    }
+    let backend = backend_by_name(&opts.str_or("backend", "netsim"))?;
+    let cross_check = backend.name() == "netsim" && !opts.bool_flag("no-cross-check");
+    println!(
+        "# failover — {} x{} on {}, MB={}, fail_at={} fail_node={}",
+        spec.model.name(),
+        spec.cluster.nodes,
+        spec.platform,
+        spec.minibatch.global,
+        spec.cluster.fail_at.unwrap_or(0),
+        spec.cluster.fail_node
+    );
+    let mut cols = vec![
+        "policy", "nodes after", "stall s", "replan s", "redist s", "post iter ms",
+        "post samples/s", "post eff",
+    ];
+    if cross_check {
+        cols.push("analytic eff Δ");
+    }
+    let mut t = Table::new(&cols);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best: Option<(String, f64)> = None;
+    for policy in &policies {
+        let mut s = spec.clone();
+        s.cluster.recovery = policy.clone();
+        let rep = backend.run(&s)?;
+        let rec = pcl_dnn::experiment::RecoveryReport::from_json(&rep.recovery)
+            .context("backend report carries no recovery section")?;
+        let mut row = vec![
+            rec.policy.clone(),
+            rec.nodes_after.to_string(),
+            format!("{:.3}", rec.stall_s),
+            format!("{:.3}", rec.replan_s),
+            format!("{:.3}", rec.redistribution_s),
+            format!("{:.2}", rec.post_iteration_s * 1e3),
+            format!("{:.0}", rec.post_samples_per_s),
+            format!("{:.1}%", 100.0 * rec.post_efficiency),
+        ];
+        let mut doc = match rec.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.insert("backend".to_string(), Json::Str(rep.backend.clone()));
+        if cross_check {
+            let analytic = AnalyticBackend.run(&s)?;
+            let arec =
+                pcl_dnn::experiment::RecoveryReport::from_json(&analytic.recovery)?;
+            let delta = (rec.post_efficiency - arec.post_efficiency)
+                / arec.post_efficiency.max(1e-9);
+            row.push(format!("{:+.1}%", 100.0 * delta));
+            doc.insert(
+                "analytic_post_efficiency".to_string(),
+                Json::Num(arec.post_efficiency),
+            );
+        }
+        t.row(row);
+        let improves = match &best {
+            Some((_, e)) => rec.post_efficiency > *e,
+            None => true,
+        };
+        if improves {
+            best = Some((rec.policy.clone(), rec.post_efficiency));
+        }
+        rows.push(Json::Obj(doc));
+    }
+    t.print();
+    if let Some((policy, eff)) = best {
+        println!("best post-failure efficiency: {policy} ({:.1}%)", 100.0 * eff);
+    }
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("policies".to_string(), Json::Arr(rows));
+    root.insert("spec".to_string(), Json::Str(spec.name.clone()));
+    let json = Json::Obj(root);
     if opts.bool_flag("json") {
         println!("{json}");
     }

@@ -49,7 +49,7 @@ use crate::plan::{planner, PartitionPlan};
 
 use super::collective::{self, CollectiveKind};
 use super::engine::{DepLists, Engine, Schedule, TaskId};
-use super::fleet::{Fleet, FleetConfig};
+use super::fleet::{Fleet, FleetConfig, RecoveryPolicy};
 use super::network::ns;
 
 const COMPUTE: usize = 0;
@@ -73,6 +73,12 @@ pub struct SimConfig {
     /// it per layer group; both the α-β cost models and the per-message
     /// schedule builders honor the same resolution.
     pub collective: collective::Choice,
+    /// Plan the fleet executes after a `shrink`/`replan` failure event
+    /// drops it to N-1 survivors. Backends supply the re-derived plan
+    /// for `replan` (planner/recipe at the degraded node count, cached
+    /// by degraded N); `None` falls back to re-normalizing `plan` per
+    /// the §3.3 degenerate-shape rule. Ignored for `stall`.
+    pub degraded_plan: Option<PartitionPlan>,
 }
 
 impl Default for SimConfig {
@@ -83,6 +89,7 @@ impl Default for SimConfig {
             iterations: 4,
             plan: PartitionPlan::empty(1, 256),
             collective: collective::Choice::Auto,
+            degraded_plan: None,
         }
     }
 }
@@ -141,6 +148,73 @@ pub struct FleetSimResult {
     pub min_compute_utilization: f64,
     /// Total tasks simulated (messages + compute + setup).
     pub tasks: usize,
+    /// Failure-recovery measurement (`Some` whenever a failure event
+    /// fired inside the simulated window).
+    pub recovery: Option<RecoveryOutcome>,
+}
+
+/// What a failure event cost and what the fleet resumed as — measured
+/// from the executed schedule plus the charges baked into the DAG.
+#[derive(Debug, Clone)]
+pub struct RecoveryOutcome {
+    pub policy: RecoveryPolicy,
+    /// Active nodes after the event (N for stall, N-1 otherwise).
+    pub nodes_after: u64,
+    /// Measured disruption: extra seconds the failure iteration took
+    /// over the post-failure steady iteration.
+    pub stall_s: f64,
+    /// Charged replan-coordination seconds (`replan` only).
+    pub replan_s: f64,
+    /// Charged α-β weight-redistribution seconds (`shrink`/`replan`).
+    pub redistribution_s: f64,
+    /// Plan the survivors resumed on; `None` = the original plan
+    /// (stall keeps the fleet intact).
+    pub plan_after: Option<PartitionPlan>,
+}
+
+// ---------------------------------------------------------------------
+// Failure-recovery cost model (shared by the fleet DAG builder and the
+// analytic backend's α-β pricing of the same policies)
+// ---------------------------------------------------------------------
+
+/// Fraction of [`FleetConfig::recovery_s`] spent *detecting* a failure
+/// (the survivors' timeout). Stall pays the full window — detection +
+/// restart + replay of the dead node; the reconfiguring policies pay
+/// only this detection share before shrinking/replanning around it.
+pub const DETECT_FRAC: f64 = 0.2;
+
+/// Fixed coordinator-side charge for running the plan search during a
+/// `replan` recovery.
+pub const REPLAN_SEARCH_S: f64 = 0.05;
+
+/// Control-plane seconds to agree on and install a re-derived plan
+/// across the degraded fleet: the coordinator's search charge plus a
+/// log2-depth barrier + broadcast priced on the actual fabric.
+pub fn replan_coordination_s(fabric: &FabricSpec, nodes_after: u64) -> f64 {
+    let rounds = (nodes_after.max(2) as f64).log2().ceil() + 1.0;
+    REPLAN_SEARCH_S + 2.0 * rounds * (fabric.latency_s + fabric.sw_latency_s)
+}
+
+/// Weight bytes that must move to re-establish sharding after losing
+/// one of `nodes` equal owners: the dead node's 1/N share of the model.
+pub fn redistribution_bytes(net: &NetDescriptor, nodes: u64) -> u64 {
+    if nodes <= 1 {
+        return 0;
+    }
+    net.weight_bytes() / nodes
+}
+
+/// α-β seconds to redistribute that share across the survivors (an
+/// allgather over the degraded member set) — the closed-form twin of
+/// the `redist` collective the fleet DAG expands onto the real links.
+pub fn redistribution_s(
+    fabric: &FabricSpec,
+    choice: collective::Choice,
+    net: &NetDescriptor,
+    nodes_before: u64,
+    nodes_after: u64,
+) -> f64 {
+    choice.allgather_s(fabric, redistribution_bytes(net, nodes_before), nodes_after)
 }
 
 /// Communication seconds for one layer's gradient/weight exchange under
@@ -182,19 +256,53 @@ fn pass_time_s(layer: &Layer, m: &crate::analytic::MachineSpec, mb: f64) -> f64 
     t / m.framework_efficiency + m.per_pass_overhead_s
 }
 
+/// A plan's assignment for a layer at an explicit member count — the
+/// fleet builder's phase-aware lookup (after a shrink/replan failure the
+/// member count and plan differ from `SimConfig`'s). Single-node and
+/// weightless layers trivially run data-parallel: nothing is exchanged.
+fn strategy_in(plan: &PartitionPlan, layer: &Layer, nodes: u64) -> Strategy {
+    if !layer.is_weighted() || nodes <= 1 {
+        return Strategy::Data;
+    }
+    plan.strategy_for(&layer.name)
+}
+
+/// Collective policy for a layer's exchanges under `plan`: the plan
+/// group's pinned choice, falling back to the experiment-level default.
+fn choice_in(
+    plan: &PartitionPlan,
+    layer: &Layer,
+    default: collective::Choice,
+) -> collective::Choice {
+    plan.collective_for(&layer.name).unwrap_or(default)
+}
+
+/// Scatter per-member collective results (`done[j]` for member `j`)
+/// into a global-node-indexed array.
+fn scatter(out: &mut [TaskId], members: &[usize], done: &[TaskId]) {
+    for (j, &v) in members.iter().enumerate() {
+        out[v] = done[j];
+    }
+}
+
+/// Map a `GroupTopology` member list (positions within the active
+/// member set) onto global node ids.
+fn to_global(members: &mut [usize], active: &[usize]) {
+    for m in members.iter_mut() {
+        *m = active[*m];
+    }
+}
+
 /// The plan's assignment for a layer (single-node and weightless layers
 /// trivially run data-parallel: there is nothing to exchange).
 fn strategy_for(layer: &Layer, cfg: &SimConfig) -> Strategy {
-    if !layer.is_weighted() || cfg.nodes <= 1 {
-        return Strategy::Data;
-    }
-    cfg.plan.strategy_for(&layer.name)
+    strategy_in(&cfg.plan, layer, cfg.nodes)
 }
 
 /// Collective policy for a layer's exchanges: the plan group's pinned
 /// choice, falling back to the experiment-level default.
 fn choice_for(layer: &Layer, cfg: &SimConfig) -> collective::Choice {
-    cfg.plan.collective_for(&layer.name).unwrap_or(cfg.collective)
+    choice_in(&cfg.plan, layer, cfg.collective)
 }
 
 /// Simulate `cfg.iterations` of synchronous SGD and return steady-state
@@ -365,9 +473,27 @@ pub struct FleetDag {
     iter_ends: Vec<Vec<TaskId>>,
     /// Recovery stalls: they occupy a compute stream but are idle time.
     fail_tasks: Vec<TaskId>,
+    /// Failure event baked into the DAG (policy, split point, charges).
+    recovery: Option<DagRecovery>,
     nodes: usize,
     minibatch: u64,
     iterations: usize,
+}
+
+/// A failure event as resolved by the DAG builder: where the simulation
+/// split, what the survivors resumed on, and the charges the transition
+/// tasks carry (recorded so reports can itemize them).
+#[derive(Debug, Clone)]
+struct DagRecovery {
+    policy: RecoveryPolicy,
+    fail_at: usize,
+    fail_node: usize,
+    nodes_after: usize,
+    detect_s: f64,
+    replan_s: f64,
+    redistribution_s: f64,
+    /// Resolved degraded plan (`None` for stall: the plan is unchanged).
+    degraded_plan: Option<PartitionPlan>,
 }
 
 /// Shared context of the fleet DAG construction: the engine, the fleet
@@ -489,6 +615,14 @@ impl<'a> DagBuilder<'a> {
 /// Build the full-cluster DAG for `cfg.iterations` of synchronous SGD:
 /// every node of the fleet, with collectives expanded to per-message
 /// tasks over contended links. `cfg.nodes` must equal `fleet_cfg.nodes`.
+///
+/// A failure event (`fleet_cfg.fail_at`) splits the build per the
+/// fleet's [`RecoveryPolicy`]: `stall` keeps all N nodes and inserts the
+/// classic detection + restart + replay stall on the dead node's compute
+/// stream; `shrink`/`replan` drop the dead node at the split, insert the
+/// detect → (replan) → redistribute transition on the survivors, and
+/// continue the remaining iterations at N-1 on the degraded plan with
+/// the global minibatch respread over the survivors.
 pub fn build_training_fleet(
     net: &NetDescriptor,
     platform: &Platform,
@@ -510,9 +644,62 @@ pub fn build_training_fleet(
     let fabric = &platform.fabric;
     let fleet = Fleet::new(fleet_cfg, fabric);
     let n = fleet_cfg.nodes;
-    let mb_node = cfg.minibatch as f64 / cfg.nodes as f64;
     let layers = &net.layers;
     let k = layers.len();
+
+    // failure-event resolution: an event outside the simulated window
+    // never fires, and a 1-node fleet has no survivors to shrink onto,
+    // so it degrades to stall
+    let policy = if n <= 1 {
+        RecoveryPolicy::Stall
+    } else {
+        fleet_cfg.recovery
+    };
+    let recovery: Option<DagRecovery> = fleet_cfg
+        .fail_at
+        .filter(|&it| it < cfg.iterations)
+        .map(|fail_at| {
+            let fail_node = fleet_cfg.fail_node.min(n - 1);
+            let (nodes_after, degraded_plan) = match policy {
+                RecoveryPolicy::Stall => (n, None),
+                _ => {
+                    let plan = match &cfg.degraded_plan {
+                        Some(p) => p.clone(),
+                        None => cfg.plan.renormalize_for(n as u64 - 1),
+                    };
+                    debug_assert!(
+                        plan.assignments.is_empty() || plan.nodes == n as u64 - 1,
+                        "degraded plan was derived for {} nodes but {} survive",
+                        plan.nodes,
+                        n - 1
+                    );
+                    (n - 1, Some(plan))
+                }
+            };
+            let reconfigures = policy != RecoveryPolicy::Stall;
+            DagRecovery {
+                policy,
+                fail_at,
+                fail_node,
+                nodes_after,
+                detect_s: if reconfigures {
+                    DETECT_FRAC * fleet_cfg.recovery_s
+                } else {
+                    0.0
+                },
+                replan_s: if policy == RecoveryPolicy::Replan {
+                    replan_coordination_s(fabric, nodes_after as u64)
+                } else {
+                    0.0
+                },
+                redistribution_s: if reconfigures {
+                    redistribution_s(fabric, cfg.collective, net, n as u64, nodes_after as u64)
+                } else {
+                    0.0
+                },
+                degraded_plan,
+            }
+        });
 
     let mut b = DagBuilder::new(&fleet, fabric);
     // [node][layer] update task of the previous iteration
@@ -523,79 +710,149 @@ pub fn build_training_fleet(
     let mut prev_chain: Vec<Option<TaskId>> = vec![None; n];
     // recovery stalls occupy a compute stream but are idle time, not work
     let mut fail_tasks: Vec<TaskId> = Vec::new();
-    let all_nodes: Vec<usize> = (0..n).collect();
+
+    // the member set and plan of the phase being built: all N nodes on
+    // cfg.plan until a shrink/replan failure drops the fleet to the
+    // survivors on the degraded plan (arrays stay indexed by global node
+    // id throughout; dead slots simply stop being written or read)
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut plan: &PartitionPlan = &cfg.plan;
+    let mut n_active: u64 = n as u64;
 
     for it in 0..cfg.iterations {
         let mut iter_tail: Vec<TaskId> = Vec::new();
-        // failure/rejoin: the failed node stalls for detection + restart +
-        // replay before its forward pass; the synchronous step waits. The
-        // stall is gated on the node's previous iteration so it lands at
-        // the start of iteration `fail_at`, not at simulation time zero.
-        let mut stall: Vec<Option<TaskId>> = vec![None; n];
-        if fleet_cfg.fail_at == Some(it) {
-            let v = fleet_cfg.fail_node.min(n - 1);
-            let deps: Vec<TaskId> = prev_chain[v].into_iter().collect();
-            let id = b.eng.add(
-                "fail",
-                fleet.compute_res(v),
-                ns(fleet_cfg.recovery_s),
-                &deps,
-            );
-            fail_tasks.push(id);
-            stall[v] = Some(id);
+        // per-node gate releasing this iteration's first forward pass
+        // (stall rejoin, or the shrink/replan transition's last task)
+        let mut resume_gate: Vec<Option<TaskId>> = vec![None; n];
+        if let Some(rec) = recovery.as_ref().filter(|r| r.fail_at == it) {
+            match rec.policy {
+                RecoveryPolicy::Stall => {
+                    // failure/rejoin: the failed node stalls for detection +
+                    // restart + replay before its forward pass; the
+                    // synchronous step waits. Gated on the node's previous
+                    // iteration so the stall lands at the start of iteration
+                    // `fail_at`, not at simulation time zero.
+                    let v = rec.fail_node;
+                    let deps: Vec<TaskId> = prev_chain[v].into_iter().collect();
+                    let id = b.eng.add(
+                        "fail",
+                        fleet.compute_res(v),
+                        ns(fleet_cfg.recovery_s),
+                        &deps,
+                    );
+                    fail_tasks.push(id);
+                    resume_gate[v] = Some(id);
+                }
+                RecoveryPolicy::Replan | RecoveryPolicy::Shrink => {
+                    // detect → (replan) → redistribute → resume: the
+                    // survivors time out on the dead node, agree on the
+                    // degraded plan, then re-establish weight ownership
+                    // over the actual fabric before the next iteration
+                    alive[rec.fail_node] = false;
+                    active.retain(|&v| v != rec.fail_node);
+                    n_active = rec.nodes_after as u64;
+                    plan = rec.degraded_plan.as_ref().expect("degraded plan");
+                    let mut gate: Vec<TaskId> = vec![0; n];
+                    for &v in &active {
+                        let deps: Vec<TaskId> = prev_chain[v].into_iter().collect();
+                        let d = b.eng.add(
+                            "detect",
+                            fleet.compute_res(v),
+                            ns(rec.detect_s),
+                            &deps,
+                        );
+                        fail_tasks.push(d);
+                        gate[v] = if rec.replan_s > 0.0 {
+                            let rp = b.eng.add(
+                                "replan",
+                                fleet.compute_res(v),
+                                ns(rec.replan_s),
+                                &[d],
+                            );
+                            fail_tasks.push(rp);
+                            rp
+                        } else {
+                            d
+                        };
+                    }
+                    let bytes = redistribution_bytes(net, n as u64);
+                    if bytes > 0 && active.len() > 1 {
+                        b.gates_single(&gate);
+                        let done = b.run_collective(
+                            cfg.collective, "redist", &active, bytes,
+                            CollectiveKind::Allgather,
+                        );
+                        for (j, &v) in active.iter().enumerate() {
+                            resume_gate[v] = Some(done[j]);
+                        }
+                    } else {
+                        for &v in &active {
+                            resume_gate[v] = Some(gate[v]);
+                        }
+                    }
+                }
+            }
         }
+        // per-node data points: the global minibatch spread over the
+        // currently-active member count (every strategy computes the
+        // same per-node share; model/hybrid shard features, not samples)
+        let mb_active = cfg.minibatch as f64 / n_active as f64;
 
         // ---------------- forward ----------------
         let mut last_fwd: Vec<Option<TaskId>> = vec![None; n];
         for (i, l) in layers.iter().enumerate() {
-            let strat = strategy_for(l, cfg);
-            let choice = choice_for(l, cfg);
+            let strat = strategy_in(plan, l, n_active);
+            let choice = choice_in(plan, l, cfg.collective);
             b.gates.clear();
             for v in 0..n {
-                if let Some(p) = last_fwd[v] {
-                    b.gates.push(p);
-                }
-                if let Some(u) = prev_update[v][i] {
-                    b.gates.push(u);
-                }
-                if i == 0 {
-                    if let Some(s) = stall[v] {
-                        b.gates.push(s);
+                if alive[v] {
+                    if let Some(p) = last_fwd[v] {
+                        b.gates.push(p);
+                    }
+                    if let Some(u) = prev_update[v][i] {
+                        b.gates.push(u);
+                    }
+                    if i == 0 {
+                        if let Some(s) = resume_gate[v] {
+                            b.gates.push(s);
+                        }
                     }
                 }
                 b.gates.finish_list();
             }
             // model/hybrid layers gather remote activations before compute
             let fwd_src: Option<Vec<TaskId>> = match strat {
-                Strategy::Model if n > 1 => {
+                Strategy::Model if n_active > 1 => {
                     let bytes = 4 * l.in_elems() * cfg.minibatch;
-                    Some(b.run_collective(
-                        choice, &format!("af{i}"), &all_nodes, bytes,
+                    let done = b.run_collective(
+                        choice, &format!("af{i}"), &active, bytes,
                         CollectiveKind::Allgather,
-                    ))
+                    );
+                    let mut out: Vec<TaskId> = vec![0; n];
+                    scatter(&mut out, &active, &done);
+                    Some(out)
                 }
-                Strategy::Hybrid { groups } if n > 1 => {
-                    let topo = GroupTopology::new(n, groups as usize);
+                Strategy::Hybrid { groups } if n_active > 1 => {
+                    let topo = GroupTopology::new(n_active as usize, groups as usize);
                     let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
                     let mut out: Vec<TaskId> = vec![0; n];
                     for g in 0..topo.groups {
-                        let members = topo.group_members(g);
+                        let mut members = topo.group_members(g);
+                        to_global(&mut members, &active);
                         let done = b.run_collective(
                             choice, &format!("af{i}.g{g}"), &members, bytes,
                             CollectiveKind::Allgather,
                         );
-                        for (j, &v) in members.iter().enumerate() {
-                            out[v] = done[j];
-                        }
+                        scatter(&mut out, &members, &done);
                     }
                     Some(out)
                 }
                 _ => None,
             };
-            let eff_mb = per_layer_mb(l, cfg, mb_node);
-            let base_t = pass_time_s(l, m, eff_mb);
+            let base_t = pass_time_s(l, m, mb_active);
             let fwd_label = format!("f{i}");
-            for v in 0..n {
+            for &v in &active {
                 let dur = ns(base_t * fleet.time_mult[v]);
                 let id = match &fwd_src {
                     Some(done) => b.eng.add(&fwd_label, fleet.compute_res(v), dur, &[done[v]]),
@@ -606,8 +863,10 @@ pub fn build_training_fleet(
         }
 
         // ---------------- backward (wt-grad before bprop) ----------------
-        let mut chain: Vec<TaskId> =
-            (0..n).map(|v| last_fwd[v].expect("non-empty net")).collect();
+        let mut chain: Vec<TaskId> = vec![0; n];
+        for &v in &active {
+            chain[v] = last_fwd[v].expect("non-empty net");
+        }
         let mut update_ids: Vec<Vec<Option<TaskId>>> = vec![vec![None; k]; n];
         let first_weighted = layers.iter().position(|l| l.is_weighted()).unwrap_or(0);
         for i in (0..k).rev() {
@@ -615,41 +874,43 @@ pub fn build_training_fleet(
             if !l.is_weighted() {
                 continue;
             }
-            let strat = strategy_for(l, cfg);
-            let choice = choice_for(l, cfg);
-            let eff_mb = per_layer_mb(l, cfg, mb_node);
-            let per_pass = pass_time_s(l, m, eff_mb);
+            let strat = strategy_in(plan, l, n_active);
+            let choice = choice_in(plan, l, cfg.collective);
+            let per_pass = pass_time_s(l, m, mb_active);
             // weight gradient first (enables early comm submission)
             let wg_label = format!("w{i}");
-            let wg: Vec<TaskId> = (0..n)
-                .map(|v| {
-                    b.eng.add(
-                        &wg_label,
-                        fleet.compute_res(v),
-                        ns(per_pass * fleet.time_mult[v]),
-                        &[chain[v]],
-                    )
-                })
-                .collect();
+            let mut wg: Vec<TaskId> = vec![0; n];
+            for &v in &active {
+                wg[v] = b.eng.add(
+                    &wg_label,
+                    fleet.compute_res(v),
+                    ns(per_pass * fleet.time_mult[v]),
+                    &[chain[v]],
+                );
+            }
             let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
             let updates: Vec<TaskId> = match strat {
-                Strategy::Data if n > 1 => b.exchange_update(
-                    choice, &format!("x{i}"), &all_nodes, l.weight_bytes(), &wg, sgd_s,
-                ),
-                Strategy::Hybrid { groups } if n > 1 => {
+                Strategy::Data if n_active > 1 => {
+                    let done = b.exchange_update(
+                        choice, &format!("x{i}"), &active, l.weight_bytes(), &wg, sgd_s,
+                    );
+                    let mut out: Vec<TaskId> = vec![0; n];
+                    scatter(&mut out, &active, &done);
+                    out
+                }
+                Strategy::Hybrid { groups } if n_active > 1 => {
                     // data-parallel exchange of the 1/(N/G) weight shard
                     // across each replica set
-                    let topo = GroupTopology::new(n, groups as usize);
+                    let topo = GroupTopology::new(n_active as usize, groups as usize);
                     let shard = l.weight_bytes() / topo.group_size() as u64;
                     let mut out: Vec<TaskId> = vec![0; n];
                     for r in 0..topo.group_size() {
-                        let members = topo.replica_set(r);
+                        let mut members = topo.replica_set(r);
+                        to_global(&mut members, &active);
                         let done = b.exchange_update(
                             choice, &format!("x{i}.r{r}"), &members, shard, &wg, sgd_s,
                         );
-                        for (j, &v) in members.iter().enumerate() {
-                            out[v] = done[j];
-                        }
+                        scatter(&mut out, &members, &done);
                     }
                     out
                 }
@@ -657,68 +918,69 @@ pub fn build_training_fleet(
                     // no weight exchange (model parallel or single node):
                     // local SGD on the comm stream
                     let sgd_label = format!("sgd{i}");
-                    (0..n)
-                        .map(|v| {
-                            let mut d: [TaskId; 3] = [0; 3];
-                            d[0] = wg[v];
-                            let mut len = 1;
-                            for t in b.last_comm[v].iter() {
-                                d[len] = t;
-                                len += 1;
-                            }
-                            let id = b.eng.add(
-                                &sgd_label,
-                                fleet.comm_res(v),
-                                ns(sgd_s * fleet.time_mult[v]),
-                                &d[..len],
-                            );
-                            b.last_comm[v] = Tail::one(id);
-                            id
-                        })
-                        .collect()
+                    let mut out: Vec<TaskId> = vec![0; n];
+                    for &v in &active {
+                        let mut d: [TaskId; 3] = [0; 3];
+                        d[0] = wg[v];
+                        let mut len = 1;
+                        for t in b.last_comm[v].iter() {
+                            d[len] = t;
+                            len += 1;
+                        }
+                        let id = b.eng.add(
+                            &sgd_label,
+                            fleet.comm_res(v),
+                            ns(sgd_s * fleet.time_mult[v]),
+                            &d[..len],
+                        );
+                        b.last_comm[v] = Tail::one(id);
+                        out[v] = id;
+                    }
+                    out
                 }
             };
-            for v in 0..n {
+            for &v in &active {
                 update_ids[v][i] = Some(updates[v]);
+                iter_tail.push(updates[v]);
             }
-            iter_tail.extend(updates.iter().copied());
             // backpropagation (skipped for the first weighted layer)
             if i != first_weighted {
                 let bp_label = format!("b{i}");
-                let bp: Vec<TaskId> = (0..n)
-                    .map(|v| {
-                        b.eng.add(
-                            &bp_label,
-                            fleet.compute_res(v),
-                            ns(per_pass * fleet.time_mult[v]),
-                            &[wg[v]],
-                        )
-                    })
-                    .collect();
+                let mut bp: Vec<TaskId> = vec![0; n];
+                for &v in &active {
+                    bp[v] = b.eng.add(
+                        &bp_label,
+                        fleet.compute_res(v),
+                        ns(per_pass * fleet.time_mult[v]),
+                        &[wg[v]],
+                    );
+                }
                 // model/hybrid layers exchange activations on the way back
                 chain = match strat {
-                    Strategy::Model if n > 1 => {
+                    Strategy::Model if n_active > 1 => {
                         let bytes = 4 * l.in_elems() * cfg.minibatch;
                         b.gates_single(&bp);
-                        b.run_collective(
-                            choice, &format!("ab{i}"), &all_nodes, bytes,
+                        let done = b.run_collective(
+                            choice, &format!("ab{i}"), &active, bytes,
                             CollectiveKind::Allgather,
-                        )
+                        );
+                        let mut out: Vec<TaskId> = vec![0; n];
+                        scatter(&mut out, &active, &done);
+                        out
                     }
-                    Strategy::Hybrid { groups } if n > 1 => {
-                        let topo = GroupTopology::new(n, groups as usize);
+                    Strategy::Hybrid { groups } if n_active > 1 => {
+                        let topo = GroupTopology::new(n_active as usize, groups as usize);
                         let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
                         let mut out: Vec<TaskId> = vec![0; n];
                         b.gates_single(&bp);
                         for g in 0..topo.groups {
-                            let members = topo.group_members(g);
+                            let mut members = topo.group_members(g);
+                            to_global(&mut members, &active);
                             let done = b.run_collective(
                                 choice, &format!("ab{i}.g{g}"), &members, bytes,
                                 CollectiveKind::Allgather,
                             );
-                            for (j, &v) in members.iter().enumerate() {
-                                out[v] = done[j];
-                            }
+                            scatter(&mut out, &members, &done);
                         }
                         out
                     }
@@ -729,10 +991,10 @@ pub fn build_training_fleet(
             }
         }
         prev_update = update_ids;
-        for v in 0..n {
+        for &v in &active {
             prev_chain[v] = Some(chain[v]);
+            iter_tail.push(chain[v]);
         }
-        iter_tail.extend(chain.iter().copied());
         iter_ends.push(iter_tail);
     }
 
@@ -740,6 +1002,7 @@ pub fn build_training_fleet(
         eng: b.eng,
         iter_ends,
         fail_tasks,
+        recovery,
         nodes: n,
         minibatch: cfg.minibatch,
         iterations: cfg.iterations,
@@ -756,6 +1019,13 @@ pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
     let t_prev = iter_finish(dag.iterations - 2);
     let iter_s = ((t_last - t_prev) as f64 / 1e9).max(1e-12);
 
+    // a shrink/replan failure leaves the dead node idle for the rest of
+    // the schedule: keep it out of the utilization statistics
+    let lost: Option<usize> = dag
+        .recovery
+        .as_ref()
+        .filter(|r| r.nodes_after < n)
+        .map(|r| r.fail_node);
     // per-node compute utilization over the steady iteration (recovery
     // stalls hold the stream but are idle time, not work)
     let mut busy = vec![0u64; n];
@@ -765,15 +1035,42 @@ pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
             && r % 2 == 0
             && sched.start_ns[id] >= t_prev
             && sched.end_ns[id] <= t_last
-            && !dag.fail_tasks.contains(&id)
+            // fail_tasks is sorted (ids are pushed in creation order), and
+            // shrink/replan push O(N) transition tasks — keep the lookup
+            // logarithmic, this loop runs over every simulated task
+            && dag.fail_tasks.binary_search(&id).is_err()
         {
             busy[r / 2] += dag.eng.duration_ns(id);
         }
     }
     let window = (t_last - t_prev).max(1) as f64;
-    let utils: Vec<f64> = busy.iter().map(|&b| (b as f64 / window).min(1.0)).collect();
-    let mean = utils.iter().sum::<f64>() / n as f64;
+    let utils: Vec<f64> = busy
+        .iter()
+        .enumerate()
+        .filter(|&(v, _)| Some(v) != lost)
+        .map(|(_, &b)| (b as f64 / window).min(1.0))
+        .collect();
+    let mean = utils.iter().sum::<f64>() / utils.len().max(1) as f64;
     let min = utils.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    // measured failure disruption: the extra seconds the failure
+    // iteration took over the post-failure steady iteration
+    let recovery = dag.recovery.as_ref().map(|rec| {
+        let before = if rec.fail_at > 0 {
+            iter_finish(rec.fail_at - 1)
+        } else {
+            0
+        };
+        let failure_iter_s = (iter_finish(rec.fail_at).saturating_sub(before)) as f64 / 1e9;
+        RecoveryOutcome {
+            policy: rec.policy,
+            nodes_after: rec.nodes_after as u64,
+            stall_s: (failure_iter_s - iter_s).max(0.0),
+            replan_s: rec.replan_s,
+            redistribution_s: rec.redistribution_s,
+            plan_after: rec.degraded_plan.clone(),
+        }
+    });
 
     FleetSimResult {
         nodes: n as u64,
@@ -782,6 +1079,7 @@ pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
         mean_compute_utilization: mean,
         min_compute_utilization: min,
         tasks: dag.eng.len(),
+        recovery,
     }
 }
 
@@ -967,6 +1265,75 @@ mod tests {
         let b = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
         assert_eq!(a.iteration_s, b.iteration_s);
         assert_eq!(a.tasks, b.tasks);
+    }
+
+    #[test]
+    fn shrink_drops_the_failed_node_and_resumes_at_n_minus_one() {
+        let mut p = Platform::cori();
+        p.fabric.congestion_per_doubling = 0.0;
+        let net = vgg_a();
+        let cfg = SimConfig { iterations: 5, ..SimConfig::data_parallel(4, 256) };
+        let fc = crate::netsim::FleetConfig {
+            nodes: 4,
+            fail_at: Some(1),
+            fail_node: 2,
+            recovery_s: 3.0,
+            recovery: RecoveryPolicy::Shrink,
+            ..Default::default()
+        };
+        let r = simulate_training_fleet(&net, &p, &cfg, &fc);
+        let rec = r.recovery.expect("failure fired");
+        assert_eq!(rec.nodes_after, 3);
+        assert_eq!(rec.replan_s, 0.0);
+        assert!(rec.redistribution_s > 0.0);
+        assert!(rec.stall_s > 0.0, "transition must cost something");
+        // post-failure steady state: 3 survivors each compute MB/3 — the
+        // iteration is slower than the clean 4-node fleet but faster
+        // than paying the whole minibatch on one node
+        let clean = simulate_training_fleet(
+            &net, &p, &cfg, &crate::netsim::FleetConfig::homogeneous(4),
+        );
+        assert!(r.iteration_s > clean.iteration_s * 1.1, "{} vs {}", r.iteration_s,
+                clean.iteration_s);
+        assert!(r.iteration_s < clean.iteration_s * 2.0);
+        // the dead node is excluded from utilization, so survivors stay busy
+        assert!(r.min_compute_utilization > 0.5, "{}", r.min_compute_utilization);
+    }
+
+    #[test]
+    fn replan_charges_coordination_on_top_of_shrink() {
+        let mut p = Platform::cori();
+        p.fabric.congestion_per_doubling = 0.0;
+        let net = vgg_a();
+        let cfg = SimConfig { iterations: 5, ..SimConfig::recipe(&net, 4, 256) };
+        let mk = |policy| {
+            let fc = crate::netsim::FleetConfig {
+                nodes: 4,
+                fail_at: Some(1),
+                fail_node: 0,
+                recovery_s: 3.0,
+                recovery: policy,
+                ..Default::default()
+            };
+            simulate_training_fleet(&net, &p, &cfg, &fc)
+        };
+        let shrink = mk(RecoveryPolicy::Shrink).recovery.unwrap();
+        let replan = mk(RecoveryPolicy::Replan).recovery.unwrap();
+        assert_eq!(shrink.replan_s, 0.0);
+        assert!(replan.replan_s > 0.0);
+        assert_eq!(shrink.redistribution_s, replan.redistribution_s);
+        // both resumed on a plan valid at 3 nodes
+        for rec in [&shrink, &replan] {
+            let after = rec.plan_after.as_ref().expect("degraded plan recorded");
+            assert_eq!(after.nodes, 3);
+            after.validate(&net).unwrap();
+        }
+        let stall = mk(RecoveryPolicy::Stall).recovery.unwrap();
+        assert_eq!(stall.nodes_after, 4);
+        assert!(stall.plan_after.is_none());
+        // stall pays the full recovery_s; the measured disruption is in
+        // that ballpark (pipelining can hide a little of it)
+        assert!(stall.stall_s > 2.0, "{}", stall.stall_s);
     }
 
     #[test]

@@ -10,6 +10,29 @@ use crate::analytic::FabricSpec;
 
 use super::network::{Network, Topology};
 
+/// What the fleet does after `fail_node` dies (synchronous SGD makes a
+/// failed node the worst-case straggler: every survivor waits at the
+/// next gradient exchange, §4). The policy decides whether the fleet
+/// waits for the node or reconfigures around it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// Wait the full `recovery_s` (detection + restart + replay) for the
+    /// node to rejoin, then resume at N with the original plan — the
+    /// pre-recovery-aware behavior.
+    #[default]
+    Stall,
+    /// Drop to N-1 survivors and re-derive the partition plan for the
+    /// degraded node count (hybrid group shapes must divide N, so N-1
+    /// generally invalidates the old plan); pays detection + replan
+    /// coordination + weight redistribution before resuming.
+    Replan,
+    /// Drop to N-1 keeping the original plan, with hybrid group shapes
+    /// re-normalized per the §3.3 degenerate-shape rule and the global
+    /// minibatch respread over the survivors; pays detection + weight
+    /// redistribution only.
+    Shrink,
+}
+
 /// Shape of a simulated fleet.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
@@ -21,12 +44,15 @@ pub struct FleetConfig {
     /// Heterogeneous fleet: every odd node is a 30% slower older
     /// generation (composes with the straggler ramp).
     pub hetero: bool,
-    /// Fail `fail_node` at the start of this iteration; the synchronous
-    /// step stalls until the node rejoins after `recovery_s` of
-    /// detection + restart + replay.
+    /// Fail `fail_node` at the start of this iteration; what happens
+    /// next is `recovery`'s call.
     pub fail_at: Option<usize>,
     pub fail_node: usize,
+    /// Stall's full detection + restart + replay window; the
+    /// reconfiguring policies pay only the detection share of it
+    /// (`cluster::DETECT_FRAC`).
     pub recovery_s: f64,
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for FleetConfig {
@@ -39,6 +65,7 @@ impl Default for FleetConfig {
             fail_at: None,
             fail_node: 0,
             recovery_s: 5.0,
+            recovery: RecoveryPolicy::Stall,
         }
     }
 }

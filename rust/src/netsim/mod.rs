@@ -31,10 +31,10 @@ pub mod network;
 pub mod reference;
 
 pub use cluster::{
-    simulate_training, simulate_training_fleet, FleetSimResult, ScalingPoint, SimConfig,
-    SimResult,
+    simulate_training, simulate_training_fleet, FleetSimResult, RecoveryOutcome, ScalingPoint,
+    SimConfig, SimResult,
 };
 pub use collective::Choice;
 pub use engine::{DepLists, Engine, Schedule, TaskId};
-pub use fleet::{Fleet, FleetConfig};
+pub use fleet::{Fleet, FleetConfig, RecoveryPolicy};
 pub use network::{Network, Topology};

@@ -235,6 +235,42 @@ impl PartitionPlan {
         Ok(())
     }
 
+    /// Re-target this plan at a degraded node count (failure recovery's
+    /// `shrink` policy, and the builder-side fallback for `replan`):
+    /// hybrid group counts that no longer divide the new N snap to the
+    /// nearest divisor (ties toward fewer groups), then the §3.3
+    /// degenerate shapes collapse to their named equivalents via the
+    /// shared normalization (G = N → data, G = 1 → model). Strategies,
+    /// collectives and overlap are otherwise preserved; `minibatch`
+    /// stays global (the batch is respread over the survivors).
+    pub fn renormalize_for(&self, nodes: u64) -> PartitionPlan {
+        if nodes <= 1 {
+            return PartitionPlan::empty(nodes.max(1), self.minibatch);
+        }
+        let nearest_divisor = |g: u64| -> u64 {
+            (1..=nodes)
+                .filter(|d| nodes % d == 0)
+                .min_by_key(|&d| (d.abs_diff(g), d))
+                .unwrap_or(1)
+        };
+        let per: Vec<(String, Strategy, Option<Choice>, f64)> = self
+            .assignments
+            .iter()
+            .flat_map(|g| {
+                let strategy = match g.strategy {
+                    Strategy::Hybrid { groups } => {
+                        Strategy::Hybrid { groups: nearest_divisor(groups) }
+                    }
+                    other => other,
+                };
+                g.layers
+                    .iter()
+                    .map(move |l| (l.clone(), strategy, g.collective, g.overlap))
+            })
+            .collect();
+        PartitionPlan::from_assignments("shrink", nodes, self.minibatch, &per)
+    }
+
     /// The plan as exact-layer spec pins (`ExperimentSpec.plan`), so any
     /// concrete plan can be forced through a spec — e.g. to replay the
     /// planner's choice on the netsim backend.
@@ -761,6 +797,37 @@ mod tests {
         assert!(PlanPin { collective: Some("nccl".into()), ..Default::default() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn renormalize_snaps_hybrid_groups_to_degraded_divisors() {
+        let net = zoo::vgg_a();
+        // every degraded count derived from the paper's node grid must
+        // yield a valid plan (the shrink policy's §3.3 guarantee)
+        for n in [8u64, 16, 32, 64, 128] {
+            let plan = PartitionPlan::paper_recipe(&net, n, 512, 1.0);
+            let shrunk = plan.renormalize_for(n - 1);
+            assert_eq!(shrunk.nodes, n - 1);
+            shrunk.validate(&net).unwrap_or_else(|e| panic!("n={n}: {e:#}"));
+            for g in &shrunk.assignments {
+                if let Strategy::Hybrid { groups } = g.strategy {
+                    assert_eq!((n - 1) % groups, 0, "n={n} group {:?}", g.name);
+                }
+            }
+        }
+        // a hybrid shape that still divides is preserved; degenerates
+        // collapse through the shared normalization
+        let per = vec![
+            ("a".to_string(), Strategy::Hybrid { groups: 3 }, None, 1.0),
+            ("b".to_string(), Strategy::Hybrid { groups: 5 }, None, 1.0),
+        ];
+        let plan = PartitionPlan::from_assignments("pinned", 15, 256, &per);
+        let shrunk = plan.renormalize_for(6);
+        assert_eq!(shrunk.strategy_for("a"), Strategy::Hybrid { groups: 3 });
+        // 5 snaps to 6's nearest divisor 6 == N, which normalizes to data
+        assert_eq!(shrunk.strategy_for("b"), Strategy::Data);
+        // single-survivor fleets have nothing to partition
+        assert!(plan.renormalize_for(1).is_pure_data());
     }
 
     #[test]

@@ -164,6 +164,7 @@ pub fn plan_cost_s(input: &PlannerInput, plan: &PartitionPlan) -> f64 {
         iterations: input.iterations.max(2),
         plan: plan.clone(),
         collective: input.collective,
+        degraded_plan: None,
     };
     simulate_training(input.net, input.platform, &cfg).iteration_s
 }

@@ -10,7 +10,10 @@
 //! the dispatch corner cases: shared links, zero-duration markers,
 //! same-time completions and deep dependency fan-in.
 
-use pcl_dnn::netsim::{reference, Engine};
+use pcl_dnn::analytic::machine::Platform;
+use pcl_dnn::models::zoo;
+use pcl_dnn::netsim::cluster::{build_training_fleet, SimConfig};
+use pcl_dnn::netsim::{reference, Engine, FleetConfig, RecoveryPolicy, Topology};
 use pcl_dnn::util::rng::Rng;
 
 /// Random task DAG tuned for contention: few resources, many tasks, a
@@ -85,6 +88,50 @@ fn fast_path_matches_reference_on_independent_roots() {
             e.add(&format!("r{id}"), r, rng.below(30), &[]);
         }
         assert_eq!(e.run(), reference::run(&e), "case {case}");
+    }
+}
+
+#[test]
+fn failure_bearing_fleet_dags_replay_identically_on_the_reference_engine() {
+    // real fleet DAGs with a failure event baked in: the split/resume
+    // boundary drops a node's streams mid-DAG and splices in the
+    // detect -> (replan) -> redistribute transition — randomized over
+    // (policy, fail_at, fail_node, topology), the indexed dispatcher
+    // must stay bit-identical to the full-scan reference across it
+    let mut rng = Rng::new(0xfa11_0eac);
+    let p = Platform::aws();
+    let net = zoo::overfeat_fast();
+    let policies = [RecoveryPolicy::Stall, RecoveryPolicy::Replan, RecoveryPolicy::Shrink];
+    for case in 0..9 {
+        let nodes = 3 + rng.below(4) as usize; // 3..=6
+        let policy = policies[rng.below(3) as usize];
+        let fail_at = 1 + rng.below(2) as usize; // 1..=2
+        let fail_node = rng.below(nodes as u64) as usize;
+        let topology = match rng.below(3) {
+            0 => Topology::FullySwitched,
+            1 => Topology::FlatSwitch,
+            _ => Topology::FatTree { radix: 2, oversub: 2.0 },
+        };
+        let cfg = SimConfig {
+            iterations: 4,
+            ..SimConfig::recipe(&net, nodes as u64, 256)
+        };
+        let fleet_cfg = FleetConfig {
+            nodes,
+            topology,
+            fail_at: Some(fail_at),
+            fail_node,
+            recovery_s: 2.0,
+            recovery: policy,
+            ..Default::default()
+        };
+        let dag = build_training_fleet(&net, &p, &cfg, &fleet_cfg);
+        assert_eq!(
+            dag.eng.run(),
+            reference::run(&dag.eng),
+            "case {case}: {policy:?} fail_at={fail_at} fail_node={fail_node} \
+             nodes={nodes} {topology:?}"
+        );
     }
 }
 

@@ -158,6 +158,54 @@ fn reports_record_the_partition_plan() {
 }
 
 #[test]
+fn recovery_policy_round_trips_and_is_settable() {
+    // the new cluster.recovery field: full JSON round trip at every value
+    for policy in ["stall", "replan", "shrink"] {
+        let mut s = ExperimentSpec::fig4();
+        s.cluster.recovery = policy.into();
+        s.cluster.fail_at = Some(1);
+        let back = ExperimentSpec::parse_str(&s.to_json().to_string()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.cluster.recovery, policy);
+    }
+    // --set coverage: dotted path and flat alias
+    let mut s = ExperimentSpec::fig4();
+    s.apply_set("cluster.recovery=replan").unwrap();
+    assert_eq!(s.cluster.recovery, "replan");
+    s.apply_set("recovery=shrink,fail_at=2").unwrap();
+    assert_eq!(s.cluster.recovery, "shrink");
+    assert_eq!(s.cluster.fail_at, Some(2));
+    // an unknown policy fails listing the three valid ones — at parse
+    // time AND through --set
+    for bad in [
+        ExperimentSpec::parse_str(r#"{"cluster": {"recovery": "failover"}}"#).unwrap_err(),
+        ExperimentSpec::fig4().apply_set("cluster.recovery=reboot").unwrap_err(),
+    ] {
+        let msg = format!("{bad:#}");
+        assert!(
+            msg.contains("stall") && msg.contains("replan") && msg.contains("shrink"),
+            "{msg}"
+        );
+    }
+}
+
+#[test]
+fn committed_specs_still_parse_with_the_recovery_field() {
+    // adding cluster.recovery must not disturb the committed figures:
+    // they parse to the same spec values as before (default "stall"),
+    // and re-serializing + re-parsing is bit-stable
+    for file in ["fig4.json", "fig6_overfeat.json", "fig6_vgg.json", "fig7.json"] {
+        let spec = ExperimentSpec::load(&spec_path(file)).unwrap();
+        assert_eq!(spec.cluster.recovery, "stall", "{file}");
+        assert_eq!(spec.cluster.fail_at, None, "{file}");
+        let text = spec.to_json().to_string();
+        let back = ExperimentSpec::parse_str(&text).unwrap();
+        assert_eq!(back, spec, "{file}");
+        assert_eq!(back.to_json().to_string(), text, "{file}");
+    }
+}
+
+#[test]
 fn auto_mode_runs_through_the_backend_api() {
     let mut spec = ExperimentSpec::load(&spec_path("fig4.json")).unwrap();
     spec.cluster.nodes = 8;

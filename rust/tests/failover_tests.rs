@@ -1,0 +1,204 @@
+//! Plan-aware failure recovery: the property suite behind the
+//! replan-vs-stall-vs-shrink tradeoff.
+//!
+//! * **Degraded-plan validity** — for every zoo model at n ∈ {8, 16, 64},
+//!   both the replanned and the shrink-renormalized plan are valid at
+//!   N-1 (every hybrid group shape divides the survivor count).
+//! * **Charged-cost accounting** — analytically, `replan`'s total
+//!   disruption never exceeds `stall`'s beyond the itemized replan +
+//!   redistribution charges (the policies differ by explicit, reported
+//!   costs, not hidden ones).
+//! * **Cross-backend agreement** — netsim-measured post-failure
+//!   efficiency matches the α-β pricing within 5% on a clean fabric
+//!   (the §5–6 model-vs-measurement methodology, extended across the
+//!   failure boundary).
+//! * **The tradeoff itself** — at n ≥ 32, resuming on a replanned
+//!   degraded fleet yields better post-failure efficiency than stalling
+//!   the full fleet (the ROADMAP's replan-vs-stall question).
+
+use pcl_dnn::experiment::{
+    recovery_plans, registry, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend,
+    RecoveryReport,
+};
+use pcl_dnn::plan::PartitionPlan;
+
+/// A failure-bearing spec: `model` on `platform`, one node dying at the
+/// start of iteration 1, with enough iterations for a clean post-failure
+/// steady window.
+fn failure_spec(model: &str, platform: &str, nodes: u64, mb: u64, policy: &str) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::of(
+        &format!("failover_{model}_{nodes}_{policy}"),
+        model,
+        platform,
+        nodes,
+        mb,
+    );
+    spec.cluster.fail_at = Some(1);
+    spec.cluster.fail_node = 0;
+    spec.cluster.recovery_s = 5.0;
+    spec.cluster.recovery = policy.into();
+    spec.parallelism.iterations = 5;
+    spec
+}
+
+fn recovery_of(rep: &pcl_dnn::experiment::ScalingReport) -> RecoveryReport {
+    RecoveryReport::from_json(&rep.recovery).expect("failure spec must report recovery")
+}
+
+#[test]
+fn degraded_plans_are_valid_for_every_zoo_model() {
+    // The acceptance property: the replanned degraded-N plan passes the
+    // divisibility check for every zoo network — N-1 generally breaks
+    // the original hybrid shapes, so this is exactly what recovery must
+    // re-establish. The shrink renormalization must hold it too.
+    for model in registry::model_names() {
+        let net = registry::model(model).unwrap();
+        for nodes in [8u64, 16, 64] {
+            for policy in ["replan", "shrink"] {
+                let spec = failure_spec(model, "cori", nodes, 1024, policy);
+                let (before, after) = recovery_plans(&spec)
+                    .unwrap_or_else(|e| panic!("{model} x{nodes} {policy}: {e:#}"));
+                assert_eq!(before.nodes, nodes);
+                assert_eq!(after.nodes, nodes - 1, "{model} x{nodes} {policy}");
+                after
+                    .validate(&net)
+                    .unwrap_or_else(|e| panic!("{model} x{nodes} {policy}: {e:#}"));
+                for g in &after.assignments {
+                    if let pcl_dnn::analytic::comm_model::Strategy::Hybrid { groups } =
+                        g.strategy
+                    {
+                        assert_eq!(
+                            (nodes - 1) % groups,
+                            0,
+                            "{model} x{nodes} {policy} group {:?}: {groups} !| {}",
+                            g.name,
+                            nodes - 1
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn replan_disruption_stays_within_the_charged_costs() {
+    // `replan` is never analytically worse than `stall` beyond the
+    // explicitly charged replan + redistribution seconds: the policies
+    // trade the stall's restart/replay window for itemized
+    // reconfiguration costs, with nothing hidden.
+    for model in registry::model_names() {
+        for nodes in [8u64, 16, 64] {
+            let stall = recovery_of(
+                &AnalyticBackend.run(&failure_spec(model, "cori", nodes, 1024, "stall")).unwrap(),
+            );
+            let replan = recovery_of(
+                &AnalyticBackend.run(&failure_spec(model, "cori", nodes, 1024, "replan")).unwrap(),
+            );
+            assert!(
+                replan.stall_s <= stall.stall_s + replan.replan_s + replan.redistribution_s + 1e-9,
+                "{model} x{nodes}: replan disruption {} vs stall {} + charges {} + {}",
+                replan.stall_s,
+                stall.stall_s,
+                replan.replan_s,
+                replan.redistribution_s
+            );
+            // the itemized charges really are components of the total
+            assert!(replan.stall_s >= replan.replan_s + replan.redistribution_s - 1e-9);
+            assert!(replan.replan_s > 0.0 && replan.redistribution_s > 0.0);
+            assert_eq!(stall.replan_s, 0.0);
+            assert_eq!(stall.redistribution_s, 0.0);
+        }
+    }
+}
+
+#[test]
+fn netsim_post_failure_efficiency_matches_analytic_within_5pct() {
+    // clean fabric (congestion override 0, homogeneous switched fleet):
+    // the measured post-failure steady state of the degraded fleet must
+    // agree with the α-β pricing of the same degraded design point.
+    for (model, platform, mb) in [
+        ("vgg_a", "cori", 512u64),
+        ("overfeat_fast", "aws", 256),
+        ("cddnn_full", "endeavor", 1024),
+    ] {
+        for nodes in [8u64, 16] {
+            for policy in ["replan", "shrink", "stall"] {
+                let mut spec = failure_spec(model, platform, nodes, mb, policy);
+                spec.cluster.congestion = Some(0.0);
+                let a = recovery_of(&AnalyticBackend.run(&spec).unwrap());
+                let f = recovery_of(&FleetSimBackend.run(&spec).unwrap());
+                assert_eq!(a.nodes_after, f.nodes_after, "{model} x{nodes} {policy}");
+                let rel = (a.post_efficiency - f.post_efficiency).abs()
+                    / a.post_efficiency.max(1e-9);
+                assert!(
+                    rel < 0.05,
+                    "{model} x{nodes} {policy}: analytic post-eff {:.4} vs netsim {:.4} \
+                     ({:.1}% apart)",
+                    a.post_efficiency,
+                    f.post_efficiency,
+                    100.0 * rel
+                );
+                // both record the same degraded plan
+                assert_eq!(
+                    PartitionPlan::from_json(&a.plan_after).unwrap(),
+                    PartitionPlan::from_json(&f.plan_after).unwrap(),
+                    "{model} x{nodes} {policy}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replan_beats_stall_on_post_failure_efficiency_at_scale() {
+    // The tradeoff the feature exists to quantify: at n >= 32, dropping
+    // to N-1 on a re-derived plan is better *per surviving node* than
+    // waiting out the restart and resuming the full fleet — the
+    // synchronous step no longer pays the extra member's exchange, and
+    // the replanned shapes fit the degraded count. (stall's post-failure
+    // efficiency is the clean N-node efficiency by construction.)
+    for nodes in [33u64, 65] {
+        let stall = recovery_of(
+            &AnalyticBackend.run(&failure_spec("vgg_a", "cori", nodes, 512, "stall")).unwrap(),
+        );
+        let replan = recovery_of(
+            &AnalyticBackend.run(&failure_spec("vgg_a", "cori", nodes, 512, "replan")).unwrap(),
+        );
+        assert_eq!(stall.nodes_after, nodes);
+        assert_eq!(replan.nodes_after, nodes - 1);
+        assert!(
+            replan.post_efficiency > stall.post_efficiency,
+            "x{nodes}: replan post-eff {:.4} must beat stall {:.4}",
+            replan.post_efficiency,
+            stall.post_efficiency
+        );
+        assert!(stall.post_samples_per_s > 0.0 && replan.post_samples_per_s > 0.0);
+    }
+    // and the netsim measurement agrees with the winning side at n=33
+    let mut spec = failure_spec("vgg_a", "cori", 33, 512, "replan");
+    spec.cluster.congestion = Some(0.0);
+    let a = recovery_of(&AnalyticBackend.run(&spec).unwrap());
+    let f = recovery_of(&FleetSimBackend.run(&spec).unwrap());
+    let rel = (a.post_efficiency - f.post_efficiency).abs() / a.post_efficiency.max(1e-9);
+    assert!(rel < 0.05, "x33 replan: analytic {} vs netsim {}", a.post_efficiency,
+            f.post_efficiency);
+}
+
+#[test]
+fn recovery_section_travels_through_the_report_wire_format() {
+    use pcl_dnn::experiment::ScalingReport;
+    use pcl_dnn::util::json::Json;
+    let spec = failure_spec("cddnn_full", "endeavor", 8, 1024, "shrink");
+    let rep = AnalyticBackend.run(&spec).unwrap();
+    let round = Json::parse(&rep.to_json().to_string()).unwrap();
+    ScalingReport::check_schema(&round).unwrap();
+    let back = ScalingReport::from_json(&round).unwrap();
+    assert_eq!(back.to_json().to_string(), rep.to_json().to_string());
+    let rec = recovery_of(&back);
+    assert_eq!(rec.policy, "shrink");
+    assert_eq!(rec.nodes_after, 7);
+    // the degraded plan in the report parses as a first-class plan
+    let after = PartitionPlan::from_json(&rec.plan_after).unwrap();
+    assert_eq!(after.nodes, 7);
+}
