@@ -6,7 +6,10 @@
 //!   reference scheduler on the *same* built DAG (so the speedup column
 //!   is apples-to-apples within one run);
 //! * a netsim node sweep evaluated serially vs in parallel
-//!   (`run_sweep_serial` vs `run_sweep`), wall-ms each.
+//!   (`run_sweep_serial` vs `run_sweep`), wall-ms each;
+//! * steady-state template rows: full simulation vs the periodic fast
+//!   path end to end at fig4@64 x iterations ∈ {4, 16, 64} and
+//!   auto@{32, 64, 128} x 16, with per-row bit-identity asserted.
 //!
 //! The fast path must stay bit-identical to the reference (asserted here
 //! on the n=32 DAG as a smoke check; `tests/engine_oracle.rs` is the
@@ -18,8 +21,11 @@ use std::time::Instant;
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::experiment::{run_sweep, run_sweep_serial, ExperimentSpec, FleetSimBackend};
 use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{build_training_fleet, SimConfig};
-use pcl_dnn::netsim::{collective, reference, FleetConfig};
+use pcl_dnn::netsim::cluster::{
+    build_training_fleet, build_training_fleet_full, simulate_training_fleet, summarize_fleet,
+    SimConfig,
+};
+use pcl_dnn::netsim::{collective, reference, FleetConfig, SimPath};
 use pcl_dnn::plan::PartitionPlan;
 use pcl_dnn::util::json::Json;
 
@@ -56,7 +62,7 @@ fn main() {
         let fleet = FleetConfig::homogeneous(nodes as usize);
 
         let t0 = Instant::now();
-        let dag = build_training_fleet(&net, &platform, &cfg, &fleet);
+        let dag = build_training_fleet(&net, &platform, &cfg, &fleet).unwrap();
         let build = t0.elapsed();
         let tasks = dag.eng.len();
 
@@ -102,6 +108,80 @@ fn main() {
         fig4_rows.push(Json::Obj(row));
     }
 
+    // steady-state template fast path vs full simulation, end to end:
+    // the full column is the pre-template cost (legacy loop build +
+    // event-by-event run over every iteration), the fast column is the
+    // routed entry point (template build + 4-iteration periodic probe +
+    // closed-form extrapolation). Each row asserts bit-identical results
+    // before timing is trusted — this doubles as the CI divergence gate
+    // for the fig4@32 smoke point. iterations=4 is below the probe
+    // window, so that row legitimately routes full (speedup ~1x); the
+    // 16 and 64 rows show wall-clock growing sublinearly in iterations.
+    let mut template_rows: Vec<Json> = Vec::new();
+    let template_points: &[(u64, usize)] =
+        &[(64, 4), (64, 16), (64, 64), (32, 16), (128, 16)];
+    for &(nodes, iterations) in template_points {
+        let cfg = SimConfig {
+            nodes,
+            minibatch: 512,
+            iterations,
+            plan: PartitionPlan::paper_recipe(&net, nodes, 512, 1.0),
+            collective: collective::Choice::Auto,
+            degraded_plan: None,
+        };
+        let fleet = FleetConfig::homogeneous(nodes as usize);
+
+        let t0 = Instant::now();
+        let dag = build_training_fleet_full(&net, &platform, &cfg, &fleet).unwrap();
+        let sched = dag.eng.run();
+        let full_r = summarize_fleet(&dag, &sched);
+        let full_ms = ms(t0.elapsed());
+
+        let t0 = Instant::now();
+        let fast_r = simulate_training_fleet(&net, &platform, &cfg, &fleet).unwrap();
+        let fast_ms = ms(t0.elapsed());
+
+        // CI runs this bench with REPRO_NETSIM_PATH=full as the
+        // template-off ablation; the routing assert only applies when
+        // the knob leaves the router free to choose
+        let forced_full =
+            matches!(std::env::var("REPRO_NETSIM_PATH"), Ok(ref v) if v == "full");
+        if iterations > 4 && !forced_full {
+            assert_eq!(
+                fast_r.sim_path,
+                SimPath::Periodic,
+                "fig4@{nodes} x{iterations}: clean fabric must route periodic"
+            );
+        }
+        let mut fast_norm = fast_r.clone();
+        fast_norm.sim_path = full_r.sim_path;
+        fast_norm.warmup_tasks = full_r.warmup_tasks;
+        assert_eq!(
+            fast_norm, full_r,
+            "fig4@{nodes} x{iterations}: fast path diverged from full simulation"
+        );
+
+        let speedup = full_ms / fast_ms.max(1e-9);
+        println!(
+            "template fig4@{nodes:>3} x{iterations:>2} it ({}): full {full_ms:>8.2} ms | \
+             fast {fast_ms:>8.2} ms | speedup {speedup:.1}x | {} tasks",
+            fast_r.sim_path.name(),
+            fast_r.tasks
+        );
+        let mut row = BTreeMap::new();
+        row.insert("fast_ms".to_string(), Json::Num(fast_ms));
+        row.insert("full_ms".to_string(), Json::Num(full_ms));
+        row.insert("iterations".to_string(), Json::Num(iterations as f64));
+        row.insert("nodes".to_string(), Json::Num(nodes as f64));
+        row.insert(
+            "sim_path".to_string(),
+            Json::Str(fast_r.sim_path.name().to_string()),
+        );
+        row.insert("speedup".to_string(), Json::Num(speedup));
+        row.insert("tasks".to_string(), Json::Num(fast_r.tasks as f64));
+        template_rows.push(Json::Obj(row));
+    }
+
     // sweep parallelism: same spec list through the serial and the
     // scoped-thread paths (results are bit-identical; only wall differs)
     let sweep_nodes: Vec<u64> = vec![2, 4, 8, 16, 32];
@@ -144,6 +224,7 @@ fn main() {
     let mut root = BTreeMap::new();
     root.insert("fig4".to_string(), Json::Arr(fig4_rows));
     root.insert("sweep".to_string(), Json::Obj(sweep));
+    root.insert("template".to_string(), Json::Arr(template_rows));
     std::fs::write(
         "BENCH_netsim_perf.json",
         format!("{}\n", Json::Obj(root).pretty()),

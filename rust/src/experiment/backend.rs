@@ -276,6 +276,9 @@ fn base_report(spec: &ExperimentSpec, backend: &'static str) -> ScalingReport {
         mean_compute_utilization: f64::NAN,
         min_compute_utilization: f64::NAN,
         tasks: 0,
+        sim_path: None,
+        warmup_tasks: 0,
+        cycle_tasks: 0,
         plan: Json::Null,
         recovery: Json::Null,
     }
@@ -295,8 +298,8 @@ impl Backend for AnalyticBackend {
         let net = spec.model.resolve()?;
         let platform = resolved_platform(spec)?;
         let cfg = sim_config(spec, &net, &platform, spec.cluster.nodes)?;
-        let r = simulate_training(&net, &platform, &cfg);
-        let base = simulate_training(&net, &platform, &sim_config(spec, &net, &platform, 1)?);
+        let r = simulate_training(&net, &platform, &cfg)?;
+        let base = simulate_training(&net, &platform, &sim_config(spec, &net, &platform, 1)?)?;
         let speedup = r.images_per_s / base.images_per_s;
         let mut rep = base_report(spec, "analytic");
         rep.iteration_s = r.iteration_s;
@@ -324,7 +327,7 @@ impl Backend for AnalyticBackend {
                             degraded_plan: None,
                             ..cfg.clone()
                         };
-                        let post = simulate_training(&net, &platform, &post_cfg);
+                        let post = simulate_training(&net, &platform, &post_cfg)?;
                         let replan_s = if policy == RecoveryPolicy::Replan {
                             cluster::replan_coordination_s(fabric, nodes - 1)
                         } else {
@@ -409,13 +412,13 @@ impl Backend for FleetSimBackend {
         let platform = resolved_platform(spec)?;
         let cfg = sim_config(spec, &net, &platform, spec.cluster.nodes)?;
         let fleet = fleet_config(spec)?;
-        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet);
+        let r = simulate_training_fleet(&net, &platform, &cfg, &fleet)?;
         let base = simulate_training_fleet(
             &net,
             &platform,
             &sim_config(spec, &net, &platform, 1)?,
             &FleetConfig::homogeneous(1),
-        );
+        )?;
         let speedup = r.images_per_s / base.images_per_s;
         let mut rep = base_report(spec, "netsim");
         rep.iteration_s = r.iteration_s;
@@ -427,6 +430,9 @@ impl Backend for FleetSimBackend {
         rep.mean_compute_utilization = r.mean_compute_utilization;
         rep.min_compute_utilization = r.min_compute_utilization;
         rep.tasks = r.tasks as u64;
+        rep.sim_path = Some(r.sim_path.name().to_string());
+        rep.warmup_tasks = r.warmup_tasks as u64;
+        rep.cycle_tasks = r.cycle_tasks as u64;
         rep.plan = cfg.plan.to_json();
         // measured failure recovery: the steady-state window after the
         // split IS the post-failure fleet, so the main run's numbers

@@ -19,6 +19,7 @@ pub const SCHEMA_KEYS: &[&str] = &[
     "backend",
     "comm_s",
     "compute_s",
+    "cycle_tasks",
     "efficiency",
     "iteration_s",
     "mean_compute_utilization",
@@ -30,9 +31,11 @@ pub const SCHEMA_KEYS: &[&str] = &[
     "platform",
     "recovery",
     "samples_per_s",
+    "sim_path",
     "spec",
     "speedup",
     "tasks",
+    "warmup_tasks",
 ];
 
 #[derive(Debug, Clone)]
@@ -60,7 +63,20 @@ pub struct ScalingReport {
     pub mean_compute_utilization: f64,
     pub min_compute_utilization: f64,
     /// Discrete-event tasks simulated (0 for closed-form/measured runs).
+    /// On the periodic fast path this is the closed-form K-iteration
+    /// count the run stands for, not the probe's task count.
     pub tasks: u64,
+    /// Which simulation path the netsim backend executed: `"periodic"`
+    /// (steady-state template fast path) or `"full"`; `None` for
+    /// backends without a path choice (analytic, runtime).
+    pub sim_path: Option<String>,
+    /// Tasks actually scheduled by the discrete-event engine before
+    /// extrapolation (the warm-up + probe window on the periodic path,
+    /// everything on the full path; 0 where `sim_path` is `None`).
+    pub warmup_tasks: u64,
+    /// Tasks per steady-state iteration (0 when a failure timeline makes
+    /// iterations non-uniform, or where `sim_path` is `None`).
+    pub cycle_tasks: u64,
     /// The `PartitionPlan` the run executed (its canonical JSON form),
     /// `null` where no plan applies (e.g. manifest-only runtime models).
     pub plan: Json,
@@ -116,6 +132,15 @@ impl ScalingReport {
             Json::Num(self.min_compute_utilization),
         );
         m.insert("tasks".to_string(), Json::Num(self.tasks as f64));
+        m.insert(
+            "sim_path".to_string(),
+            match &self.sim_path {
+                Some(p) => Json::Str(p.clone()),
+                None => Json::Null,
+            },
+        );
+        m.insert("warmup_tasks".to_string(), Json::Num(self.warmup_tasks as f64));
+        m.insert("cycle_tasks".to_string(), Json::Num(self.cycle_tasks as f64));
         m.insert("plan".to_string(), self.plan.clone());
         m.insert("recovery".to_string(), self.recovery.clone());
         Json::Obj(m)
@@ -139,6 +164,12 @@ impl ScalingReport {
             mean_compute_utilization: get_f64(j, "mean_compute_utilization")?,
             min_compute_utilization: get_f64(j, "min_compute_utilization")?,
             tasks: j.get("tasks")?.as_u64()?,
+            sim_path: match j.get("sim_path")? {
+                Json::Null => None,
+                v => Some(v.as_str().context("report field \"sim_path\"")?.to_string()),
+            },
+            warmup_tasks: j.get("warmup_tasks")?.as_u64()?,
+            cycle_tasks: j.get("cycle_tasks")?.as_u64()?,
             plan: j.get("plan")?.clone(),
             recovery: j.get("recovery")?.clone(),
         })
@@ -306,6 +337,9 @@ mod tests {
             mean_compute_utilization: 0.73,
             min_compute_utilization: 0.73,
             tasks: 0,
+            sim_path: None,
+            warmup_tasks: 0,
+            cycle_tasks: 0,
             plan: Json::Null,
             recovery: Json::Null,
         }
@@ -341,6 +375,26 @@ mod tests {
         assert!(text.contains("\"iteration_s\":null"), "{text}");
         let back = ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert!(back.iteration_s.is_nan());
+    }
+
+    #[test]
+    fn sim_path_and_task_counts_roundtrip() {
+        let mut r = sample();
+        r.sim_path = Some("periodic".into());
+        r.warmup_tasks = 3208;
+        r.cycle_tasks = 802;
+        r.tasks = 12832;
+        let text = r.to_json().to_string();
+        assert!(text.contains("\"sim_path\":\"periodic\""), "{text}");
+        let back = ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.sim_path.as_deref(), Some("periodic"));
+        assert_eq!(back.warmup_tasks, 3208);
+        assert_eq!(back.cycle_tasks, 802);
+        assert_eq!(back.to_json().to_string(), text);
+        // backends without a path choice serialize the field as null
+        let text = sample().to_json().to_string();
+        assert!(text.contains("\"sim_path\":null"), "{text}");
+        assert_eq!(ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap().sim_path, None);
     }
 
     #[test]

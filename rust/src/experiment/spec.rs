@@ -258,6 +258,21 @@ fn check_keys(obj: &Json, allowed: &[&str], what: &str) -> Result<()> {
     Ok(())
 }
 
+/// Steady-state timing needs at least two simulated iterations (the
+/// last boundary minus the previous one), so reject degenerate counts
+/// at spec-build time — both JSON parse and `--set iterations=...` —
+/// instead of panicking inside the simulators.
+fn validate_iterations(iterations: usize) -> Result<()> {
+    if iterations < 2 {
+        bail!(
+            "parallelism.iterations is {iterations} but must be >= 2: steady-state timing \
+             is the last iteration boundary minus the previous one, so at least two \
+             iterations must be simulated"
+        );
+    }
+    Ok(())
+}
+
 /// A named sub-object of the spec: absent/null means "all defaults",
 /// any non-object value is an error (it would otherwise be silently
 /// ignored and defaulted — same failure mode as a misspelled key).
@@ -533,6 +548,7 @@ impl ExperimentSpec {
             iterations: get_usize(p, "iterations", d.parallelism.iterations)?,
         };
         registry::plan_mode(&parallelism.mode)?; // validate early
+        validate_iterations(parallelism.iterations)?;
 
         let minibatch = match j.opt("minibatch") {
             None | Some(Json::Null) => d.minibatch.clone(),
@@ -799,7 +815,11 @@ impl ExperimentSpec {
                     self.parallelism.mode = value.into()
                 }
                 "overlap" => self.parallelism.overlap = parsed(key, value)?,
-                "iterations" => self.parallelism.iterations = parsed(key, value)?,
+                "iterations" => {
+                    let it: usize = parsed(key, value)?;
+                    validate_iterations(it)?;
+                    self.parallelism.iterations = it
+                }
                 "collective" => {
                     registry::collective(value)?;
                     self.collective = value.into()
@@ -1004,6 +1024,20 @@ mod tests {
     fn invalid_mode_is_rejected_at_parse_time() {
         let e = ExperimentSpec::parse_str(r#"{"parallelism": {"mode": "async"}}"#);
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn degenerate_iteration_counts_fail_at_spec_build_time() {
+        // both the JSON parse path and the CLI --set path must reject
+        // iterations < 2 with an explanation, not panic downstream
+        let e = ExperimentSpec::parse_str(r#"{"parallelism": {"iterations": 1}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("must be >= 2"), "{e:#}");
+        let mut s = ExperimentSpec::default();
+        let e = s.apply_set("iterations=1").unwrap_err();
+        assert!(format!("{e:#}").contains("at least two"), "{e:#}");
+        let e = s.apply_set("parallelism.iterations=0").unwrap_err();
+        assert!(format!("{e:#}").contains("must be >= 2"), "{e:#}");
+        assert!(s.apply_set("iterations=2").is_ok());
     }
 
     #[test]

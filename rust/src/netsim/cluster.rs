@@ -38,6 +38,19 @@
 //! collective), command-queue tails are fixed-size [`Tail`] pairs, and
 //! task labels are interned by the engine — so building a 128-node fig4
 //! iteration allocates O(layers), not O(messages).
+//!
+//! Multi-iteration hot path: every clean iteration emits an identical
+//! task block, so the builders walk the model zoo and the collective
+//! expanders for the first two iterations only and instance the rest
+//! from the trailing block ([`Engine::instance_tail_block`]); on top of
+//! that, [`simulate_training_fleet`] detects a periodic steady-state
+//! schedule from a [`PROBE_ITERATIONS`]-iteration probe and extrapolates
+//! the remaining iterations in closed form — bit-identical to the full
+//! simulation, with automatic fallback for the configurations that
+//! genuinely need the full split DAG (stragglers, hetero generations,
+//! failure/recovery timelines). See DESIGN.md "Steady-state fast path".
+
+use anyhow::{bail, Result};
 
 use crate::analytic::comm_model::Strategy;
 use crate::analytic::compute_model;
@@ -48,7 +61,7 @@ use crate::models::{Layer, NetDescriptor};
 use crate::plan::{planner, PartitionPlan};
 
 use super::collective::{self, CollectiveKind};
-use super::engine::{DepLists, Engine, Schedule, TaskId};
+use super::engine::{self, DepLists, Engine, Schedule, TaskId};
 use super::fleet::{Fleet, FleetConfig, RecoveryPolicy};
 use super::network::ns;
 
@@ -59,7 +72,7 @@ const COMM: usize = 1;
 pub struct SimConfig {
     pub nodes: u64,
     pub minibatch: u64,
-    /// Iterations to simulate (>= 3; last-minus-previous is reported).
+    /// Iterations to simulate (>= 2; last-minus-previous is reported).
     /// (The comm-library send/recv overlap assumption lives in the
     /// plan's per-group `overlap` — it shapes strategy derivation, not
     /// the schedule itself.)
@@ -135,8 +148,29 @@ pub struct ScalingPoint {
     pub efficiency: f64,
 }
 
+/// Which execution path produced a [`FleetSimResult`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimPath {
+    /// Every iteration simulated event by event.
+    Full,
+    /// Steady-state fast path: a [`PROBE_ITERATIONS`]-iteration probe
+    /// simulated in full, the remaining iterations extrapolated in
+    /// closed form from the detected periodic schedule.
+    Periodic,
+}
+
+impl SimPath {
+    /// Wire name, as reported in `ScalingReport.sim_path`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimPath::Full => "full",
+            SimPath::Periodic => "periodic",
+        }
+    }
+}
+
 /// Steady-state output of the full-cluster simulator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetSimResult {
     pub nodes: u64,
     pub iteration_s: f64,
@@ -146,8 +180,19 @@ pub struct FleetSimResult {
     /// Utilization of the least-busy node — the one most starved by
     /// stragglers or contention.
     pub min_compute_utilization: f64,
-    /// Total tasks simulated (messages + compute + setup).
+    /// Tasks the simulated window covers (messages + compute + setup).
+    /// On the periodic path this is the closed-form K-iteration count —
+    /// identical to what the full simulation would have reported.
     pub tasks: usize,
+    /// Which path produced this result (the ONLY field, together with
+    /// `warmup_tasks`, on which the two paths may legitimately differ).
+    pub sim_path: SimPath,
+    /// Tasks actually simulated event by event: the whole DAG on the
+    /// full path, the probe prefix on the periodic path.
+    pub warmup_tasks: usize,
+    /// Tasks one clean iteration emits (0 when a failure event split the
+    /// DAG and iterations are not uniform).
+    pub cycle_tasks: usize,
     /// Failure-recovery measurement (`Some` whenever a failure event
     /// fired inside the simulated window).
     pub recovery: Option<RecoveryOutcome>,
@@ -155,7 +200,7 @@ pub struct FleetSimResult {
 
 /// What a failure event cost and what the fleet resumed as — measured
 /// from the executed schedule plus the charges baked into the DAG.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RecoveryOutcome {
     pub policy: RecoveryPolicy,
     /// Active nodes after the event (N for stall, N-1 otherwise).
@@ -307,8 +352,19 @@ fn choice_for(layer: &Layer, cfg: &SimConfig) -> collective::Choice {
 
 /// Simulate `cfg.iterations` of synchronous SGD and return steady-state
 /// timing for the representative node (the analytic α-β path).
-pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConfig) -> SimResult {
-    assert!(cfg.iterations >= 2);
+pub fn simulate_training(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    if cfg.iterations < 2 {
+        bail!(
+            "SimConfig.iterations is {} but must be >= 2: steady-state timing is the \
+             last iteration boundary minus the previous one, so at least two \
+             iterations must be simulated (set parallelism.iterations >= 2)",
+            cfg.iterations
+        );
+    }
     debug_assert!(
         cfg.plan.assignments.is_empty() || cfg.plan.nodes == cfg.nodes,
         "plan was derived for {} nodes but the simulation runs {}",
@@ -323,13 +379,13 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
     let mut eng = Engine::new();
     // update task of layer i from the previous iteration
     let mut prev_update: Vec<Option<TaskId>> = vec![None; k];
-    // [start, end) task-id range of each iteration (tasks are added in
-    // iteration order, so the ranges are contiguous — this replaces the
-    // old name-prefix scan over every task)
-    let mut iter_ranges: Vec<(usize, usize)> = Vec::with_capacity(cfg.iterations);
 
-    for _ in 0..cfg.iterations {
-        let range_start = eng.len();
+    // every iteration emits an identical task block (same labels,
+    // durations, resources; only dependency contents differ — iteration
+    // 0 has no previous updates to gate on), so the loop walks the model
+    // only twice and the remaining iterations are instanced from the
+    // trailing block
+    for _ in 0..2 {
         // ---------------- forward ----------------
         let mut last_fwd: Option<TaskId> = None;
         for (i, l) in layers.iter().enumerate() {
@@ -391,15 +447,18 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
             }
         }
         prev_update = update_ids;
-        iter_ranges.push((range_start, eng.len()));
+    }
+    // task-id range of iteration `it` is [it * stride, (it + 1) * stride)
+    let stride = eng.len() / 2;
+    if cfg.iterations > 2 {
+        eng.instance_tail_block(stride, cfg.iterations - 2);
     }
 
     let sched = eng.run();
     // steady state: last iteration boundary minus the previous one, where
     // an iteration truly ends when its last update lands.
     let iter_finish = |it: usize| -> u64 {
-        let (lo, hi) = iter_ranges[it];
-        (lo..hi).map(|id| sched.end_ns[id]).max().unwrap_or(0)
+        (it * stride..(it + 1) * stride).map(|id| sched.end_ns[id]).max().unwrap_or(0)
     };
     let t_last = iter_finish(cfg.iterations - 1);
     let t_prev = iter_finish(cfg.iterations - 2);
@@ -416,12 +475,12 @@ pub fn simulate_training(net: &NetDescriptor, platform: &Platform, cfg: &SimConf
         .sum();
     let util = busy as f64 / (t_last - t_prev).max(1) as f64;
 
-    SimResult {
+    Ok(SimResult {
         nodes: cfg.nodes,
         iteration_s: iter_s,
         images_per_s: cfg.minibatch as f64 / iter_s,
         compute_utilization: util.min(1.0),
-    }
+    })
 }
 
 /// Effective per-node data points for a layer under its strategy: data
@@ -478,6 +537,9 @@ pub struct FleetDag {
     nodes: usize,
     minibatch: u64,
     iterations: usize,
+    /// Tasks one iteration emits when every iteration is uniform (clean
+    /// fabric — no failure split); 0 otherwise.
+    cycle_tasks: usize,
 }
 
 /// A failure event as resolved by the DAG builder: where the simulation
@@ -623,13 +685,50 @@ impl<'a> DagBuilder<'a> {
 /// detect → (replan) → redistribute transition on the survivors, and
 /// continue the remaining iterations at N-1 on the degraded plan with
 /// the global minibatch respread over the survivors.
+///
+/// Clean builds (no firing failure event) walk the model zoo and the
+/// collective expanders for the first two iterations only and instance
+/// the rest from the trailing block — bit-identical to the loop build
+/// ([`build_training_fleet_full`] forces the loop; the equivalence is
+/// asserted in `tests/engine_oracle.rs`).
 pub fn build_training_fleet(
     net: &NetDescriptor,
     platform: &Platform,
     cfg: &SimConfig,
     fleet_cfg: &FleetConfig,
-) -> FleetDag {
-    assert!(cfg.iterations >= 2);
+) -> Result<FleetDag> {
+    build_fleet_dag(net, platform, cfg, fleet_cfg, true)
+}
+
+/// [`build_training_fleet`] with template instancing disabled: every
+/// iteration is re-emitted through the builders. Retained as the
+/// ground-truth construction path (and the honest baseline for the
+/// template-vs-full rows in `benches/netsim_perf.rs`).
+pub fn build_training_fleet_full(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    fleet_cfg: &FleetConfig,
+) -> Result<FleetDag> {
+    build_fleet_dag(net, platform, cfg, fleet_cfg, false)
+}
+
+fn build_fleet_dag(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    fleet_cfg: &FleetConfig,
+    use_template: bool,
+) -> Result<FleetDag> {
+    if cfg.iterations < 2 {
+        bail!(
+            "SimConfig.iterations is {} but must be >= 2 for the fleet builder: \
+             steady-state timing is the last iteration boundary minus the previous \
+             one, so at least two iterations must be simulated (set \
+             parallelism.iterations >= 2)",
+            cfg.iterations
+        );
+    }
     assert_eq!(
         cfg.nodes as usize, fleet_cfg.nodes,
         "SimConfig.nodes must match FleetConfig.nodes"
@@ -720,7 +819,15 @@ pub fn build_training_fleet(
     let mut plan: &PartitionPlan = &cfg.plan;
     let mut n_active: u64 = n as u64;
 
-    for it in 0..cfg.iterations {
+    // clean builds emit one identical task block per iteration (only the
+    // dependency contents differ: iteration 0 has no previous updates),
+    // so the expensive zoo/collective walk runs twice and the remaining
+    // iterations are instanced from the trailing block; a failure event
+    // makes iterations non-uniform and forces the full loop
+    let template = use_template && recovery.is_none() && cfg.iterations > 2;
+    let built_iterations = if template { 2 } else { cfg.iterations };
+
+    for it in 0..built_iterations {
         let mut iter_tail: Vec<TaskId> = Vec::new();
         // per-node gate releasing this iteration's first forward pass
         // (stall rejoin, or the shrink/replan transition's last task)
@@ -998,7 +1105,19 @@ pub fn build_training_fleet(
         iter_ends.push(iter_tail);
     }
 
-    FleetDag {
+    if template {
+        let stride = b.eng.len() / 2;
+        b.eng.instance_tail_block(stride, cfg.iterations - 2);
+        // each instanced copy ends on the shifted images of iteration 1's
+        // end tasks (the copies are exact shifted replicas)
+        let template_ends = iter_ends[1].clone();
+        for c in 1..=cfg.iterations - 2 {
+            iter_ends.push(template_ends.iter().map(|&t| t + stride * c).collect());
+        }
+    }
+    let cycle_tasks = if recovery.is_none() { b.eng.len() / cfg.iterations } else { 0 };
+
+    Ok(FleetDag {
         eng: b.eng,
         iter_ends,
         fail_tasks,
@@ -1006,7 +1125,8 @@ pub fn build_training_fleet(
         nodes: n,
         minibatch: cfg.minibatch,
         iterations: cfg.iterations,
-    }
+        cycle_tasks,
+    })
 }
 
 /// Steady-state summary of one executed fleet schedule.
@@ -1079,22 +1199,118 @@ pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
         mean_compute_utilization: mean,
         min_compute_utilization: min,
         tasks: dag.eng.len(),
+        sim_path: SimPath::Full,
+        warmup_tasks: dag.eng.len(),
+        cycle_tasks: dag.cycle_tasks,
         recovery,
     }
+}
+
+/// Iterations the periodic fast path simulates in full before
+/// extrapolating: one warm-up block, two steady blocks to detect the
+/// period across, and a terminal block — so the probe's measurement
+/// window (last iteration minus previous) has exactly the same
+/// neighbor context (a mid block followed by a successor-less final
+/// block) as the full run's, which is what makes the extrapolated
+/// report bit-identical.
+pub const PROBE_ITERATIONS: usize = 4;
+
+/// Clean-fabric check for the periodic fast path. Stragglers, hetero
+/// generations and firing failure events genuinely need the full split
+/// DAG; `REPRO_NETSIM_PATH=full` forces the full path for A/B gating.
+fn periodic_eligible(cfg: &SimConfig, fleet_cfg: &FleetConfig) -> bool {
+    let forced_full = matches!(std::env::var("REPRO_NETSIM_PATH"), Ok(v) if v == "full");
+    !forced_full
+        && cfg.iterations > PROBE_ITERATIONS
+        && fleet_cfg.straggler_skew == 0.0
+        && !fleet_cfg.hetero
+        && fleet_cfg.fail_at.filter(|&it| it < cfg.iterations).is_none()
+}
+
+/// The steady-state fast path: build + run a [`PROBE_ITERATIONS`]
+/// probe, verify the schedule is periodic, and extrapolate the
+/// K-iteration report in closed form. Returns `Ok(None)` when the probe
+/// does not prove periodicity (the caller falls back to the full
+/// simulation).
+fn simulate_fleet_periodic(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    fleet_cfg: &FleetConfig,
+) -> Result<Option<FleetSimResult>> {
+    let probe_cfg = SimConfig { iterations: PROBE_ITERATIONS, ..cfg.clone() };
+    let dag = build_training_fleet(net, platform, &probe_cfg, fleet_cfg)?;
+    let stride = dag.cycle_tasks;
+    if stride == 0 || dag.eng.len() != stride * PROBE_ITERATIONS {
+        return Ok(None);
+    }
+    let sched = dag.eng.run();
+    let iter_finish = |it: usize| -> u64 {
+        dag.iter_ends[it].iter().map(|&id| sched.end_ns[id]).max().unwrap_or(0)
+    };
+    // adjacency guard: a block may overlap its direct neighbors only
+    // (block b+2 must not start before block b fully finished). This
+    // bounds how far scheduling state propagates, so the probe's blocks
+    // provably see the same context as the full run's.
+    for bl in 0..PROBE_ITERATIONS - 2 {
+        let fin = iter_finish(bl);
+        let min_start = (stride * (bl + 2)..stride * (bl + 3))
+            .map(|id| sched.start_ns[id])
+            .min()
+            .unwrap_or(0);
+        if min_start < fin {
+            return Ok(None);
+        }
+    }
+    // the two mid blocks must repeat with one constant per-task shift
+    if engine::periodic_shift(&sched, stride, stride, 2).is_none() {
+        return Ok(None);
+    }
+    // the probe's steady window [finish(P-2), finish(P-1)] is a shifted
+    // replica of the full run's [finish(K-2), finish(K-1)] — identical
+    // iteration time, throughput and utilizations; only the task total
+    // is scaled to the K iterations the caller asked for
+    let mut r = summarize_fleet(&dag, &sched);
+    r.sim_path = SimPath::Periodic;
+    r.tasks = stride * cfg.iterations;
+    Ok(Some(r))
 }
 
 /// Simulate `cfg.iterations` of synchronous SGD across every node of the
 /// fleet, with collectives expanded to per-message tasks over contended
 /// links. `cfg.nodes` must equal `fleet_cfg.nodes`.
+///
+/// Clean-fabric configurations route through the steady-state periodic
+/// fast path (probe + closed-form extrapolation, bit-identical to the
+/// full simulation — `sim_path` records which path ran); stragglers,
+/// hetero generations, failure events, an undetected period or
+/// `REPRO_NETSIM_PATH=full` all fall back to
+/// [`simulate_training_fleet_full`].
 pub fn simulate_training_fleet(
     net: &NetDescriptor,
     platform: &Platform,
     cfg: &SimConfig,
     fleet_cfg: &FleetConfig,
-) -> FleetSimResult {
-    let dag = build_training_fleet(net, platform, cfg, fleet_cfg);
+) -> Result<FleetSimResult> {
+    if periodic_eligible(cfg, fleet_cfg) {
+        if let Some(r) = simulate_fleet_periodic(net, platform, cfg, fleet_cfg)? {
+            return Ok(r);
+        }
+    }
+    simulate_training_fleet_full(net, platform, cfg, fleet_cfg)
+}
+
+/// Force the full event-by-event simulation of every iteration — the
+/// ground truth the periodic fast path is verified against.
+pub fn simulate_training_fleet_full(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    fleet_cfg: &FleetConfig,
+) -> Result<FleetSimResult> {
+    let dag = build_training_fleet(net, platform, cfg, fleet_cfg)?;
     let sched = dag.eng.run();
-    summarize_fleet(&dag, &sched)
+    Ok(summarize_fleet(&dag, &sched))
 }
 
 /// Sweep node counts and produce a scaling curve (speedup vs the 1-node
@@ -1108,28 +1324,27 @@ pub fn scaling_curve(
     minibatch: u64,
     nodes: &[u64],
     plan_for: impl Fn(u64) -> PartitionPlan,
-) -> Vec<ScalingPoint> {
+) -> Result<Vec<ScalingPoint>> {
     let base = simulate_training(
         net,
         platform,
         &SimConfig { nodes: 1, minibatch, plan: plan_for(1), ..Default::default() },
-    );
-    nodes
-        .iter()
-        .map(|&n| {
-            let r = simulate_training(
-                net,
-                platform,
-                &SimConfig { nodes: n, minibatch, plan: plan_for(n), ..Default::default() },
-            );
-            ScalingPoint {
-                nodes: n,
-                images_per_s: r.images_per_s,
-                speedup: r.images_per_s / base.images_per_s,
-                efficiency: r.images_per_s / (base.images_per_s * n as f64),
-            }
-        })
-        .collect()
+    )?;
+    let mut curve = Vec::with_capacity(nodes.len());
+    for &n in nodes {
+        let r = simulate_training(
+            net,
+            platform,
+            &SimConfig { nodes: n, minibatch, plan: plan_for(n), ..Default::default() },
+        )?;
+        curve.push(ScalingPoint {
+            nodes: n,
+            images_per_s: r.images_per_s,
+            speedup: r.images_per_s / base.images_per_s,
+            efficiency: r.images_per_s / (base.images_per_s * n as f64),
+        });
+    }
+    Ok(curve)
 }
 
 #[cfg(test)]
@@ -1145,7 +1360,7 @@ mod tests {
     #[test]
     fn single_node_matches_compute_only() {
         let p = Platform::cori();
-        let r = simulate_training(&vgg_a(), &p, &SimConfig::default());
+        let r = simulate_training(&vgg_a(), &p, &SimConfig::default()).unwrap();
         assert!(r.compute_utilization > 0.99, "{}", r.compute_utilization);
         // ~25-40 img/s on one node (Fig 3/4 anchor)
         assert!((20.0..50.0).contains(&r.images_per_s), "{}", r.images_per_s);
@@ -1157,13 +1372,13 @@ mod tests {
         // MB=256 ~82% efficiency at 64 nodes.
         let p = Platform::cori();
         let net = vgg_a();
-        let curve512 = scaling_curve(&net, &p, 512, &[128], recipe_of(&net, 512));
+        let curve512 = scaling_curve(&net, &p, 512, &[128], recipe_of(&net, 512)).unwrap();
         assert!(
             (60.0..120.0).contains(&curve512[0].speedup),
             "128-node speedup {}",
             curve512[0].speedup
         );
-        let curve256 = scaling_curve(&net, &p, 256, &[64], recipe_of(&net, 256));
+        let curve256 = scaling_curve(&net, &p, 256, &[64], recipe_of(&net, 256)).unwrap();
         assert!(
             curve256[0].efficiency > 0.60,
             "64-node eff {}",
@@ -1175,7 +1390,8 @@ mod tests {
     fn scaling_is_monotone_in_nodes() {
         let p = Platform::cori();
         let net = vgg_a();
-        let curve = scaling_curve(&net, &p, 256, &[2, 4, 8, 16, 32, 64], recipe_of(&net, 256));
+        let curve =
+            scaling_curve(&net, &p, 256, &[2, 4, 8, 16, 32, 64], recipe_of(&net, 256)).unwrap();
         for w in curve.windows(2) {
             assert!(w[1].images_per_s >= w[0].images_per_s * 0.98);
         }
@@ -1188,8 +1404,10 @@ mod tests {
         let p = Platform::aws();
         let of_net = overfeat_fast();
         let vg_net = vgg_a();
-        let of = scaling_curve(&of_net, &p, 256, &[16], recipe_of(&of_net, 256))[0].speedup;
-        let vg = scaling_curve(&vg_net, &p, 256, &[16], recipe_of(&vg_net, 256))[0].speedup;
+        let of =
+            scaling_curve(&of_net, &p, 256, &[16], recipe_of(&of_net, 256)).unwrap()[0].speedup;
+        let vg =
+            scaling_curve(&vg_net, &p, 256, &[16], recipe_of(&vg_net, 256)).unwrap()[0].speedup;
         assert!(vg > of, "vgg {vg} overfeat {of}");
         assert!((6.0..16.1).contains(&of), "{of}");
         assert!((10.0..16.1).contains(&vg), "{vg}");
@@ -1200,10 +1418,12 @@ mod tests {
         // Fig 7: CD-DNN reaches only ~6.5x on 16 nodes even on FDR.
         let p = Platform::endeavor();
         let dn_net = cddnn_full();
-        let dn = scaling_curve(&dn_net, &p, 1024, &[16], recipe_of(&dn_net, 1024))[0].speedup;
+        let dn =
+            scaling_curve(&dn_net, &p, 1024, &[16], recipe_of(&dn_net, 1024)).unwrap()[0].speedup;
         assert!((3.0..12.0).contains(&dn), "{dn}");
         let vg_net = vgg_a();
-        let vg = scaling_curve(&vg_net, &p, 256, &[16], recipe_of(&vg_net, 256))[0].speedup;
+        let vg =
+            scaling_curve(&vg_net, &p, 256, &[16], recipe_of(&vg_net, 256)).unwrap()[0].speedup;
         assert!(dn < vg);
     }
 
@@ -1213,10 +1433,11 @@ mod tests {
         // for the FC-dominated CD-DNN.
         let p = Platform::endeavor();
         let net = cddnn_full();
-        let hybrid = scaling_curve(&net, &p, 1024, &[16], recipe_of(&net, 1024))[0].speedup;
+        let hybrid = scaling_curve(&net, &p, 1024, &[16], recipe_of(&net, 1024)).unwrap()[0].speedup;
         let data = scaling_curve(&net, &p, 1024, &[16], |n| {
             PartitionPlan::data_parallel(&net, n, 1024)
-        })[0]
+        })
+        .unwrap()[0]
             .speedup;
         assert!(hybrid > data, "hybrid {hybrid} !> data {data}");
     }
@@ -1234,7 +1455,7 @@ mod tests {
                 g.collective = Some(pinned);
             }
             let cfg = SimConfig { nodes: 16, minibatch: 1024, plan, ..Default::default() };
-            iter_s.push(simulate_training(&net, &p, &cfg).iteration_s);
+            iter_s.push(simulate_training(&net, &p, &cfg).unwrap().iteration_s);
         }
         assert_ne!(iter_s[0], iter_s[1], "ring vs butterfly made no difference");
     }
@@ -1243,10 +1464,11 @@ mod tests {
     fn fleet_single_node_matches_representative() {
         let p = Platform::cori();
         let cfg = SimConfig::default();
-        let rep = simulate_training(&vgg_a(), &p, &cfg);
+        let rep = simulate_training(&vgg_a(), &p, &cfg).unwrap();
         let full = simulate_training_fleet(
             &vgg_a(), &p, &cfg, &crate::netsim::FleetConfig::homogeneous(1),
-        );
+        )
+        .unwrap();
         let rel = (rep.iteration_s - full.iteration_s).abs() / rep.iteration_s;
         assert!(rel < 0.01, "rep {} vs full {}", rep.iteration_s, full.iteration_s);
     }
@@ -1261,8 +1483,8 @@ mod tests {
             straggler_skew: 0.25,
             ..Default::default()
         };
-        let a = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
-        let b = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
+        let a = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc).unwrap();
+        let b = simulate_training_fleet(&overfeat_fast(), &p, &cfg, &fc).unwrap();
         assert_eq!(a.iteration_s, b.iteration_s);
         assert_eq!(a.tasks, b.tasks);
     }
@@ -1281,7 +1503,7 @@ mod tests {
             recovery: RecoveryPolicy::Shrink,
             ..Default::default()
         };
-        let r = simulate_training_fleet(&net, &p, &cfg, &fc);
+        let r = simulate_training_fleet(&net, &p, &cfg, &fc).unwrap();
         let rec = r.recovery.expect("failure fired");
         assert_eq!(rec.nodes_after, 3);
         assert_eq!(rec.replan_s, 0.0);
@@ -1292,7 +1514,8 @@ mod tests {
         // than paying the whole minibatch on one node
         let clean = simulate_training_fleet(
             &net, &p, &cfg, &crate::netsim::FleetConfig::homogeneous(4),
-        );
+        )
+        .unwrap();
         assert!(r.iteration_s > clean.iteration_s * 1.1, "{} vs {}", r.iteration_s,
                 clean.iteration_s);
         assert!(r.iteration_s < clean.iteration_s * 2.0);
@@ -1315,7 +1538,7 @@ mod tests {
                 recovery: policy,
                 ..Default::default()
             };
-            simulate_training_fleet(&net, &p, &cfg, &fc)
+            simulate_training_fleet(&net, &p, &cfg, &fc).unwrap()
         };
         let shrink = mk(RecoveryPolicy::Shrink).recovery.unwrap();
         let replan = mk(RecoveryPolicy::Replan).recovery.unwrap();
@@ -1337,13 +1560,26 @@ mod tests {
     }
 
     #[test]
+    fn too_few_iterations_is_a_helpful_error_not_a_panic() {
+        let p = Platform::cori();
+        let cfg = SimConfig { iterations: 1, ..SimConfig::default() };
+        let err = simulate_training(&vgg_a(), &p, &cfg).unwrap_err();
+        assert!(format!("{err}").contains("at least two"), "{err}");
+        let err = simulate_training_fleet(
+            &vgg_a(), &p, &cfg, &crate::netsim::FleetConfig::homogeneous(1),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("parallelism.iterations"), "{err}");
+    }
+
+    #[test]
     fn fleet_dag_replays_identically_on_the_reference_engine() {
         // the fleet DAG is the real workload the oracle must agree on —
         // not just random graphs
         let p = Platform::aws();
         let cfg = SimConfig { iterations: 3, ..SimConfig::recipe(&overfeat_fast(), 4, 256) };
         let fc = crate::netsim::FleetConfig::homogeneous(4);
-        let dag = build_training_fleet(&overfeat_fast(), &p, &cfg, &fc);
+        let dag = build_training_fleet(&overfeat_fast(), &p, &cfg, &fc).unwrap();
         let fast = dag.eng.run();
         let oracle = crate::netsim::reference::run(&dag.eng);
         assert_eq!(fast, oracle);

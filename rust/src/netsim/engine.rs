@@ -329,6 +329,124 @@ impl Engine {
         let makespan = st.end.iter().copied().max().unwrap_or(0);
         Schedule { start_ns: st.start, end_ns: st.end, makespan_ns: makespan }
     }
+
+    /// Replicate the engine's trailing `stride`-task block `copies` times,
+    /// shifting every dependency by `stride` per copy — the DAG-template
+    /// instancing behind the steady-state fast path. The trailing block is
+    /// the template; each copy is a byte-for-byte replica (same labels,
+    /// durations and resource sets, deps offset by one block), so the
+    /// result is bit-identical to re-emitting the block through the
+    /// builders.
+    ///
+    /// Two invariants are asserted because violating either would produce
+    /// a DAG the builders could never have emitted:
+    ///
+    /// * every template dependency reaches at most one block back
+    ///   (`d + stride >= base`), so the shifted copies stay well-formed;
+    /// * the block *preceding* the template is structurally identical
+    ///   (labels, durations, resource sets — dependency contents may
+    ///   differ: the very first block has no previous iteration to gate
+    ///   on), evidence that the builder really does emit a fixed-shape
+    ///   block per iteration.
+    pub fn instance_tail_block(&mut self, stride: usize, copies: usize) {
+        let n = self.len();
+        assert!(
+            stride > 0 && n >= 2 * stride,
+            "template instancing needs two fully built blocks ({n} tasks, stride {stride})"
+        );
+        let base = n - stride;
+        for i in 0..stride {
+            let (a, b) = (base - stride + i, base + i);
+            assert_eq!(
+                self.label_of[a], self.label_of[b],
+                "block mismatch at offset {i}: label {:?} vs {:?}",
+                self.label(a),
+                self.label(b)
+            );
+            assert_eq!(
+                self.durations[a], self.durations[b],
+                "block mismatch at offset {i} ({}): durations differ",
+                self.label(b)
+            );
+            assert_eq!(
+                self.resources(a),
+                self.resources(b),
+                "block mismatch at offset {i} ({}): resource sets differ",
+                self.label(b)
+            );
+        }
+        for id in base..n {
+            for &d in self.deps(id) {
+                assert!(
+                    d + stride >= base,
+                    "template task {id} dep {d} reaches more than one block back"
+                );
+            }
+        }
+        for _ in 0..copies {
+            let tpl = self.len() - stride;
+            for i in 0..stride {
+                let src = tpl + i;
+                let (r_lo, r_hi) = (self.res_off[src] as usize, self.res_off[src + 1] as usize);
+                self.res_arena.extend_from_within(r_lo..r_hi);
+                self.res_off.push(self.res_arena.len() as u32);
+                let (d_lo, d_hi) = (self.dep_off[src] as usize, self.dep_off[src + 1] as usize);
+                for k in d_lo..d_hi {
+                    let d = self.dep_arena[k] + stride;
+                    self.dep_arena.push(d);
+                }
+                self.dep_off.push(self.dep_arena.len() as u32);
+                self.label_of.push(self.label_of[src]);
+                self.durations.push(self.durations[src]);
+            }
+        }
+    }
+
+    /// Structural equality of two built DAGs: same tasks, labels,
+    /// durations, resource sets and dependency lists. Used by the tests
+    /// proving template instancing is bit-identical to the loop build.
+    pub fn same_dag(&self, other: &Engine) -> bool {
+        self.n_resources == other.n_resources
+            && self.durations == other.durations
+            && self.res_off == other.res_off
+            && self.res_arena == other.res_arena
+            && self.dep_off == other.dep_off
+            && self.dep_arena == other.dep_arena
+            && self.label_of == other.label_of
+            && self.label_pool == other.label_pool
+    }
+}
+
+/// Detect a constant time shift between consecutive `stride`-task blocks
+/// of a schedule: returns `Some(period_ns)` iff for every one of the
+/// `blocks - 1` adjacent block pairs starting at task `first`, each
+/// task's start AND end equal the corresponding task of the previous
+/// block plus the same constant. This is the periodic-steady-state
+/// detector: a constant shift means every per-resource busy interval
+/// repeats with period `period_ns`, so later blocks can be extrapolated
+/// in closed form instead of simulated.
+pub fn periodic_shift(
+    sched: &Schedule,
+    first: TaskId,
+    stride: usize,
+    blocks: usize,
+) -> Option<u64> {
+    if stride == 0 || blocks < 2 || first + blocks * stride > sched.start_ns.len() {
+        return None;
+    }
+    let shift = sched.start_ns[first + stride].checked_sub(sched.start_ns[first])?;
+    for b in 0..blocks - 1 {
+        for i in 0..stride {
+            let a = first + b * stride + i;
+            let c = a + stride;
+            if sched.start_ns[c] != sched.start_ns[a].checked_add(shift)?
+                || sched.end_ns[c] != sched.end_ns[a].checked_add(shift)?
+            {
+                return None;
+            }
+        }
+    }
+    Some(shift)
 }
 
 /// Mutable scheduler state of one `Engine::run` (see module docs for the
@@ -597,6 +715,105 @@ mod tests {
     fn forward_dependency_rejected() {
         let mut e = Engine::new();
         e.add("a", 0, 1, &[5]);
+    }
+
+    /// One compute + one comm task per block; comm gates the next block's
+    /// compute (the fleet DAG's cross-iteration shape in miniature).
+    fn two_task_block_engine(blocks: usize, loop_built: bool) -> Engine {
+        let mut e = Engine::new();
+        let built = if loop_built { blocks } else { 2 };
+        let mut prev_x: Option<TaskId> = None;
+        for _ in 0..built {
+            let deps: Vec<TaskId> = prev_x.into_iter().collect();
+            let f = e.add("f", 0, 30, &deps);
+            prev_x = Some(e.add("x", 1, 50, &[f]));
+        }
+        if !loop_built && blocks > 2 {
+            e.instance_tail_block(2, blocks - 2);
+        }
+        e
+    }
+
+    #[test]
+    fn instanced_blocks_are_bit_identical_to_the_loop_build() {
+        let tpl = two_task_block_engine(7, false);
+        let full = two_task_block_engine(7, true);
+        assert!(tpl.same_dag(&full));
+        assert_eq!(tpl.run(), full.run());
+    }
+
+    #[test]
+    fn instancing_shifts_dependencies_by_one_block_per_copy() {
+        let e = two_task_block_engine(5, false);
+        assert_eq!(e.len(), 10);
+        for b in 1..5 {
+            assert_eq!(e.deps(2 * b), &[2 * b - 1], "block {b} compute gate");
+            assert_eq!(e.deps(2 * b + 1), &[2 * b], "block {b} comm gate");
+        }
+    }
+
+    #[test]
+    fn same_dag_detects_duration_and_dep_drift() {
+        let a = two_task_block_engine(3, true);
+        let mut b = two_task_block_engine(3, true);
+        assert!(a.same_dag(&b));
+        b.durations[4] += 1;
+        assert!(!a.same_dag(&b));
+        let mut c = Engine::new();
+        let f = c.add("f", 0, 30, &[]);
+        c.add("x", 1, 50, &[f]);
+        assert!(!a.same_dag(&c));
+    }
+
+    #[test]
+    #[should_panic(expected = "block mismatch")]
+    fn instancing_rejects_a_non_repeating_tail() {
+        let mut e = Engine::new();
+        let a = e.add("f", 0, 30, &[]);
+        let b = e.add("x", 1, 50, &[a]);
+        let c = e.add("f", 0, 31, &[b]); // drifted duration
+        e.add("x", 1, 50, &[c]);
+        e.instance_tail_block(2, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "more than one block back")]
+    fn instancing_rejects_deps_reaching_past_the_previous_block() {
+        let mut e = Engine::new();
+        let a = e.add("f", 0, 30, &[]); // block 0
+        let b = e.add("x", 1, 50, &[a]);
+        let c = e.add("f", 0, 30, &[b]); // block 1
+        e.add("x", 1, 50, &[c]);
+        let d = e.add("f", 0, 30, &[a]); // block 2: dep reaches block 0
+        e.add("x", 1, 50, &[d]);
+        e.instance_tail_block(2, 1);
+    }
+
+    #[test]
+    fn periodic_shift_detects_a_steady_schedule() {
+        let e = two_task_block_engine(6, false);
+        let s = e.run();
+        // fully serial chain: every block shifts by f + x = 80ns
+        assert_eq!(periodic_shift(&s, 2, 2, 4), Some(80));
+        // degenerate requests are rejected, not mis-detected
+        assert_eq!(periodic_shift(&s, 2, 2, 1), None);
+        assert_eq!(periodic_shift(&s, 2, 0, 2), None);
+        assert_eq!(periodic_shift(&s, 10, 2, 2), None); // out of range
+    }
+
+    #[test]
+    fn periodic_shift_rejects_a_warmup_transient() {
+        // a short warm-up task then a steady 40ns cadence: windows that
+        // straddle the warm-up boundary are rejected, later ones accepted
+        let mut e = Engine::new();
+        let mut prev: Option<TaskId> = None;
+        for (i, d) in [10u64, 40, 40, 40, 40, 40].iter().enumerate() {
+            let deps: Vec<TaskId> = prev.into_iter().collect();
+            prev = Some(e.add(&format!("t{i}"), 0, *d, &deps));
+        }
+        let s = e.run();
+        assert_eq!(periodic_shift(&s, 0, 1, 3), None);
+        assert_eq!(periodic_shift(&s, 1, 1, 5), Some(40));
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   forward) in two fidelities: the representative-node α-β model
 //!   ([`cluster::simulate_training`], the analytic cross-check) and the
 //!   full-cluster per-node model ([`cluster::simulate_training_fleet`]).
+//!   Clean-fabric runs route through a steady-state periodic fast path
+//!   (iteration templates + closed-form extrapolation, bit-identical to
+//!   the full simulation; `SimPath` records which path ran).
 //! * [`reference`] — the retained pre-optimization full-scan scheduler,
 //!   the bit-identicality oracle for the engine's indexed fast path.
 
@@ -31,8 +34,8 @@ pub mod network;
 pub mod reference;
 
 pub use cluster::{
-    simulate_training, simulate_training_fleet, FleetSimResult, RecoveryOutcome, ScalingPoint,
-    SimConfig, SimResult,
+    simulate_training, simulate_training_fleet, simulate_training_fleet_full, FleetSimResult,
+    RecoveryOutcome, ScalingPoint, SimConfig, SimPath, SimResult,
 };
 pub use collective::Choice;
 pub use engine::{DepLists, Engine, Schedule, TaskId};

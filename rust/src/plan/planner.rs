@@ -166,7 +166,9 @@ pub fn plan_cost_s(input: &PlannerInput, plan: &PartitionPlan) -> f64 {
         collective: input.collective,
         degraded_plan: None,
     };
-    simulate_training(input.net, input.platform, &cfg).iteration_s
+    simulate_training(input.net, input.platform, &cfg)
+        .expect("plan_cost_s clamps iterations to >= 2")
+        .iteration_s
 }
 
 /// Exhaustive-over-layer-groups design-point search (see module docs).

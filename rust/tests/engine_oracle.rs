@@ -12,7 +12,7 @@
 
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{build_training_fleet, SimConfig};
+use pcl_dnn::netsim::cluster::{build_training_fleet, build_training_fleet_full, SimConfig};
 use pcl_dnn::netsim::{reference, Engine, FleetConfig, RecoveryPolicy, Topology};
 use pcl_dnn::util::rng::Rng;
 
@@ -125,13 +125,49 @@ fn failure_bearing_fleet_dags_replay_identically_on_the_reference_engine() {
             recovery: policy,
             ..Default::default()
         };
-        let dag = build_training_fleet(&net, &p, &cfg, &fleet_cfg);
+        let dag = build_training_fleet(&net, &p, &cfg, &fleet_cfg).unwrap();
         assert_eq!(
             dag.eng.run(),
             reference::run(&dag.eng),
             "case {case}: {policy:?} fail_at={fail_at} fail_node={fail_node} \
              nodes={nodes} {topology:?}"
         );
+    }
+}
+
+#[test]
+fn template_instanced_fleet_dags_are_bit_identical_to_the_loop_build() {
+    // The tentpole's structural invariant: building two iterations and
+    // stamping out the rest by id-offset copying must reproduce the
+    // legacy loop build arena-for-arena — and the resulting schedule
+    // must still match the full-scan reference oracle. Straggler skew
+    // and hetero generations scale durations uniformly across
+    // iterations, so the template applies to them too (only a firing
+    // failure event forces the loop).
+    let p = Platform::aws();
+    let net = zoo::overfeat_fast();
+    let fleets = [
+        FleetConfig::homogeneous(2),
+        FleetConfig::homogeneous(5),
+        FleetConfig { nodes: 4, straggler_skew: 0.3, ..Default::default() },
+        FleetConfig { nodes: 4, hetero: true, ..Default::default() },
+    ];
+    for fc in &fleets {
+        let cfg = SimConfig {
+            iterations: 6,
+            ..SimConfig::recipe(&net, fc.nodes as u64, 256)
+        };
+        let tpl = build_training_fleet(&net, &p, &cfg, fc).unwrap();
+        let full = build_training_fleet_full(&net, &p, &cfg, fc).unwrap();
+        assert!(
+            tpl.eng.same_dag(&full.eng),
+            "nodes={} skew={} hetero={}: instanced DAG differs from loop build",
+            fc.nodes, fc.straggler_skew, fc.hetero
+        );
+        assert_eq!(tpl.iter_ends, full.iter_ends, "nodes={}", fc.nodes);
+        let sched = tpl.eng.run();
+        assert_eq!(sched, full.eng.run(), "nodes={}", fc.nodes);
+        assert_eq!(sched, reference::run(&tpl.eng), "nodes={}", fc.nodes);
     }
 }
 

@@ -8,8 +8,11 @@
 
 use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::models::zoo;
-use pcl_dnn::netsim::cluster::{simulate_training, simulate_training_fleet, SimConfig};
-use pcl_dnn::netsim::{FleetConfig, Topology};
+use pcl_dnn::netsim::cluster::{
+    simulate_training, simulate_training_fleet, simulate_training_fleet_full, SimConfig,
+    PROBE_ITERATIONS,
+};
+use pcl_dnn::netsim::{FleetConfig, SimPath, Topology};
 
 /// Cori with the α-β congestion fudge stripped: the full simulator models
 /// contention explicitly, so the cross-check must too.
@@ -27,13 +30,14 @@ fn full_cluster_matches_alpha_beta_data_parallel() {
     let p = contention_free_cori();
     for nodes in [2u64, 4, 8] {
         let cfg = SimConfig::data_parallel(nodes, 256);
-        let rep = simulate_training(&zoo::vgg_a(), &p, &cfg);
+        let rep = simulate_training(&zoo::vgg_a(), &p, &cfg).unwrap();
         let full = simulate_training_fleet(
             &zoo::vgg_a(),
             &p,
             &cfg,
             &FleetConfig::homogeneous(nodes as usize),
-        );
+        )
+        .unwrap();
         let rel = (full.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
         assert!(
             rel < 0.05,
@@ -51,9 +55,9 @@ fn full_cluster_matches_alpha_beta_hybrid() {
     // exchanges + activation allgathers among model-parallel groups).
     let p = contention_free_cori();
     let cfg = SimConfig::recipe(&zoo::vgg_a(), 8, 256);
-    let rep = simulate_training(&zoo::vgg_a(), &p, &cfg);
+    let rep = simulate_training(&zoo::vgg_a(), &p, &cfg).unwrap();
     let full =
-        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8));
+        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8)).unwrap();
     let rel = (full.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
     assert!(
         rel < 0.05,
@@ -73,10 +77,11 @@ fn straggler_skew_slows_iterations_monotonically() {
     let p = contention_free_cori();
     let cfg = SimConfig::data_parallel(8, 256);
     let mut prev = 0.0;
-    let base = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8));
+    let base =
+        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(8)).unwrap();
     for skew in [0.0, 0.2, 0.5, 1.0] {
         let fc = FleetConfig { nodes: 8, straggler_skew: skew, ..Default::default() };
-        let r = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &fc);
+        let r = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &fc).unwrap();
         assert!(
             r.iteration_s >= prev,
             "skew {skew}: {} not monotone (prev {prev})",
@@ -106,7 +111,8 @@ fn straggler_skew_slows_iterations_monotonically() {
         &p,
         &cfg,
         &FleetConfig { nodes: 8, straggler_skew: 1.0, ..Default::default() },
-    );
+    )
+    .unwrap();
     assert!(r.iteration_s > base.iteration_s * 1.3, "{} vs {}", r.iteration_s, base.iteration_s);
 }
 
@@ -126,7 +132,8 @@ fn oversubscribed_ethernet_contention_slows_hybrid_training() {
         &p,
         &cfg,
         &FleetConfig { nodes: 8, topology: Topology::FlatSwitch, ..Default::default() },
-    );
+    )
+    .unwrap();
     let mut prev = 0.0;
     for oversub in [1.0, 2.0, 4.0] {
         let fc = FleetConfig {
@@ -134,7 +141,7 @@ fn oversubscribed_ethernet_contention_slows_hybrid_training() {
             topology: Topology::FatTree { radix: 4, oversub },
             ..Default::default()
         };
-        let r = simulate_training_fleet(&zoo::cddnn_full(), &p, &cfg, &fc);
+        let r = simulate_training_fleet(&zoo::cddnn_full(), &p, &cfg, &fc).unwrap();
         assert!(
             r.iteration_s >= prev * 0.999,
             "oversub {oversub}: {} not monotone (prev {prev})",
@@ -152,7 +159,8 @@ fn oversubscribed_ethernet_contention_slows_hybrid_training() {
             topology: Topology::FatTree { radix: 4, oversub: 4.0 },
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     assert!(
         squeezed.iteration_s > baseline.iteration_s * 1.02,
         "oversubscribed {} vs flat {}",
@@ -165,13 +173,15 @@ fn oversubscribed_ethernet_contention_slows_hybrid_training() {
 fn hetero_fleet_runs_at_slow_generation_pace() {
     let p = contention_free_cori();
     let cfg = SimConfig::data_parallel(4, 256);
-    let homo = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4));
+    let homo =
+        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4)).unwrap();
     let hetero = simulate_training_fleet(
         &zoo::vgg_a(),
         &p,
         &cfg,
         &FleetConfig { nodes: 4, hetero: true, ..Default::default() },
-    );
+    )
+    .unwrap();
     assert!(hetero.iteration_s > homo.iteration_s * 1.1, "{} vs {}", hetero.iteration_s,
             homo.iteration_s);
     assert!(hetero.iteration_s < homo.iteration_s * 1.5);
@@ -183,7 +193,8 @@ fn failure_stalls_one_iteration_then_rejoins() {
     // iterations: 0 warmup, 1 fails, steady state measured over the last
     // two — so the recovery must NOT pollute the steady-state window...
     let cfg = SimConfig { iterations: 5, ..SimConfig::data_parallel(4, 256) };
-    let clean = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4));
+    let clean =
+        simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &FleetConfig::homogeneous(4)).unwrap();
     let failed = simulate_training_fleet(
         &zoo::vgg_a(),
         &p,
@@ -195,7 +206,8 @@ fn failure_stalls_one_iteration_then_rejoins() {
             recovery_s: 3.0,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     // steady state after rejoin matches the clean fleet
     let rel = (failed.iteration_s - clean.iteration_s).abs() / clean.iteration_s;
     assert!(rel < 0.05, "post-rejoin steady state off by {:.1}%", 100.0 * rel);
@@ -214,7 +226,8 @@ fn failure_stalls_one_iteration_then_rejoins() {
             recovery_s: 3.0,
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     assert!(
         hit.iteration_s > clean.iteration_s + 2.5,
         "failed iteration {} must absorb most of the 3 s recovery (clean {})",
@@ -231,6 +244,7 @@ fn fleet_tasks_scale_with_cluster_size() {
         let cfg = SimConfig { iterations: 3, ..SimConfig::data_parallel(nodes, 256) };
         simulate_training_fleet(&zoo::vgg_a(), &p, &cfg,
                                 &FleetConfig::homogeneous(nodes as usize))
+        .unwrap()
     };
     let small = mk(2);
     let big = mk(8);
@@ -250,11 +264,11 @@ fn fig4_netsim_smoke_at_128_nodes() {
     let p = contention_free_cori();
     let net = zoo::vgg_a();
     let cfg = SimConfig { iterations: 3, ..SimConfig::recipe(&net, 128, 512) };
-    let full = simulate_training_fleet(&net, &p, &cfg, &FleetConfig::homogeneous(128));
+    let full = simulate_training_fleet(&net, &p, &cfg, &FleetConfig::homogeneous(128)).unwrap();
     // ~100k tasks under auto (butterfly) collectives; the ring ablation
     // of the same point is the >1M-message case the perf bench times
     assert!(full.tasks > 50_000, "expected a full per-message expansion, got {}", full.tasks);
-    let rep = simulate_training(&net, &p, &cfg);
+    let rep = simulate_training(&net, &p, &cfg).unwrap();
     let rel = (full.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
     assert!(
         rel < 0.10,
@@ -302,4 +316,87 @@ fn cross_backend_consistency_all_models() {
             assert!(f.tasks > 0 && a.tasks == 0);
         }
     }
+}
+
+#[test]
+fn periodic_fast_path_is_bit_identical_on_clean_specs() {
+    // The tentpole's correctness bar: on every clean-fabric committed
+    // spec shape (fig4 VGG-A/Cori, fig6 OverFeat/AWS, fig7 CD-DNN/
+    // Endeavor) at n in {8, 32, 64}, the steady-state fast path must
+    // report EXACTLY what the full simulation reports — the only fields
+    // allowed to differ are the path marker itself and the count of
+    // tasks actually pushed through the event loop.
+    for (net, platform, mb) in [
+        (zoo::vgg_a(), Platform::cori(), 512u64),
+        (zoo::overfeat_fast(), Platform::aws(), 256),
+        (zoo::cddnn_full(), Platform::endeavor(), 1024),
+    ] {
+        for nodes in [8u64, 32, 64] {
+            let cfg = SimConfig { iterations: 7, ..SimConfig::recipe(&net, nodes, mb) };
+            let fc = FleetConfig::homogeneous(nodes as usize);
+            let fast = simulate_training_fleet(&net, &platform, &cfg, &fc).unwrap();
+            let full = simulate_training_fleet_full(&net, &platform, &cfg, &fc).unwrap();
+            assert_eq!(fast.sim_path, SimPath::Periodic, "{} x{nodes}", net.name);
+            assert_eq!(full.sim_path, SimPath::Full);
+            // the probe simulates PROBE_ITERATIONS cycles, the full run
+            // all of them; both extrapolate to the same K-iteration DAG
+            assert_eq!(fast.warmup_tasks, fast.cycle_tasks * PROBE_ITERATIONS);
+            assert_eq!(full.warmup_tasks, full.cycle_tasks * cfg.iterations);
+            let mut fast_norm = fast.clone();
+            fast_norm.sim_path = full.sim_path;
+            fast_norm.warmup_tasks = full.warmup_tasks;
+            assert_eq!(fast_norm, full, "{} x{nodes}: fast path diverged", net.name);
+        }
+    }
+}
+
+#[test]
+fn stragglers_hetero_and_failures_take_the_full_path() {
+    // The fallback property: any fleet feature that breaks per-iteration
+    // uniformity must route to full simulation, and the routed result
+    // must be byte-identical to pre-template output (= the forced-full
+    // entry point) — every field, no normalization.
+    let p = contention_free_cori();
+    let cfg = SimConfig { iterations: 6, ..SimConfig::data_parallel(6, 256) };
+    let fleets = [
+        FleetConfig { nodes: 6, straggler_skew: 0.4, ..Default::default() },
+        FleetConfig { nodes: 6, hetero: true, ..Default::default() },
+        FleetConfig { nodes: 6, fail_at: Some(2), fail_node: 1, recovery_s: 2.0,
+                      ..Default::default() },
+    ];
+    for fc in &fleets {
+        let routed = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, fc).unwrap();
+        let forced = simulate_training_fleet_full(&zoo::vgg_a(), &p, &cfg, fc).unwrap();
+        assert_eq!(routed.sim_path, SimPath::Full, "skew={} hetero={} fail_at={:?}",
+                   fc.straggler_skew, fc.hetero, fc.fail_at);
+        assert_eq!(routed, forced);
+    }
+    // a fail_at beyond the simulated window never fires, so it stays
+    // eligible for the fast path
+    let dormant = FleetConfig { nodes: 6, fail_at: Some(99), ..Default::default() };
+    let r = simulate_training_fleet(&zoo::vgg_a(), &p, &cfg, &dormant).unwrap();
+    assert_eq!(r.sim_path, SimPath::Periodic);
+}
+
+#[test]
+fn backend_reports_which_sim_path_ran() {
+    use pcl_dnn::experiment::{AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend};
+
+    let mut spec = ExperimentSpec::of("path_probe", "vgg_a", "cori", 8, 256);
+    spec.parallelism.iterations = 16;
+    let rep = FleetSimBackend.run(&spec).unwrap();
+    assert_eq!(rep.sim_path.as_deref(), Some("periodic"));
+    assert!(rep.cycle_tasks > 0);
+    assert_eq!(rep.warmup_tasks, rep.cycle_tasks * PROBE_ITERATIONS as u64);
+    assert_eq!(rep.tasks, rep.cycle_tasks * 16);
+    // fleet features force the full path, and the report says so
+    spec.cluster.straggler_skew = 0.5;
+    let rep = FleetSimBackend.run(&spec).unwrap();
+    assert_eq!(rep.sim_path.as_deref(), Some("full"));
+    assert_eq!(rep.warmup_tasks, rep.tasks);
+    // backends without a discrete-event path choice report null
+    spec.cluster.straggler_skew = 0.0;
+    let rep = AnalyticBackend.run(&spec).unwrap();
+    assert_eq!(rep.sim_path, None);
+    assert_eq!((rep.warmup_tasks, rep.cycle_tasks), (0, 0));
 }

@@ -120,8 +120,8 @@ fn engine_is_deterministic_across_runs() {
 fn simulation_results_are_reproducible() {
     let p = Platform::cori();
     let cfg = SimConfig::recipe(&zoo::vgg_a(), 64, 512);
-    let a = simulate_training(&zoo::vgg_a(), &p, &cfg);
-    let b = simulate_training(&zoo::vgg_a(), &p, &cfg);
+    let a = simulate_training(&zoo::vgg_a(), &p, &cfg).unwrap();
+    let b = simulate_training(&zoo::vgg_a(), &p, &cfg).unwrap();
     assert_eq!(a.iteration_s, b.iteration_s);
     assert_eq!(a.images_per_s, b.images_per_s);
 }
@@ -135,12 +135,14 @@ fn more_iterations_converge_to_steady_state() {
         &zoo::vgg_a(),
         &p,
         &SimConfig { iterations: 3, ..SimConfig::recipe(&zoo::vgg_a(), 32, 256) },
-    );
+    )
+    .unwrap();
     let long = simulate_training(
         &zoo::vgg_a(),
         &p,
         &SimConfig { iterations: 8, ..SimConfig::recipe(&zoo::vgg_a(), 32, 256) },
-    );
+    )
+    .unwrap();
     let rel = (short.iteration_s - long.iteration_s).abs() / long.iteration_s;
     assert!(rel < 0.01, "{} vs {}", short.iteration_s, long.iteration_s);
 }
@@ -155,7 +157,8 @@ fn overlap_matters_in_simulation() {
         &zoo::overfeat_fast(),
         &p,
         &SimConfig { iterations: 4, ..SimConfig::recipe(&zoo::overfeat_fast(), 16, 256) },
-    );
+    )
+    .unwrap();
     // compute utilization must be meaningful and below 1 at 16 eth nodes
     assert!(r.compute_utilization > 0.3 && r.compute_utilization <= 1.0);
 }
