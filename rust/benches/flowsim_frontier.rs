@@ -1,0 +1,95 @@
+//! Flow-level scaling frontier — the sweep only the flowsim tier can
+//! afford. Emits `BENCH_flowsim_frontier.json`:
+//!
+//! * every full-size paper network (VGG-A/Cori, OverFeat-FAST/AWS,
+//!   CD-DNN/Endeavor) at n ∈ {256, 512, 1024, 4096} — past the edge of
+//!   the paper's own measurements (Fig 4 stops at 128) and past what
+//!   per-message netsim can expand at all (its per-node minibatch floor
+//!   stops at n = MB);
+//! * per point: steady-state iteration ms, samples/s, efficiency vs the
+//!   1-node baseline, flow-graph size, and build+run wall-ms — the
+//!   "seconds, not minutes" claim is a measured column, not prose.
+//!
+//! Efficiency sanity is asserted loosely here (monotone non-increasing
+//! within each model's sweep, within [0, 1.01]); the tight ≤5% pin
+//! against netsim lives in `tests/fleet_sim.rs` where netsim can run.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use pcl_dnn::experiment::{Backend, ExperimentSpec, FlowSimBackend};
+use pcl_dnn::util::json::Json;
+
+fn main() {
+    println!("=== flowsim_frontier ===");
+    // clean fabric: the setting under which the tier is validated
+    // against analytic/netsim, so frontier numbers stay comparable
+    let models: &[(&str, &str, u64)] = &[
+        ("vgg_a", "cori", 512),
+        ("overfeat_fast", "aws", 256),
+        ("cddnn_full", "endeavor", 1024),
+    ];
+    let node_counts: &[u64] = &[256, 512, 1024, 4096];
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &(model, platform, mb) in models {
+        let mut prev_eff = f64::INFINITY;
+        for &nodes in node_counts {
+            let mut spec = ExperimentSpec::of(
+                &format!("frontier_{model}_{nodes}"),
+                model,
+                platform,
+                nodes,
+                mb,
+            );
+            spec.cluster.congestion = Some(0.0);
+            spec.parallelism.iterations = 3;
+
+            let t0 = Instant::now();
+            let rep = FlowSimBackend.run(&spec).unwrap();
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            let eff = rep.efficiency.unwrap();
+            assert!(
+                eff > 0.0 && eff <= 1.01,
+                "{model}@{nodes}: efficiency {eff} out of range"
+            );
+            // loose: plan shapes shift between node counts, so allow
+            // small local wobble while catching gross inversions
+            assert!(
+                eff <= prev_eff * 1.05,
+                "{model}@{nodes}: efficiency {eff} rose above {prev_eff} as nodes grew"
+            );
+            prev_eff = eff;
+
+            println!(
+                "{model:>13}@{nodes:>4}: iter {:>9.3} ms | {:>10.0} samples/s | \
+                 eff {:>5.1}% | {:>8} flows | wall {:>8.1} ms",
+                rep.iteration_s * 1e3,
+                rep.samples_per_s,
+                100.0 * eff,
+                rep.tasks,
+                wall_ms
+            );
+            let mut row = BTreeMap::new();
+            row.insert("efficiency".to_string(), Json::Num(eff));
+            row.insert("iteration_s".to_string(), Json::Num(rep.iteration_s));
+            row.insert("model".to_string(), Json::Str(model.to_string()));
+            row.insert("nodes".to_string(), Json::Num(nodes as f64));
+            row.insert("platform".to_string(), Json::Str(platform.to_string()));
+            row.insert("samples_per_s".to_string(), Json::Num(rep.samples_per_s));
+            row.insert("tasks".to_string(), Json::Num(rep.tasks as f64));
+            row.insert("wall_ms".to_string(), Json::Num(wall_ms));
+            rows.push(Json::Obj(row));
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("frontier".to_string(), Json::Arr(rows));
+    std::fs::write(
+        "BENCH_flowsim_frontier.json",
+        format!("{}\n", Json::Obj(root).pretty()),
+    )
+    .unwrap();
+    println!("\nwrote BENCH_flowsim_frontier.json");
+}

@@ -17,9 +17,10 @@
 //!   platforms, topologies and collectives (formerly four copies of
 //!   `match name { ... }` across the CLI, benches and examples).
 //! * [`backend`] — [`AnalyticBackend`] (balance equations),
-//!   [`FleetSimBackend`] (full-cluster discrete-event simulation) and
-//!   [`RuntimeBackend`] (PJRT execution), all `Backend::run(spec) ->
-//!   ScalingReport`.
+//!   [`FlowSimBackend`] (flow-level fair-share simulation, the middle
+//!   fidelity tier for 1000s-of-node sweeps), [`FleetSimBackend`]
+//!   (full-cluster discrete-event simulation) and [`RuntimeBackend`]
+//!   (PJRT execution), all `Backend::run(spec) -> ScalingReport`.
 //! * [`report`] — [`ScalingReport`], the common result schema, with a
 //!   stable `BENCH_*.json`-shaped serialization pinned by CI.
 
@@ -31,7 +32,7 @@ pub mod spec;
 pub use backend::{
     backend_by_name, partition_plan, recovery_plans, resolved_platform, run_runtime,
     run_runtime_with, run_sweep, run_sweep_serial, AnalyticBackend, Backend, FleetSimBackend,
-    RuntimeBackend, BACKENDS,
+    FlowSimBackend, RuntimeBackend, BACKENDS,
 };
 pub use report::{curve_table, RecoveryReport, ScalingReport};
 pub use spec::{

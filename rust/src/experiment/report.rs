@@ -66,9 +66,10 @@ pub struct ScalingReport {
     /// On the periodic fast path this is the closed-form K-iteration
     /// count the run stands for, not the probe's task count.
     pub tasks: u64,
-    /// Which simulation path the netsim backend executed: `"periodic"`
-    /// (steady-state template fast path) or `"full"`; `None` for
-    /// backends without a path choice (analytic, runtime).
+    /// Which simulation tier/path produced the numbers: `"periodic"`
+    /// (netsim steady-state template fast path), `"full"` (netsim
+    /// event-by-event), or `"flow"` (flowsim fair-share tier); `None`
+    /// for backends without a path choice (analytic, runtime).
     pub sim_path: Option<String>,
     /// Tasks actually scheduled by the discrete-event engine before
     /// extrapolation (the warm-up + probe window on the periodic path,

@@ -126,9 +126,14 @@ impl Default for MinibatchSpec {
     }
 }
 
-/// Knobs that only the PJRT runtime backend consumes.
+/// Execution knobs: the spec's default backend tier plus the fields
+/// only the PJRT runtime backend consumes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionSpec {
+    /// Default backend tier for `repro run` when `--backend` is not
+    /// given: `analytic` | `flowsim` | `netsim` | `runtime`
+    /// (registry names; see `backend::BACKENDS`).
+    pub fidelity: String,
     /// Manifest model override (default: `registry::runtime_model_for`
     /// applied to the spec's model name).
     pub model: Option<String>,
@@ -147,6 +152,7 @@ pub struct ExecutionSpec {
 impl Default for ExecutionSpec {
     fn default() -> Self {
         ExecutionSpec {
+            fidelity: "analytic".into(),
             model: None,
             workers: None,
             steps: 50,
@@ -426,6 +432,7 @@ impl ExperimentSpec {
         mb.insert("global".to_string(), num(self.minibatch.global as f64));
 
         let mut exec = BTreeMap::new();
+        exec.insert("fidelity".to_string(), Json::Str(self.execution.fidelity.clone()));
         exec.insert(
             "model".to_string(),
             match &self.execution.model {
@@ -565,12 +572,13 @@ impl ExperimentSpec {
         check_keys(
             e,
             &[
-                "model", "workers", "steps", "lr", "momentum", "seed", "log_every",
-                "eval_every", "optimizer", "artifacts",
+                "fidelity", "model", "workers", "steps", "lr", "momentum", "seed",
+                "log_every", "eval_every", "optimizer", "artifacts",
             ],
             "execution",
         )?;
         let execution = ExecutionSpec {
+            fidelity: get_str(e, "fidelity", &d.execution.fidelity)?,
             model: match e.opt("model") {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(v.as_str().context("field execution.model")?.to_string()),
@@ -588,6 +596,11 @@ impl ExperimentSpec {
             optimizer: get_str(e, "optimizer", &d.execution.optimizer)?,
             artifacts: get_str(e, "artifacts", &d.execution.artifacts)?,
         };
+
+        // fidelity is a backend-registry name; validate at parse time
+        // like every other registry name
+        super::backend::backend_by_name(&execution.fidelity)
+            .context("field execution.fidelity")?;
 
         let collective = get_str(j, "collective", &d.collective)?;
         registry::collective(&collective)?; // validate early
@@ -666,8 +679,8 @@ impl ExperimentSpec {
         ];
         const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations"];
         const EXECUTION_KEYS: &[&str] = &[
-            "model", "workers", "steps", "lr", "momentum", "seed", "log_every", "eval_every",
-            "optimizer", "artifacts",
+            "fidelity", "model", "workers", "steps", "lr", "momentum", "seed", "log_every",
+            "eval_every", "optimizer", "artifacts",
         ];
         match section {
             "cluster" => {
@@ -825,6 +838,10 @@ impl ExperimentSpec {
                     self.collective = value.into()
                 }
                 "minibatch" | "mb" => self.minibatch.global = parsed(key, value)?,
+                "fidelity" => {
+                    super::backend::backend_by_name(value)?;
+                    self.execution.fidelity = value.into()
+                }
                 "exec_model" => self.execution.model = Some(value.into()),
                 "workers" => self.execution.workers = Some(parsed(key, value)?),
                 "steps" => self.execution.steps = parsed(key, value)?,
@@ -838,10 +855,11 @@ impl ExperimentSpec {
                 other => bail!(
                     "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
                      radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
-                     recovery, congestion, mode, overlap, iterations, collective, workers, \
-                     steps, lr, momentum, seed, log_every, eval_every, optimizer, artifacts, \
-                     exec_model, name — or a dotted path like cluster.nodes, parallelism.mode, \
-                     minibatch.global, execution.steps, plan.<group>.<field>)"
+                     recovery, congestion, mode, overlap, iterations, collective, fidelity, \
+                     workers, steps, lr, momentum, seed, log_every, eval_every, optimizer, \
+                     artifacts, exec_model, name — or a dotted path like cluster.nodes, \
+                     parallelism.mode, minibatch.global, execution.fidelity, execution.steps, \
+                     plan.<group>.<field>)"
                 ),
         }
         Ok(())
@@ -866,6 +884,7 @@ mod tests {
         s.collective = "ring".into();
         s.execution.workers = Some(4);
         s.execution.model = Some("vgg_tiny".into());
+        s.execution.fidelity = "flowsim".into();
         let j = s.to_json();
         let back = ExperimentSpec::from_json(&j).unwrap();
         assert_eq!(s, back);
@@ -974,6 +993,7 @@ mod tests {
             ("parallelism", "overlap", "0.5"),
             ("parallelism", "iterations", "3"),
             ("minibatch", "global", "64"),
+            ("execution", "fidelity", "flowsim"),
             ("execution", "model", "vgg_tiny"),
             ("execution", "workers", "2"),
             ("execution", "steps", "5"),
@@ -1097,5 +1117,26 @@ mod tests {
         // the seconds knob kept its explicit name
         s.apply_set("recovery_s=7.5").unwrap();
         assert_eq!(s.cluster.recovery_s, 7.5);
+    }
+
+    #[test]
+    fn fidelity_is_a_backend_registry_name() {
+        // execution.fidelity selects the default backend tier; a typo'd
+        // tier must fail at parse/--set time listing the registry
+        let e = ExperimentSpec::parse_str(r#"{"execution": {"fidelity": "flowsym"}}"#)
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("analytic") && msg.contains("flowsim") && msg.contains("netsim"),
+            "{msg}"
+        );
+        let mut s = ExperimentSpec::default();
+        assert_eq!(s.execution.fidelity, "analytic");
+        let e = format!("{:#}", s.apply_set("execution.fidelity=packetlevel").unwrap_err());
+        assert!(e.contains("flowsim"), "{e}");
+        s.apply_set("fidelity=flowsim").unwrap();
+        assert_eq!(s.execution.fidelity, "flowsim");
+        s.apply_set("execution.fidelity=netsim").unwrap();
+        assert_eq!(s.execution.fidelity, "netsim");
     }
 }

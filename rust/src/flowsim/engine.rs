@@ -1,0 +1,636 @@
+//! Flow-level discrete-event engine: the substrate of the third fidelity
+//! tier (DESIGN.md "Three-tier fidelity").
+//!
+//! Two task kinds share one dependency graph:
+//!
+//! * [`Kind::Work`] — occupies a unary FIFO *stream* (a node's compute
+//!   pipeline or comm thread) for a fixed duration, exactly like a task
+//!   on a `netsim::engine` resource. When a stream frees, the queued
+//!   ready task with the smallest (ready time, id) starts — the same
+//!   command-queue order the per-message engine produces.
+//! * [`Kind::Flow`] — a bulk transfer over up to four network links. A
+//!   flow holds no stream; it runs a fixed latency stage (α + software
+//!   latency, no bandwidth) and then drains its byte volume at whatever
+//!   rate the max-min fair allocation grants it across its links.
+//!
+//! The event loop re-solves the bandwidth allocation *only when the
+//! active flow set changes* (a flow starts or finishes): progressive
+//! filling assigns every active flow the largest common rate increment
+//! until one of its links saturates, freezes the flows on saturated
+//! links, and repeats. Between re-solves, rates are constant, so each
+//! flow's finish time is a closed-form prediction; predictions carry the
+//! solve epoch and are invalidated wholesale by the next re-solve.
+//! Simultaneous events are processed as one batch (one drain + one
+//! re-solve), which keeps homogeneous collectives — where all members'
+//! flows start and finish at bit-identical times — at O(1) solves per
+//! collective round instead of O(members).
+//!
+//! Time is in f64 seconds; byte volumes and rates in f64 bytes and
+//! bytes/s. Determinism follows from the deterministic heaps and the
+//! batch processing of equal-time events.
+
+use anyhow::{bail, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Task identifier: insertion order, dense from 0.
+pub type FlowTaskId = usize;
+
+const NO_POS: u32 = u32::MAX;
+/// Relative slack below which a link counts as saturated.
+const SAT_EPS: f64 = 1e-9;
+
+#[derive(Debug, Clone, Copy)]
+enum Kind {
+    Work { stream: u32, dur_s: f64 },
+    Flow { links: [u32; 4], n_links: u8, latency_s: f64, bytes: f64 },
+}
+
+/// One `Work` occupancy interval on a stream (for utilization accounting).
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub stream: u32,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Executed schedule: per-task finish times plus the stream spans.
+#[derive(Debug, Clone)]
+pub struct FlowSchedule {
+    pub finish_s: Vec<f64>,
+    pub spans: Vec<Span>,
+    pub makespan_s: f64,
+}
+
+/// Flow-level task graph + its link capacities and stream count.
+pub struct FlowEngine {
+    n_streams: usize,
+    /// Per-link capacity in bytes/s.
+    caps: Vec<f64>,
+    kinds: Vec<Kind>,
+    dep_off: Vec<u32>,
+    dep_arena: Vec<u32>,
+}
+
+// -------------------------------------------------------------------
+// Heap entries (min-heaps via Reverse; f64 ordered by total_cmp, which
+// is safe because all times are finite and non-negative).
+// -------------------------------------------------------------------
+
+/// Work completion or flow latency-stage completion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Ev {
+    t: f64,
+    id: u32,
+    work: bool,
+}
+impl Eq for Ev {}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&o.t).then(self.id.cmp(&o.id))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+/// Predicted flow finish, valid only while `epoch` is current.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Fin {
+    t: f64,
+    id: u32,
+    epoch: u32,
+}
+impl Eq for Fin {}
+impl Ord for Fin {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&o.t).then(self.id.cmp(&o.id))
+    }
+}
+impl PartialOrd for Fin {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+/// Queued ready Work waiting for its stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Rdy {
+    t: f64,
+    id: u32,
+}
+impl Eq for Rdy {}
+impl Ord for Rdy {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&o.t).then(self.id.cmp(&o.id))
+    }
+}
+impl PartialOrd for Rdy {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl FlowEngine {
+    pub fn new(n_streams: usize, link_caps: Vec<f64>) -> FlowEngine {
+        debug_assert!(link_caps.iter().all(|&c| c > 0.0), "link capacities must be positive");
+        FlowEngine {
+            n_streams,
+            caps: link_caps,
+            kinds: Vec::new(),
+            dep_off: vec![0],
+            dep_arena: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    fn push_deps(&mut self, deps: &[FlowTaskId]) {
+        let next = self.kinds.len();
+        for &d in deps {
+            debug_assert!(d < next, "dependency {d} of task {next} not yet added");
+            self.dep_arena.push(d as u32);
+        }
+        self.dep_off.push(self.dep_arena.len() as u32);
+    }
+
+    /// Add a stream-occupying task (compute pass, local SGD, noop).
+    pub fn add_work(&mut self, stream: usize, dur_s: f64, deps: &[FlowTaskId]) -> FlowTaskId {
+        debug_assert!(stream < self.n_streams, "stream {stream} out of range");
+        debug_assert!(dur_s >= 0.0);
+        let id = self.kinds.len();
+        self.kinds.push(Kind::Work { stream: stream as u32, dur_s });
+        self.push_deps(deps);
+        id
+    }
+
+    /// Add a flow of `bytes` over `links` after a fixed `latency_s`
+    /// stage. Zero-byte flows complete at latency end without entering
+    /// the bandwidth allocation.
+    pub fn add_flow(
+        &mut self,
+        links: &[usize],
+        latency_s: f64,
+        bytes: f64,
+        deps: &[FlowTaskId],
+    ) -> FlowTaskId {
+        debug_assert!(links.len() <= 4, "flows traverse at most 4 links");
+        debug_assert!(bytes <= 0.0 || !links.is_empty(), "byte-bearing flow needs links");
+        debug_assert!(latency_s >= 0.0 && bytes >= 0.0);
+        let mut arr = [0u32; 4];
+        for (slot, &l) in arr.iter_mut().zip(links) {
+            debug_assert!(l < self.caps.len(), "link {l} out of range");
+            *slot = l as u32;
+        }
+        let id = self.kinds.len();
+        self.kinds.push(Kind::Flow {
+            links: arr,
+            n_links: links.len() as u8,
+            latency_s,
+            bytes,
+        });
+        self.push_deps(deps);
+        id
+    }
+
+    /// Execute the graph; errors if a dependency cycle leaves tasks
+    /// unfinished.
+    pub fn run(&self) -> Result<FlowSchedule> {
+        Runner::new(self).run()
+    }
+}
+
+struct Runner<'a> {
+    eng: &'a FlowEngine,
+    succ_off: Vec<u32>,
+    succ: Vec<u32>,
+    preds_left: Vec<u32>,
+    finish_s: Vec<f64>,
+    spans: Vec<Span>,
+    completed: usize,
+    // streams
+    stream_busy: Vec<bool>,
+    stream_q: Vec<BinaryHeap<Reverse<Rdy>>>,
+    kick: Vec<u32>,
+    // events
+    events: BinaryHeap<Reverse<Ev>>,
+    fin: BinaryHeap<Reverse<Fin>>,
+    epoch: u32,
+    // active flows (struct-of-arrays; `pos` maps task id -> index)
+    act_id: Vec<u32>,
+    act_rem: Vec<f64>,
+    act_rate: Vec<f64>,
+    pos: Vec<u32>,
+    last_drain: f64,
+    // solver scratch (sized to the link count, reset via `touched`)
+    cnt: Vec<u32>,
+    used: Vec<f64>,
+    touched: Vec<u32>,
+    frozen: Vec<bool>,
+}
+
+impl<'a> Runner<'a> {
+    fn new(eng: &'a FlowEngine) -> Runner<'a> {
+        let nt = eng.kinds.len();
+        // successor CSR from the dependency arena
+        let mut succ_off = vec![0u32; nt + 1];
+        for &d in &eng.dep_arena {
+            succ_off[d as usize + 1] += 1;
+        }
+        for i in 1..=nt {
+            succ_off[i] += succ_off[i - 1];
+        }
+        let mut cursor = succ_off.clone();
+        let mut succ = vec![0u32; eng.dep_arena.len()];
+        for t in 0..nt {
+            let (d0, d1) = (eng.dep_off[t] as usize, eng.dep_off[t + 1] as usize);
+            for &d in &eng.dep_arena[d0..d1] {
+                succ[cursor[d as usize] as usize] = t as u32;
+                cursor[d as usize] += 1;
+            }
+        }
+        let preds_left: Vec<u32> =
+            (0..nt).map(|t| eng.dep_off[t + 1] - eng.dep_off[t]).collect();
+        Runner {
+            eng,
+            succ_off,
+            succ,
+            preds_left,
+            finish_s: vec![f64::NAN; nt],
+            spans: Vec::new(),
+            completed: 0,
+            stream_busy: vec![false; eng.n_streams],
+            stream_q: (0..eng.n_streams).map(|_| BinaryHeap::new()).collect(),
+            kick: Vec::new(),
+            events: BinaryHeap::new(),
+            fin: BinaryHeap::new(),
+            epoch: 0,
+            act_id: Vec::new(),
+            act_rem: Vec::new(),
+            act_rate: Vec::new(),
+            pos: vec![NO_POS; nt],
+            last_drain: 0.0,
+            cnt: vec![0; eng.caps.len()],
+            used: vec![0.0; eng.caps.len()],
+            touched: Vec::new(),
+            frozen: Vec::new(),
+        }
+    }
+
+    fn links_of(&self, id: usize) -> ([u32; 4], u8) {
+        match self.eng.kinds[id] {
+            Kind::Flow { links, n_links, .. } => (links, n_links),
+            Kind::Work { .. } => ([0; 4], 0),
+        }
+    }
+
+    /// All preds done: queue a Work on its stream, or start a flow's
+    /// latency stage.
+    fn ready(&mut self, id: usize, t: f64) {
+        match self.eng.kinds[id] {
+            Kind::Work { stream, .. } => {
+                self.stream_q[stream as usize].push(Reverse(Rdy { t, id: id as u32 }));
+                self.kick.push(stream);
+            }
+            Kind::Flow { latency_s, .. } => {
+                self.events.push(Reverse(Ev { t: t + latency_s, id: id as u32, work: false }));
+            }
+        }
+    }
+
+    fn start_work(&mut self, id: usize, t: f64) {
+        let Kind::Work { stream, dur_s } = self.eng.kinds[id] else { unreachable!() };
+        self.stream_busy[stream as usize] = true;
+        self.spans.push(Span { stream, start_s: t, end_s: t + dur_s });
+        self.events.push(Reverse(Ev { t: t + dur_s, id: id as u32, work: true }));
+    }
+
+    fn complete(&mut self, id: usize, t: f64) {
+        debug_assert!(self.finish_s[id].is_nan(), "task {id} completed twice");
+        self.finish_s[id] = t;
+        self.completed += 1;
+        let (s0, s1) = (self.succ_off[id] as usize, self.succ_off[id + 1] as usize);
+        for k in s0..s1 {
+            let s = self.succ[k] as usize;
+            self.preds_left[s] -= 1;
+            if self.preds_left[s] == 0 {
+                self.ready(s, t);
+            }
+        }
+    }
+
+    /// Advance all active flows to `t` at their current rates.
+    fn drain_to(&mut self, t: f64) {
+        let dt = t - self.last_drain;
+        if dt > 0.0 {
+            for i in 0..self.act_id.len() {
+                self.act_rem[i] = (self.act_rem[i] - self.act_rate[i] * dt).max(0.0);
+            }
+        }
+        self.last_drain = t;
+    }
+
+    fn join_flow(&mut self, id: usize, bytes: f64) {
+        self.pos[id] = self.act_id.len() as u32;
+        self.act_id.push(id as u32);
+        self.act_rem.push(bytes);
+        self.act_rate.push(0.0);
+    }
+
+    fn finish_flow(&mut self, id: usize, t: f64) {
+        let i = self.pos[id] as usize;
+        self.act_id.swap_remove(i);
+        self.act_rem.swap_remove(i);
+        self.act_rate.swap_remove(i);
+        if i < self.act_id.len() {
+            self.pos[self.act_id[i] as usize] = i as u32;
+        }
+        self.pos[id] = NO_POS;
+        self.complete(id, t);
+    }
+
+    /// Max-min fair allocation by progressive filling, then finish-time
+    /// predictions for the new epoch.
+    fn resolve(&mut self, t: f64) {
+        self.epoch += 1;
+        let f_n = self.act_id.len();
+        if f_n == 0 {
+            return;
+        }
+        self.touched.clear();
+        for i in 0..f_n {
+            let (links, nl) = self.links_of(self.act_id[i] as usize);
+            for &l in &links[..nl as usize] {
+                if self.cnt[l as usize] == 0 {
+                    self.touched.push(l);
+                    self.used[l as usize] = 0.0;
+                }
+                self.cnt[l as usize] += 1;
+            }
+        }
+        self.frozen.clear();
+        self.frozen.resize(f_n, false);
+        for r in self.act_rate.iter_mut() {
+            *r = 0.0;
+        }
+        let mut unfrozen = f_n;
+        while unfrozen > 0 {
+            let mut inc = f64::INFINITY;
+            for &l in &self.touched {
+                let l = l as usize;
+                if self.cnt[l] > 0 {
+                    inc = inc.min((self.caps[l] - self.used[l]) / self.cnt[l] as f64);
+                }
+            }
+            if !inc.is_finite() {
+                break; // every remaining flow is link-free (zero-link flows never get here)
+            }
+            let inc = inc.max(0.0);
+            for i in 0..f_n {
+                if !self.frozen[i] {
+                    self.act_rate[i] += inc;
+                }
+            }
+            for &l in &self.touched {
+                let l = l as usize;
+                if self.cnt[l] > 0 {
+                    self.used[l] += inc * self.cnt[l] as f64;
+                }
+            }
+            let mut froze = 0usize;
+            for i in 0..f_n {
+                if self.frozen[i] {
+                    continue;
+                }
+                let (links, nl) = self.links_of(self.act_id[i] as usize);
+                let saturated = links[..nl as usize]
+                    .iter()
+                    .any(|&l| {
+                        let l = l as usize;
+                        self.caps[l] - self.used[l] <= self.caps[l] * SAT_EPS
+                    });
+                if saturated {
+                    self.frozen[i] = true;
+                    froze += 1;
+                    for &l in &links[..nl as usize] {
+                        self.cnt[l as usize] -= 1;
+                    }
+                }
+            }
+            if froze == 0 {
+                break; // rates already maximal within SAT_EPS
+            }
+            unfrozen -= froze;
+        }
+        for &l in &self.touched {
+            self.cnt[l as usize] = 0;
+        }
+        for i in 0..f_n {
+            let rate = self.act_rate[i].max(f64::MIN_POSITIVE);
+            self.fin.push(Reverse(Fin {
+                t: t + self.act_rem[i] / rate,
+                id: self.act_id[i],
+                epoch: self.epoch,
+            }));
+        }
+    }
+
+    /// Next valid flow-finish time, discarding stale-epoch entries.
+    fn peek_fin(&mut self) -> Option<f64> {
+        while let Some(&Reverse(f)) = self.fin.peek() {
+            if f.epoch != self.epoch || self.pos[f.id as usize] == NO_POS {
+                self.fin.pop();
+                continue;
+            }
+            return Some(f.t);
+        }
+        None
+    }
+
+    /// Process everything scheduled at exactly time `t` as one batch;
+    /// returns whether the active flow set changed.
+    fn batch(&mut self, t: f64) -> bool {
+        let mut changed = false;
+        loop {
+            let mut progressed = false;
+            // flow finishes at t (valid epoch only)
+            while let Some(tf) = self.peek_fin() {
+                if tf > t {
+                    break;
+                }
+                let Reverse(f) = self.fin.pop().expect("peeked");
+                self.drain_to(t);
+                self.finish_flow(f.id as usize, t);
+                changed = true;
+                progressed = true;
+            }
+            // work completions and latency-stage completions at t
+            while let Some(&Reverse(e)) = self.events.peek() {
+                if e.t > t {
+                    break;
+                }
+                self.events.pop();
+                let id = e.id as usize;
+                if e.work {
+                    self.complete(id, t);
+                    let Kind::Work { stream, .. } = self.eng.kinds[id] else { unreachable!() };
+                    self.stream_busy[stream as usize] = false;
+                    self.kick.push(stream);
+                } else {
+                    let Kind::Flow { bytes, .. } = self.eng.kinds[id] else { unreachable!() };
+                    if bytes <= 0.0 {
+                        self.complete(id, t);
+                    } else {
+                        self.drain_to(t);
+                        self.join_flow(id, bytes);
+                        changed = true;
+                    }
+                }
+                progressed = true;
+            }
+            // dispatch freed/kicked streams in (ready time, id) order
+            while let Some(s) = self.kick.pop() {
+                let s = s as usize;
+                if !self.stream_busy[s] {
+                    if let Some(Reverse(r)) = self.stream_q[s].pop() {
+                        self.start_work(r.id as usize, t);
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                return changed;
+            }
+        }
+    }
+
+    fn run(mut self) -> Result<FlowSchedule> {
+        let nt = self.eng.kinds.len();
+        for id in 0..nt {
+            if self.preds_left[id] == 0 {
+                self.ready(id, 0.0);
+            }
+        }
+        let mut t = 0.0f64;
+        loop {
+            if self.batch(t) {
+                self.drain_to(t);
+                self.resolve(t);
+            }
+            let te = self.events.peek().map(|&Reverse(e)| e.t);
+            let tf = self.peek_fin();
+            t = match (te, tf) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (Some(a), Some(b)) => a.min(b),
+            };
+        }
+        if self.completed != nt {
+            bail!(
+                "flowsim deadlock: {} of {nt} tasks completed (dependency cycle?)",
+                self.completed
+            );
+        }
+        let makespan_s = self.finish_s.iter().cloned().fold(0.0, f64::max);
+        Ok(FlowSchedule { finish_s: self.finish_s, spans: self.spans, makespan_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn lone_flow_runs_at_link_capacity() {
+        let mut fe = FlowEngine::new(0, vec![100.0]);
+        let f = fe.add_flow(&[0], 0.5, 100.0, &[]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[f], 1.5), "{}", s.finish_s[f]);
+    }
+
+    #[test]
+    fn two_flows_fair_share_one_link() {
+        let mut fe = FlowEngine::new(0, vec![100.0]);
+        let a = fe.add_flow(&[0], 0.0, 100.0, &[]);
+        let b = fe.add_flow(&[0], 0.0, 100.0, &[]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[a], 2.0) && approx(s.finish_s[b], 2.0));
+    }
+
+    #[test]
+    fn late_joiner_redistributes_bandwidth() {
+        // A alone at 100 B/s until t=0.5, then 50/50 with B until A
+        // finishes at 1.5 (50 bytes left at 0.5 -> 1 s at 50 B/s), then
+        // B alone at 100 B/s: 50 left at 1.5 -> done at 2.0.
+        let mut fe = FlowEngine::new(1, vec![100.0]);
+        let a = fe.add_flow(&[0], 0.0, 100.0, &[]);
+        let gate = fe.add_work(0, 0.5, &[]);
+        let b = fe.add_flow(&[0], 0.0, 100.0, &[gate]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[a], 1.5), "{}", s.finish_s[a]);
+        assert!(approx(s.finish_s[b], 2.0), "{}", s.finish_s[b]);
+    }
+
+    #[test]
+    fn rate_is_min_over_route_links() {
+        let mut fe = FlowEngine::new(0, vec![100.0, 40.0]);
+        let f = fe.add_flow(&[0, 1], 0.0, 80.0, &[]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[f], 2.0), "{}", s.finish_s[f]);
+    }
+
+    #[test]
+    fn max_min_gives_unbottlenecked_flow_the_slack() {
+        // Flows A and B share link 0 (cap 100); B also crosses link 1
+        // (cap 30). Max-min: B is capped at 30, A gets the remaining 70.
+        let mut fe = FlowEngine::new(0, vec![100.0, 30.0]);
+        let a = fe.add_flow(&[0], 0.0, 70.0, &[]);
+        let b = fe.add_flow(&[0, 1], 0.0, 30.0, &[]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[a], 1.0), "{}", s.finish_s[a]);
+        assert!(approx(s.finish_s[b], 1.0), "{}", s.finish_s[b]);
+    }
+
+    #[test]
+    fn streams_are_fifo_and_serial() {
+        let mut fe = FlowEngine::new(1, vec![]);
+        let a = fe.add_work(0, 1.0, &[]);
+        let b = fe.add_work(0, 2.0, &[]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[a], 1.0) && approx(s.finish_s[b], 3.0));
+        assert_eq!(s.spans.len(), 2);
+        assert!(approx(s.makespan_s, 3.0));
+    }
+
+    #[test]
+    fn zero_byte_flow_is_latency_only() {
+        let mut fe = FlowEngine::new(0, vec![100.0]);
+        let f = fe.add_flow(&[0], 0.25, 0.0, &[]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[f], 0.25));
+    }
+
+    #[test]
+    fn dependencies_chain_across_kinds() {
+        let mut fe = FlowEngine::new(1, vec![100.0]);
+        let w = fe.add_work(0, 1.0, &[]);
+        let f = fe.add_flow(&[0], 0.5, 100.0, &[w]);
+        let w2 = fe.add_work(0, 0.5, &[f]);
+        let s = fe.run().unwrap();
+        assert!(approx(s.finish_s[f], 2.5), "{}", s.finish_s[f]);
+        assert!(approx(s.finish_s[w2], 3.0));
+    }
+}

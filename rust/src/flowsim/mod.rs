@@ -1,0 +1,589 @@
+//! Flow-level network simulation — the third fidelity tier between the
+//! α-β analytic model and the per-message netsim (DESIGN.md "Three-tier
+//! fidelity").
+//!
+//! The per-iteration synchronous-SGD structure is the same one
+//! `netsim::cluster::build_fleet_dag` emits (forward with activation
+//! allgathers, wt-grad before bprop, RS → strip SGD → AG gradient
+//! exchanges overlapped through per-node comm-queue tails), but each
+//! collective step becomes *flows* on the [`engine::FlowEngine`] instead
+//! of per-message tasks:
+//!
+//! * **Ring** collectives coarsen to one flow per member: member `j`
+//!   streams its (m-1) chunks to `j+1` as a single `(m-1)·bytes/m`
+//!   transfer whose latency stage charges the software setup plus all
+//!   m-1 per-step α latencies. On a clean fabric this is exactly the
+//!   ring α-β closed form, and under contention the flow fair-shares
+//!   the same tx/rx/channel links the per-message schedule would occupy.
+//! * **Butterfly** collectives keep one flow per member per round (the
+//!   pairwise exchange pattern changes links every round, so rounds
+//!   cannot be coarsened without losing the contention structure).
+//!
+//! Scope: flowsim models *homogeneous, failure-free* fleets — the
+//! regime where its ≤5% agreement with per-message netsim is validated
+//! (`tests/fleet_sim.rs`) and the one that matters for the
+//! 1000s-of-node scaling frontier (`benches/flowsim_frontier.rs`).
+//! Stragglers, heterogeneous generations and failure/recovery timelines
+//! need per-task fidelity and stay on the netsim tier.
+
+pub mod engine;
+
+use anyhow::{bail, Result};
+
+use crate::analytic::comm_model::Strategy;
+use crate::analytic::machine::Platform;
+use crate::analytic::FabricSpec;
+use crate::collectives::GroupTopology;
+use crate::models::NetDescriptor;
+use crate::netsim::cluster::{self, SimConfig};
+use crate::netsim::collective::{self, Algorithm, CollectiveKind};
+use crate::netsim::engine::DepLists;
+use crate::netsim::network::{Network, Topology};
+
+use engine::{FlowEngine, FlowTaskId};
+
+/// Steady-state summary of one flow-level training simulation (the
+/// flowsim analogue of `netsim::cluster::FleetSimResult`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSimResult {
+    pub iteration_s: f64,
+    pub images_per_s: f64,
+    pub mean_compute_utilization: f64,
+    pub min_compute_utilization: f64,
+    /// Tasks (works + flows) pushed through the flow engine.
+    pub tasks: u64,
+}
+
+/// Per-node FIFO comm-queue tail: the last task on the node's comm
+/// stream, plus the completion task of its last collective when that
+/// differs (same chaining `netsim::cluster` uses).
+#[derive(Debug, Clone, Copy, Default)]
+struct Tail {
+    a: Option<FlowTaskId>,
+    b: Option<FlowTaskId>,
+}
+
+impl Tail {
+    fn one(t: FlowTaskId) -> Tail {
+        Tail { a: Some(t), b: None }
+    }
+    fn pair(a: FlowTaskId, b: Option<FlowTaskId>) -> Tail {
+        Tail { a: Some(a), b }
+    }
+    fn iter(self) -> impl Iterator<Item = FlowTaskId> {
+        self.a.into_iter().chain(self.b)
+    }
+}
+
+/// Result of emitting one collective as flows.
+struct FlowCollective {
+    /// Per-member task after which that member's result is final.
+    done: Vec<FlowTaskId>,
+    /// Per-member last own send (for comm-queue chaining).
+    last_local: Vec<FlowTaskId>,
+}
+
+/// Ring reduce-scatter/allgather coarsened to one flow per member:
+/// member j's m-1 chunk sends to j+1 become a single (m-1)·(bytes/m)
+/// flow over the j→j+1 route, with the software setup and the m-1
+/// per-step α latencies folded into the latency stage. Member j's
+/// result is final when its incoming neighbor's flow lands.
+fn emit_ring(
+    fe: &mut FlowEngine,
+    netw: &Network,
+    group: &[usize],
+    bytes: u64,
+    deps: &DepLists,
+) -> FlowCollective {
+    let m = group.len();
+    let chunk = bytes as f64 / m as f64;
+    let steps = (m - 1) as f64;
+    let mut flows: Vec<FlowTaskId> = Vec::with_capacity(m);
+    for j in 0..m {
+        let dst = (j + 1) % m;
+        let (route, lat_s) = netw.route(group[j], group[dst]);
+        let latency = netw.sw_latency_s + steps * lat_s;
+        flows.push(fe.add_flow(route.as_slice(), latency, steps * chunk, deps.get(j)));
+    }
+    let done: Vec<FlowTaskId> = (0..m).map(|j| flows[(j + m - 1) % m]).collect();
+    FlowCollective { done, last_local: flows }
+}
+
+/// Butterfly (recursive halving/doubling): one flow per member per
+/// round — the same rounds, partners, sizes and dependency structure as
+/// `netsim::collective::build_butterfly`, with the per-member software
+/// setup folded into round 0's latency stage.
+fn emit_butterfly(
+    fe: &mut FlowEngine,
+    netw: &Network,
+    group: &[usize],
+    bytes: u64,
+    deps: &DepLists,
+    kind: CollectiveKind,
+) -> FlowCollective {
+    let m = group.len();
+    assert!(m.is_power_of_two(), "butterfly needs a power-of-two group, got {m}");
+    let rounds = m.trailing_zeros() as usize;
+    let mut last: Vec<FlowTaskId> = vec![0; m];
+    let mut cur: Vec<FlowTaskId> = vec![0; m];
+    let mut last_partner: Vec<usize> = (0..m).collect();
+    for k in 0..rounds {
+        let (dist, size) = match kind {
+            CollectiveKind::ReduceScatter => {
+                (m >> (k + 1), bytes as f64 / (1u64 << (k + 1)) as f64)
+            }
+            CollectiveKind::Allgather => {
+                (1usize << k, bytes as f64 * (1u64 << k) as f64 / m as f64)
+            }
+        };
+        for j in 0..m {
+            let partner = j ^ dist;
+            let (route, lat_s) = netw.route(group[j], group[partner]);
+            let latency = lat_s + if k == 0 { netw.sw_latency_s } else { 0.0 };
+            cur[j] = if k == 0 {
+                fe.add_flow(route.as_slice(), latency, size, deps.get(j))
+            } else {
+                fe.add_flow(
+                    route.as_slice(),
+                    latency,
+                    size,
+                    &[last[j], last[last_partner[j]]],
+                )
+            };
+        }
+        for (j, p) in last_partner.iter_mut().enumerate() {
+            *p = j ^ dist;
+        }
+        std::mem::swap(&mut last, &mut cur);
+    }
+    let done: Vec<FlowTaskId> = (0..m).map(|j| last[last_partner[j]]).collect();
+    FlowCollective { done, last_local: last }
+}
+
+/// Flow-emission analogue of `netsim::cluster::DagBuilder`: the flow
+/// engine plus per-node comm-queue tails and the two reusable
+/// dependency-list arenas.
+struct FlowBuilder<'a> {
+    fe: FlowEngine,
+    netw: &'a Network,
+    fabric: &'a FabricSpec,
+    last_comm: Vec<Tail>,
+    gates: DepLists,
+    deps: DepLists,
+}
+
+impl<'a> FlowBuilder<'a> {
+    fn gates_single(&mut self, src: &[FlowTaskId]) {
+        self.gates.clear();
+        for &t in src {
+            self.gates.push(t);
+            self.gates.finish_list();
+        }
+    }
+
+    fn run_collective(
+        &mut self,
+        choice: collective::Choice,
+        members: &[usize],
+        bytes: u64,
+        kind: CollectiveKind,
+    ) -> Vec<FlowTaskId> {
+        self.deps.clear();
+        for &v in members {
+            for &d in self.gates.get(v) {
+                self.deps.push(d);
+            }
+            for d in self.last_comm[v].iter() {
+                self.deps.push(d);
+            }
+            self.deps.finish_list();
+        }
+        let built = if members.len() <= 1 {
+            // zero-duration marker on the comm stream, as in netsim
+            let id = self.fe.add_work(2 * members[0] + 1, 0.0, self.deps.get(0));
+            FlowCollective { done: vec![id], last_local: vec![id] }
+        } else {
+            match choice.algorithm(self.fabric, bytes, members.len() as u64) {
+                Algorithm::Ring => emit_ring(&mut self.fe, self.netw, members, bytes, &self.deps),
+                Algorithm::Butterfly => {
+                    emit_butterfly(&mut self.fe, self.netw, members, bytes, &self.deps, kind)
+                }
+            }
+        };
+        for (j, &v) in members.iter().enumerate() {
+            let extra = (built.done[j] != built.last_local[j]).then_some(built.done[j]);
+            self.last_comm[v] = Tail::pair(built.last_local[j], extra);
+        }
+        built.done
+    }
+
+    /// RS -> strip SGD -> AG, mirroring `DagBuilder::exchange_update`.
+    fn exchange_update(
+        &mut self,
+        choice: collective::Choice,
+        members: &[usize],
+        bytes: u64,
+        wg: &[FlowTaskId],
+        sgd_s: f64,
+    ) -> Vec<FlowTaskId> {
+        self.gates_single(wg);
+        let rs = self.run_collective(choice, members, bytes, CollectiveKind::ReduceScatter);
+        let mut sgd_global: Vec<FlowTaskId> = vec![0; self.last_comm.len()];
+        for (j, &v) in members.iter().enumerate() {
+            let mut d: [FlowTaskId; 3] = [0; 3];
+            d[0] = rs[j];
+            let mut len = 1;
+            for t in self.last_comm[v].iter() {
+                d[len] = t;
+                len += 1;
+            }
+            let id = self.fe.add_work(2 * v + 1, sgd_s, &d[..len]);
+            self.last_comm[v] = Tail::one(id);
+            sgd_global[v] = id;
+        }
+        self.gates_single(&sgd_global);
+        self.run_collective(choice, members, bytes, CollectiveKind::Allgather)
+    }
+}
+
+/// Simulate `cfg.iterations` of synchronous SGD at flow-level fidelity
+/// over a homogeneous, failure-free fleet on `topology`. Steady-state
+/// timing is the last iteration boundary minus the previous one, as in
+/// `netsim::cluster::summarize_fleet`.
+pub fn simulate_training_flows(
+    net: &NetDescriptor,
+    platform: &Platform,
+    cfg: &SimConfig,
+    topology: Topology,
+) -> Result<FlowSimResult> {
+    if cfg.iterations < 2 {
+        bail!(
+            "SimConfig.iterations is {} but must be >= 2 for flowsim: steady-state \
+             timing is the last iteration boundary minus the previous one (set \
+             parallelism.iterations >= 2)",
+            cfg.iterations
+        );
+    }
+    let n = cfg.nodes as usize;
+    if n == 0 {
+        bail!("flowsim needs at least one node");
+    }
+    debug_assert!(
+        cfg.plan.assignments.is_empty() || cfg.plan.nodes == cfg.nodes,
+        "plan was derived for {} nodes but flowsim runs {}",
+        cfg.plan.nodes,
+        cfg.nodes
+    );
+    let m = &platform.machine;
+    let fabric = &platform.fabric;
+    // link ids start at 0: flowsim streams live in their own id space
+    let netw = Network::new(topology, n, fabric, 0);
+    let caps = vec![netw.nic_bw; netw.n_resources()];
+    let mut b = FlowBuilder {
+        fe: FlowEngine::new(2 * n, caps),
+        netw: &netw,
+        fabric,
+        last_comm: vec![Tail::default(); n],
+        gates: DepLists::new(),
+        deps: DepLists::new(),
+    };
+    let layers = &net.layers;
+    let k = layers.len();
+    let active: Vec<usize> = (0..n).collect();
+    let n_active = n as u64;
+    let mb_active = cfg.minibatch as f64 / n_active as f64;
+
+    let mut prev_update: Vec<Vec<Option<FlowTaskId>>> = vec![vec![None; k]; n];
+    let mut iter_ends: Vec<Vec<FlowTaskId>> = Vec::with_capacity(cfg.iterations);
+    for _it in 0..cfg.iterations {
+        let mut iter_tail: Vec<FlowTaskId> = Vec::new();
+
+        // ---------------- forward ----------------
+        let mut last_fwd: Vec<Option<FlowTaskId>> = vec![None; n];
+        for (i, l) in layers.iter().enumerate() {
+            let strat = cluster::strategy_in(&cfg.plan, l, n_active);
+            let choice = cluster::choice_in(&cfg.plan, l, cfg.collective);
+            b.gates.clear();
+            for v in 0..n {
+                if let Some(p) = last_fwd[v] {
+                    b.gates.push(p);
+                }
+                if let Some(u) = prev_update[v][i] {
+                    b.gates.push(u);
+                }
+                b.gates.finish_list();
+            }
+            // model/hybrid layers gather remote activations before compute
+            let fwd_src: Option<Vec<FlowTaskId>> = match strat {
+                Strategy::Model if n_active > 1 => {
+                    let bytes = 4 * l.in_elems() * cfg.minibatch;
+                    Some(b.run_collective(choice, &active, bytes, CollectiveKind::Allgather))
+                }
+                Strategy::Hybrid { groups } if n_active > 1 => {
+                    let topo = GroupTopology::new(n, groups as usize);
+                    let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
+                    let mut out: Vec<FlowTaskId> = vec![0; n];
+                    for g in 0..topo.groups {
+                        let members = topo.group_members(g);
+                        let done =
+                            b.run_collective(choice, &members, bytes, CollectiveKind::Allgather);
+                        for (j, &v) in members.iter().enumerate() {
+                            out[v] = done[j];
+                        }
+                    }
+                    Some(out)
+                }
+                _ => None,
+            };
+            let base_t = cluster::pass_time_s(l, m, mb_active);
+            for v in 0..n {
+                let id = match &fwd_src {
+                    Some(done) => b.fe.add_work(2 * v, base_t, &[done[v]]),
+                    None => b.fe.add_work(2 * v, base_t, b.gates.get(v)),
+                };
+                last_fwd[v] = Some(id);
+            }
+        }
+
+        // ---------------- backward (wt-grad before bprop) ----------------
+        let mut chain: Vec<FlowTaskId> =
+            (0..n).map(|v| last_fwd[v].expect("non-empty net")).collect();
+        let mut update_ids: Vec<Vec<Option<FlowTaskId>>> = vec![vec![None; k]; n];
+        let first_weighted = layers.iter().position(|l| l.is_weighted()).unwrap_or(0);
+        for i in (0..k).rev() {
+            let l = &layers[i];
+            if !l.is_weighted() {
+                continue;
+            }
+            let strat = cluster::strategy_in(&cfg.plan, l, n_active);
+            let choice = cluster::choice_in(&cfg.plan, l, cfg.collective);
+            let per_pass = cluster::pass_time_s(l, m, mb_active);
+            let mut wg: Vec<FlowTaskId> = vec![0; n];
+            for v in 0..n {
+                wg[v] = b.fe.add_work(2 * v, per_pass, &[chain[v]]);
+            }
+            let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
+            let updates: Vec<FlowTaskId> = match strat {
+                Strategy::Data if n_active > 1 => {
+                    b.exchange_update(choice, &active, l.weight_bytes(), &wg, sgd_s)
+                }
+                Strategy::Hybrid { groups } if n_active > 1 => {
+                    let topo = GroupTopology::new(n, groups as usize);
+                    let shard = l.weight_bytes() / topo.group_size() as u64;
+                    let mut out: Vec<FlowTaskId> = vec![0; n];
+                    for r in 0..topo.group_size() {
+                        let members = topo.replica_set(r);
+                        let done = b.exchange_update(choice, &members, shard, &wg, sgd_s);
+                        for (j, &v) in members.iter().enumerate() {
+                            out[v] = done[j];
+                        }
+                    }
+                    out
+                }
+                _ => {
+                    // no weight exchange: local SGD on the comm stream
+                    let mut out: Vec<FlowTaskId> = vec![0; n];
+                    for v in 0..n {
+                        let mut d: [FlowTaskId; 3] = [0; 3];
+                        d[0] = wg[v];
+                        let mut len = 1;
+                        for t in b.last_comm[v].iter() {
+                            d[len] = t;
+                            len += 1;
+                        }
+                        let id = b.fe.add_work(2 * v + 1, sgd_s, &d[..len]);
+                        b.last_comm[v] = Tail::one(id);
+                        out[v] = id;
+                    }
+                    out
+                }
+            };
+            for v in 0..n {
+                update_ids[v][i] = Some(updates[v]);
+                iter_tail.push(updates[v]);
+            }
+            if i != first_weighted {
+                let mut bp: Vec<FlowTaskId> = vec![0; n];
+                for v in 0..n {
+                    bp[v] = b.fe.add_work(2 * v, per_pass, &[wg[v]]);
+                }
+                chain = match strat {
+                    Strategy::Model if n_active > 1 => {
+                        let bytes = 4 * l.in_elems() * cfg.minibatch;
+                        b.gates_single(&bp);
+                        b.run_collective(choice, &active, bytes, CollectiveKind::Allgather)
+                    }
+                    Strategy::Hybrid { groups } if n_active > 1 => {
+                        let topo = GroupTopology::new(n, groups as usize);
+                        let bytes = 4 * l.in_elems() * (cfg.minibatch / groups);
+                        let mut out: Vec<FlowTaskId> = vec![0; n];
+                        b.gates_single(&bp);
+                        for g in 0..topo.groups {
+                            let members = topo.group_members(g);
+                            let done = b.run_collective(
+                                choice, &members, bytes, CollectiveKind::Allgather,
+                            );
+                            for (j, &v) in members.iter().enumerate() {
+                                out[v] = done[j];
+                            }
+                        }
+                        out
+                    }
+                    _ => bp,
+                };
+            } else {
+                chain = wg;
+            }
+        }
+        prev_update = update_ids;
+        for v in 0..n {
+            iter_tail.push(chain[v]);
+        }
+        iter_ends.push(iter_tail);
+    }
+
+    let tasks = b.fe.len() as u64;
+    let sched = b.fe.run()?;
+
+    // steady-state window, mirroring `cluster::summarize_fleet`
+    let iter_fin = |it: usize| {
+        iter_ends[it].iter().map(|&t| sched.finish_s[t]).fold(0.0f64, f64::max)
+    };
+    let t_last = iter_fin(cfg.iterations - 1);
+    let t_prev = iter_fin(cfg.iterations - 2);
+    let iter_s = (t_last - t_prev).max(1e-12);
+    let mut busy = vec![0.0f64; n];
+    for sp in &sched.spans {
+        if sp.stream % 2 == 0 && sp.start_s >= t_prev && sp.end_s <= t_last {
+            busy[(sp.stream / 2) as usize] += sp.end_s - sp.start_s;
+        }
+    }
+    let utils: Vec<f64> = busy.iter().map(|&bz| (bz / iter_s).min(1.0)).collect();
+    let mean = utils.iter().sum::<f64>() / utils.len().max(1) as f64;
+    let min = utils.iter().cloned().fold(f64::INFINITY, f64::min);
+    Ok(FlowSimResult {
+        iteration_s: iter_s,
+        images_per_s: cfg.minibatch as f64 / iter_s,
+        mean_compute_utilization: mean,
+        min_compute_utilization: min,
+        tasks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::netsim::cluster::simulate_training;
+
+    fn clean_cori() -> Platform {
+        let mut p = Platform::cori();
+        p.fabric.congestion_per_doubling = 0.0;
+        p
+    }
+
+    #[test]
+    fn flowsim_matches_alpha_beta_data_parallel() {
+        // The validation chain's first link: on a clean fully-switched
+        // fabric, flow-level iteration time within 5% of the
+        // representative-node α-β prediction (which netsim also meets).
+        let p = clean_cori();
+        for nodes in [2u64, 4, 8] {
+            let cfg = SimConfig::data_parallel(nodes, 256);
+            let rep = simulate_training(&zoo::vgg_a(), &p, &cfg).unwrap();
+            let flow = simulate_training_flows(
+                &zoo::vgg_a(), &p, &cfg, Topology::FullySwitched,
+            )
+            .unwrap();
+            let rel = (flow.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
+            assert!(
+                rel < 0.05,
+                "nodes={nodes}: flow {} vs analytic {} ({:.1}% off)",
+                flow.iteration_s,
+                rep.iteration_s,
+                100.0 * rel
+            );
+        }
+    }
+
+    #[test]
+    fn flowsim_matches_alpha_beta_hybrid() {
+        let p = clean_cori();
+        let cfg = SimConfig::recipe(&zoo::vgg_a(), 8, 256);
+        let rep = simulate_training(&zoo::vgg_a(), &p, &cfg).unwrap();
+        let flow =
+            simulate_training_flows(&zoo::vgg_a(), &p, &cfg, Topology::FullySwitched).unwrap();
+        let rel = (flow.iteration_s - rep.iteration_s).abs() / rep.iteration_s;
+        assert!(
+            rel < 0.05,
+            "flow {} vs analytic {} ({:.1}% off)",
+            flow.iteration_s,
+            rep.iteration_s,
+            100.0 * rel
+        );
+    }
+
+    #[test]
+    fn flow_count_stays_flat_per_member_for_rings() {
+        // The point of the tier: ring collectives are one flow per
+        // member, not m-1 messages per member — task counts scale like
+        // O(nodes · layers), not O(nodes² · layers).
+        let p = clean_cori();
+        let mk = |nodes: u64| {
+            let cfg = SimConfig {
+                collective: collective::Choice::Ring,
+                ..SimConfig::data_parallel(nodes, 256)
+            };
+            simulate_training_flows(&zoo::vgg_a(), &p, &cfg, Topology::FullySwitched).unwrap()
+        };
+        let small = mk(4);
+        let big = mk(16);
+        // per-message netsim would grow ~16x here (4x members × 4x steps)
+        assert!(big.tasks < 6 * small.tasks, "{} vs {}", big.tasks, small.tasks);
+    }
+
+    #[test]
+    fn oversubscribed_core_slows_flowsim_hybrid() {
+        // Contention is modeled: squeezing the fat-tree core must slow
+        // the cross-leaf replica-set exchanges of the hybrid recipe.
+        let mut p = Platform::aws();
+        p.fabric.congestion_per_doubling = 0.0;
+        let cfg = SimConfig::recipe(&zoo::cddnn_full(), 8, 1024);
+        let flat = simulate_training_flows(
+            &zoo::cddnn_full(), &p, &cfg, Topology::FlatSwitch,
+        )
+        .unwrap();
+        let squeezed = simulate_training_flows(
+            &zoo::cddnn_full(),
+            &p,
+            &cfg,
+            Topology::FatTree { radix: 4, oversub: 4.0 },
+        )
+        .unwrap();
+        assert!(
+            squeezed.iteration_s > flat.iteration_s * 1.02,
+            "oversubscribed {} vs flat {}",
+            squeezed.iteration_s,
+            flat.iteration_s
+        );
+    }
+
+    #[test]
+    fn single_node_runs_without_collectives() {
+        let p = clean_cori();
+        let cfg = SimConfig::data_parallel(1, 256);
+        let r = simulate_training_flows(&zoo::vgg_a(), &p, &cfg, Topology::FullySwitched)
+            .unwrap();
+        assert!(r.iteration_s > 0.0 && r.tasks > 0);
+        assert!(r.mean_compute_utilization > 0.5, "{}", r.mean_compute_utilization);
+    }
+
+    #[test]
+    fn iterations_under_two_is_an_error() {
+        let p = clean_cori();
+        let cfg = SimConfig { iterations: 1, ..SimConfig::data_parallel(4, 256) };
+        let err = simulate_training_flows(&zoo::vgg_a(), &p, &cfg, Topology::FullySwitched)
+            .unwrap_err();
+        assert!(err.to_string().contains("iterations"), "{err}");
+    }
+}

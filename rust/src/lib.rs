@@ -28,6 +28,7 @@ pub mod collectives;
 pub mod coordinator;
 pub mod data;
 pub mod experiment;
+pub mod flowsim;
 pub mod metrics;
 pub mod models;
 pub mod netsim;

@@ -30,8 +30,8 @@ use pcl_dnn::analytic::machine::Platform;
 use pcl_dnn::analytic::{cache_blocking, comm_model, compute_model, register_blocking, scaling};
 use pcl_dnn::experiment::{
     backend_by_name, registry, resolved_platform, run_runtime, run_sweep, AnalyticBackend,
-    Backend, ExecutionSpec, ExperimentSpec, FleetSimBackend, MinibatchSpec, ModelSpec,
-    ScalingReport,
+    Backend, ExecutionSpec, ExperimentSpec, FleetSimBackend, FlowSimBackend, MinibatchSpec,
+    ModelSpec, ScalingReport,
 };
 use pcl_dnn::metrics::Table;
 use pcl_dnn::models::zoo;
@@ -127,7 +127,9 @@ fn run_spec(opts: &Opts) -> Result<()> {
     if let Some(sets) = opts.str_opt("set") {
         spec.apply_set(sets)?;
     }
-    let backend = backend_by_name(&opts.str_or("backend", "analytic"))?;
+    // the spec's execution.fidelity picks the default tier; --backend
+    // overrides it point-wise
+    let backend = backend_by_name(&opts.str_or("backend", &spec.execution.fidelity))?;
     let reports = match opts.str_opt("sweep-nodes") {
         Some(list) => run_sweep(backend.as_ref(), &spec, &parse_list::<u64>(list, "sweep-nodes")?)?,
         None => vec![backend.run(&spec)?],
@@ -160,15 +162,17 @@ fn run_spec(opts: &Opts) -> Result<()> {
 }
 
 /// `repro plan --spec <file> [--set k=v,...] [--nodes 8,16,64]
-/// [--validate netsim] [--json] [--out file] [--no-cache]
+/// [--validate netsim|flowsim] [--json] [--out file] [--no-cache]
 /// [--check-golden specs/plans/<fig>.json] [--write-golden file]`
 ///
 /// Derives the paper-style optimal design point for the spec's network:
 /// per-layer candidate costs (data / model / hybrid at the §3.3 optimal
 /// group count), the chosen `PartitionPlan`, and its analytic cost vs
-/// the fixed recipe and pure data parallelism. `--validate netsim`
-/// replays the chosen plan on the fleet simulator (clean fabric) and
-/// fails if it disagrees with the analytic cost by more than 5%.
+/// the fixed recipe and pure data parallelism. `--validate flowsim`
+/// replays the chosen plan on the flow-level simulator (clean fabric)
+/// and fails if it disagrees with the analytic cost by more than 5%;
+/// `--validate netsim` runs that flow-level pre-filter first, then the
+/// full per-message fleet simulation under the same 5% gate.
 ///
 /// Searches are reused content-addressed from `artifacts/plans/` (see
 /// `plan::cache`; `--no-cache` bypasses both read and write), and a
@@ -275,15 +279,15 @@ fn plan_cmd(opts: &Opts) -> Result<()> {
             100.0 * (chosen_s - search.recipe_iteration_s) / search.recipe_iteration_s
         );
         if let Some(backend) = opts.str_opt("validate") {
-            if backend != "netsim" {
-                bail!("--validate {backend}: only netsim is supported");
+            if backend != "netsim" && backend != "flowsim" {
+                bail!("--validate {backend}: netsim and flowsim are supported");
             }
             let mut vspec = spec.clone();
             vspec.cluster.nodes = n;
             // clean fabric & fleet: the cross-check compares plan costs,
-            // so strip the α-β congestion fudge (netsim models contention
-            // explicitly) AND the fleet imperfections the analytic model
-            // cannot express (stragglers/hetero/failures)
+            // so strip the α-β congestion fudge (the simulators model
+            // contention explicitly) AND the fleet imperfections the
+            // analytic model cannot express (stragglers/hetero/failures)
             vspec.cluster.congestion = Some(0.0);
             vspec.cluster.straggler_skew = 0.0;
             vspec.cluster.hetero = false;
@@ -293,21 +297,42 @@ fn plan_cmd(opts: &Opts) -> Result<()> {
             // to have every layer overwritten by the pins
             vspec.parallelism.mode = "data".into();
             vspec.plan = chosen.as_pins();
-            let full = FleetSimBackend.run(&vspec)?;
             let rep = AnalyticBackend.run(&vspec)?;
-            let delta = (full.iteration_s - rep.iteration_s) / rep.iteration_s;
+            // flow-level check first: it resolves in seconds even at
+            // counts where per-message netsim takes minutes, so it is
+            // both the cheap pre-filter for --validate netsim and the
+            // whole check for --validate flowsim
+            let flow = FlowSimBackend.run(&vspec)?;
+            let fdelta = (flow.iteration_s - rep.iteration_s) / rep.iteration_s;
             println!(
-                "netsim validation: {:.2} ms vs analytic {:.2} ms ({:+.1}%, {} tasks)",
-                full.iteration_s * 1e3,
+                "flowsim validation: {:.2} ms vs analytic {:.2} ms ({:+.1}%, {} flows)",
+                flow.iteration_s * 1e3,
                 rep.iteration_s * 1e3,
-                100.0 * delta,
-                full.tasks
+                100.0 * fdelta,
+                flow.tasks
             );
-            if delta.abs() > 0.05 {
+            if fdelta.abs() > 0.05 {
                 bail!(
-                    "netsim disagrees with the analytic cost by {:.1}% (> 5%)",
-                    100.0 * delta.abs()
+                    "flowsim disagrees with the analytic cost by {:.1}% (> 5%)",
+                    100.0 * fdelta.abs()
                 );
+            }
+            if backend == "netsim" {
+                let full = FleetSimBackend.run(&vspec)?;
+                let delta = (full.iteration_s - rep.iteration_s) / rep.iteration_s;
+                println!(
+                    "netsim validation: {:.2} ms vs analytic {:.2} ms ({:+.1}%, {} tasks)",
+                    full.iteration_s * 1e3,
+                    rep.iteration_s * 1e3,
+                    100.0 * delta,
+                    full.tasks
+                );
+                if delta.abs() > 0.05 {
+                    bail!(
+                        "netsim disagrees with the analytic cost by {:.1}% (> 5%)",
+                        100.0 * delta.abs()
+                    );
+                }
             }
         }
         if let Some(golden_path) = opts.str_opt("check-golden") {
@@ -933,6 +958,7 @@ fn train(opts: &Opts) -> Result<()> {
         model: ModelSpec::Zoo(opts.str_or("model", "vgg_tiny")),
         minibatch: MinibatchSpec { global: opts.parse_or("minibatch", 16u64)? },
         execution: ExecutionSpec {
+            fidelity: "runtime".into(),
             model: None,
             workers: Some(opts.parse_or("workers", 1usize)?),
             steps: opts.parse_or("steps", 50u64)?,

@@ -295,7 +295,7 @@ fn act_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
 /// (so 1-node simulated throughput anchors to the measured single-node
 /// numbers) plus the §2.5 thread-utilization penalty, which bites at the
 /// small per-node minibatches large clusters run at.
-fn pass_time_s(layer: &Layer, m: &crate::analytic::MachineSpec, mb: f64) -> f64 {
+pub(crate) fn pass_time_s(layer: &Layer, m: &crate::analytic::MachineSpec, mb: f64) -> f64 {
     let util = compute_model::thread_utilization(layer, m, (mb.ceil() as u64).max(1)).max(0.05);
     let t = compute_model::layer_fwd_time_s(layer, m, 1) * mb / util;
     t / m.framework_efficiency + m.per_pass_overhead_s
@@ -305,7 +305,7 @@ fn pass_time_s(layer: &Layer, m: &crate::analytic::MachineSpec, mb: f64) -> f64 
 /// fleet builder's phase-aware lookup (after a shrink/replan failure the
 /// member count and plan differ from `SimConfig`'s). Single-node and
 /// weightless layers trivially run data-parallel: nothing is exchanged.
-fn strategy_in(plan: &PartitionPlan, layer: &Layer, nodes: u64) -> Strategy {
+pub(crate) fn strategy_in(plan: &PartitionPlan, layer: &Layer, nodes: u64) -> Strategy {
     if !layer.is_weighted() || nodes <= 1 {
         return Strategy::Data;
     }
@@ -314,7 +314,7 @@ fn strategy_in(plan: &PartitionPlan, layer: &Layer, nodes: u64) -> Strategy {
 
 /// Collective policy for a layer's exchanges under `plan`: the plan
 /// group's pinned choice, falling back to the experiment-level default.
-fn choice_in(
+pub(crate) fn choice_in(
     plan: &PartitionPlan,
     layer: &Layer,
     default: collective::Choice,

@@ -114,10 +114,39 @@ impl Network {
         self.base + 2 * v + 1
     }
 
-    fn leaf_of(&self, v: usize) -> usize {
+    /// Leaf switch of node `v` (0 on single-switch topologies).
+    pub fn leaf_of(&self, v: usize) -> usize {
         match self.topology {
             Topology::FatTree { radix, .. } => v / radix,
             _ => 0,
+        }
+    }
+
+    /// Number of leaf switches (fat-tree only; 0 elsewhere).
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    /// Full-rate core channels per leaf (fat-tree only; 0 elsewhere).
+    pub fn channels_per_leaf(&self) -> usize {
+        self.channels_per_leaf
+    }
+
+    /// Aggregate bisection bandwidth (bytes/s): capacity crossing an
+    /// even split of the fleet. Single-switch fabrics are limited only
+    /// by the NICs on one side; a fat-tree is additionally capped by
+    /// the core channels crossing the leaf split, so oversubscription
+    /// shows up as a proportional drop.
+    pub fn bisection_bw(&self) -> f64 {
+        let node_limited = (self.nodes / 2) as f64 * self.nic_bw;
+        match self.topology {
+            // a single-leaf "fat-tree" never crosses the core
+            Topology::FatTree { .. } if self.n_leaves > 1 => {
+                let core =
+                    (self.n_leaves / 2) as f64 * self.channels_per_leaf as f64 * self.nic_bw;
+                node_limited.min(core)
+            }
+            _ => node_limited,
         }
     }
 
@@ -261,5 +290,82 @@ mod tests {
         let sw = Network::new(Topology::FullySwitched, 4, &f, 0);
         let flat = Network::new(Topology::FlatSwitch, 4, &f, 0);
         assert!(sw.route(0, 1).1 < flat.route(0, 1).1);
+    }
+
+    #[test]
+    fn leaf_helpers_expose_the_wiring() {
+        let f = fdr();
+        let net = Network::new(Topology::FatTree { radix: 4, oversub: 2.0 }, 10, &f, 0);
+        assert_eq!(net.n_leaves(), 3); // ceil(10/4)
+        assert_eq!(net.channels_per_leaf(), 2); // 4/2.0
+        assert_eq!(net.leaf_of(0), 0);
+        assert_eq!(net.leaf_of(3), 0);
+        assert_eq!(net.leaf_of(4), 1);
+        assert_eq!(net.leaf_of(9), 2);
+        // single-switch fabrics have no leaves and one trivial "leaf"
+        let flat = Network::new(Topology::FlatSwitch, 10, &f, 0);
+        assert_eq!(flat.n_leaves(), 0);
+        assert_eq!(flat.channels_per_leaf(), 0);
+        assert_eq!(flat.leaf_of(7), 0);
+    }
+
+    #[test]
+    fn bisection_is_node_limited_on_non_blocking_fabrics() {
+        let f = fdr();
+        let want = 4.0 * f.effective_bw(); // 8 nodes -> 4 NICs cross the cut
+        for topo in [Topology::FullySwitched, Topology::FlatSwitch] {
+            let net = Network::new(topo, 8, &f, 0);
+            assert_eq!(net.bisection_bw(), want);
+        }
+        // a non-blocking fat-tree (oversub = 1) matches: core capacity
+        // (1 leaf-pair boundary x 4 channels) equals the NIC side
+        let ft = Network::new(Topology::FatTree { radix: 4, oversub: 1.0 }, 8, &f, 0);
+        assert_eq!(ft.bisection_bw(), want);
+    }
+
+    #[test]
+    fn oversubscription_cuts_bisection_proportionally() {
+        let f = fdr();
+        let full = Network::new(Topology::FatTree { radix: 8, oversub: 1.0 }, 32, &f, 0);
+        let over = Network::new(Topology::FatTree { radix: 8, oversub: 4.0 }, 32, &f, 0);
+        // 4 leaves: full core = 2 x 8 channels = 16 links, node side = 16
+        assert_eq!(full.bisection_bw(), 16.0 * f.effective_bw());
+        assert_eq!(over.bisection_bw(), full.bisection_bw() / 4.0);
+    }
+
+    #[test]
+    fn single_leaf_fat_tree_never_crosses_the_core() {
+        let f = fdr();
+        let net = Network::new(Topology::FatTree { radix: 8, oversub: 4.0 }, 8, &f, 0);
+        assert_eq!(net.n_leaves(), 1);
+        assert_eq!(net.bisection_bw(), 4.0 * f.effective_bw());
+    }
+
+    #[test]
+    fn routes_stay_inside_the_resource_block() {
+        // every (src, dst) pair on every topology must route over links
+        // the network actually owns — the contract flowsim's fair-share
+        // solver relies on when it sizes its capacity vector
+        let f = fdr();
+        for topo in [
+            Topology::FullySwitched,
+            Topology::FlatSwitch,
+            Topology::FatTree { radix: 4, oversub: 2.0 },
+        ] {
+            let net = Network::new(topo, 9, &f, 0);
+            for src in 0..9 {
+                for dst in 0..9 {
+                    if src == dst {
+                        continue;
+                    }
+                    let (route, lat) = net.route(src, dst);
+                    assert!(lat >= net.latency_s);
+                    assert!(!route.is_empty());
+                    for &l in route.as_slice() {
+                        assert!(l < net.n_resources(), "{topo:?} {src}->{dst} link {l}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -319,6 +319,56 @@ fn cross_backend_consistency_all_models() {
 }
 
 #[test]
+fn cross_tier_consistency_flowsim_vs_netsim() {
+    // The three-tier fidelity ladder must agree where the tiers'
+    // domains overlap: on a clean (congestion override 0) homogeneous
+    // fully-switched fabric, the flow-level tier and the per-message
+    // tier must report efficiencies within 5% of each other for the
+    // SAME ExperimentSpec on every full-size paper network at every
+    // node count netsim itself runs in the default suite. This is what
+    // licenses flowsim's 1000s-of-node frontier sweeps: the cheap tier
+    // is pinned to the expensive one over the entire measurable range.
+    use pcl_dnn::experiment::{Backend, ExperimentSpec, FleetSimBackend, FlowSimBackend};
+
+    for (model, platform, mb) in [
+        ("vgg_a", "cori", 256u64),
+        ("overfeat_fast", "aws", 256),
+        ("cddnn_full", "endeavor", 1024),
+    ] {
+        for nodes in [8u64, 32, 64, 128] {
+            let mut spec = ExperimentSpec::of(
+                &format!("xtier_{model}_{nodes}"),
+                model,
+                platform,
+                nodes,
+                mb,
+            );
+            spec.cluster.congestion = Some(0.0);
+            spec.parallelism.iterations = 3;
+            let flow = FlowSimBackend.run(&spec).unwrap();
+            let full = FleetSimBackend.run(&spec).unwrap();
+            assert_eq!(flow.sim_path.as_deref(), Some("flow"));
+            assert!(
+                flow.tasks > 0 && flow.tasks < full.tasks,
+                "{model} x{nodes}: flow tier should be coarser ({} vs {} tasks)",
+                flow.tasks,
+                full.tasks
+            );
+            let (ef, en) = (flow.efficiency.unwrap(), full.efficiency.unwrap());
+            let rel = (ef - en).abs() / en.max(1e-9);
+            assert!(
+                rel < 0.05,
+                "{model} x{nodes}: flowsim eff {ef:.4} vs netsim eff {en:.4} ({:.1}% apart; \
+                 iter {} vs {})",
+                100.0 * rel,
+                flow.iteration_s,
+                full.iteration_s
+            );
+        }
+    }
+}
+
+#[test]
 fn periodic_fast_path_is_bit_identical_on_clean_specs() {
     // The tentpole's correctness bar: on every clean-fabric committed
     // spec shape (fig4 VGG-A/Cori, fig6 OverFeat/AWS, fig7 CD-DNN/
