@@ -10,7 +10,9 @@
 //!   training path (deterministic, allocation-light);
 //! * [`threaded`] — the same butterfly executed by one OS thread per rank
 //!   with barrier rounds, used by the collectives bench and to validate
-//!   that the algorithm parallelizes.
+//!   that the algorithm parallelizes. Also home of [`fold_into`], the
+//!   chunked `acc += contrib` the comm thread uses for the streaming
+//!   (rank-ordered) gradient exchange.
 //!
 //! Determinism matters: synchronous SGD's "distributed = serial" claim
 //! (Fig 5) requires a reduction order that does not depend on thread
@@ -25,6 +27,7 @@ pub mod threaded;
 pub mod topology;
 
 pub use inline::{allreduce, part_broadcast, part_reduce};
+pub use threaded::fold_into;
 pub use topology::{shard_range, GroupTopology};
 
 #[cfg(test)]

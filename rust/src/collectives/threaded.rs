@@ -119,6 +119,47 @@ fn run(bufs: &mut [Vec<f32>], reduce: bool, broadcast: bool) {
 // of buffer r — again disjoint across threads. `super::tests` verifies
 // bitwise equality with the single-threaded engine.
 
+/// Minimum elements per chunk before [`fold_into`] spawns threads; below
+/// ~1 MiB of f32 the adds finish faster than a thread starts.
+const FOLD_CHUNK_MIN: usize = 1 << 18;
+
+/// Streaming-reduction fold: `acc[i] += contrib[i]`. The comm thread runs
+/// this once per (worker, tensor) in the overlapped exchange; large
+/// tensors are chunked across threads. Every element is a single
+/// independent add, so the result is bit-identical to the serial loop
+/// for any chunking — chunk boundaries never re-associate the sum.
+pub fn fold_into(acc: &mut [f32], contrib: &[f32]) {
+    assert_eq!(acc.len(), contrib.len(), "fold_into: ragged buffers");
+    let len = acc.len();
+    let threads = if len >= 2 * FOLD_CHUNK_MIN {
+        std::thread::available_parallelism().map_or(1, |n| n.get()).min(len / FOLD_CHUNK_MIN)
+    } else {
+        1
+    };
+    if threads <= 1 {
+        for (a, &v) in acc.iter_mut().zip(contrib) {
+            *a += v;
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut acc_rest = acc;
+        let mut contrib_rest = contrib;
+        for t in 0..threads {
+            let n = shard_range(t, threads, len).len();
+            let (a, ar) = acc_rest.split_at_mut(n);
+            let (c, cr) = contrib_rest.split_at(n);
+            acc_rest = ar;
+            contrib_rest = cr;
+            scope.spawn(move || {
+                for (x, &v) in a.iter_mut().zip(c) {
+                    *x += v;
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +181,42 @@ mod tests {
         let mut bufs = vec![vec![1.0f32], vec![2.0f32]];
         allreduce(&mut bufs);
         assert_eq!(bufs, vec![vec![3.0], vec![3.0]]);
+    }
+
+    #[test]
+    fn fold_into_matches_serial_bitwise_across_threshold() {
+        // sizes straddling the chunking threshold, odd lengths included;
+        // chunked and serial folds must agree bit-for-bit
+        for len in [1usize, 7, 1000, FOLD_CHUNK_MIN - 1, 2 * FOLD_CHUNK_MIN + 13] {
+            let acc0: Vec<f32> = (0..len).map(|i| (i % 89) as f32 * 0.37 - 3.0).collect();
+            let contrib: Vec<f32> = (0..len).map(|i| (i % 97) as f32 * -0.51 + 1.0).collect();
+            let mut want = acc0.clone();
+            for (a, &v) in want.iter_mut().zip(&contrib) {
+                *a += v;
+            }
+            let mut got = acc0;
+            fold_into(&mut got, &contrib);
+            let eq = got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "len={len}");
+        }
+    }
+
+    #[test]
+    fn folding_in_rank_order_equals_part_reduce_scan() {
+        // rank-ordered fold_into chain == inline part_reduce's
+        // left-to-right element scan (the streaming-exchange determinism
+        // anchor: leader.rs relies on exactly this identity)
+        let bufs: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..611).map(|i| ((r * 13 + i * 7) % 101) as f32 * 0.3 - 9.0).collect())
+            .collect();
+        let mut inline_bufs = bufs.clone();
+        crate::collectives::inline::allreduce(&mut inline_bufs);
+        let mut acc = bufs[0].clone();
+        for b in &bufs[1..] {
+            fold_into(&mut acc, b);
+        }
+        let eq = acc.iter().zip(&inline_bufs[0]).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(eq, "fold chain diverged from allreduce");
     }
 
     #[test]

@@ -5,12 +5,12 @@
 //! whenever the coordinator actually needs the result, which is what
 //! creates the §3.1 overlap window.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::collectives::inline;
+use crate::collectives::{fold_into, inline};
 
 use super::command_queue::CommandQueue;
 
@@ -23,6 +23,13 @@ pub enum CommOp {
     PartBroadcast,
     /// both (the full gradient exchange).
     AllReduce,
+    /// Streaming fold for the overlapped exchange: `bufs[0] += bufs[1]`
+    /// (chunked [`fold_into`]); both buffers come back in the completion.
+    /// `rank` is the contributing worker — carried for diagnostics; the
+    /// reduction *order* is pinned by submission order, which the leader
+    /// keeps in rank order so the running sum is the serial left-to-right
+    /// scan `((b0+b1)+b2)+…` bit-for-bit.
+    Reduce { rank: usize },
 }
 
 /// A queued communication command.
@@ -45,29 +52,58 @@ pub struct CommHandle {
     queue: Arc<CommandQueue<CommRequest>>,
     completions: Receiver<CommCompletion>,
     stop: Arc<AtomicBool>,
+    paused: Arc<AtomicBool>,
+    busy_ns: Arc<AtomicU64>,
     handle: Option<JoinHandle<u64>>,
 }
 
 impl CommHandle {
     /// Spawn the dedicated comm thread with a queue of `depth` commands.
     pub fn spawn(depth: usize) -> CommHandle {
+        Self::spawn_with(depth, false)
+    }
+
+    /// [`CommHandle::spawn`] but with the thread frozen from the first
+    /// instruction (see [`CommHandle::set_paused`]) — the spawn-then-pause
+    /// ordering would otherwise race one loop iteration. Test/bench hook.
+    pub fn spawn_paused(depth: usize) -> CommHandle {
+        Self::spawn_with(depth, true)
+    }
+
+    fn spawn_with(depth: usize, start_paused: bool) -> CommHandle {
         let queue = Arc::new(CommandQueue::<CommRequest>::new(depth));
         let stop = Arc::new(AtomicBool::new(false));
+        let paused = Arc::new(AtomicBool::new(start_paused));
+        let busy_ns = Arc::new(AtomicU64::new(0));
         let (tx, rx): (Sender<CommCompletion>, Receiver<CommCompletion>) = channel();
         let q = queue.clone();
         let s = stop.clone();
+        let p = paused.clone();
+        let busy = busy_ns.clone();
         let handle = std::thread::Builder::new()
             .name("pcl-dnn-comm".into())
             .spawn(move || {
                 let mut processed = 0u64;
                 loop {
+                    // stop overrides pause so shutdown/drop can never
+                    // hang on a frozen thread; it still drains the queue
+                    if p.load(Ordering::Acquire) && !s.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                        continue;
+                    }
                     match q.pop() {
                         Some(mut req) => {
+                            let t0 = std::time::Instant::now();
                             match req.op {
                                 CommOp::PartReduce => inline::part_reduce(&mut req.bufs),
                                 CommOp::PartBroadcast => inline::part_broadcast(&mut req.bufs),
                                 CommOp::AllReduce => inline::allreduce(&mut req.bufs),
+                                CommOp::Reduce { .. } => {
+                                    let (acc, contrib) = req.bufs.split_at_mut(1);
+                                    fold_into(&mut acc[0], &contrib[0]);
+                                }
                             }
+                            busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                             processed += 1;
                             if tx.send(CommCompletion { id: req.id, bufs: req.bufs }).is_err() {
                                 return processed;
@@ -83,7 +119,7 @@ impl CommHandle {
                 }
             })
             .expect("spawning comm thread");
-        CommHandle { queue, completions: rx, stop, handle: Some(handle) }
+        CommHandle { queue, completions: rx, stop, paused, busy_ns, handle: Some(handle) }
     }
 
     /// Submit-and-forget. Non-blocking; on a full queue the command is
@@ -106,6 +142,21 @@ impl CommHandle {
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Cumulative nanoseconds the thread has spent executing collectives
+    /// (monotonic). The leader differences this across a step to get
+    /// comm busy time, and `busy − blocked-wait` is the measured overlap.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Test/bench hook: freeze (or resume) the comm thread *before* it
+    /// pops the next command. While paused, submissions queue up — this
+    /// is what makes the backpressure test deterministic instead of a
+    /// race against the drain rate.
+    pub fn set_paused(&self, paused: bool) {
+        self.paused.store(paused, Ordering::Release);
     }
 
     /// Stop after draining; returns commands processed.
@@ -157,19 +208,78 @@ mod tests {
 
     #[test]
     fn submit_is_nonblocking_on_full_queue() {
-        let h = CommHandle::spawn(2);
-        // flood faster than the comm thread drains; eventually push fails
-        // rather than blocking, handing the request back.
-        let mut returned = 0;
-        for id in 0..50_000u64 {
-            if h.submit(CommRequest { id, op: CommOp::PartReduce, bufs: bufs(2, 2000) }).is_err() {
-                returned += 1;
-                break;
+        // deterministic backpressure: freeze the comm thread, fill the
+        // queue to capacity, and assert the overflowing submit comes back
+        // intact instead of blocking or dropping.
+        let h = CommHandle::spawn_paused(2); // capacity exactly 2
+        let mut accepted = 0u64;
+        let mut bounced = None;
+        for id in 0..16u64 {
+            match h.submit(CommRequest { id, op: CommOp::PartReduce, bufs: bufs(2, 64) }) {
+                Ok(()) => accepted += 1,
+                Err(back) => {
+                    bounced = Some(back);
+                    break;
+                }
             }
         }
-        // drain whatever completed; no hang
-        while h.try_complete().is_some() {}
-        let _ = returned; // may be 0 on a fast machine; the property is "no deadlock"
+        let back = bounced.expect("queue never exerted backpressure");
+        assert_eq!(accepted, 2, "queue accepted past its capacity");
+        assert_eq!(back.id, 2, "wrong request handed back");
+        assert_eq!(back.bufs, bufs(2, 64), "bounced request lost its buffers");
+        // resume: everything accepted completes in order, nothing is lost
+        h.set_paused(false);
+        for id in 0..accepted {
+            assert_eq!(h.wait_one().unwrap().id, id);
+        }
+        assert_eq!(h.shutdown(), accepted);
+    }
+
+    #[test]
+    fn reduce_op_folds_acc_in_place_and_returns_both_buffers() {
+        let h = CommHandle::spawn(8);
+        let acc: Vec<f32> = (0..300).map(|i| i as f32 * 0.25).collect();
+        let contrib: Vec<f32> = (0..300).map(|i| 100.0 - i as f32).collect();
+        let want: Vec<f32> = acc.iter().zip(&contrib).map(|(a, c)| a + c).collect();
+        h.submit(CommRequest {
+            id: 3,
+            op: CommOp::Reduce { rank: 1 },
+            bufs: vec![acc, contrib.clone()],
+        })
+        .unwrap();
+        let done = h.wait_one().unwrap();
+        assert_eq!(done.id, 3);
+        assert_eq!(done.bufs.len(), 2, "both buffers must come back for recycling");
+        assert_eq!(done.bufs[0], want);
+        assert_eq!(done.bufs[1], contrib, "contrib buffer must be unmodified");
+        assert!(h.busy_ns() > 0, "busy accounting missed the fold");
+        assert_eq!(h.shutdown(), 1);
+    }
+
+    #[test]
+    fn chained_reduce_matches_allreduce_sum_bitwise() {
+        // rank-ordered Reduce submissions == one AllReduce, bit-for-bit —
+        // the determinism contract the streaming leader is built on
+        let n = 6;
+        let mut reference = bufs(n, 517);
+        inline::allreduce(&mut reference);
+        let h = CommHandle::spawn(8);
+        let all = bufs(n, 517);
+        let mut acc = all[0].clone();
+        for (rank, contrib) in all.into_iter().enumerate().skip(1) {
+            h.submit(CommRequest {
+                id: rank as u64,
+                op: CommOp::Reduce { rank },
+                bufs: vec![acc, contrib],
+            })
+            .unwrap();
+            let mut done = h.wait_one().unwrap();
+            done.bufs.truncate(1);
+            acc = done.bufs.pop().unwrap();
+        }
+        let eq = acc.iter().zip(&reference[0]).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(eq, "chained folds diverged from allreduce");
+        assert_eq!(h.shutdown(), (n - 1) as u64);
     }
 
     #[test]

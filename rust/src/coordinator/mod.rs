@@ -13,8 +13,11 @@
 //!   places it).
 //! * [`sharding`] — minibatch partitioning across workers/microbatches.
 //! * [`leader`] — the synchronous step loop tying workers, queue, and
-//!   state together, with per-tensor pipelining of reduce/update against
-//!   the remaining gradient traffic.
+//!   state together. Default pipeline is the **streaming overlapped
+//!   exchange**: each worker's gradients are folded into a running
+//!   rank-ordered sum on the comm thread while the next worker computes,
+//!   bit-identical to the retained serial reference pipeline
+//!   (`REPRO_RUNTIME_OVERLAP=off`).
 
 pub mod command_queue;
 pub mod comm_thread;
@@ -24,6 +27,6 @@ pub mod state;
 
 pub use command_queue::{CommandQueue, PushError};
 pub use comm_thread::{CommHandle, CommOp, CommRequest};
-pub use leader::{StepStats, SyncSgdCoordinator};
+pub use leader::{overlap_env_enabled, StepStats, SyncSgdCoordinator, WorkerCompute};
 pub use sharding::MicrobatchPlan;
 pub use state::{ParamStore, SgdConfig};

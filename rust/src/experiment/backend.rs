@@ -309,6 +309,8 @@ fn base_report(spec: &ExperimentSpec, backend: &'static str) -> ScalingReport {
         comm_s: f64::NAN,
         mean_compute_utilization: f64::NAN,
         min_compute_utilization: f64::NAN,
+        overlap_s: f64::NAN,
+        overlap_frac: f64::NAN,
         tasks: 0,
         sim_path: None,
         warmup_tasks: 0,
@@ -656,6 +658,13 @@ pub fn run_runtime_with(
         };
         rep.compute_s = mean(|r| r.compute_s);
         rep.comm_s = mean(|r| r.comm_wait_s);
+        // measured overlap from the streaming exchange: comm_s is the
+        // *exposed* wait, overlap_s the comm work hidden behind compute
+        rep.overlap_s = mean(|r| r.overlap_s);
+        let comm_total = rep.overlap_s + rep.comm_s;
+        if comm_total > 0.0 {
+            rep.overlap_frac = rep.overlap_s / comm_total;
+        }
         let busy = rep.compute_s + rep.comm_s;
         if busy > 0.0 {
             rep.mean_compute_utilization = rep.compute_s / busy;
@@ -683,6 +692,7 @@ pub fn train_config(spec: &ExperimentSpec) -> TrainConfig {
         log_every: spec.execution.log_every,
         eval_every: spec.execution.eval_every,
         optimizer: spec.execution.optimizer.clone(),
+        prefetch: spec.execution.prefetch,
         plan: None,
     }
 }

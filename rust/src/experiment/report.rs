@@ -27,6 +27,8 @@ pub const SCHEMA_KEYS: &[&str] = &[
     "minibatch",
     "model",
     "nodes",
+    "overlap_frac",
+    "overlap_s",
     "plan",
     "platform",
     "recovery",
@@ -62,6 +64,14 @@ pub struct ScalingReport {
     pub comm_s: f64,
     pub mean_compute_utilization: f64,
     pub min_compute_utilization: f64,
+    /// Communication seconds *hidden* behind compute inside one
+    /// iteration — measured comm-thread busy time minus exposed wait on
+    /// the runtime backend's streaming exchange; NaN (serialized null)
+    /// on backends that do not measure it.
+    pub overlap_s: f64,
+    /// Fraction of communication hidden behind compute:
+    /// `overlap_s / (overlap_s + comm_s)`; NaN where not measured.
+    pub overlap_frac: f64,
     /// Discrete-event tasks simulated (0 for closed-form/measured runs).
     /// On the periodic fast path this is the closed-form K-iteration
     /// count the run stands for, not the probe's task count.
@@ -132,6 +142,8 @@ impl ScalingReport {
             "min_compute_utilization".to_string(),
             Json::Num(self.min_compute_utilization),
         );
+        m.insert("overlap_s".to_string(), Json::Num(self.overlap_s));
+        m.insert("overlap_frac".to_string(), Json::Num(self.overlap_frac));
         m.insert("tasks".to_string(), Json::Num(self.tasks as f64));
         m.insert(
             "sim_path".to_string(),
@@ -164,6 +176,8 @@ impl ScalingReport {
             comm_s: get_f64(j, "comm_s")?,
             mean_compute_utilization: get_f64(j, "mean_compute_utilization")?,
             min_compute_utilization: get_f64(j, "min_compute_utilization")?,
+            overlap_s: get_f64(j, "overlap_s")?,
+            overlap_frac: get_f64(j, "overlap_frac")?,
             tasks: j.get("tasks")?.as_u64()?,
             sim_path: match j.get("sim_path")? {
                 Json::Null => None,
@@ -337,6 +351,8 @@ mod tests {
             comm_s: 0.054,
             mean_compute_utilization: 0.73,
             min_compute_utilization: 0.73,
+            overlap_s: f64::NAN,
+            overlap_frac: f64::NAN,
             tasks: 0,
             sim_path: None,
             warmup_tasks: 0,
@@ -396,6 +412,24 @@ mod tests {
         let text = sample().to_json().to_string();
         assert!(text.contains("\"sim_path\":null"), "{text}");
         assert_eq!(ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap().sim_path, None);
+    }
+
+    #[test]
+    fn overlap_fields_roundtrip_and_default_to_null() {
+        // simulated backends don't measure overlap: NaN -> null
+        let text = sample().to_json().to_string();
+        assert!(text.contains("\"overlap_s\":null"), "{text}");
+        assert!(text.contains("\"overlap_frac\":null"), "{text}");
+        // the runtime backend fills measured values; they round-trip
+        let mut r = sample();
+        r.backend = "runtime".into();
+        r.overlap_s = 0.0125;
+        r.overlap_frac = 0.82;
+        let text = r.to_json().to_string();
+        let back = ScalingReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.overlap_s, 0.0125);
+        assert_eq!(back.overlap_frac, 0.82);
+        assert_eq!(back.to_json().to_string(), text);
     }
 
     #[test]

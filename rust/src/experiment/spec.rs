@@ -146,6 +146,9 @@ pub struct ExecutionSpec {
     pub log_every: u64,
     pub eval_every: u64,
     pub optimizer: String,
+    /// data-thread prefetch queue depth (microbatches staged ahead of
+    /// the coordinator).
+    pub prefetch: usize,
     pub artifacts: String,
 }
 
@@ -162,6 +165,7 @@ impl Default for ExecutionSpec {
             log_every: 10,
             eval_every: 0,
             optimizer: "sgd".into(),
+            prefetch: 8,
             artifacts: "artifacts".into(),
         }
     }
@@ -448,6 +452,7 @@ impl ExperimentSpec {
         exec.insert("log_every".to_string(), num(self.execution.log_every as f64));
         exec.insert("eval_every".to_string(), num(self.execution.eval_every as f64));
         exec.insert("optimizer".to_string(), Json::Str(self.execution.optimizer.clone()));
+        exec.insert("prefetch".to_string(), num(self.execution.prefetch as f64));
         exec.insert("artifacts".to_string(), Json::Str(self.execution.artifacts.clone()));
 
         let model = match &self.model {
@@ -573,7 +578,7 @@ impl ExperimentSpec {
             e,
             &[
                 "fidelity", "model", "workers", "steps", "lr", "momentum", "seed",
-                "log_every", "eval_every", "optimizer", "artifacts",
+                "log_every", "eval_every", "optimizer", "prefetch", "artifacts",
             ],
             "execution",
         )?;
@@ -594,6 +599,7 @@ impl ExperimentSpec {
             log_every: get_u64(e, "log_every", d.execution.log_every)?,
             eval_every: get_u64(e, "eval_every", d.execution.eval_every)?,
             optimizer: get_str(e, "optimizer", &d.execution.optimizer)?,
+            prefetch: get_u64(e, "prefetch", d.execution.prefetch as u64)? as usize,
             artifacts: get_str(e, "artifacts", &d.execution.artifacts)?,
         };
 
@@ -680,7 +686,7 @@ impl ExperimentSpec {
         const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations"];
         const EXECUTION_KEYS: &[&str] = &[
             "fidelity", "model", "workers", "steps", "lr", "momentum", "seed", "log_every",
-            "eval_every", "optimizer", "artifacts",
+            "eval_every", "optimizer", "prefetch", "artifacts",
         ];
         match section {
             "cluster" => {
@@ -851,13 +857,14 @@ impl ExperimentSpec {
                 "log_every" => self.execution.log_every = parsed(key, value)?,
                 "eval_every" => self.execution.eval_every = parsed(key, value)?,
                 "optimizer" => self.execution.optimizer = value.into(),
+                "prefetch" => self.execution.prefetch = parsed(key, value)?,
                 "artifacts" => self.execution.artifacts = value.into(),
                 other => bail!(
                     "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
                      radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
                      recovery, congestion, mode, overlap, iterations, collective, fidelity, \
                      workers, steps, lr, momentum, seed, log_every, eval_every, optimizer, \
-                     artifacts, exec_model, name — or a dotted path like cluster.nodes, \
+                     prefetch, artifacts, exec_model, name — or a dotted path like cluster.nodes, \
                      parallelism.mode, minibatch.global, execution.fidelity, execution.steps, \
                      plan.<group>.<field>)"
                 ),

@@ -12,6 +12,11 @@ pub struct StepRecord {
     pub images_per_s: f64,
     pub compute_s: f64,
     pub comm_wait_s: f64,
+    /// comm-thread busy seconds hidden behind compute this step
+    /// (StepStats::overlap_s; 0 where the exchange had nothing to hide)
+    pub overlap_s: f64,
+    /// this step's consumer-side data-thread stall, microseconds
+    pub data_stall_us: f64,
 }
 
 /// Accumulates a training run's history.
@@ -46,14 +51,21 @@ impl History {
         self.records.iter().map(|r| r.images_per_s).sum::<f64>() / self.records.len() as f64
     }
 
-    /// CSV: step,loss,images_per_s,compute_s,comm_wait_s
+    /// CSV: step,loss,images_per_s,compute_s,comm_wait_s,overlap_s,data_stall_us
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("step,loss,images_per_s,compute_s,comm_wait_s\n");
+        let mut s =
+            String::from("step,loss,images_per_s,compute_s,comm_wait_s,overlap_s,data_stall_us\n");
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.2},{:.6},{:.6}",
-                r.step, r.loss, r.images_per_s, r.compute_s, r.comm_wait_s
+                "{},{:.6},{:.2},{:.6},{:.6},{:.6},{:.1}",
+                r.step,
+                r.loss,
+                r.images_per_s,
+                r.compute_s,
+                r.comm_wait_s,
+                r.overlap_s,
+                r.data_stall_us
             );
         }
         s
@@ -157,6 +169,8 @@ mod tests {
                 images_per_s: 100.0,
                 compute_s: 0.1,
                 comm_wait_s: 0.01,
+                overlap_s: 0.005,
+                data_stall_us: 2.0,
             });
         }
         assert_eq!(h.final_loss(), Some(1.0));

@@ -30,6 +30,9 @@ pub struct TrainConfig {
     pub eval_every: u64,
     /// "sgd" (paper default) or "adam" (e2e transformer driver)
     pub optimizer: String,
+    /// data-thread prefetch queue depth (microbatches ready ahead of the
+    /// coordinator; the paper's "continuous availability" requirement)
+    pub prefetch: usize,
     /// Partition plan at worker granularity (`plan.nodes == workers`):
     /// tensors of model/hybrid layer groups take the plan's shard-owner
     /// exchange path in the coordinator. `None` = pure data parallelism.
@@ -49,6 +52,7 @@ impl Default for TrainConfig {
             log_every: 10,
             eval_every: 0,
             optimizer: "sgd".into(),
+            prefetch: 8,
             plan: None,
         }
     }
@@ -114,6 +118,7 @@ fn spawn_data_thread(
     plan: &MicrobatchPlan,
     steps: u64,
     seed: u64,
+    prefetch: usize,
 ) -> Prefetcher<Micro> {
     let total_micro = plan.total_micro() as u64;
     let global_mb = plan.global_mb as u64;
@@ -125,7 +130,7 @@ fn spawn_data_thread(
         Family::Cnn { image, in_ch, classes } => {
             let ds = ImageDataset::new(*image, *in_ch, *classes, seed);
             let (image, in_ch) = (*image, *in_ch);
-            Prefetcher::spawn(8, total_items, move |i| {
+            Prefetcher::spawn(prefetch, total_items, move |i| {
                 let step = i / total_micro;
                 let start = step * global_mb + starts[(i % total_micro) as usize];
                 let b = ds.batch(start, micro);
@@ -138,7 +143,7 @@ fn spawn_data_thread(
         Family::Cddnn { in_dim, senones } => {
             let ds = FrameDataset::new(*in_dim, *senones, seed);
             let in_dim = *in_dim;
-            Prefetcher::spawn(8, total_items, move |i| {
+            Prefetcher::spawn(prefetch, total_items, move |i| {
                 let step = i / total_micro;
                 let start = step * global_mb + starts[(i % total_micro) as usize];
                 let b = ds.batch(start, micro);
@@ -151,7 +156,7 @@ fn spawn_data_thread(
         Family::Gpt { vocab, seq } => {
             let c = Corpus::new(*vocab, seed);
             let seq = *seq;
-            Prefetcher::spawn(8, total_items, move |i| {
+            Prefetcher::spawn(prefetch, total_items, move |i| {
                 let step = i / total_micro;
                 let start = step * global_mb + starts[(i % total_micro) as usize];
                 let b = c.batch(start, micro, seq);
@@ -206,7 +211,7 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let mut coord =
         SyncSgdCoordinator::with_plan(&artifact, params, plan.clone(), sgd, tensor_topos);
 
-    let data = spawn_data_thread(&fam, micro, &plan, cfg.steps, cfg.seed);
+    let data = spawn_data_thread(&fam, micro, &plan, cfg.steps, cfg.seed, cfg.prefetch.max(1));
     let compile_s = rt.preload(&artifact)?;
     if cfg.log_every > 0 {
         println!(
@@ -217,28 +222,37 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
 
     let mut history = History::default();
     let mut evals = Vec::new();
+    let mut stall_ns_prev = 0u64;
     for step in 0..cfg.steps {
         let t0 = std::time::Instant::now();
         let stats = coord.step(rt, &mut |_w, _m, _start| {
             data.next().expect("data thread ended early")
         })?;
         let dt = t0.elapsed().as_secs_f64();
+        // this step's data-thread stall (the prefetcher counter is
+        // cumulative; difference it per step)
+        let stall_ns = data.stall_ns.get();
+        let data_stall_us = (stall_ns - stall_ns_prev) as f64 / 1e3;
+        stall_ns_prev = stall_ns;
         history.push(StepRecord {
             step,
             loss: stats.loss,
             images_per_s: cfg.global_mb as f64 / dt,
             compute_s: stats.compute_s,
             comm_wait_s: stats.comm_wait_s,
+            overlap_s: stats.overlap_s,
+            data_stall_us,
         });
         if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             println!(
-                "  step {:>5}  loss {:.4}  {:>8.1} samples/s  (compute {:.0}ms, comm-wait {:.1}ms, data-stall {:.0}us)",
+                "  step {:>5}  loss {:.4}  {:>8.1} samples/s  (compute {:.0}ms, comm-wait {:.1}ms, overlap {:.1}ms, data-stall {:.0}us)",
                 step,
                 stats.loss,
                 cfg.global_mb as f64 / dt,
                 stats.compute_s * 1e3,
                 stats.comm_wait_s * 1e3,
-                data.mean_stall_us(),
+                stats.overlap_s * 1e3,
+                data_stall_us,
             );
         }
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {

@@ -27,6 +27,7 @@ fn cfg(model: &str, workers: usize, mb: usize, steps: u64) -> TrainConfig {
         log_every: 0,
         eval_every: 0,
         optimizer: "sgd".into(),
+        prefetch: 8,
         plan: None,
     }
 }
@@ -114,6 +115,8 @@ fn throughput_accounting_sane() {
         assert!(r.images_per_s > 0.0);
         assert!(r.compute_s > 0.0);
         assert!(r.comm_wait_s >= 0.0);
+        assert!(r.overlap_s >= 0.0);
+        assert!(r.data_stall_us >= 0.0);
     }
 }
 
