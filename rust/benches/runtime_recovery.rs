@@ -1,0 +1,193 @@
+//! Checkpoint + recovery benchmarks (ISSUE 9): what fault tolerance
+//! costs when nothing fails, and what a failure costs when one does.
+//!
+//! * **Checkpoint overhead** — mean synthetic coordinator step latency
+//!   with the async double-buffered writer submitting every {1, 2, 8}
+//!   steps vs checkpointing off. The writer snapshots on the training
+//!   thread but serializes + fsyncs on its own; the overhead row is the
+//!   paper-style "fault tolerance tax" per interval.
+//! * **MTTR** — wall-clock `fault::recover` latency per policy
+//!   (stall restore vs shrink/replan rebuild at N-1), workers ∈ {4, 8}.
+//!   Replay cost is excluded (it is `replay_steps x step_ms`, both
+//!   reported).
+//!
+//! Synthetic compute only (no PJRT artifacts needed) — runs everywhere,
+//! including container CI. Emits `BENCH_runtime_recovery.json`; CI's
+//! `recovery` job uploads it.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use pcl_dnn::checkpoint::CheckpointWriter;
+use pcl_dnn::coordinator::{MicrobatchPlan, SgdConfig, SyncSgdCoordinator};
+use pcl_dnn::models::zoo;
+use pcl_dnn::trainer::fault::{self, RecoveryPlanner};
+use pcl_dnn::util::json::Json;
+use pcl_dnn::util::rng::Rng;
+
+const WARMUP_STEPS: usize = 2;
+const MEASURED_STEPS: usize = 8;
+
+fn vgg_shapes() -> Vec<usize> {
+    zoo::vgg_tiny()
+        .layers
+        .iter()
+        .filter(|l| l.is_weighted())
+        .map(|l| l.weight_elems() as usize)
+        .collect()
+}
+
+fn make_coord(shapes: &[usize], workers: usize) -> SyncSgdCoordinator {
+    let params: Vec<Vec<f32>> = shapes.iter().map(|&n| vec![0.01f32; n]).collect();
+    let plan = MicrobatchPlan::new(workers * 4, workers, 2).unwrap();
+    SyncSgdCoordinator::new("synthetic", params, plan, SgdConfig::default())
+}
+
+fn run_step(coord: &mut SyncSgdCoordinator) {
+    let mut compute =
+        |w: usize, starts: &[usize], acc: &mut [Vec<f32>]| -> anyhow::Result<(f64, u64)> {
+            let mut rng = Rng::new((w as u64) * 7919 + 1);
+            for buf in acc.iter_mut() {
+                rng.fill_normal(buf, 0.1);
+            }
+            Ok((0.5, starts.len() as u64))
+        };
+    coord.step_with_compute(&mut compute).unwrap();
+}
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcl-dnn-bench-rec-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Mean step latency at each checkpoint interval; interval 0 = writer
+/// off, the baseline the overhead percentages are relative to.
+fn checkpoint_overhead(rows: &mut Vec<Json>) {
+    println!("\n--- checkpoint overhead (vgg_tiny shapes, 4 workers) ---");
+    let shapes = vgg_shapes();
+    let param_bytes: usize = shapes.iter().map(|n| n * 4).sum();
+    let mut baseline_ms = 0.0f64;
+    for interval in [0u64, 1, 2, 8] {
+        let dir = bench_dir(&format!("ovh-{interval}"));
+        let mut coord = make_coord(&shapes, 4);
+        let mut writer = (interval > 0).then(|| CheckpointWriter::spawn(&dir).unwrap());
+        let mut step_s = 0.0f64;
+        for i in 0..WARMUP_STEPS + MEASURED_STEPS {
+            let t0 = Instant::now();
+            run_step(&mut coord);
+            if interval > 0 && (i as u64 + 1) % interval == 0 {
+                if let Some(w) = writer.as_mut() {
+                    w.submit(coord.params.snapshot());
+                }
+            }
+            if i >= WARMUP_STEPS {
+                step_s += t0.elapsed().as_secs_f64();
+            }
+        }
+        let step_ms = step_s / MEASURED_STEPS as f64 * 1e3;
+        if interval == 0 {
+            baseline_ms = step_ms;
+        }
+        let overhead_pct =
+            if interval == 0 { 0.0 } else { (step_ms / baseline_ms - 1.0) * 100.0 };
+        let (written, skipped) = writer
+            .take()
+            .map(|w| {
+                let skipped = w.skipped();
+                (w.shutdown(), skipped)
+            })
+            .unwrap_or((0, 0));
+        println!(
+            "  every {interval:>2}: step {step_ms:>7.3} ms ({overhead_pct:>+6.2}%) | \
+             written {written}, coalesced {skipped}"
+        );
+        let mut row = BTreeMap::new();
+        row.insert("section".to_string(), Json::Str("checkpoint_overhead".to_string()));
+        row.insert("interval".to_string(), Json::Num(interval as f64));
+        row.insert("step_ms".to_string(), Json::Num(step_ms));
+        row.insert("overhead_pct".to_string(), Json::Num(overhead_pct));
+        row.insert("param_bytes".to_string(), Json::Num(param_bytes as f64));
+        row.insert("written".to_string(), Json::Num(written as f64));
+        row.insert("coalesced".to_string(), Json::Num(skipped as f64));
+        rows.push(Json::Obj(row));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Wall-clock `fault::recover` per policy: the restore / replan /
+/// rebuild components of MTTR, minus replay (reported as step count).
+fn mttr(rows: &mut Vec<Json>) {
+    println!("\n--- recovery latency (MTTR minus replay) ---");
+    let shapes = vgg_shapes();
+    for policy in ["stall", "shrink", "replan"] {
+        for workers in [4usize, 8] {
+            let dir = bench_dir(&format!("mttr-{policy}-{workers}"));
+            let mut coord = make_coord(&shapes, workers);
+            // 6 committed steps, a durable checkpoint at step 4: stall
+            // restores it (2 steps of replay debt), shrink/replan keep
+            // the live state and rebuild at N-1
+            let mut writer = CheckpointWriter::spawn(&dir).unwrap();
+            for i in 0..6 {
+                run_step(&mut coord);
+                if i == 3 {
+                    writer.submit(coord.params.snapshot());
+                }
+            }
+            writer.flush(std::time::Duration::from_secs(10)).unwrap();
+            writer.shutdown();
+            let rp = RecoveryPlanner {
+                policy: fault::policy_from_str(policy).unwrap(),
+                checkpoint_dir: dir.clone(),
+                initial: coord.params.snapshot(),
+                plan_before: None,
+                replan_to: None,
+                micro: 2,
+                global_mb: workers * 4,
+                artifact: "synthetic".into(),
+            };
+            let mut topos = |_: Option<&pcl_dnn::plan::PartitionPlan>,
+                             _: usize|
+             -> Vec<Option<pcl_dnn::collectives::GroupTopology>> { Vec::new() };
+            let t0 = Instant::now();
+            let (next, meas) = fault::recover(coord, 6, workers - 1, 0.0, &rp, &mut topos)
+                .unwrap_or_else(|e| panic!("{policy} x{workers}: {e:#}"));
+            let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+            drop(next);
+            println!(
+                "  {policy:>6} x{workers}: {total_ms:>7.3} ms | restore {:>7.3} ms | \
+                 replan {:>6.3} ms | rebuild {:>6.3} ms | replay debt {} steps",
+                meas.restore_s * 1e3,
+                meas.replan_s * 1e3,
+                meas.redistribution_s * 1e3,
+                meas.replay_steps,
+            );
+            let mut row = BTreeMap::new();
+            row.insert("section".to_string(), Json::Str("mttr".to_string()));
+            row.insert("policy".to_string(), Json::Str(policy.to_string()));
+            row.insert("workers".to_string(), Json::Num(workers as f64));
+            row.insert("workers_after".to_string(), Json::Num(meas.workers_after as f64));
+            row.insert("total_ms".to_string(), Json::Num(total_ms));
+            row.insert("restore_ms".to_string(), Json::Num(meas.restore_s * 1e3));
+            row.insert("replan_ms".to_string(), Json::Num(meas.replan_s * 1e3));
+            row.insert("rebuild_ms".to_string(), Json::Num(meas.redistribution_s * 1e3));
+            row.insert("replay_steps".to_string(), Json::Num(meas.replay_steps as f64));
+            rows.push(Json::Obj(row));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+fn main() {
+    println!("=== runtime_recovery ===");
+    let mut rows: Vec<Json> = Vec::new();
+    checkpoint_overhead(&mut rows);
+    mttr(&mut rows);
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("runtime_recovery".to_string()));
+    root.insert("rows".to_string(), Json::Arr(rows));
+    std::fs::write("BENCH_runtime_recovery.json", format!("{}\n", Json::Obj(root).pretty()))
+        .expect("write BENCH_runtime_recovery.json");
+    println!("\nwrote BENCH_runtime_recovery.json");
+}

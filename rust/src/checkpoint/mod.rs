@@ -1,0 +1,450 @@
+//! Async double-buffered checkpoint writer + bit-exact restore (ISSUE 9).
+//!
+//! The production shape (Strata's `checkpoint` crate, see SNIPPETS.md):
+//! checkpoint write-out runs on its **own thread**, overlapped with
+//! training exactly like the comm thread — the leader hands a
+//! [`ParamSnapshot`] to a bounded queue and keeps stepping. The queue
+//! holds one snapshot while another is being written (double buffering);
+//! a third submission before either drains is *dropped*, never blocked
+//! on — a skipped interval costs recovery replay, a blocked trainer
+//! costs every step.
+//!
+//! Durability protocol (crash-safe at every point):
+//! 1. encode the snapshot to a length-prefixed little-endian byte
+//!    payload and FNV-1a-hash it,
+//! 2. write `ckpt-<step>.bin.tmp`, then atomically rename to
+//!    `ckpt-<step>.bin`,
+//! 3. write `MANIFEST.tmp` (JSON: file, step, content hash), rename to
+//!    `MANIFEST` — readers only ever trust the manifest, so a crash
+//!    mid-write leaves the previous checkpoint fully intact,
+//! 4. garbage-collect checkpoint files older than the previous one
+//!    (two generations stay on disk, mirroring the in-memory double
+//!    buffer).
+//!
+//! [`restore`] verifies the content hash before decoding and
+//! round-trips every f32 bit-for-bit (raw `to_le_bytes`, no text
+//! formatting), so `stall` recovery replays the exact trajectory.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::state::ParamSnapshot;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"PCLCKPT1";
+
+/// FNV-1a 64 over the encoded payload (same content-hash idiom as the
+/// plan cache).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------- codec
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_tensors(out: &mut Vec<u8>, ts: &[Vec<f32>]) {
+    push_u64(out, ts.len() as u64);
+    for t in ts {
+        push_u64(out, t.len() as u64);
+        for &x in t {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn push_opt_tensors(out: &mut Vec<u8>, ts: &Option<Vec<Vec<f32>>>) {
+    match ts {
+        None => out.push(0),
+        Some(ts) => {
+            out.push(1);
+            push_tensors(out, ts);
+        }
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.bytes.len(), "checkpoint payload truncated");
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn tensors(&mut self) -> Result<Vec<Vec<f32>>> {
+        let n = self.u64()? as usize;
+        ensure!(n <= 1 << 20, "implausible checkpoint tensor count {n}");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = self.u64()? as usize;
+            let raw = self.take(len * 4)?;
+            let mut t = Vec::with_capacity(len);
+            for c in raw.chunks_exact(4) {
+                t.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    fn opt_tensors(&mut self) -> Result<Option<Vec<Vec<f32>>>> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.tensors()?),
+        })
+    }
+}
+
+fn encode(snap: &ParamSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + snap.n_elements() * 4);
+    push_u64(&mut out, snap.step);
+    push_tensors(&mut out, &snap.tensors);
+    push_opt_tensors(&mut out, &snap.velocity);
+    push_opt_tensors(&mut out, &snap.adam_m);
+    push_opt_tensors(&mut out, &snap.adam_v);
+    push_u64(&mut out, snap.tensor_steps.len() as u64);
+    for &s in &snap.tensor_steps {
+        push_u64(&mut out, s);
+    }
+    out
+}
+
+fn decode(payload: &[u8]) -> Result<ParamSnapshot> {
+    let mut r = Reader { bytes: payload, pos: 0 };
+    let step = r.u64()?;
+    let tensors = r.tensors()?;
+    let velocity = r.opt_tensors()?;
+    let adam_m = r.opt_tensors()?;
+    let adam_v = r.opt_tensors()?;
+    let n = r.u64()? as usize;
+    let mut tensor_steps = Vec::with_capacity(n);
+    for _ in 0..n {
+        tensor_steps.push(r.u64()?);
+    }
+    ensure!(r.pos == payload.len(), "trailing bytes after checkpoint payload");
+    Ok(ParamSnapshot { step, tensors, velocity, adam_m, adam_v, tensor_steps })
+}
+
+// ------------------------------------------------------------- disk I/O
+
+/// Write one checkpoint durably (tmp-write + rename, then manifest
+/// tmp-write + rename). Returns the final checkpoint file path.
+pub fn write_snapshot(dir: &Path, snap: &ParamSnapshot) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let payload = encode(snap);
+    let hash = fnv1a(&payload);
+    let file = format!("ckpt-{:010}.bin", snap.step);
+    let path = dir.join(&file);
+    let tmp = dir.join(format!("{file}.tmp"));
+    let mut bytes = Vec::with_capacity(16 + payload.len());
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&hash.to_le_bytes());
+    bytes.extend_from_slice(&payload);
+    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    let mut m = BTreeMap::new();
+    m.insert("file".to_string(), Json::Str(file));
+    m.insert("step".to_string(), Json::Num(snap.step as f64));
+    m.insert("hash".to_string(), Json::Str(format!("{hash:016x}")));
+    m.insert("bytes".to_string(), Json::Num(bytes.len() as f64));
+    let mtmp = dir.join("MANIFEST.tmp");
+    std::fs::write(&mtmp, format!("{}\n", Json::Obj(m).pretty()))
+        .with_context(|| format!("writing {}", mtmp.display()))?;
+    std::fs::rename(&mtmp, dir.join("MANIFEST")).context("publishing checkpoint MANIFEST")?;
+    Ok(path)
+}
+
+/// Load the latest durable checkpoint. `Ok(None)` when the directory has
+/// no manifest (nothing written yet); corruption — a manifest pointing
+/// at a missing file, or a content-hash mismatch — is an *error*, not a
+/// silent miss: restoring stale state would break replay determinism.
+pub fn restore(dir: &Path) -> Result<Option<ParamSnapshot>> {
+    let manifest = dir.join("MANIFEST");
+    if !manifest.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&manifest)
+        .with_context(|| format!("reading {}", manifest.display()))?;
+    let j = Json::parse(&text).context("parsing checkpoint MANIFEST")?;
+    let file = j.get("file")?.as_str()?.to_string();
+    let step = j.get("step")?.as_u64()?;
+    let want_hash = j.get("hash")?.as_str()?.to_string();
+    let path = dir.join(&file);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    ensure!(bytes.len() >= 16 && &bytes[..8] == MAGIC, "{} is not a checkpoint file", file);
+    let stored = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let payload = &bytes[16..];
+    let actual = fnv1a(payload);
+    ensure!(
+        actual == stored && format!("{actual:016x}") == want_hash,
+        "checkpoint {} is corrupt: content hash {:016x} != recorded {}",
+        file,
+        actual,
+        want_hash
+    );
+    let snap = decode(payload).with_context(|| format!("decoding checkpoint {file}"))?;
+    ensure!(snap.step == step, "checkpoint {} step {} != manifest step {}", file, snap.step, step);
+    Ok(Some(snap))
+}
+
+// ------------------------------------------------------------ the writer
+
+/// Handle owning the dedicated checkpoint thread (`pcl-dnn-ckpt`).
+pub struct CheckpointWriter {
+    tx: Option<SyncSender<ParamSnapshot>>,
+    handle: Option<JoinHandle<()>>,
+    submitted: u64,
+    skipped: u64,
+    done: Arc<AtomicU64>,
+    written: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    dir: PathBuf,
+}
+
+impl CheckpointWriter {
+    /// Spawn the writer thread. The queue holds ONE snapshot while one is
+    /// being written — the double buffer; see the module docs.
+    pub fn spawn(dir: impl Into<PathBuf>) -> Result<CheckpointWriter> {
+        let dir: PathBuf = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let (tx, rx) = sync_channel::<ParamSnapshot>(1);
+        let done = Arc::new(AtomicU64::new(0));
+        let written = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        let (d, w, e) = (done.clone(), written.clone(), errors.clone());
+        let tdir = dir.clone();
+        let handle = std::thread::Builder::new()
+            .name("pcl-dnn-ckpt".into())
+            .spawn(move || {
+                // keep two generations on disk; gc the third as it rotates
+                let mut kept: Vec<PathBuf> = Vec::new();
+                for snap in rx.iter() {
+                    match write_snapshot(&tdir, &snap) {
+                        Ok(path) => {
+                            w.fetch_add(1, Ordering::Release);
+                            kept.push(path);
+                            if kept.len() > 2 {
+                                let old = kept.remove(0);
+                                let _ = std::fs::remove_file(old);
+                            }
+                        }
+                        Err(err) => {
+                            // a failed write must not kill training; the
+                            // trainer sees it through errors()/flush()
+                            eprintln!("checkpoint write failed: {err:#}");
+                            e.fetch_add(1, Ordering::Release);
+                        }
+                    }
+                    d.fetch_add(1, Ordering::Release);
+                }
+            })
+            .expect("spawning checkpoint thread");
+        Ok(CheckpointWriter {
+            tx: Some(tx),
+            handle: Some(handle),
+            submitted: 0,
+            skipped: 0,
+            done,
+            written,
+            errors,
+            dir,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Hand a snapshot to the writer. Never blocks: with both buffers
+    /// busy the snapshot is dropped (returns `false`) and the interval is
+    /// skipped — recovery then replays a little further back.
+    pub fn submit(&mut self, snap: ParamSnapshot) -> bool {
+        match self.tx.as_ref().expect("writer running").try_send(snap) {
+            Ok(()) => {
+                self.submitted += 1;
+                true
+            }
+            Err(TrySendError::Full(_)) => {
+                self.skipped += 1;
+                false
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        }
+    }
+
+    /// Checkpoints durably on disk.
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Acquire)
+    }
+
+    /// Snapshots dropped because both buffers were busy.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Block (bounded) until every accepted snapshot is durable — the
+    /// recovery path calls this before `restore` so the newest state is
+    /// on disk. Errors if the writer hit a write failure or stalls past
+    /// `budget`.
+    pub fn flush(&self, budget: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        while self.done.load(Ordering::Acquire) < self.submitted {
+            if t0.elapsed() > budget {
+                bail!(
+                    "checkpoint writer stalled: {}/{} snapshots durable after {:.1}s",
+                    self.done.load(Ordering::Acquire),
+                    self.submitted,
+                    budget.as_secs_f64()
+                );
+            }
+            std::thread::yield_now();
+        }
+        let errs = self.errors.load(Ordering::Acquire);
+        ensure!(errs == 0, "{errs} checkpoint write(s) failed; see stderr");
+        Ok(())
+    }
+
+    /// Drain the queue and stop the thread; returns checkpoints written.
+    pub fn shutdown(mut self) -> u64 {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.written()
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::{Optimizer, ParamStore, SgdConfig};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pcl-dnn-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn adam_snapshot() -> ParamSnapshot {
+        let cfg = SgdConfig { lr: 3e-3, optimizer: Optimizer::adam(), ..SgdConfig::default() };
+        let mut s = ParamStore::new(vec![vec![0.5f32; 7], vec![-0.25f32; 33]], cfg);
+        for k in 0..4 {
+            let g: Vec<Vec<f32>> = s
+                .tensors
+                .iter()
+                .map(|t| t.iter().enumerate().map(|(i, _)| (i + k) as f32 * 0.01 - 0.1).collect())
+                .collect();
+            s.apply_all(&g, 2.0).unwrap();
+        }
+        s.snapshot()
+    }
+
+    #[test]
+    fn codec_roundtrips_bit_identically() {
+        let snap = adam_snapshot();
+        let back = decode(&encode(&snap)).unwrap();
+        assert_eq!(snap, back);
+        // PartialEq on f32 treats -0.0 == 0.0; pin the raw bits too
+        for (a, b) in snap.tensors.iter().flatten().zip(back.tensors.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn write_restore_roundtrip_on_disk() {
+        let dir = tmp_dir("roundtrip");
+        assert!(restore(&dir).unwrap().is_none(), "empty dir must restore to None");
+        let snap = adam_snapshot();
+        write_snapshot(&dir, &snap).unwrap();
+        let back = restore(&dir).unwrap().expect("manifest written");
+        assert_eq!(snap, back);
+        assert_eq!(back.step, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_an_error_not_a_miss() {
+        let dir = tmp_dir("corrupt");
+        let snap = adam_snapshot();
+        let path = write_snapshot(&dir, &snap).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = restore(&dir).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_overlaps_and_keeps_two_generations() {
+        let dir = tmp_dir("writer");
+        let mut w = CheckpointWriter::spawn(&dir).unwrap();
+        let cfg = SgdConfig::default();
+        let mut s = ParamStore::new(vec![vec![0.1f32; 64]], cfg);
+        let mut accepted = 0u64;
+        for _ in 0..6 {
+            s.apply_all(&[vec![0.5; 64]], 1.0).unwrap();
+            if w.submit(s.snapshot()) {
+                accepted += 1;
+            }
+            // a full queue drops rather than blocks — both outcomes legal
+        }
+        w.flush(Duration::from_secs(10)).unwrap();
+        assert_eq!(w.written(), accepted);
+        assert_eq!(accepted + w.skipped(), 6);
+        // latest durable checkpoint is the newest accepted snapshot
+        let back = restore(&dir).unwrap().expect("restore after writes");
+        assert!(back.step >= 1);
+        // at most two generations + MANIFEST on disk
+        let files: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with("ckpt-"))
+            .collect();
+        assert!(files.len() <= 2, "gc left {} checkpoint files", files.len());
+        assert_eq!(w.shutdown(), accepted);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -47,6 +47,17 @@ pub struct CommCompletion {
     pub bufs: Vec<Vec<f32>>,
 }
 
+/// Result of a bounded completion wait ([`CommHandle::wait_timeout`]).
+/// Distinguishes "nothing yet" from "the thread is gone" so abort and
+/// recovery paths can back off without blocking forever on a dead
+/// channel.
+pub enum WaitOutcome {
+    Done(CommCompletion),
+    TimedOut,
+    /// The comm thread exited and the channel is drained.
+    Disconnected,
+}
+
 /// Handle owning the comm thread.
 pub struct CommHandle {
     queue: Arc<CommandQueue<CommRequest>>,
@@ -138,6 +149,19 @@ impl CommHandle {
     /// Non-blocking completion poll.
     pub fn try_complete(&self) -> Option<CommCompletion> {
         self.completions.try_recv().ok()
+    }
+
+    /// Bounded completion wait: the leader's abort/recovery paths (ISSUE
+    /// 9) layer exponential backoff over this instead of parking forever
+    /// in [`CommHandle::wait_one`] — a dead or wedged comm thread then
+    /// surfaces as an error, not a hang.
+    pub fn wait_timeout(&self, timeout: std::time::Duration) -> WaitOutcome {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.completions.recv_timeout(timeout) {
+            Ok(done) => WaitOutcome::Done(done),
+            Err(RecvTimeoutError::Timeout) => WaitOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => WaitOutcome::Disconnected,
+        }
     }
 
     pub fn queue_len(&self) -> usize {
@@ -289,5 +313,58 @@ mod tests {
             h.submit(CommRequest { id, op: CommOp::PartReduce, bufs: bufs(2, 100) }).unwrap();
         }
         assert_eq!(h.shutdown(), 10);
+    }
+
+    #[test]
+    fn worker_panic_mid_fold_neither_poisons_nor_hangs() {
+        // ISSUE 9 hardening: a worker closure that panics while Reduce
+        // folds are in flight must leave the comm thread healthy — the
+        // leader drains deterministically and Drop cannot hang. The
+        // panic happens leader-side (the thread never sees it); what it
+        // must survive is the abandoned in-flight work.
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::time::Duration;
+        let h = CommHandle::spawn(8);
+        for id in 0..4u64 {
+            h.submit(CommRequest {
+                id,
+                op: CommOp::Reduce { rank: 1 },
+                bufs: vec![vec![1.0f32; 512], vec![2.0f32; 512]],
+            })
+            .unwrap();
+        }
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let died = catch_unwind(AssertUnwindSafe(|| -> () {
+            panic!("worker died mid-fold");
+        }));
+        std::panic::set_hook(hook);
+        assert!(died.is_err());
+        // drain-or-abort: every in-flight op completes under a bounded
+        // wait; nothing is lost, nothing blocks forever
+        for id in 0..4u64 {
+            match h.wait_timeout(Duration::from_secs(5)) {
+                WaitOutcome::Done(done) => {
+                    assert_eq!(done.id, id);
+                    assert_eq!(done.bufs[0][0], 3.0);
+                }
+                WaitOutcome::TimedOut => panic!("fold {id} never completed"),
+                WaitOutcome::Disconnected => panic!("comm thread died draining fold {id}"),
+            }
+        }
+        assert_eq!(h.shutdown(), 4);
+    }
+
+    #[test]
+    fn drop_with_inflight_ops_terminates_even_when_paused() {
+        // stop-overrides-pause extended to the abort path: dropping the
+        // handle with queued work AND the thread frozen must still
+        // terminate (drain, then exit) instead of spinning on the pause
+        // gate forever.
+        let h = CommHandle::spawn_paused(8);
+        for id in 0..5u64 {
+            h.submit(CommRequest { id, op: CommOp::AllReduce, bufs: bufs(2, 64) }).unwrap();
+        }
+        drop(h); // must not hang
     }
 }

@@ -24,16 +24,24 @@
 //!   buffer, then the exchange runs. The bit-identity property suite
 //!   (`tests/overlap_tests.rs`) pins streaming to this oracle.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::collectives::{shard_range, GroupTopology};
 use crate::runtime::{HostTensor, Runtime};
 
-use super::comm_thread::{CommCompletion, CommHandle, CommOp, CommRequest};
+use super::comm_thread::{CommCompletion, CommHandle, CommOp, CommRequest, WaitOutcome};
 use super::sharding::MicrobatchPlan;
 use super::state::{ParamStore, SgdConfig};
+
+/// Backoff budget for normal-path completion waits: folds are ms-scale,
+/// so a minute of silence means the comm thread is wedged — surface an
+/// error instead of parking forever (ISSUE 9: detection enables
+/// recovery).
+const WAIT_BUDGET: Duration = Duration::from_secs(60);
+/// Backoff budget for the in-flight drain after a worker death.
+const ABORT_WAIT_BUDGET: Duration = Duration::from_secs(10);
 
 /// Per-step telemetry.
 #[derive(Debug, Clone, Copy, Default)]
@@ -75,6 +83,48 @@ impl StepStats {
 /// bit-identity suite and the perf bench feed synthetic gradients
 /// through the real comm thread.
 pub type WorkerCompute<'a> = dyn FnMut(usize, &[usize], &mut [Vec<f32>]) -> Result<(f64, u64)> + 'a;
+
+/// Outcome of a guarded step ([`SyncSgdCoordinator::step_with_compute_guarded`]):
+/// either the step committed, or a worker died mid-step — the step was
+/// aborted deterministically (in-flight folds drained, no parameter
+/// touched, step counter unchanged) and the caller decides the recovery
+/// policy.
+#[derive(Debug)]
+pub enum StepResult {
+    Done(StepStats),
+    Died { worker: usize },
+}
+
+/// Payload of the deterministic killer's injected panic.
+struct InjectedFault;
+
+/// Invoke one worker's compute under `catch_unwind`, with the ISSUE 9
+/// deterministic killer spliced in front: when `kill` names this worker
+/// it panics through the exact path a genuine worker fault would take.
+/// Returns `None` when the worker died (injected or real panic);
+/// `Some(Err)` stays an ordinary propagated error.
+fn run_worker(
+    compute: &mut WorkerCompute<'_>,
+    w: usize,
+    starts: &[usize],
+    acc: &mut [Vec<f32>],
+    kill: Option<usize>,
+) -> Option<Result<(f64, u64)>> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    if kill == Some(w) {
+        // silence the default hook for the one panic we cause ourselves;
+        // genuine panics below keep their backtrace
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let died = catch_unwind(AssertUnwindSafe(|| -> Result<(f64, u64)> {
+            std::panic::panic_any(InjectedFault);
+        }));
+        std::panic::set_hook(hook);
+        debug_assert!(died.is_err());
+        return None;
+    }
+    catch_unwind(AssertUnwindSafe(|| compute(w, starts, acc))).ok()
+}
 
 /// `REPRO_RUNTIME_OVERLAP` parsing: unset/anything-else = streaming on,
 /// `off`/`0`/`false`/`no` = serial reference pipeline.
@@ -128,10 +178,23 @@ impl SyncSgdCoordinator {
         sgd: SgdConfig,
         tensor_topos: Vec<Option<GroupTopology>>,
     ) -> Self {
-        let depth = (params.len() * 2).next_power_of_two();
-        let read_scratch = params.iter().map(|t| vec![0.0f32; t.len()]).collect();
+        Self::with_store(artifact, ParamStore::new(params, sgd), plan, tensor_topos)
+    }
+
+    /// [`SyncSgdCoordinator::with_plan`] but adopting an existing
+    /// [`ParamStore`] — optimizer state (momentum velocity, Adam
+    /// moments, step counters) carries over intact. The ISSUE 9 recovery
+    /// paths rebuild the coordinator around surviving state with this.
+    pub fn with_store(
+        artifact: &str,
+        store: ParamStore,
+        plan: MicrobatchPlan,
+        tensor_topos: Vec<Option<GroupTopology>>,
+    ) -> Self {
+        let depth = (store.n_tensors() * 2).next_power_of_two();
+        let read_scratch = store.tensors.iter().map(|t| vec![0.0f32; t.len()]).collect();
         SyncSgdCoordinator {
-            params: ParamStore::new(params, sgd),
+            params: store,
             plan,
             tensor_topos,
             comm: CommHandle::spawn(depth),
@@ -187,6 +250,25 @@ impl SyncSgdCoordinator {
         rt: &mut Runtime,
         data_for: &mut dyn FnMut(usize, usize, usize) -> Vec<HostTensor>,
     ) -> Result<StepStats> {
+        match self.step_outcome(rt, data_for, None)? {
+            StepResult::Done(stats) => Ok(stats),
+            StepResult::Died { worker } => {
+                bail!("worker {worker} panicked with no fault handler installed")
+            }
+        }
+    }
+
+    /// [`SyncSgdCoordinator::step`] with a fault seam: `kill` names a
+    /// worker the deterministic killer takes down this step (`None` =
+    /// healthy step). A dead worker aborts the step without touching
+    /// parameters and returns [`StepResult::Died`] for the trainer's
+    /// recovery policy to handle.
+    pub fn step_outcome(
+        &mut self,
+        rt: &mut Runtime,
+        data_for: &mut dyn FnMut(usize, usize, usize) -> Vec<HostTensor>,
+        kill: Option<usize>,
+    ) -> Result<StepResult> {
         let n_tensors = self.params.n_tensors();
         // params are constant within the step: convert to literals ONCE
         // and reuse across all workers x microbatches (§Perf: removes the
@@ -219,7 +301,7 @@ impl SyncSgdCoordinator {
             }
             Ok((loss_sum, execs))
         };
-        let out = self.step_with_compute(&mut compute);
+        let out = self.step_with_compute_guarded(&mut compute, kill);
         drop(compute);
         self.read_scratch = read;
         out
@@ -229,16 +311,38 @@ impl SyncSgdCoordinator {
     /// by the caller — the PJRT-free entry the property tests and the
     /// ablation bench drive.
     pub fn step_with_compute(&mut self, compute: &mut WorkerCompute<'_>) -> Result<StepStats> {
+        match self.step_with_compute_guarded(compute, None)? {
+            StepResult::Done(stats) => Ok(stats),
+            StepResult::Died { worker } => {
+                bail!("worker {worker} panicked with no fault handler installed")
+            }
+        }
+    }
+
+    /// [`SyncSgdCoordinator::step_with_compute`] with the fault seam
+    /// exposed (see [`SyncSgdCoordinator::step_outcome`]). Both exchange
+    /// pipelines share the guarantee: on a death the step aborts with
+    /// in-flight folds drained, buffers recycled, and parameters + step
+    /// counter untouched — the coordinator stays usable.
+    pub fn step_with_compute_guarded(
+        &mut self,
+        compute: &mut WorkerCompute<'_>,
+        kill: Option<usize>,
+    ) -> Result<StepResult> {
         if self.overlap {
-            self.step_streaming(compute)
+            self.step_streaming(compute, kill)
         } else {
-            self.step_reference(compute)
+            self.step_reference(compute, kill)
         }
     }
 
     /// Streaming overlapped exchange (see module docs): compute worker
     /// w+1 while the comm thread folds worker w into the running sums.
-    fn step_streaming(&mut self, compute: &mut WorkerCompute<'_>) -> Result<StepStats> {
+    fn step_streaming(
+        &mut self,
+        compute: &mut WorkerCompute<'_>,
+        kill: Option<usize>,
+    ) -> Result<StepResult> {
         let n_tensors = self.params.n_tensors();
         let workers = self.plan.workers;
         let total_micro = self.plan.total_micro() as f32;
@@ -259,8 +363,17 @@ impl SyncSgdCoordinator {
         for w in 0..workers {
             let mut cur = self.take_set();
             let tc = Instant::now();
-            let (l, e) = compute(w, &self.plan.per_worker[w], &mut cur)?;
+            let res = run_worker(compute, w, &self.plan.per_worker[w], &mut cur, kill);
             stats.compute_s += tc.elapsed().as_secs_f64();
+            let (l, e) = match res {
+                Some(r) => r?,
+                None => {
+                    // worker died: abort without touching params
+                    self.put_set(cur);
+                    self.abort_inflight(pending, sums, reclaim)?;
+                    return Ok(StepResult::Died { worker: w });
+                }
+            };
             loss_sum += l;
             stats.executions += e;
             if w == 0 {
@@ -355,7 +468,7 @@ impl SyncSgdCoordinator {
         stats.update_s = update_s;
         stats.comm_busy_s = (self.comm.busy_ns() - busy0) as f64 / 1e9;
         stats.overlap_s = (stats.comm_busy_s - stats.comm_wait_s).max(0.0);
-        Ok(stats)
+        Ok(StepResult::Done(stats))
     }
 
     /// The retained serial reference pipeline (pre-streaming shape): all
@@ -363,7 +476,11 @@ impl SyncSgdCoordinator {
     /// exchange runs. Kept in-tree as the oracle for the bit-identity
     /// property suite and as the `REPRO_RUNTIME_OVERLAP=off` ablation
     /// baseline.
-    fn step_reference(&mut self, compute: &mut WorkerCompute<'_>) -> Result<StepStats> {
+    fn step_reference(
+        &mut self,
+        compute: &mut WorkerCompute<'_>,
+        kill: Option<usize>,
+    ) -> Result<StepResult> {
         let n_tensors = self.params.n_tensors();
         let workers = self.plan.workers;
         let busy0 = self.comm.busy_ns();
@@ -377,9 +494,16 @@ impl SyncSgdCoordinator {
             .collect();
         let mut loss_sum = 0.0f64;
         for (w, acc) in grads.iter_mut().enumerate() {
-            let (l, e) = compute(w, &self.plan.per_worker[w], acc)?;
-            loss_sum += l;
-            stats.executions += e;
+            // nothing is submitted until every worker computed, so a
+            // death here aborts with no in-flight work to drain
+            match run_worker(compute, w, &self.plan.per_worker[w], acc, kill) {
+                Some(r) => {
+                    let (l, e) = r?;
+                    loss_sum += l;
+                    stats.executions += e;
+                }
+                None => return Ok(StepResult::Died { worker: w }),
+            }
         }
         stats.compute_s = t0.elapsed().as_secs_f64();
 
@@ -458,7 +582,7 @@ impl SyncSgdCoordinator {
         // wait out the tail (blocked time is the exposed comm wait)
         while completed < submitted {
             let tw = Instant::now();
-            let done = self.comm.wait_one().context("comm thread died")?;
+            let done = self.wait_completion_backoff(WAIT_BUDGET)?;
             wait_s += tw.elapsed().as_secs_f64();
             let tu = Instant::now();
             self.params.apply_tensor(done.id as usize, &done.bufs[0], total_micro)?;
@@ -471,7 +595,7 @@ impl SyncSgdCoordinator {
         stats.update_s = update_s;
         stats.comm_busy_s = (self.comm.busy_ns() - busy0) as f64 / 1e9;
         stats.overlap_s = (stats.comm_busy_s - stats.comm_wait_s).max(0.0);
-        Ok(stats)
+        Ok(StepResult::Done(stats))
     }
 
     /// Next fold completion: poll first, then block (timing only the
@@ -481,14 +605,73 @@ impl SyncSgdCoordinator {
             return Ok(done);
         }
         let t0 = Instant::now();
-        let done = self.comm.wait_one().context("comm thread died")?;
+        let done = self.wait_completion_backoff(WAIT_BUDGET)?;
         *wait_s += t0.elapsed().as_secs_f64();
         Ok(done)
+    }
+
+    /// Poll-then-wait with exponential backoff bounded by `budget` — the
+    /// ISSUE 9 replacement for the unbounded `wait_one` park: a dead or
+    /// wedged comm thread surfaces as a context-rich error instead of a
+    /// hang, which is what makes detection (and thus recovery) possible.
+    fn wait_completion_backoff(&self, budget: Duration) -> Result<CommCompletion> {
+        if let Some(done) = self.comm.try_complete() {
+            return Ok(done);
+        }
+        let mut slice = Duration::from_micros(500);
+        let mut waited = Duration::ZERO;
+        while waited < budget {
+            match self.comm.wait_timeout(slice) {
+                WaitOutcome::Done(done) => return Ok(done),
+                WaitOutcome::Disconnected => bail!("comm thread died"),
+                WaitOutcome::TimedOut => {
+                    waited += slice;
+                    slice = (slice * 2).min(Duration::from_millis(250));
+                }
+            }
+        }
+        bail!(
+            "comm thread unresponsive: no completion within {:.1}s (bounded backoff exhausted)",
+            budget.as_secs_f64()
+        )
+    }
+
+    /// Deterministically drain in-flight folds after a worker death:
+    /// every submitted-but-unretired completion is awaited under bounded
+    /// backoff and its buffers recycled; parameters were never touched
+    /// (the streaming apply happens only in the tail drain). Extends the
+    /// comm thread's stop-overrides-pause shutdown guarantee to mid-step
+    /// aborts.
+    fn abort_inflight(
+        &mut self,
+        mut pending: usize,
+        mut sums: Vec<Vec<f32>>,
+        mut reclaim: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        while pending > 0 {
+            let done = self.wait_completion_backoff(ABORT_WAIT_BUDGET)?;
+            retire(done, &mut sums, &mut reclaim);
+            pending -= 1;
+        }
+        if !reclaim.is_empty() {
+            self.put_set(reclaim);
+        }
+        if !sums.is_empty() {
+            self.put_set(sums);
+        }
+        Ok(())
     }
 
     /// Tear down the comm thread; returns commands it processed.
     pub fn shutdown(self) -> u64 {
         self.comm.shutdown()
+    }
+
+    /// Tear down the comm thread and hand back the parameter store (with
+    /// its full optimizer state) — the recovery paths carry it into a
+    /// rebuilt coordinator at the surviving worker count.
+    pub fn into_params(mut self) -> ParamStore {
+        std::mem::replace(&mut self.params, ParamStore::new(Vec::new(), SgdConfig::default()))
     }
 }
 
@@ -555,5 +738,79 @@ mod tests {
         }
         let sets = a.grad_sets_allocated();
         assert!(sets <= 3, "streaming allocated {sets} sets");
+    }
+
+    #[test]
+    fn injected_death_aborts_step_and_keeps_coordinator_usable() {
+        // the fault seam: killing worker 2 mid-step must (a) return Died,
+        // (b) leave params + step counter untouched, (c) drain in-flight
+        // folds so the next healthy step is bit-identical to a run that
+        // never saw the fault — under BOTH exchange pipelines.
+        let params = vec![vec![0.5f32; 19], vec![-0.25f32; 64]];
+        let plan = MicrobatchPlan::new(8, 4, 2).unwrap();
+        let mut compute = |w: usize, starts: &[usize], acc: &mut [Vec<f32>]| {
+            for (t, buf) in acc.iter_mut().enumerate() {
+                for (i, x) in buf.iter_mut().enumerate() {
+                    *x = ((w * 17 + t * 5 + i) % 11) as f32 * 0.1 - 0.4;
+                }
+            }
+            Ok((starts.len() as f64 * 0.5, starts.len() as u64))
+        };
+        for overlap in [true, false] {
+            let mk = || {
+                let mut c = SyncSgdCoordinator::new(
+                    "t",
+                    params.clone(),
+                    plan.clone(),
+                    SgdConfig::default(),
+                );
+                c.set_overlap(overlap);
+                c
+            };
+            let mut faulty = mk();
+            let before = faulty.params.tensors.clone();
+            match faulty.step_with_compute_guarded(&mut compute, Some(2)).unwrap() {
+                StepResult::Died { worker } => assert_eq!(worker, 2),
+                StepResult::Done(_) => panic!("killer never fired (overlap={overlap})"),
+            }
+            assert_eq!(faulty.params.step, 0, "aborted step must not commit");
+            for (a, b) in faulty.params.tensors.iter().zip(&before) {
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "aborted step touched parameters (overlap={overlap})"
+                );
+            }
+            // the coordinator stays usable and bit-identical to a clean one
+            let mut clean = mk();
+            let sf = faulty.step_with_compute(&mut compute).unwrap();
+            let sc = clean.step_with_compute(&mut compute).unwrap();
+            assert_eq!(sf.loss.to_bits(), sc.loss.to_bits());
+            for (a, b) in faulty.params.tensors.iter().zip(&clean.params.tensors) {
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "post-abort step diverged (overlap={overlap})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_params_carries_optimizer_state() {
+        let cfg = SgdConfig { lr: 0.1, momentum: 0.9, ..SgdConfig::default() };
+        let plan = MicrobatchPlan::new(4, 2, 2).unwrap();
+        let mut c = SyncSgdCoordinator::new("t", vec![vec![1.0f32; 8]], plan.clone(), cfg);
+        let mut compute = |_w: usize, starts: &[usize], acc: &mut [Vec<f32>]| {
+            for buf in acc.iter_mut() {
+                buf.fill(0.5);
+            }
+            Ok((0.0, starts.len() as u64))
+        };
+        c.step_with_compute(&mut compute).unwrap();
+        let snap = c.params.snapshot();
+        assert!(snap.velocity.is_some(), "momentum state expected");
+        let store = c.into_params();
+        let c2 = SyncSgdCoordinator::with_store("t", store, plan, Vec::new());
+        assert_eq!(c2.params.step, 1);
+        assert_eq!(c2.params.snapshot(), snap, "optimizer state lost in the handoff");
     }
 }

@@ -27,6 +27,6 @@ pub mod state;
 
 pub use command_queue::{CommandQueue, PushError};
 pub use comm_thread::{CommHandle, CommOp, CommRequest};
-pub use leader::{overlap_env_enabled, StepStats, SyncSgdCoordinator, WorkerCompute};
+pub use leader::{overlap_env_enabled, StepResult, StepStats, SyncSgdCoordinator, WorkerCompute};
 pub use sharding::MicrobatchPlan;
-pub use state::{ParamStore, SgdConfig};
+pub use state::{ParamSnapshot, ParamStore, SgdConfig};

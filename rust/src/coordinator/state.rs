@@ -40,6 +40,28 @@ impl Default for SgdConfig {
     }
 }
 
+/// Bit-exact capture of the full training state: parameters plus every
+/// piece of optimizer state the update reads (momentum velocity, Adam
+/// moments, per-tensor update counts) and the step counter. Restoring a
+/// snapshot and replaying the same gradients reproduces the
+/// uninterrupted trajectory bit-for-bit — the determinism contract the
+/// checkpoint layer (ISSUE 9 `stall` recovery) is built on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSnapshot {
+    pub step: u64,
+    pub tensors: Vec<Vec<f32>>,
+    pub velocity: Option<Vec<Vec<f32>>>,
+    pub adam_m: Option<Vec<Vec<f32>>>,
+    pub adam_v: Option<Vec<Vec<f32>>>,
+    pub tensor_steps: Vec<u64>,
+}
+
+impl ParamSnapshot {
+    pub fn n_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
 /// All model parameters as flat f32 tensors (manifest spec order).
 #[derive(Debug, Clone)]
 pub struct ParamStore {
@@ -146,6 +168,61 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Capture the full training state (see [`ParamSnapshot`]).
+    pub fn snapshot(&self) -> ParamSnapshot {
+        ParamSnapshot {
+            step: self.step,
+            tensors: self.tensors.clone(),
+            velocity: self.velocity.clone(),
+            adam_m: self.adam_m.clone(),
+            adam_v: self.adam_v.clone(),
+            tensor_steps: self.tensor_steps.clone(),
+        }
+    }
+
+    /// Restore a snapshot bit-identically. The snapshot must come from a
+    /// store with the same tensor shapes and the same optimizer family
+    /// (momentum/Adam state presence must match) — anything else is a
+    /// config mismatch, not a resumable state.
+    pub fn restore(&mut self, snap: &ParamSnapshot) -> Result<()> {
+        ensure!(
+            snap.tensors.len() == self.tensors.len(),
+            "snapshot has {} tensors, store has {}",
+            snap.tensors.len(),
+            self.tensors.len()
+        );
+        for (t, (a, b)) in snap.tensors.iter().zip(&self.tensors).enumerate() {
+            ensure!(
+                a.len() == b.len(),
+                "snapshot tensor {t} has {} elements, store has {}",
+                a.len(),
+                b.len()
+            );
+        }
+        ensure!(
+            snap.velocity.is_some() == self.velocity.is_some(),
+            "snapshot momentum state ({}) does not match the store's optimizer config ({})",
+            snap.velocity.is_some(),
+            self.velocity.is_some()
+        );
+        ensure!(
+            snap.adam_m.is_some() == self.adam_m.is_some()
+                && snap.adam_v.is_some() == self.adam_v.is_some(),
+            "snapshot Adam state does not match the store's optimizer config"
+        );
+        ensure!(
+            snap.tensor_steps.len() == self.tensor_steps.len(),
+            "snapshot tensor_steps length mismatch"
+        );
+        self.tensors = snap.tensors.clone();
+        self.velocity = snap.velocity.clone();
+        self.adam_m = snap.adam_m.clone();
+        self.adam_v = snap.adam_v.clone();
+        self.tensor_steps = snap.tensor_steps.clone();
+        self.step = snap.step;
+        Ok(())
+    }
+
     /// L2 norm over all parameters (drift probe for tests).
     pub fn l2_norm(&self) -> f64 {
         self.tensors
@@ -213,6 +290,60 @@ mod tests {
             let moved = -s.tensors[0][0];
             assert!((moved - 0.1).abs() < 0.02, "g={g}: moved {moved}");
         }
+    }
+
+    #[test]
+    fn snapshot_restore_replays_bit_identically() {
+        // the checkpoint determinism contract: restore + replay == never
+        // interrupted, for every optimizer family
+        let cfgs = [
+            SgdConfig { lr: 0.05, ..SgdConfig::default() },
+            SgdConfig { lr: 0.05, momentum: 0.9, weight_decay: 5e-4, ..SgdConfig::default() },
+            SgdConfig { lr: 3e-3, optimizer: Optimizer::adam(), ..SgdConfig::default() },
+        ];
+        for cfg in cfgs {
+            let init = vec![vec![0.7f32, -0.3, 1.1], vec![0.25f32; 5]];
+            let grad_for = |k: u64| -> Vec<Vec<f32>> {
+                vec![
+                    (0..3).map(|i| (k as f32 + 1.0) * 0.1 - i as f32 * 0.03).collect(),
+                    (0..5).map(|i| (i as f32 - k as f32) * 0.2).collect(),
+                ]
+            };
+            let mut a = ParamStore::new(init.clone(), cfg);
+            for k in 0..3 {
+                a.apply_all(&grad_for(k), 2.0).unwrap();
+            }
+            let snap = a.snapshot();
+            for k in 3..6 {
+                a.apply_all(&grad_for(k), 2.0).unwrap();
+            }
+            let mut b = ParamStore::new(init, cfg);
+            b.restore(&snap).unwrap();
+            assert_eq!(b.step, 3);
+            for k in 3..6 {
+                b.apply_all(&grad_for(k), 2.0).unwrap();
+            }
+            assert_eq!(a.step, b.step);
+            for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+                let eq = ta.iter().zip(tb).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(eq, "restore + replay diverged under {:?}", cfg.optimizer);
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_state() {
+        let mut plain = ParamStore::new(vec![vec![0.0; 3]], SgdConfig::default());
+        // wrong tensor shape
+        let mut snap = plain.snapshot();
+        snap.tensors[0].push(0.0);
+        assert!(plain.restore(&snap).is_err());
+        // optimizer-family mismatch (Adam snapshot into a plain store)
+        let adam = ParamStore::new(
+            vec![vec![0.0; 3]],
+            SgdConfig { optimizer: Optimizer::adam(), ..SgdConfig::default() },
+        );
+        assert!(plain.restore(&adam.snapshot()).is_err());
     }
 
     #[test]

@@ -635,6 +635,19 @@ pub fn run_runtime_with(
             Err(e) => return Err(e),
         };
     }
+    // a replan recovery re-derives the degraded plan on the runnable
+    // model at N-1, mirroring the simulators (shrink renormalizes inside
+    // the trainer; stall keeps the plan)
+    if cfg.fail_at.is_some()
+        && cfg.workers >= 2
+        && matches!(registry::recovery_policy(&cfg.recovery), Ok(RecoveryPolicy::Replan))
+    {
+        if let Ok(net) = registry::model(&cfg.model) {
+            let platform = resolved_platform(spec)?;
+            cfg.recovery_plan =
+                Some(replan_plan(spec, &net, &platform, cfg.workers as u64 - 1)?);
+        }
+    }
     let out = trainer::train(rt, &cfg)?;
 
     let mut rep = base_report(spec, "runtime");
@@ -671,7 +684,54 @@ pub fn run_runtime_with(
             rep.min_compute_utilization = rep.mean_compute_utilization;
         }
     }
+    if let Some(m) = &out.recovery {
+        rep.recovery = runtime_recovery_json(m, cfg.plan.as_ref());
+    }
     Ok((rep, out))
+}
+
+/// Map the trainer's measured [`trainer::fault::RecoveryMeasurement`]
+/// onto the shared [`RecoveryReport`] schema — wall-clock seconds in the
+/// same fields the simulators price, so recovery cross-checks three
+/// ways. `post_efficiency` uses the run's own pre-failure per-node
+/// throughput as the baseline (the runtime run carries no 1-node
+/// baseline of its own).
+pub fn runtime_recovery_json(
+    m: &trainer::fault::RecoveryMeasurement,
+    plan_before: Option<&PartitionPlan>,
+) -> Json {
+    let pre_per_node = if m.workers_before > 0 {
+        m.pre_samples_per_s / m.workers_before as f64
+    } else {
+        0.0
+    };
+    let post_efficiency = if pre_per_node > 0.0 && m.workers_after > 0 {
+        (m.post_samples_per_s / pre_per_node) / m.workers_after as f64
+    } else {
+        0.0
+    };
+    RecoveryReport {
+        policy: registry::recovery_policy_name(m.policy).to_string(),
+        fail_at: m.failed_step,
+        fail_node: m.dead_worker as u64,
+        nodes_before: m.workers_before as u64,
+        nodes_after: m.workers_after as u64,
+        stall_s: m.stall_s(),
+        replan_s: m.replan_s,
+        redistribution_s: m.redistribution_s,
+        post_iteration_s: m.post_iteration_s,
+        post_samples_per_s: m.post_samples_per_s,
+        post_efficiency,
+        plan_before: match plan_before {
+            Some(p) => p.to_json(),
+            None => Json::Null,
+        },
+        plan_after: match &m.plan_after {
+            Some(p) => p.to_json(),
+            None => Json::Null,
+        },
+    }
+    .to_json()
 }
 
 /// Spec → trainer configuration (public so the CLI's `repro train`
@@ -694,6 +754,12 @@ pub fn train_config(spec: &ExperimentSpec) -> TrainConfig {
         optimizer: spec.execution.optimizer.clone(),
         prefetch: spec.execution.prefetch,
         plan: None,
+        checkpoint_every: spec.execution.checkpoint.unwrap_or(0),
+        checkpoint_dir: Some(format!("{}/checkpoints", spec.execution.artifacts)),
+        fail_at: spec.cluster.fail_at.map(|v| v as u64),
+        fail_worker: spec.cluster.fail_node,
+        recovery: spec.cluster.recovery.clone(),
+        recovery_plan: None,
     }
 }
 

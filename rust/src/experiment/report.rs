@@ -92,8 +92,10 @@ pub struct ScalingReport {
     /// `null` where no plan applies (e.g. manifest-only runtime models).
     pub plan: Json,
     /// Failure-recovery section ([`RecoveryReport`] JSON) when the spec
-    /// carried a failure event; `null` on clean runs and on backends
-    /// that cannot express failures (runtime).
+    /// carried a failure event; `null` on clean runs. The simulators fill
+    /// it with priced/scheduled seconds; the runtime backend fills it
+    /// with wall-clock seconds measured through live fault injection —
+    /// same schema, so recovery cross-checks three ways.
     pub recovery: Json,
 }
 
@@ -217,10 +219,12 @@ impl ScalingReport {
 
 /// The failure-recovery section of a [`ScalingReport`]: what one
 /// failure event cost under the spec's `cluster.recovery` policy and
-/// what the fleet looked like afterwards. Both simulation backends emit
-/// it in this shape — the netsim numbers are measured from the executed
-/// schedule, the analytic ones are the α-β charges — which is what
-/// makes the replan-vs-stall cross-check a field-by-field comparison.
+/// what the fleet looked like afterwards. Every failure-capable backend
+/// emits it in this shape — the netsim numbers are measured from the
+/// executed schedule, the analytic ones are the α-β charges, and the
+/// runtime backend's are wall-clock seconds from a live injected worker
+/// death — which is what makes recovery a field-by-field three-way
+/// cross-check.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RecoveryReport {
     /// `stall` | `replan` | `shrink` (registry names).

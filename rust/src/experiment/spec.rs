@@ -149,6 +149,9 @@ pub struct ExecutionSpec {
     /// data-thread prefetch queue depth (microbatches staged ahead of
     /// the coordinator).
     pub prefetch: usize,
+    /// async checkpoint interval in steps for the runtime backend
+    /// (`None`/null = checkpointing off; `Some(0)` is rejected).
+    pub checkpoint: Option<u64>,
     pub artifacts: String,
 }
 
@@ -166,6 +169,7 @@ impl Default for ExecutionSpec {
             eval_every: 0,
             optimizer: "sgd".into(),
             prefetch: 8,
+            checkpoint: None,
             artifacts: "artifacts".into(),
         }
     }
@@ -278,6 +282,36 @@ fn validate_iterations(iterations: usize) -> Result<()> {
             "parallelism.iterations is {iterations} but must be >= 2: steady-state timing \
              is the last iteration boundary minus the previous one, so at least two \
              iterations must be simulated"
+        );
+    }
+    Ok(())
+}
+
+/// The data thread hands microbatches to the coordinator through a
+/// bounded queue; depth 0 would mean "no queue at all" and deadlock the
+/// first `next()`. Rejected at spec-build time — both JSON parse and
+/// `--set execution.prefetch=...` — instead of hanging the runtime.
+fn validate_prefetch(prefetch: usize) -> Result<()> {
+    if prefetch == 0 {
+        bail!(
+            "execution.prefetch is 0 but must be >= 1: the data thread stages microbatches \
+             through a bounded queue of this depth, and a zero-capacity queue would stall \
+             the coordinator's first fetch forever"
+        );
+    }
+    Ok(())
+}
+
+/// `execution.checkpoint` is an every-N-steps interval; 0 is not a
+/// meaningful period ("checkpoint every zero steps") and would divide by
+/// zero in the trainer's interval test. Null/absent is the way to turn
+/// checkpointing off.
+fn validate_checkpoint(checkpoint: Option<u64>) -> Result<()> {
+    if checkpoint == Some(0) {
+        bail!(
+            "execution.checkpoint is 0 but must be >= 1 when set: it is the async \
+             checkpoint interval in steps (omit the key or set it to null to disable \
+             checkpointing)"
         );
     }
     Ok(())
@@ -453,6 +487,7 @@ impl ExperimentSpec {
         exec.insert("eval_every".to_string(), num(self.execution.eval_every as f64));
         exec.insert("optimizer".to_string(), Json::Str(self.execution.optimizer.clone()));
         exec.insert("prefetch".to_string(), num(self.execution.prefetch as f64));
+        exec.insert("checkpoint".to_string(), opt_num(self.execution.checkpoint.map(|v| v as f64)));
         exec.insert("artifacts".to_string(), Json::Str(self.execution.artifacts.clone()));
 
         let model = match &self.model {
@@ -578,7 +613,7 @@ impl ExperimentSpec {
             e,
             &[
                 "fidelity", "model", "workers", "steps", "lr", "momentum", "seed",
-                "log_every", "eval_every", "optimizer", "prefetch", "artifacts",
+                "log_every", "eval_every", "optimizer", "prefetch", "checkpoint", "artifacts",
             ],
             "execution",
         )?;
@@ -600,8 +635,14 @@ impl ExperimentSpec {
             eval_every: get_u64(e, "eval_every", d.execution.eval_every)?,
             optimizer: get_str(e, "optimizer", &d.execution.optimizer)?,
             prefetch: get_u64(e, "prefetch", d.execution.prefetch as u64)? as usize,
+            checkpoint: match e.opt("checkpoint") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64().context("field execution.checkpoint")?),
+            },
             artifacts: get_str(e, "artifacts", &d.execution.artifacts)?,
         };
+        validate_prefetch(execution.prefetch)?;
+        validate_checkpoint(execution.checkpoint)?;
 
         // fidelity is a backend-registry name; validate at parse time
         // like every other registry name
@@ -686,7 +727,7 @@ impl ExperimentSpec {
         const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations"];
         const EXECUTION_KEYS: &[&str] = &[
             "fidelity", "model", "workers", "steps", "lr", "momentum", "seed", "log_every",
-            "eval_every", "optimizer", "prefetch", "artifacts",
+            "eval_every", "optimizer", "prefetch", "checkpoint", "artifacts",
         ];
         match section {
             "cluster" => {
@@ -857,16 +898,29 @@ impl ExperimentSpec {
                 "log_every" => self.execution.log_every = parsed(key, value)?,
                 "eval_every" => self.execution.eval_every = parsed(key, value)?,
                 "optimizer" => self.execution.optimizer = value.into(),
-                "prefetch" => self.execution.prefetch = parsed(key, value)?,
+                "prefetch" => {
+                    let p: usize = parsed(key, value)?;
+                    validate_prefetch(p)?;
+                    self.execution.prefetch = p
+                }
+                "checkpoint" => {
+                    self.execution.checkpoint = if value == "none" || value == "null" {
+                        None
+                    } else {
+                        let c: u64 = parsed(key, value)?;
+                        validate_checkpoint(Some(c))?;
+                        Some(c)
+                    }
+                }
                 "artifacts" => self.execution.artifacts = value.into(),
                 other => bail!(
                     "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
                      radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
                      recovery, congestion, mode, overlap, iterations, collective, fidelity, \
                      workers, steps, lr, momentum, seed, log_every, eval_every, optimizer, \
-                     prefetch, artifacts, exec_model, name — or a dotted path like cluster.nodes, \
-                     parallelism.mode, minibatch.global, execution.fidelity, execution.steps, \
-                     plan.<group>.<field>)"
+                     prefetch, checkpoint, artifacts, exec_model, name — or a dotted path like \
+                     cluster.nodes, parallelism.mode, minibatch.global, execution.fidelity, \
+                     execution.steps, plan.<group>.<field>)"
                 ),
         }
         Ok(())
@@ -892,6 +946,7 @@ mod tests {
         s.execution.workers = Some(4);
         s.execution.model = Some("vgg_tiny".into());
         s.execution.fidelity = "flowsim".into();
+        s.execution.checkpoint = Some(3);
         let j = s.to_json();
         let back = ExperimentSpec::from_json(&j).unwrap();
         assert_eq!(s, back);
@@ -1010,6 +1065,8 @@ mod tests {
             ("execution", "log_every", "1"),
             ("execution", "eval_every", "2"),
             ("execution", "optimizer", "adam"),
+            ("execution", "prefetch", "4"),
+            ("execution", "checkpoint", "3"),
             ("execution", "artifacts", "art"),
         ];
         let mut s = ExperimentSpec::default();
@@ -1065,6 +1122,37 @@ mod tests {
         let e = s.apply_set("parallelism.iterations=0").unwrap_err();
         assert!(format!("{e:#}").contains("must be >= 2"), "{e:#}");
         assert!(s.apply_set("iterations=2").is_ok());
+    }
+
+    #[test]
+    fn degenerate_prefetch_and_checkpoint_fail_at_spec_build_time() {
+        // prefetch 0 = zero-capacity queue = deadlocked coordinator;
+        // checkpoint 0 = "every zero steps"; both must die with an
+        // explanation at parse AND --set time, never downstream
+        let e = ExperimentSpec::parse_str(r#"{"execution": {"prefetch": 0}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("prefetch is 0"), "{e:#}");
+        let e = ExperimentSpec::parse_str(r#"{"execution": {"checkpoint": 0}}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("checkpoint is 0"), "{e:#}");
+        let mut s = ExperimentSpec::default();
+        let e = s.apply_set("prefetch=0").unwrap_err();
+        assert!(format!("{e:#}").contains("bounded queue"), "{e:#}");
+        let e = s.apply_set("execution.prefetch=0").unwrap_err();
+        assert!(format!("{e:#}").contains("must be >= 1"), "{e:#}");
+        let e = s.apply_set("checkpoint=0").unwrap_err();
+        assert!(format!("{e:#}").contains("disable"), "{e:#}");
+        let e = s.apply_set("execution.checkpoint=0").unwrap_err();
+        assert!(format!("{e:#}").contains("interval in steps"), "{e:#}");
+        // the happy paths still work, including the explicit off switch
+        assert!(s.apply_set("prefetch=2").is_ok());
+        assert!(s.apply_set("checkpoint=5").is_ok());
+        assert_eq!(s.execution.checkpoint, Some(5));
+        assert!(s.apply_set("checkpoint=none").is_ok());
+        assert_eq!(s.execution.checkpoint, None);
+        // and null round-trips as "off"
+        let spec = ExperimentSpec::parse_str(r#"{"execution": {"checkpoint": null}}"#).unwrap();
+        assert_eq!(spec.execution.checkpoint, None);
+        let spec = ExperimentSpec::parse_str(r#"{"execution": {"checkpoint": 4}}"#).unwrap();
+        assert_eq!(spec.execution.checkpoint, Some(4));
     }
 
     #[test]

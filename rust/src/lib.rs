@@ -24,6 +24,7 @@
 
 pub mod analytic;
 pub mod util;
+pub mod checkpoint;
 pub mod collectives;
 pub mod coordinator;
 pub mod data;

@@ -436,22 +436,35 @@ fn failover(opts: &Opts) -> Result<()> {
         registry::recovery_policy(p)?;
     }
     let backend = backend_by_name(&opts.str_or("backend", "netsim"))?;
-    let cross_check = backend.name() == "netsim" && !opts.bool_flag("no-cross-check");
+    // the cross-check ladder: runtime rows (live fault injection) check
+    // against netsim's scheduled prediction, netsim rows against the
+    // analytic α-β pricing
+    let cross = if opts.bool_flag("no-cross-check") {
+        None
+    } else {
+        match backend.name() {
+            "netsim" => Some("analytic"),
+            "runtime" => Some("netsim"),
+            _ => None,
+        }
+    };
     println!(
-        "# failover — {} x{} on {}, MB={}, fail_at={} fail_node={}",
+        "# failover — {} x{} on {}, MB={}, fail_at={} fail_node={} (backend {})",
         spec.model.name(),
         spec.cluster.nodes,
         spec.platform,
         spec.minibatch.global,
         spec.cluster.fail_at.unwrap_or(0),
-        spec.cluster.fail_node
+        spec.cluster.fail_node,
+        backend.name(),
     );
     let mut cols = vec![
         "policy", "nodes after", "stall s", "replan s", "redist s", "post iter ms",
         "post samples/s", "post eff",
     ];
-    if cross_check {
-        cols.push("analytic eff Δ");
+    let delta_col = cross.map(|r| format!("{r} eff Δ"));
+    if let Some(c) = &delta_col {
+        cols.push(c.as_str());
     }
     let mut t = Table::new(&cols);
     let mut rows: Vec<Json> = Vec::new();
@@ -477,15 +490,15 @@ fn failover(opts: &Opts) -> Result<()> {
             _ => unreachable!(),
         };
         doc.insert("backend".to_string(), Json::Str(rep.backend.clone()));
-        if cross_check {
-            let analytic = AnalyticBackend.run(&s)?;
+        if let Some(refname) = cross {
+            let reference = backend_by_name(refname)?.run(&s)?;
             let arec =
-                pcl_dnn::experiment::RecoveryReport::from_json(&analytic.recovery)?;
+                pcl_dnn::experiment::RecoveryReport::from_json(&reference.recovery)?;
             let delta = (rec.post_efficiency - arec.post_efficiency)
                 / arec.post_efficiency.max(1e-9);
             row.push(format!("{:+.1}%", 100.0 * delta));
             doc.insert(
-                "analytic_post_efficiency".to_string(),
+                format!("{refname}_post_efficiency"),
                 Json::Num(arec.post_efficiency),
             );
         }
@@ -968,6 +981,11 @@ fn train(opts: &Opts) -> Result<()> {
             log_every: opts.parse_or("log-every", 10u64)?,
             eval_every: opts.parse_or("eval-every", 0u64)?,
             optimizer: opts.str_or("optimizer", "sgd"),
+            prefetch: opts.parse_or("prefetch", 8usize)?,
+            checkpoint: match opts.parse_or("checkpoint", 0u64)? {
+                0 => None,
+                n => Some(n),
+            },
             artifacts: default_artifacts(opts),
         },
         ..Default::default()

@@ -831,6 +831,41 @@ mod tests {
     }
 
     #[test]
+    fn renormalize_edge_cases_collapse_to_named_equivalents() {
+        // N-1 == 1: a 2-node fleet losing a node collapses to the empty
+        // (pure-data) single-node plan, keeping the global minibatch so
+        // the trainer can still respread it
+        let net = zoo::vgg_a();
+        let plan = PartitionPlan::paper_recipe(&net, 2, 512, 1.0);
+        let one = plan.renormalize_for(1);
+        assert_eq!(one.nodes, 1);
+        assert_eq!(one.minibatch, 512);
+        assert!(one.is_pure_data());
+        // nodes == 0 is clamped rather than building a 0-node plan
+        assert_eq!(plan.renormalize_for(0).nodes, 1);
+
+        // hybrid G snapping to the new N collapses to data; snapping to
+        // 1 collapses to model — both §3.3 degenerations, post-snap
+        let per = vec![
+            // 7 is closest to 8's divisor 8 (|8-7| < |4-7|) → data
+            ("gn".to_string(), Strategy::Hybrid { groups: 7 }, None, 1.0),
+            // 1 divides everything and stays 1 → model
+            ("g1".to_string(), Strategy::Hybrid { groups: 1 }, None, 1.0),
+            // survivors of an explicit strategy keep it verbatim
+            ("keep".to_string(), Strategy::Model, None, 0.5),
+        ];
+        let plan = PartitionPlan::from_assignments("pinned", 9, 256, &per);
+        let shrunk = plan.renormalize_for(8);
+        assert_eq!(shrunk.mode, "shrink");
+        assert_eq!(shrunk.strategy_for("gn"), Strategy::Data);
+        assert_eq!(shrunk.strategy_for("g1"), Strategy::Model);
+        assert_eq!(shrunk.strategy_for("keep"), Strategy::Model);
+        // overlap riding along unchanged
+        let keep = shrunk.assignment_for("keep").expect("keep group survives");
+        assert_eq!(keep.overlap, 0.5);
+    }
+
+    #[test]
     fn as_pins_roundtrips_through_apply() {
         let net = zoo::vgg_a();
         let plan = PartitionPlan::paper_recipe(&net, 64, 512, 1.0);

@@ -1,0 +1,260 @@
+//! Live fault injection + recovery policies for the runtime trainer
+//! (ISSUE 9): the in-process realization of what PR 5 *prices* in the
+//! simulators. A worker death surfaces as [`StepResult::Died`] from the
+//! coordinator's fault seam; [`recover`] then executes the spec's
+//! `cluster.recovery` policy for real and measures the disruption:
+//!
+//! * **stall** — restart the dead worker, roll every survivor back to
+//!   the last durable checkpoint ([`crate::checkpoint::restore`], or the
+//!   step-0 snapshot when the failure lands before the first write), and
+//!   replay. Restore is bit-exact, compute is deterministic, so the
+//!   replayed trajectory equals the uninterrupted one bit-for-bit — the
+//!   property `tests/recovery_tests.rs` pins across workers ×
+//!   optimizers.
+//! * **shrink** — continue at N-1 survivors on
+//!   [`PartitionPlan::renormalize_for`] with the global minibatch
+//!   respread ([`respread`]).
+//! * **replan** — continue at N-1 on a re-derived plan (backend-supplied
+//!   when the spec carries one; renormalization otherwise).
+//!
+//! Every phase is wall-clock timed into a [`RecoveryMeasurement`], which
+//! the runtime backend maps onto the same `ScalingReport.recovery`
+//! schema netsim and the analytic model fill — the three-way
+//! cross-check `repro failover --backend runtime` closes.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::checkpoint;
+use crate::collectives::GroupTopology;
+use crate::coordinator::{
+    MicrobatchPlan, ParamSnapshot, SyncSgdCoordinator,
+};
+use crate::netsim::RecoveryPolicy;
+use crate::plan::PartitionPlan;
+
+/// The deterministic killer's trigger: worker `worker` dies at global
+/// step `at_step` (the step is aborted and recovered, mirroring netsim's
+/// `fail_at`/`fail_node` semantics).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    pub at_step: u64,
+    pub worker: usize,
+}
+
+/// Everything the recovery path needs, fixed at training start.
+pub struct RecoveryPlanner {
+    pub policy: RecoveryPolicy,
+    /// where the checkpoint writer publishes (stall restores from here)
+    pub checkpoint_dir: PathBuf,
+    /// step-0 state: the restore source when the failure lands before
+    /// the first checkpoint hits disk
+    pub initial: ParamSnapshot,
+    pub plan_before: Option<PartitionPlan>,
+    /// degraded plan for `replan` (backend re-derives it on the actual
+    /// fabric); [`PartitionPlan::renormalize_for`] is the fallback
+    pub replan_to: Option<PartitionPlan>,
+    pub micro: usize,
+    pub global_mb: usize,
+    pub artifact: String,
+}
+
+/// Measured recovery outcome — the runtime analogue of netsim's
+/// `RecoveryOutcome`, filled with wall-clock seconds instead of
+/// simulated ones.
+#[derive(Debug, Clone)]
+pub struct RecoveryMeasurement {
+    pub policy: RecoveryPolicy,
+    pub failed_step: u64,
+    pub dead_worker: usize,
+    pub workers_before: usize,
+    pub workers_after: usize,
+    /// leader-side failure surfacing + in-flight fold drain
+    pub detect_s: f64,
+    /// checkpoint read + bit-exact state restore (stall only)
+    pub restore_s: f64,
+    /// steps replayed from the restored checkpoint (stall only)
+    pub replay_steps: u64,
+    /// wall seconds spent re-running replayed steps (trainer-accumulated)
+    pub replay_s: f64,
+    /// degraded-plan derivation (replan; renormalization under shrink)
+    pub replan_s: f64,
+    /// coordinator rebuild + minibatch respread at the new worker count
+    pub redistribution_s: f64,
+    pub plan_after: Option<PartitionPlan>,
+    /// step the training loop resumes from (== checkpoint step under
+    /// stall; == the failed step under shrink/replan)
+    pub resume_step: u64,
+    /// mean samples/s before the failure (trainer-filled)
+    pub pre_samples_per_s: f64,
+    /// mean samples/s after recovery completed (trainer-filled)
+    pub post_samples_per_s: f64,
+    /// mean wall seconds per step after recovery (trainer-filled)
+    pub post_iteration_s: f64,
+}
+
+impl RecoveryMeasurement {
+    /// Total wall seconds of lost forward progress: detection + restore
+    /// + replayed compute + replan + redistribution (zero where a phase
+    /// does not apply to the policy).
+    pub fn stall_s(&self) -> f64 {
+        self.detect_s + self.restore_s + self.replay_s + self.replan_s + self.redistribution_s
+    }
+}
+
+/// Respread the global minibatch over the surviving workers. The
+/// microbatch size is pinned by the AOT artifact ABI, so the only free
+/// knob is the global minibatch: keep it when `(workers × micro)`
+/// divides it, otherwise trim down to the nearest multiple (never below
+/// one microbatch per survivor). Deterministic; documented in DESIGN.md.
+pub fn respread(global_mb: usize, workers: usize, micro: usize) -> Result<MicrobatchPlan> {
+    ensure!(workers >= 1, "respread needs at least one survivor");
+    ensure!(micro >= 1, "microbatch must be positive");
+    let unit = workers * micro;
+    let mb = if global_mb >= unit { (global_mb / unit) * unit } else { unit };
+    MicrobatchPlan::new(mb, workers, micro)
+        .with_context(|| format!("respreading MB {global_mb} over {workers} survivors"))
+}
+
+/// Recover a coordinator whose worker `dead_worker` died during
+/// `failed_step`. Consumes the old coordinator (its comm thread drains
+/// on the handoff) and returns a healthy replacement plus the measured
+/// disruption. `topos_for` maps a partition plan + worker count onto
+/// per-tensor exchange topologies (the trainer's manifest-name mapping;
+/// tests pass a stub).
+pub fn recover(
+    coord: SyncSgdCoordinator,
+    failed_step: u64,
+    dead_worker: usize,
+    detect_s: f64,
+    rp: &RecoveryPlanner,
+    topos_for: &mut dyn FnMut(Option<&PartitionPlan>, usize) -> Vec<Option<GroupTopology>>,
+) -> Result<(SyncSgdCoordinator, RecoveryMeasurement)> {
+    let workers_before = coord.workers();
+    let overlap = coord.overlap_enabled();
+    let mut params = coord.into_params();
+    let mut meas = RecoveryMeasurement {
+        policy: rp.policy,
+        failed_step,
+        dead_worker,
+        workers_before,
+        workers_after: workers_before,
+        detect_s,
+        restore_s: 0.0,
+        replay_steps: 0,
+        replay_s: 0.0,
+        replan_s: 0.0,
+        redistribution_s: 0.0,
+        plan_after: None,
+        resume_step: failed_step,
+        pre_samples_per_s: 0.0,
+        post_samples_per_s: 0.0,
+        post_iteration_s: 0.0,
+    };
+    match rp.policy {
+        RecoveryPolicy::Stall => {
+            // restart the dead worker (logical workers restart for free
+            // in-process; the state roll-back is the real cost) and roll
+            // every survivor back to the last durable checkpoint
+            let t0 = Instant::now();
+            let snap = match checkpoint::restore(&rp.checkpoint_dir)
+                .context("loading checkpoint for stall recovery")?
+            {
+                Some(s) => s,
+                None => rp.initial.clone(),
+            };
+            ensure!(
+                snap.step <= failed_step,
+                "checkpoint step {} is past the failed step {failed_step}",
+                snap.step
+            );
+            params.restore(&snap).context("restoring checkpoint state")?;
+            meas.restore_s = t0.elapsed().as_secs_f64();
+            meas.resume_step = snap.step;
+            meas.replay_steps = failed_step - snap.step;
+            meas.plan_after = rp.plan_before.clone();
+
+            let t1 = Instant::now();
+            let mb = MicrobatchPlan::new(rp.global_mb, workers_before, rp.micro)
+                .context("rebuilding the microbatch plan after stall recovery")?;
+            let topos = topos_for(rp.plan_before.as_ref(), workers_before);
+            let mut next = SyncSgdCoordinator::with_store(&rp.artifact, params, mb, topos);
+            next.set_overlap(overlap);
+            meas.redistribution_s = t1.elapsed().as_secs_f64();
+            Ok((next, meas))
+        }
+        RecoveryPolicy::Shrink | RecoveryPolicy::Replan => {
+            ensure!(
+                workers_before >= 2,
+                "cannot drop below one worker: {workers_before} before the failure"
+            );
+            let n1 = workers_before - 1;
+            meas.workers_after = n1;
+
+            // degraded plan: replan prefers the backend's re-derived
+            // plan, shrink renormalizes §3.3-style; both snap hybrid
+            // group shapes onto divisors of N-1
+            let t0 = Instant::now();
+            meas.plan_after = match rp.policy {
+                RecoveryPolicy::Replan => rp
+                    .replan_to
+                    .clone()
+                    .or_else(|| rp.plan_before.as_ref().map(|p| p.renormalize_for(n1 as u64))),
+                _ => rp.plan_before.as_ref().map(|p| p.renormalize_for(n1 as u64)),
+            };
+            meas.replan_s = t0.elapsed().as_secs_f64();
+
+            // survivors keep the current state (the failed step never
+            // committed); respread the minibatch and rebuild at N-1
+            let t1 = Instant::now();
+            let mb = respread(rp.global_mb, n1, rp.micro)?;
+            let topos = topos_for(meas.plan_after.as_ref(), n1);
+            let mut next = SyncSgdCoordinator::with_store(&rp.artifact, params, mb, topos);
+            next.set_overlap(overlap);
+            meas.redistribution_s = t1.elapsed().as_secs_f64();
+            Ok((next, meas))
+        }
+    }
+}
+
+/// A worker died with no fault configured — a genuine panic in user
+/// compute. Turned into a hard error by the trainer.
+pub fn unexpected_death(worker: usize) -> anyhow::Error {
+    anyhow::anyhow!("worker {worker} died with no injected fault configured (genuine panic)")
+}
+
+/// Parse a recovery policy name through the registry (single source of
+/// truth for the inventory error).
+pub fn policy_from_str(name: &str) -> Result<RecoveryPolicy> {
+    crate::experiment::registry::recovery_policy(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respread_keeps_divisible_minibatch_and_trims_otherwise() {
+        // 16 over 4→3 survivors at micro 2: unit 6, trims to 12
+        let p = respread(16, 3, 2).unwrap();
+        assert_eq!((p.global_mb, p.workers, p.micro), (12, 3, 2));
+        // divisible stays exact
+        let p = respread(16, 2, 2).unwrap();
+        assert_eq!((p.global_mb, p.workers, p.micro), (16, 2, 2));
+        // never below one microbatch per survivor
+        let p = respread(2, 3, 2).unwrap();
+        assert_eq!((p.global_mb, p.workers, p.micro), (6, 3, 2));
+        assert!(respread(16, 0, 2).is_err());
+    }
+
+    #[test]
+    fn policy_names_resolve_through_the_registry() {
+        assert_eq!(policy_from_str("stall").unwrap(), RecoveryPolicy::Stall);
+        assert_eq!(policy_from_str("shrink").unwrap(), RecoveryPolicy::Shrink);
+        assert_eq!(policy_from_str("replan").unwrap(), RecoveryPolicy::Replan);
+        let err = policy_from_str("reboot").unwrap_err().to_string();
+        assert!(err.contains("stall"), "inventory missing from {err:?}");
+    }
+}

@@ -3,11 +3,14 @@
 //! loop. Works for every model family in the zoo (CNN images, CD-DNN
 //! frames, GPT tokens) by dispatching on the manifest's model config.
 
-use anyhow::{bail, Context, Result};
+pub mod fault;
+
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::analytic::comm_model::Strategy;
+use crate::checkpoint::CheckpointWriter;
 use crate::collectives::GroupTopology;
-use crate::coordinator::{MicrobatchPlan, SgdConfig, SyncSgdCoordinator};
+use crate::coordinator::{MicrobatchPlan, SgdConfig, StepResult, SyncSgdCoordinator};
 use crate::data::{Corpus, FrameDataset, ImageDataset, Prefetcher};
 use crate::metrics::{History, StepRecord};
 use crate::plan::PartitionPlan;
@@ -37,6 +40,20 @@ pub struct TrainConfig {
     /// tensors of model/hybrid layer groups take the plan's shard-owner
     /// exchange path in the coordinator. `None` = pure data parallelism.
     pub plan: Option<PartitionPlan>,
+    /// write an async checkpoint every N steps (0 = off); driven by
+    /// `execution.checkpoint` in the spec
+    pub checkpoint_every: u64,
+    /// checkpoint directory (`None` = `checkpoints/<model>`)
+    pub checkpoint_dir: Option<String>,
+    /// inject a deterministic worker death at this step (`cluster.fail_at`)
+    pub fail_at: Option<u64>,
+    /// which worker dies (`cluster.fail_node`)
+    pub fail_worker: usize,
+    /// recovery policy name: stall | shrink | replan (`cluster.recovery`)
+    pub recovery: String,
+    /// degraded plan for `replan` recovery (backend re-derives it at N-1;
+    /// `None` falls back to `PartitionPlan::renormalize_for`)
+    pub recovery_plan: Option<PartitionPlan>,
 }
 
 impl Default for TrainConfig {
@@ -54,6 +71,12 @@ impl Default for TrainConfig {
             optimizer: "sgd".into(),
             prefetch: 8,
             plan: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            fail_at: None,
+            fail_worker: 0,
+            recovery: "stall".into(),
+            recovery_plan: None,
         }
     }
 }
@@ -112,10 +135,14 @@ type Micro = Vec<HostTensor>;
 /// Build the per-microbatch data generator for a model family, producing
 /// items in the exact consumption order of the coordinator (worker-major
 /// within a step, steps consecutive). Runs on the dedicated data thread.
+/// `first_step` lets the trainer respawn the stream mid-run after a
+/// recovery (checkpoint replay restarts from the restored step; a shrink
+/// restarts at the failed step under the degraded plan).
 fn spawn_data_thread(
     fam: &Family,
     micro: usize,
     plan: &MicrobatchPlan,
+    first_step: u64,
     steps: u64,
     seed: u64,
     prefetch: usize,
@@ -125,13 +152,13 @@ fn spawn_data_thread(
     // flatten plan starts in consumption order
     let starts: Vec<u64> =
         plan.per_worker.iter().flatten().map(|&s| s as u64).collect();
-    let total_items = steps.saturating_mul(total_micro);
+    let total_items = steps.saturating_sub(first_step).saturating_mul(total_micro);
     match fam {
         Family::Cnn { image, in_ch, classes } => {
             let ds = ImageDataset::new(*image, *in_ch, *classes, seed);
             let (image, in_ch) = (*image, *in_ch);
             Prefetcher::spawn(prefetch, total_items, move |i| {
-                let step = i / total_micro;
+                let step = first_step + i / total_micro;
                 let start = step * global_mb + starts[(i % total_micro) as usize];
                 let b = ds.batch(start, micro);
                 vec![
@@ -144,7 +171,7 @@ fn spawn_data_thread(
             let ds = FrameDataset::new(*in_dim, *senones, seed);
             let in_dim = *in_dim;
             Prefetcher::spawn(prefetch, total_items, move |i| {
-                let step = i / total_micro;
+                let step = first_step + i / total_micro;
                 let start = step * global_mb + starts[(i % total_micro) as usize];
                 let b = ds.batch(start, micro);
                 vec![
@@ -157,7 +184,7 @@ fn spawn_data_thread(
             let c = Corpus::new(*vocab, seed);
             let seq = *seq;
             Prefetcher::spawn(prefetch, total_items, move |i| {
-                let step = i / total_micro;
+                let step = first_step + i / total_micro;
                 let start = step * global_mb + starts[(i % total_micro) as usize];
                 let b = c.batch(start, micro, seq);
                 vec![HostTensor::i32(vec![micro, seq], b.tokens)]
@@ -171,6 +198,8 @@ pub struct TrainOutcome {
     pub history: History,
     pub evals: Vec<EvalRecord>,
     pub final_params: Vec<Vec<f32>>,
+    /// measured fault recovery (only when `fail_at` fired)
+    pub recovery: Option<fault::RecoveryMeasurement>,
 }
 
 /// Validation metrics (CNN eval artifacts return loss/top1/top5).
@@ -200,18 +229,69 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let sgd = SgdConfig { lr: cfg.lr, momentum: cfg.momentum, weight_decay: 0.0, optimizer };
     // plan-directed exchange sharding: map each manifest parameter tensor
     // onto its layer group's topology (manifest params are named
-    // `<layer>.<suffix>`, zoo layers `<layer>`)
-    let tensor_topos: Vec<Option<GroupTopology>> = rt
+    // `<layer>.<suffix>`, zoo layers `<layer>`); the names are kept so a
+    // recovery can re-map them onto the degraded plan
+    let param_names: Vec<String> = rt
         .manifest()
         .model(&cfg.model)?
         .params
         .iter()
-        .map(|(name, _)| tensor_topology(cfg.plan.as_ref(), name, cfg.workers))
+        .map(|(name, _)| name.clone())
+        .collect();
+    let tensor_topos: Vec<Option<GroupTopology>> = param_names
+        .iter()
+        .map(|name| tensor_topology(cfg.plan.as_ref(), name, cfg.workers))
         .collect();
     let mut coord =
         SyncSgdCoordinator::with_plan(&artifact, params, plan.clone(), sgd, tensor_topos);
 
-    let data = spawn_data_thread(&fam, micro, &plan, cfg.steps, cfg.seed, cfg.prefetch.max(1));
+    // checkpoint + fault plumbing (both off by default)
+    let ckpt_dir = std::path::PathBuf::from(
+        cfg.checkpoint_dir.clone().unwrap_or_else(|| format!("checkpoints/{}", cfg.model)),
+    );
+    let mut writer = if cfg.checkpoint_every > 0 {
+        Some(CheckpointWriter::spawn(&ckpt_dir)?)
+    } else {
+        None
+    };
+    let mut fault_armed: Option<fault::FaultSpec> = None;
+    let mut planner: Option<fault::RecoveryPlanner> = None;
+    if let Some(at) = cfg.fail_at {
+        ensure!(
+            at + 2 <= cfg.steps,
+            "fail_at {at} leaves no post-recovery step (steps = {})",
+            cfg.steps
+        );
+        ensure!(
+            cfg.fail_worker < cfg.workers,
+            "fail_node {} out of range for {} workers",
+            cfg.fail_worker,
+            cfg.workers
+        );
+        let policy = fault::policy_from_str(&cfg.recovery)?;
+        if policy != crate::netsim::RecoveryPolicy::Stall {
+            ensure!(
+                cfg.workers >= 2,
+                "{} recovery cannot drop below one worker (workers = {})",
+                cfg.recovery,
+                cfg.workers
+            );
+        }
+        fault_armed = Some(fault::FaultSpec { at_step: at, worker: cfg.fail_worker });
+        planner = Some(fault::RecoveryPlanner {
+            policy,
+            checkpoint_dir: ckpt_dir.clone(),
+            initial: coord.params.snapshot(),
+            plan_before: cfg.plan.clone(),
+            replan_to: cfg.recovery_plan.clone(),
+            micro,
+            global_mb: cfg.global_mb,
+            artifact: artifact.clone(),
+        });
+    }
+
+    let mut data =
+        spawn_data_thread(&fam, micro, &plan, 0, cfg.steps, cfg.seed, cfg.prefetch.max(1));
     let compile_s = rt.preload(&artifact)?;
     if cfg.log_every > 0 {
         println!(
@@ -223,32 +303,94 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let mut history = History::default();
     let mut evals = Vec::new();
     let mut stall_ns_prev = 0u64;
-    for step in 0..cfg.steps {
+    let mut recovery: Option<fault::RecoveryMeasurement> = None;
+    // pre/post-failure throughput accounting for the recovery report
+    let (mut pre_wall_s, mut pre_samples) = (0.0f64, 0.0f64);
+    let (mut post_wall_s, mut post_samples, mut post_steps) = (0.0f64, 0.0f64, 0u64);
+    let mut step: u64 = 0;
+    while step < cfg.steps {
+        let kill = fault_armed.filter(|f| f.at_step == step).map(|f| f.worker);
         let t0 = std::time::Instant::now();
-        let stats = coord.step(rt, &mut |_w, _m, _start| {
-            data.next().expect("data thread ended early")
-        })?;
+        let outcome = coord.step_outcome(
+            rt,
+            &mut |_w, _m, _start| data.next().expect("data thread ended early"),
+            kill,
+        )?;
         let dt = t0.elapsed().as_secs_f64();
+        let stats = match outcome {
+            StepResult::Done(stats) => stats,
+            StepResult::Died { worker } => {
+                fault_armed.take().ok_or_else(|| fault::unexpected_death(worker))?;
+                let rp = planner.as_ref().expect("armed fault implies a planner");
+                // make queued checkpoints durable before restoring from disk
+                if let Some(w) = writer.as_ref() {
+                    w.flush(std::time::Duration::from_secs(10))
+                        .context("flushing checkpoints before recovery")?;
+                }
+                let mut topos_for = |p: Option<&PartitionPlan>, workers: usize| {
+                    param_names.iter().map(|n| tensor_topology(p, n, workers)).collect()
+                };
+                let (next, meas) = fault::recover(coord, step, worker, dt, rp, &mut topos_for)?;
+                coord = next;
+                if cfg.log_every > 0 {
+                    println!(
+                        "  FAULT step {:>5}  worker {worker} died; {:?} recovery: resume step {} on {} workers ({} replayed)",
+                        step, meas.policy, meas.resume_step, meas.workers_after, meas.replay_steps
+                    );
+                }
+                // fresh data stream in the new plan's consumption order
+                data = spawn_data_thread(
+                    &fam, micro, &coord.plan, meas.resume_step, cfg.steps, cfg.seed,
+                    cfg.prefetch.max(1),
+                );
+                stall_ns_prev = 0;
+                step = meas.resume_step;
+                recovery = Some(meas);
+                continue;
+            }
+        };
         // this step's data-thread stall (the prefetcher counter is
         // cumulative; difference it per step)
         let stall_ns = data.stall_ns.get();
         let data_stall_us = (stall_ns - stall_ns_prev) as f64 / 1e3;
         stall_ns_prev = stall_ns;
+        // a shrink/replan recovery changed the effective minibatch
+        let step_mb = coord.plan.global_mb as f64;
         history.push(StepRecord {
             step,
             loss: stats.loss,
-            images_per_s: cfg.global_mb as f64 / dt,
+            images_per_s: step_mb / dt,
             compute_s: stats.compute_s,
             comm_wait_s: stats.comm_wait_s,
             overlap_s: stats.overlap_s,
             data_stall_us,
         });
+        match recovery.as_mut() {
+            None => {
+                pre_wall_s += dt;
+                pre_samples += step_mb;
+            }
+            // replayed steps are lost progress, not post-recovery throughput
+            Some(m) if step < m.failed_step => m.replay_s += dt,
+            Some(_) => {
+                post_wall_s += dt;
+                post_samples += step_mb;
+                post_steps += 1;
+            }
+        }
+        if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+            if let Some(w) = writer.as_mut() {
+                // submit-and-forget: a still-busy writer skips the interval
+                // rather than stalling the training loop
+                w.submit(coord.params.snapshot());
+            }
+        }
         if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             println!(
                 "  step {:>5}  loss {:.4}  {:>8.1} samples/s  (compute {:.0}ms, comm-wait {:.1}ms, overlap {:.1}ms, data-stall {:.0}us)",
                 step,
                 stats.loss,
-                cfg.global_mb as f64 / dt,
+                step_mb / dt,
                 stats.compute_s * 1e3,
                 stats.comm_wait_s * 1e3,
                 stats.overlap_s * 1e3,
@@ -270,10 +412,23 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 }
             }
         }
+        step += 1;
+    }
+    if let Some(m) = recovery.as_mut() {
+        m.pre_samples_per_s = if pre_wall_s > 0.0 { pre_samples / pre_wall_s } else { 0.0 };
+        m.post_samples_per_s = if post_wall_s > 0.0 { post_samples / post_wall_s } else { 0.0 };
+        m.post_iteration_s =
+            if post_steps > 0 { post_wall_s / post_steps as f64 } else { 0.0 };
+    }
+    if fault_armed.is_some() {
+        bail!("fail_at {:?} never fired (steps = {})", cfg.fail_at, cfg.steps);
     }
     let final_params = coord.params.tensors.clone();
     coord.shutdown();
-    Ok(TrainOutcome { history, evals, final_params })
+    if let Some(w) = writer.take() {
+        w.shutdown();
+    }
+    Ok(TrainOutcome { history, evals, final_params, recovery })
 }
 
 /// Run the model's eval artifact on a held-out deterministic batch.

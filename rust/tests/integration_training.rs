@@ -29,6 +29,7 @@ fn cfg(model: &str, workers: usize, mb: usize, steps: u64) -> TrainConfig {
         optimizer: "sgd".into(),
         prefetch: 8,
         plan: None,
+        ..TrainConfig::default()
     }
 }
 

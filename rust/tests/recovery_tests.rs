@@ -1,0 +1,478 @@
+//! Fault-injection + recovery suite (ISSUE 9).
+//!
+//! Drives the coordinator's fault seam (`step_with_compute_guarded`)
+//! with synthetic deterministic gradients — no PJRT artifacts needed —
+//! through the same recovery glue the trainer uses: an async
+//! [`CheckpointWriter`], [`fault::recover`] under all three policies,
+//! and replay. The central acceptance property: a worker death at a
+//! configured step, recovered under `stall`, leaves losses and final
+//! parameters **bit-identical** (f32 `to_bits`) to an uninterrupted
+//! run — across worker counts x optimizers x both exchange pipelines.
+//!
+//! The final test (artifact-gated) runs the real runtime backend with a
+//! live injected death and cross-checks its measured recovery section
+//! against netsim's prediction in the shared report schema.
+
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use pcl_dnn::checkpoint::CheckpointWriter;
+use pcl_dnn::collectives::GroupTopology;
+use pcl_dnn::coordinator::state::Optimizer;
+use pcl_dnn::coordinator::{
+    MicrobatchPlan, SgdConfig, StepResult, SyncSgdCoordinator,
+};
+use pcl_dnn::plan::PartitionPlan;
+use pcl_dnn::trainer::fault::{self, RecoveryMeasurement, RecoveryPlanner};
+
+// ---- deterministic synthetic gradients (overlap_tests idiom) --------
+
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+fn grad_val(seed: u64, step: u64, w: u64, m: u64, t: u64, i: u64) -> f32 {
+    let e = i.wrapping_mul(0x2545_f491_4f6c_dd1d);
+    let h = mix(seed ^ mix(step ^ mix(w ^ mix(m ^ mix(t ^ e)))));
+    (h >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+}
+
+fn init_params(shapes: &[usize], seed: u64) -> Vec<Vec<f32>> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(t, &n)| {
+            (0..n).map(|i| 0.2 * grad_val(seed, 7, 7, 7, t as u64, i as u64)).collect()
+        })
+        .collect()
+}
+
+/// Synthetic worker compute that is a PURE function of (step, worker,
+/// tensor, element) — the step index comes from an external cell the
+/// training loop advances, so a replayed step recomputes the exact same
+/// gradients an uninterrupted run saw. (The call-counter idiom of
+/// overlap_tests cannot replay.)
+fn make_compute(
+    seed: u64,
+    step_cell: Rc<Cell<u64>>,
+) -> impl FnMut(usize, &[usize], &mut [Vec<f32>]) -> anyhow::Result<(f64, u64)> {
+    move |w: usize, starts: &[usize], acc: &mut [Vec<f32>]| {
+        let step = step_cell.get();
+        let mut loss = 0.0f64;
+        for (m, _start) in starts.iter().enumerate() {
+            for (t, buf) in acc.iter_mut().enumerate() {
+                for (i, x) in buf.iter_mut().enumerate() {
+                    let g = grad_val(seed, step, w as u64, m as u64, t as u64, i as u64);
+                    if m == 0 {
+                        *x = g;
+                    } else {
+                        *x += g;
+                    }
+                }
+            }
+            loss += grad_val(seed ^ 0x1055, step, w as u64, m as u64, 0, u64::MAX) as f64;
+        }
+        Ok((loss.abs() + 0.1, starts.len() as u64))
+    }
+}
+
+fn sgd_for(opt: &str) -> SgdConfig {
+    match opt {
+        "sgd" => {
+            SgdConfig { lr: 0.05, momentum: 0.0, weight_decay: 0.0, optimizer: Optimizer::Sgd }
+        }
+        "momentum" => {
+            SgdConfig { lr: 0.05, momentum: 0.9, weight_decay: 5e-4, optimizer: Optimizer::Sgd }
+        }
+        "adam" => {
+            SgdConfig { lr: 3e-3, momentum: 0.0, weight_decay: 0.0, optimizer: Optimizer::adam() }
+        }
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcl-dnn-recovery-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+struct Fault {
+    at_step: u64,
+    worker: usize,
+    policy: &'static str,
+}
+
+struct RunResult {
+    /// loss bits indexed by step (replays overwrite in place, exactly
+    /// like the committed trajectory they must reproduce)
+    losses: Vec<u64>,
+    param_bits: Vec<Vec<u32>>,
+    recovery: Option<RecoveryMeasurement>,
+}
+
+/// The trainer's loop at the synthetic level: checkpoint every
+/// `checkpoint_every` steps (0 = off), kill `fault.worker` at
+/// `fault.at_step`, recover under `fault.policy`, run to `steps`.
+fn run_training(
+    shapes: &[usize],
+    workers: usize,
+    opt: &str,
+    overlap: bool,
+    steps: u64,
+    fault: Option<Fault>,
+    checkpoint_every: u64,
+    dir: &Path,
+    seed: u64,
+) -> RunResult {
+    let global_mb = workers * 4;
+    let micro = 2usize;
+    let plan = MicrobatchPlan::new(global_mb, workers, micro).unwrap();
+    let mut coord = SyncSgdCoordinator::with_plan(
+        "synthetic",
+        init_params(shapes, seed),
+        plan,
+        sgd_for(opt),
+        Vec::new(),
+    );
+    coord.set_overlap(overlap);
+
+    let mut writer = (checkpoint_every > 0).then(|| CheckpointWriter::spawn(dir).unwrap());
+    let planner = fault.as_ref().map(|f| RecoveryPlanner {
+        policy: fault::policy_from_str(f.policy).unwrap(),
+        checkpoint_dir: dir.to_path_buf(),
+        initial: coord.params.snapshot(),
+        plan_before: None,
+        replan_to: None,
+        micro,
+        global_mb,
+        artifact: "synthetic".into(),
+    });
+    let mut armed = fault;
+
+    let step_cell = Rc::new(Cell::new(0u64));
+    let mut compute = make_compute(seed, step_cell.clone());
+    let mut losses = vec![0u64; steps as usize];
+    let mut recovery: Option<RecoveryMeasurement> = None;
+    let mut step = 0u64;
+    while step < steps {
+        step_cell.set(step);
+        let kill = armed.as_ref().filter(|f| f.at_step == step).map(|f| f.worker);
+        match coord.step_with_compute_guarded(&mut compute, kill).unwrap() {
+            StepResult::Done(stats) => {
+                losses[step as usize] = stats.loss.to_bits();
+                if checkpoint_every > 0 && (step + 1) % checkpoint_every == 0 {
+                    if let Some(w) = writer.as_mut() {
+                        w.submit(coord.params.snapshot());
+                    }
+                }
+                step += 1;
+            }
+            StepResult::Died { worker } => {
+                let f = armed.take().expect("death without an armed fault");
+                assert_eq!(worker, f.worker, "wrong worker died");
+                assert_eq!(step, f.at_step, "death at the wrong step");
+                let rp = planner.as_ref().unwrap();
+                if let Some(w) = writer.as_ref() {
+                    w.flush(std::time::Duration::from_secs(10)).unwrap();
+                }
+                let mut topos_for = |_: Option<&PartitionPlan>,
+                                     _: usize|
+                 -> Vec<Option<GroupTopology>> { Vec::new() };
+                let (next, meas) =
+                    fault::recover(coord, step, worker, 0.0, rp, &mut topos_for).unwrap();
+                coord = next;
+                step = meas.resume_step;
+                recovery = Some(meas);
+            }
+        }
+    }
+    let param_bits = coord
+        .params
+        .tensors
+        .iter()
+        .map(|t| t.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    if let Some(w) = writer.take() {
+        w.shutdown();
+    }
+    RunResult { losses, param_bits, recovery }
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, ctx: &str) {
+    for (s, (la, lb)) in a.losses.iter().zip(&b.losses).enumerate() {
+        assert_eq!(
+            la,
+            lb,
+            "{ctx}: loss bits diverged at step {s} ({} vs {})",
+            f64::from_bits(*la),
+            f64::from_bits(*lb)
+        );
+    }
+    assert_eq!(a.param_bits.len(), b.param_bits.len(), "{ctx}: tensor count");
+    for (t, (ta, tb)) in a.param_bits.iter().zip(&b.param_bits).enumerate() {
+        for (i, (xa, xb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(xa, xb, "{ctx}: tensor {t} elem {i} diverged");
+        }
+    }
+}
+
+/// The acceptance property: an injected worker death recovered under
+/// `stall` (restore last checkpoint + replay) reproduces the
+/// uninterrupted run bit-for-bit — losses AND final parameters —
+/// across workers x optimizers, on both exchange pipelines.
+#[test]
+fn stall_recovery_is_bit_identical_to_uninterrupted_run() {
+    let shapes = [129usize, 517, 33];
+    let steps = 8u64;
+    let mut seed = 0x9c0_u64;
+    for workers in [2usize, 4, 8] {
+        for opt in ["sgd", "momentum", "adam"] {
+            seed = mix(seed);
+            for overlap in [true, false] {
+                let ctx = format!("workers={workers} opt={opt} overlap={overlap}");
+                let dir = tmp_dir(&format!("stall-{workers}-{opt}-{overlap}"));
+                let clean = run_training(
+                    &shapes, workers, opt, overlap, steps, None, 0, &dir, seed,
+                );
+                assert!(clean.recovery.is_none());
+                // kill the last worker at step 5 with checkpoints every
+                // 2 steps: restores step 4's checkpoint, replays 4
+                let faulted = run_training(
+                    &shapes,
+                    workers,
+                    opt,
+                    overlap,
+                    steps,
+                    Some(Fault { at_step: 5, worker: workers - 1, policy: "stall" }),
+                    2,
+                    &dir,
+                    seed,
+                );
+                let meas = faulted.recovery.as_ref().expect("fault never fired");
+                assert_eq!(meas.resume_step, 4, "{ctx}");
+                assert_eq!(meas.replay_steps, 1, "{ctx}");
+                assert_eq!(meas.workers_after, workers, "{ctx}");
+                assert!(meas.restore_s >= 0.0 && meas.stall_s() >= 0.0, "{ctx}");
+                assert_bit_identical(&clean, &faulted, &ctx);
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+/// Stall with NO checkpoint on disk falls back to the step-0 snapshot
+/// and replays the whole prefix — still bit-identical.
+#[test]
+fn stall_without_checkpoints_replays_from_step_zero() {
+    let shapes = [257usize, 65];
+    let dir = tmp_dir("stall-nockpt");
+    let clean = run_training(&shapes, 4, "momentum", true, 6, None, 0, &dir, 0xfee1);
+    let faulted = run_training(
+        &shapes,
+        4,
+        "momentum",
+        true,
+        6,
+        Some(Fault { at_step: 3, worker: 0, policy: "stall" }),
+        0, // checkpointing off entirely
+        &dir,
+        0xfee1,
+    );
+    let meas = faulted.recovery.as_ref().unwrap();
+    assert_eq!(meas.resume_step, 0, "no checkpoint => restart from scratch");
+    assert_eq!(meas.replay_steps, 3);
+    assert_bit_identical(&clean, &faulted, "stall-nockpt");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `shrink` and `replan` continue at N-1 survivors: the run completes,
+/// the measurement reflects the degraded fleet, and the survivors keep
+/// the pre-failure state (the failed step never committed, so the first
+/// post-recovery step starts from exactly the step-N-1 parameters).
+#[test]
+fn shrink_and_replan_continue_at_n_minus_one() {
+    let shapes = [129usize, 513];
+    for policy in ["shrink", "replan"] {
+        for workers in [2usize, 4, 8] {
+            let ctx = format!("policy={policy} workers={workers}");
+            let dir = tmp_dir(&format!("{policy}-{workers}"));
+            let faulted = run_training(
+                &shapes,
+                workers,
+                "momentum",
+                true,
+                7,
+                Some(Fault { at_step: 3, worker: 0, policy }),
+                2,
+                &dir,
+                0xd00d,
+            );
+            let meas = faulted.recovery.as_ref().unwrap_or_else(|| panic!("{ctx}: no fault"));
+            assert_eq!(meas.workers_before, workers, "{ctx}");
+            assert_eq!(meas.workers_after, workers - 1, "{ctx}");
+            // no rollback: the failed step is re-run on the survivors
+            assert_eq!(meas.resume_step, 3, "{ctx}");
+            assert_eq!(meas.replay_steps, 0, "{ctx}");
+            assert!(meas.restore_s == 0.0, "{ctx}: shrink/replan never restore");
+            assert!(meas.redistribution_s >= 0.0, "{ctx}");
+            // every step has a committed loss (none skipped or doubled)
+            assert!(faulted.losses.iter().all(|&l| l != 0), "{ctx}: missing step loss");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// The degraded-minibatch respread under a plan: renormalize_for + the
+/// trainer's minibatch trim compose for a hybrid plan (the shapes the
+/// runtime recovery actually rebuilds with).
+#[test]
+fn respread_composes_with_renormalized_plans() {
+    // MB 16 over 4 workers, micro 2 -> 3 survivors: unit 6, MB trims
+    // to 12, per-worker spreads stay uniform
+    let p = fault::respread(16, 3, 2).unwrap();
+    assert_eq!((p.global_mb, p.workers, p.micro), (12, 3, 2));
+    assert_eq!(p.per_worker.len(), 3);
+    assert!(p.per_worker.iter().all(|w| w.len() == 2));
+    // already-divisible minibatches survive untouched
+    let p = fault::respread(24, 3, 2).unwrap();
+    assert_eq!(p.global_mb, 24);
+    // a 2-worker fleet losing a node still trains (1 survivor)
+    let p = fault::respread(8, 1, 2).unwrap();
+    assert_eq!((p.global_mb, p.workers), (8, 1));
+}
+
+/// Recovered coordinators keep working for many more steps (no leaked
+/// comm-thread state, no poisoned pools) — run a long tail after a
+/// shrink and after a stall back to back.
+#[test]
+fn recovered_coordinator_survives_a_long_tail() {
+    let shapes = [1031usize];
+    for policy in ["stall", "shrink"] {
+        let dir = tmp_dir(&format!("tail-{policy}"));
+        let out = run_training(
+            &shapes,
+            4,
+            "adam",
+            true,
+            20,
+            Some(Fault { at_step: 2, worker: 1, policy }),
+            3,
+            &dir,
+            0xcafe,
+        );
+        assert!(out.recovery.is_some(), "{policy}: fault never fired");
+        assert!(out.losses.iter().all(|&l| l != 0), "{policy}: missing step loss");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---- the real thing: runtime backend + artifacts (gated) ------------
+
+/// Live injected death through the PJRT trainer: the runtime backend
+/// emits a non-null measured recovery section that cross-checks
+/// netsim's prediction of the same spec in the shared schema.
+#[test]
+fn runtime_backend_recovery_cross_checks_netsim() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use pcl_dnn::experiment::{backend_by_name, run_runtime, ExperimentSpec, RecoveryReport};
+    use pcl_dnn::util::json::Json;
+
+    // stale checkpoints from an earlier run would carry a step past the
+    // failure point; the suite owns this directory
+    let _ = std::fs::remove_dir_all("artifacts/checkpoints");
+
+    let mut spec = ExperimentSpec::default();
+    spec.cluster.nodes = 2;
+    spec.cluster.fail_at = Some(2);
+    spec.cluster.fail_node = 1;
+    spec.parallelism.iterations = 6;
+    spec.minibatch.global = 16;
+    spec.execution.steps = 8;
+    spec.execution.log_every = 0;
+    spec.execution.checkpoint = Some(2);
+
+    for policy in ["stall", "shrink", "replan"] {
+        spec.cluster.recovery = policy.into();
+        let (rep, out) = run_runtime(&spec)
+            .unwrap_or_else(|e| panic!("runtime run failed under {policy}: {e:#}"));
+        assert!(
+            !matches!(rep.recovery, Json::Null),
+            "{policy}: runtime report recovery section is null"
+        );
+        let rec = RecoveryReport::from_json(&rep.recovery).unwrap();
+        assert_eq!(rec.policy, policy);
+        assert_eq!(rec.fail_at, 2, "{policy}");
+        assert_eq!(rec.fail_node, 1, "{policy}");
+        assert_eq!(rec.nodes_before, 2, "{policy}");
+        assert_eq!(rec.nodes_after, if policy == "stall" { 2 } else { 1 }, "{policy}");
+        assert!(rec.stall_s >= 0.0 && rec.stall_s.is_finite(), "{policy}: {}", rec.stall_s);
+        assert!(rec.post_samples_per_s > 0.0, "{policy}");
+        let meas = out.recovery.expect("outcome recovery");
+        assert_eq!(meas.workers_after as u64, rec.nodes_after);
+
+        // netsim prices the same spec in the same schema — the numbers
+        // differ (simulated fabric vs shared-memory host), the shape and
+        // policy semantics must not
+        let net = backend_by_name("netsim").unwrap().run(&spec).unwrap();
+        let nrec = RecoveryReport::from_json(&net.recovery)
+            .unwrap_or_else(|e| panic!("netsim recovery section: {e:#}"));
+        assert_eq!(nrec.policy, rec.policy);
+        assert_eq!(nrec.nodes_after, rec.nodes_after, "{policy}");
+        assert!(nrec.post_efficiency > 0.0, "{policy}");
+        // both ends of the cross-check express post-failure efficiency
+        // on the same scale (a fraction of ideal, not a throughput)
+        assert!(rec.post_efficiency > 0.0 && rec.post_efficiency < 3.0, "{policy}: {}", rec.post_efficiency);
+    }
+    let _ = std::fs::remove_dir_all("artifacts/checkpoints");
+}
+
+/// The trainer rejects fault configs that cannot produce a measurable
+/// recovery instead of silently ignoring them.
+#[test]
+fn trainer_validates_fault_configuration() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use pcl_dnn::runtime::Runtime;
+    use pcl_dnn::trainer::{train, TrainConfig};
+    let mut rt = Runtime::new("artifacts").unwrap();
+    let base = TrainConfig {
+        model: "vgg_tiny".into(),
+        workers: 2,
+        global_mb: 16,
+        steps: 4,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    // fail_at too late to leave a post-recovery step
+    let mut c = base.clone();
+    c.fail_at = Some(3);
+    assert!(train(&mut rt, &c).is_err());
+    // dead worker out of range
+    let mut c = base.clone();
+    c.fail_at = Some(1);
+    c.fail_worker = 2;
+    assert!(train(&mut rt, &c).is_err());
+    // shrink below one worker
+    let mut c = base.clone();
+    c.workers = 1;
+    c.global_mb = 8;
+    c.fail_at = Some(1);
+    c.fail_worker = 0;
+    c.recovery = "shrink".into();
+    assert!(train(&mut rt, &c).is_err());
+    // unknown policy
+    let mut c = base;
+    c.fail_at = Some(1);
+    c.recovery = "reboot".into();
+    assert!(train(&mut rt, &c).is_err());
+}
