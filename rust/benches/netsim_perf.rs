@@ -58,6 +58,7 @@ fn main() {
             plan: PartitionPlan::paper_recipe(&net, nodes, 512, 1.0),
             collective: choice,
             degraded_plan: None,
+            ..Default::default()
         };
         let fleet = FleetConfig::homogeneous(nodes as usize);
 
@@ -128,6 +129,7 @@ fn main() {
             plan: PartitionPlan::paper_recipe(&net, nodes, 512, 1.0),
             collective: collective::Choice::Auto,
             degraded_plan: None,
+            ..Default::default()
         };
         let fleet = FleetConfig::homogeneous(nodes as usize);
 

@@ -3,6 +3,7 @@
 
 
 
+use crate::analytic::machine::FabricSpec;
 use crate::models::{Layer, LayerKind};
 use crate::models::layers::SIZE_DATA;
 
@@ -99,6 +100,26 @@ pub fn optimal_groups(layer: &Layer, minibatch: u64, n: u64, overlap: f64) -> u6
 /// worked example).
 pub fn optimal_groups_continuous(ofm: u64, minibatch: u64, n: u64) -> f64 {
     ((n * minibatch) as f64 / ofm as f64).sqrt()
+}
+
+/// α-β cost of one sharded parameter-server exchange for a layer's
+/// gradients under ssp / async-ps sync modes: each node *pushes* its
+/// gradient shard-wise to N servers (co-located one per node) and
+/// *pulls* the refreshed weights back. With the shard layout each
+/// direction moves `bytes * (N-1)/N` off-node, pipelined across shards,
+/// so the α term is one push hop plus one pull hop — no log(N) rounds,
+/// no ring convoy. This is strictly cheaper than either collective
+/// schedule, which is exactly why relaxed-sync modes win under skew.
+/// Both the netsim fleet builder and the analytic cross-check price PS
+/// traffic with this same closed form (no fabric contention is modeled
+/// for PS flows), which is what keeps the two substrates within the
+/// clean-fabric agreement bound.
+pub fn ps_exchange_s(fabric: &FabricSpec, weight_bytes: u64, nodes: u64) -> f64 {
+    if nodes <= 1 || weight_bytes == 0 {
+        return 0.0;
+    }
+    let off_node = weight_bytes as f64 * (nodes - 1) as f64 / nodes as f64;
+    2.0 * (fabric.latency_s + fabric.sw_latency_s) + 2.0 * off_node / fabric.effective_bw()
 }
 
 /// Pick the best strategy for a layer (the paper's recipe: data-parallel
@@ -208,5 +229,25 @@ mod tests {
     fn strategy_for_fc_head_is_hybrid_or_model() {
         let s = best_strategy(&fc4096(), 256, 64, 1.0);
         assert!(matches!(s, Strategy::Hybrid { .. } | Strategy::Model), "{s:?}");
+    }
+
+    #[test]
+    fn ps_exchange_alpha_beta_shape() {
+        use crate::analytic::machine::Platform;
+        let fabric = Platform::cori().fabric;
+        // degenerate cases cost nothing
+        assert_eq!(ps_exchange_s(&fabric, 0, 8), 0.0);
+        assert_eq!(ps_exchange_s(&fabric, 1 << 20, 1), 0.0);
+        // α term: two hops regardless of node count
+        let alpha = 2.0 * (fabric.latency_s + fabric.sw_latency_s);
+        let tiny = ps_exchange_s(&fabric, 8, 8);
+        assert!((tiny - alpha).abs() / alpha < 0.01, "{tiny} vs {alpha}");
+        // β term grows with (N-1)/N — monotone in N, bounded by 2B/bw
+        let bytes = 64u64 << 20;
+        let t8 = ps_exchange_s(&fabric, bytes, 8);
+        let t64 = ps_exchange_s(&fabric, bytes, 64);
+        assert!(t64 > t8, "{t64} !> {t8}");
+        let cap = alpha + 2.0 * bytes as f64 / fabric.effective_bw();
+        assert!(t64 < cap, "{t64} !< {cap}");
     }
 }

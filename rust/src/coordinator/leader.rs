@@ -24,6 +24,7 @@
 //!   buffer, then the exchange runs. The bit-identity property suite
 //!   (`tests/overlap_tests.rs`) pins streaming to this oracle.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -147,6 +148,13 @@ pub struct SyncSgdCoordinator {
     artifact: String,
     /// streaming overlapped exchange (default) vs serial reference
     overlap: bool,
+    /// bounded-staleness window (`parallelism.sync`): how many computed
+    /// gradient sets may wait parked behind the in-flight fold chain
+    /// before the leader blocks. 0 = BSP (today's fully synchronous
+    /// step); ssp{K} parks up to K sets; async-ps parks up to `workers`.
+    /// Folds still run in rank order, so parameters are bit-identical
+    /// across windows — the window only moves *when* the leader stalls.
+    staleness: usize,
     /// recycled tensor-aligned gradient buffer sets; bounded, so peak
     /// gradient memory is constant in the worker count
     pool: Vec<Vec<Vec<f32>>>,
@@ -202,6 +210,7 @@ impl SyncSgdCoordinator {
             overlap: overlap_env_enabled(
                 std::env::var("REPRO_RUNTIME_OVERLAP").ok().as_deref(),
             ),
+            staleness: 0,
             pool: Vec::new(),
             sets_allocated: 0,
             read_scratch,
@@ -220,6 +229,18 @@ impl SyncSgdCoordinator {
     /// Pin the pipeline explicitly (tests/benches; overrides the env).
     pub fn set_overlap(&mut self, on: bool) {
         self.overlap = on;
+    }
+
+    /// Set the bounded-staleness window (0 = BSP, the default). Only the
+    /// streaming pipeline consults it; the serial reference is BSP by
+    /// construction.
+    pub fn set_staleness(&mut self, window: usize) {
+        self.staleness = window;
+    }
+
+    /// The active bounded-staleness window.
+    pub fn staleness(&self) -> usize {
+        self.staleness
     }
 
     /// Gradient-buffer sets this coordinator ever allocated — the peak-
@@ -355,9 +376,13 @@ impl SyncSgdCoordinator {
         // `sums[t]` is the rank-ordered running fold; it starts as worker
         // 0's buffers and cycles leader -> comm thread -> leader per
         // contributing worker. `reclaim` rebuilds the contributing
-        // worker's set from completions for recycling.
+        // worker's set from completions for recycling. `parked` is the
+        // bounded-staleness backlog: computed sets waiting for the fold
+        // chain (ranks kept so folds stay in rank order — the
+        // bit-identity invariant holds for every window).
         let mut sums: Vec<Vec<f32>> = Vec::new();
         let mut reclaim: Vec<Vec<f32>> = Vec::with_capacity(n_tensors);
+        let mut parked: VecDeque<(usize, Vec<Vec<f32>>)> = VecDeque::new();
         let mut pending = 0usize;
 
         for w in 0..workers {
@@ -370,7 +395,7 @@ impl SyncSgdCoordinator {
                 None => {
                     // worker died: abort without touching params
                     self.put_set(cur);
-                    self.abort_inflight(pending, sums, reclaim)?;
+                    self.abort_inflight(pending, sums, reclaim, parked)?;
                     return Ok(StepResult::Died { worker: w });
                 }
             };
@@ -380,10 +405,57 @@ impl SyncSgdCoordinator {
                 sums = cur;
                 continue;
             }
-            // Bring worker w−1's folds home before resubmitting the sums.
-            // In the steady state they finished during this worker's
-            // compute (that is the overlap); blocked time here is true
-            // exposed comm wait.
+            parked.push_back((w, cur));
+            if w + 1 == workers {
+                // the last set is submitted by the tail drain so its
+                // completions are never retired, only applied
+                break;
+            }
+            // Fold the parked backlog. Under BSP (window 0) worker w−1's
+            // folds come home before worker w's are submitted — in the
+            // steady state they finished during this worker's compute
+            // (that is the overlap); blocked time here is true exposed
+            // comm wait. Under ssp{K}/async-ps up to K sets may stay
+            // parked while the next worker computes: the leader only
+            // blocks once the backlog exceeds the staleness window.
+            loop {
+                while pending > 0 {
+                    match self.comm.try_complete() {
+                        Some(done) => {
+                            retire(done, &mut sums, &mut reclaim);
+                            pending -= 1;
+                        }
+                        None => break,
+                    }
+                }
+                if pending == 0 {
+                    if !reclaim.is_empty() {
+                        self.put_set(std::mem::take(&mut reclaim));
+                    }
+                    match parked.pop_front() {
+                        Some((rank, set)) => {
+                            pending += set.len();
+                            self.submit_fold(rank, set, &mut sums, &mut wait_s);
+                        }
+                        None => break,
+                    }
+                } else if parked.len() > self.staleness {
+                    // backlog over the window: this wait is the exposed
+                    // synchronization stall the sync axis trades away
+                    let done = self.next_completion(&mut wait_s)?;
+                    retire(done, &mut sums, &mut reclaim);
+                    pending -= 1;
+                } else {
+                    // within the window: go compute the next worker
+                    break;
+                }
+            }
+        }
+
+        // flush the remaining backlog (always holds at least the last
+        // worker's set when workers > 1): each set waits out the previous
+        // folds, then submits — still in rank order
+        while let Some((rank, set)) = parked.pop_front() {
             while pending > 0 {
                 let done = self.next_completion(&mut wait_s)?;
                 retire(done, &mut sums, &mut reclaim);
@@ -392,36 +464,8 @@ impl SyncSgdCoordinator {
             if !reclaim.is_empty() {
                 self.put_set(std::mem::take(&mut reclaim));
             }
-            // submit this worker's contributions tensor-by-tensor, in
-            // rank order (the bit-identity invariant)
-            for (t, contrib) in cur.into_iter().enumerate() {
-                let mut req = CommRequest {
-                    id: t as u64,
-                    op: CommOp::Reduce { rank: w },
-                    bufs: vec![std::mem::take(&mut sums[t]), contrib],
-                };
-                loop {
-                    match self.comm.submit(req) {
-                        Ok(()) => break,
-                        Err(back) => {
-                            // Queue full: spin until the comm thread makes
-                            // room (it drains independently; completions
-                            // buffer in the unbounded channel). Cannot
-                            // happen with the spawn depth of 2×n_tensors —
-                            // at most n_tensors folds are ever in flight —
-                            // but stay correct for any depth. Consuming
-                            // completions here instead would let a last-
-                            // worker fold bypass the applying tail drain.
-                            req = back;
-                            let ty = Instant::now();
-                            std::thread::yield_now();
-                            wait_s += ty.elapsed().as_secs_f64();
-                        }
-                    }
-                }
-                pending += 1;
-            }
-            // worker w's folds now overlap worker w+1's compute
+            pending += set.len();
+            self.submit_fold(rank, set, &mut sums, &mut wait_s);
         }
 
         if workers == 1 {
@@ -598,6 +642,46 @@ impl SyncSgdCoordinator {
         Ok(StepResult::Done(stats))
     }
 
+    /// Submit one worker's gradient set tensor-by-tensor, in rank order
+    /// (the bit-identity invariant), cycling the running sums out to the
+    /// comm thread. Callers must have drained `pending` to 0 first — the
+    /// sums buffers travel with the requests.
+    fn submit_fold(
+        &mut self,
+        rank: usize,
+        set: Vec<Vec<f32>>,
+        sums: &mut [Vec<f32>],
+        wait_s: &mut f64,
+    ) {
+        for (t, contrib) in set.into_iter().enumerate() {
+            let mut req = CommRequest {
+                id: t as u64,
+                op: CommOp::Reduce { rank },
+                bufs: vec![std::mem::take(&mut sums[t]), contrib],
+            };
+            loop {
+                match self.comm.submit(req) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        // Queue full: spin until the comm thread makes
+                        // room (it drains independently; completions
+                        // buffer in the unbounded channel). Cannot
+                        // happen with the spawn depth of 2×n_tensors —
+                        // at most n_tensors folds are ever in flight
+                        // even with a parked backlog — but stay correct
+                        // for any depth. Consuming completions here
+                        // instead would let a last-worker fold bypass
+                        // the applying tail drain.
+                        req = back;
+                        let ty = Instant::now();
+                        std::thread::yield_now();
+                        *wait_s += ty.elapsed().as_secs_f64();
+                    }
+                }
+            }
+        }
+    }
+
     /// Next fold completion: poll first, then block (timing only the
     /// blocked portion — the comm_wait ≥ 0 invariant holds by shape).
     fn next_completion(&self, wait_s: &mut f64) -> Result<CommCompletion> {
@@ -647,6 +731,7 @@ impl SyncSgdCoordinator {
         mut pending: usize,
         mut sums: Vec<Vec<f32>>,
         mut reclaim: Vec<Vec<f32>>,
+        parked: VecDeque<(usize, Vec<Vec<f32>>)>,
     ) -> Result<()> {
         while pending > 0 {
             let done = self.wait_completion_backoff(ABORT_WAIT_BUDGET)?;
@@ -658,6 +743,10 @@ impl SyncSgdCoordinator {
         }
         if !sums.is_empty() {
             self.put_set(sums);
+        }
+        // parked bounded-staleness backlog: never submitted, recycle as-is
+        for (_rank, set) in parked {
+            self.put_set(set);
         }
         Ok(())
     }

@@ -31,6 +31,39 @@ impl MicrobatchPlan {
         Ok(MicrobatchPlan { global_mb, workers, micro, per_worker })
     }
 
+    /// Build a plan that tolerates worker counts not dividing the
+    /// microbatch count by spreading the excess microbatches one-per-
+    /// worker from the front — the recovery path's way of keeping the
+    /// global minibatch (a hyperparameter) intact when survivors no
+    /// longer divide it. Still requires `micro | global_mb`, and every
+    /// worker must receive at least one microbatch (a worker with an
+    /// empty slate would contribute a stale gradient buffer to the
+    /// all-reduce). Identical layout to [`MicrobatchPlan::new`] whenever
+    /// the division is exact.
+    pub fn uneven(global_mb: usize, workers: usize, micro: usize) -> Result<Self> {
+        ensure!(workers >= 1 && micro >= 1, "degenerate plan");
+        ensure!(
+            global_mb % micro == 0,
+            "global minibatch {global_mb} not divisible by micro({micro})"
+        );
+        let total = global_mb / micro;
+        ensure!(
+            total >= workers,
+            "global minibatch {global_mb} yields {total} microbatches of {micro} — fewer \
+             than {workers} workers, so some worker would fold an empty (stale) gradient \
+             into the all-reduce"
+        );
+        let (base, extra) = (total / workers, total % workers);
+        let mut per_worker = Vec::with_capacity(workers);
+        let mut off = 0;
+        for w in 0..workers {
+            let n = base + usize::from(w < extra);
+            per_worker.push((0..n).map(|m| off + m * micro).collect());
+            off += n * micro;
+        }
+        Ok(MicrobatchPlan { global_mb, workers, micro, per_worker })
+    }
+
     /// Total microbatch executions per step.
     pub fn total_micro(&self) -> usize {
         self.global_mb / self.micro
@@ -92,5 +125,44 @@ mod tests {
     fn indivisible_rejected() {
         assert!(MicrobatchPlan::new(10, 4, 2).is_err());
         assert!(MicrobatchPlan::new(16, 3, 2).is_err());
+    }
+
+    #[test]
+    fn uneven_matches_new_when_divisible() {
+        for (mb, w, micro) in [(16, 4, 2), (16, 1, 4), (32, 4, 4), (16, 2, 2)] {
+            assert_eq!(
+                MicrobatchPlan::uneven(mb, w, micro).unwrap(),
+                MicrobatchPlan::new(mb, w, micro).unwrap(),
+                "{mb}/{w}/{micro}"
+            );
+        }
+    }
+
+    #[test]
+    fn uneven_spreads_remainder_without_trimming() {
+        // 16 samples over 3 survivors at micro 2: 8 microbatches split
+        // 3/3/2 — the global minibatch stays 16, no samples dropped
+        let p = MicrobatchPlan::uneven(16, 3, 2).unwrap();
+        assert_eq!(p.global_mb, 16);
+        let counts: Vec<usize> = p.per_worker.iter().map(Vec::len).collect();
+        assert_eq!(counts, vec![3, 3, 2]);
+        let mut starts: Vec<usize> = p.per_worker.iter().flatten().copied().collect();
+        starts.sort_unstable();
+        assert_eq!(starts, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+        // disjoint contiguous coverage of the whole batch
+        let samples: Vec<usize> =
+            starts.iter().flat_map(|&s| s..s + p.micro).collect();
+        assert_eq!(samples, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uneven_rejects_empty_workers_and_ragged_micro() {
+        // fewer microbatches than workers → some worker gets nothing →
+        // its recycled gradient buffer would poison the fold
+        let e = MicrobatchPlan::uneven(2, 3, 2).unwrap_err().to_string();
+        assert!(e.contains("fewer"), "{e}");
+        // micro must still divide the global minibatch
+        assert!(MicrobatchPlan::uneven(15, 3, 2).is_err());
+        assert!(MicrobatchPlan::uneven(16, 0, 2).is_err());
     }
 }

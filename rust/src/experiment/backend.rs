@@ -12,7 +12,7 @@ use crate::analytic::machine::Platform;
 use crate::flowsim;
 use crate::models::NetDescriptor;
 use crate::netsim::cluster::{self, simulate_training, simulate_training_fleet, SimConfig};
-use crate::netsim::{FleetConfig, RecoveryPolicy};
+use crate::netsim::{FleetConfig, RecoveryPolicy, SyncMode};
 use crate::plan::{self, planner, PartitionPlan, PlanCache};
 use crate::runtime::Runtime;
 use crate::trainer::{self, TrainConfig, TrainOutcome};
@@ -20,7 +20,7 @@ use crate::util::json::Json;
 
 use super::registry;
 use super::report::{RecoveryReport, ScalingReport};
-use super::spec::ExperimentSpec;
+use super::spec::{validate_fail_window, ExperimentSpec};
 
 /// A substrate that can answer an [`ExperimentSpec`].
 ///
@@ -128,16 +128,10 @@ fn check_failure_event(spec: &ExperimentSpec) -> Result<()> {
         }
         // fail_at == iterations-1 would put the failure iteration inside
         // the steady-state measurement window itself (last minus
-        // previous), silently reporting the disruption as throughput
-        if fail_at.saturating_add(2) > spec.parallelism.iterations {
-            bail!(
-                "cluster.fail_at ({fail_at}) must leave at least one full iteration after \
-                 the failure (fail_at + 2 <= parallelism.iterations = {}) or the event \
-                 would pollute the steady-state window; raise parallelism.iterations \
-                 (fail_at + 3 also leaves a warm-up iteration) or lower fail_at",
-                spec.parallelism.iterations
-            );
-        }
+        // previous), silently reporting the disruption as throughput —
+        // the same window rule the runtime checks against execution.steps
+        validate_fail_window(fail_at as u64, spec.parallelism.iterations as u64,
+            "parallelism.iterations")?;
         registry::recovery_policy(&spec.cluster.recovery)?;
     }
     Ok(())
@@ -242,6 +236,15 @@ fn sim_config(
         );
     }
     check_failure_event(spec)?;
+    let sync = registry::sync_mode(&spec.parallelism.sync)?;
+    if !sync.is_bsp() && spec.cluster.fail_at.is_some() {
+        bail!(
+            "parallelism.sync = {:?} does not model failure recovery: the drift-bounded \
+             timeline has no global barrier to anchor the recovery split on (drop \
+             cluster.fail_at or set parallelism.sync = \"bsp\")",
+            spec.parallelism.sync
+        );
+    }
     let plan = plan_for(spec, net, platform, nodes)?;
     // the degraded plan applies when this SimConfig runs at the spec's
     // node count — which includes every sweep point (run_sweep rewrites
@@ -259,6 +262,7 @@ fn sim_config(
         plan,
         collective: registry::collective(&spec.collective)?,
         degraded_plan,
+        sync,
     })
 }
 
@@ -290,6 +294,7 @@ fn flow_sim_config(
         plan,
         collective: registry::collective(&spec.collective)?,
         degraded_plan: None,
+        sync: SyncMode::Bsp,
     })
 }
 
@@ -404,6 +409,9 @@ impl Backend for AnalyticBackend {
                 stall_s,
                 replan_s,
                 redistribution_s: redist_s,
+                // the simulators respread the minibatch without an
+                // ABI-pinned microbatch, so nothing is ever dropped
+                residual_mb: 0,
                 post_iteration_s: post.iteration_s,
                 post_samples_per_s: post.images_per_s,
                 post_efficiency: (post.images_per_s / base.images_per_s) / nodes_after as f64,
@@ -483,6 +491,7 @@ impl Backend for FleetSimBackend {
                 stall_s: out.stall_s,
                 replan_s: out.replan_s,
                 redistribution_s: out.redistribution_s,
+                residual_mb: 0,
                 post_iteration_s: r.iteration_s,
                 post_samples_per_s: r.images_per_s,
                 post_efficiency: (r.images_per_s / base.images_per_s)
@@ -530,6 +539,13 @@ impl Backend for FlowSimBackend {
             bail!(
                 "flowsim models failure-free runs only: cluster.fail_at needs \
                  per-message fidelity (--backend netsim)"
+            );
+        }
+        if !registry::sync_mode(&spec.parallelism.sync)?.is_bsp() {
+            bail!(
+                "flowsim models bulk-synchronous runs only: parallelism.sync = {:?} \
+                 needs per-message fidelity (--backend netsim)",
+                spec.parallelism.sync
             );
         }
         let net = spec.model.resolve()?;
@@ -719,6 +735,7 @@ pub fn runtime_recovery_json(
         stall_s: m.stall_s(),
         replan_s: m.replan_s,
         redistribution_s: m.redistribution_s,
+        residual_mb: m.residual_mb as u64,
         post_iteration_s: m.post_iteration_s,
         post_samples_per_s: m.post_samples_per_s,
         post_efficiency,
@@ -760,6 +777,7 @@ pub fn train_config(spec: &ExperimentSpec) -> TrainConfig {
         fail_worker: spec.cluster.fail_node,
         recovery: spec.cluster.recovery.clone(),
         recovery_plan: None,
+        sync: spec.parallelism.sync.clone(),
     }
 }
 

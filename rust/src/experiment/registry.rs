@@ -10,7 +10,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::analytic::machine::Platform;
 use crate::models::{zoo, NetDescriptor};
 use crate::netsim::collective::Choice;
-use crate::netsim::{RecoveryPolicy, Topology};
+use crate::netsim::{RecoveryPolicy, SyncMode, Topology};
 
 fn gpt_mini() -> NetDescriptor {
     zoo::gpt_descriptor("gpt_mini", 384, 6, 128)
@@ -126,6 +126,49 @@ pub fn recovery_policy_name(p: RecoveryPolicy) -> &'static str {
     }
 }
 
+/// Synchronization modes (`ExperimentSpec.parallelism.sync`): `bsp` =
+/// the paper's bulk-synchronous barrier (default, every substrate),
+/// `ssp{K}` = stale-synchronous with a bounded staleness window of K
+/// iterations (`ssp{0}` normalizes to `bsp` — a zero window *is* the
+/// barrier), `async-ps` = fully asynchronous parameter server
+/// (unbounded drift). The braces carry the window: `ssp{2}`.
+pub const SYNC_MODES: &[&str] = &["bsp", "ssp{staleness}", "async-ps"];
+
+pub fn sync_mode(name: &str) -> Result<SyncMode> {
+    match name {
+        "bsp" => Ok(SyncMode::Bsp),
+        "async-ps" | "async_ps" => Ok(SyncMode::AsyncPs),
+        other => {
+            if let Some(inner) =
+                other.strip_prefix("ssp{").and_then(|s| s.strip_suffix('}'))
+            {
+                let staleness: usize = inner.trim().parse().map_err(|_| {
+                    anyhow!(
+                        "sync mode {other:?}: staleness {inner:?} is not an integer \
+                         (available: {})",
+                        SYNC_MODES.join("|")
+                    )
+                })?;
+                Ok(SyncMode::Ssp { staleness }.normalized())
+            } else {
+                bail!(
+                    "unknown sync mode {name:?} (available: {})",
+                    SYNC_MODES.join("|")
+                )
+            }
+        }
+    }
+}
+
+/// Canonical spec-file name of a sync mode (inverse of [`sync_mode`]).
+pub fn sync_mode_name(m: SyncMode) -> String {
+    match m {
+        SyncMode::Bsp => "bsp".into(),
+        SyncMode::Ssp { staleness } => format!("ssp{{{staleness}}}"),
+        SyncMode::AsyncPs => "async-ps".into(),
+    }
+}
+
 pub fn collective(name: &str) -> Result<Choice> {
     Ok(match name {
         "auto" => Choice::Auto,
@@ -209,6 +252,26 @@ mod tests {
         }
         let e = recovery_policy("reboot").unwrap_err().to_string();
         assert!(e.contains("stall") && e.contains("replan") && e.contains("shrink"), "{e}");
+    }
+
+    #[test]
+    fn sync_modes_parse_normalize_and_list_inventory() {
+        assert_eq!(sync_mode("bsp").unwrap(), SyncMode::Bsp);
+        assert_eq!(sync_mode("async-ps").unwrap(), SyncMode::AsyncPs);
+        assert_eq!(sync_mode("ssp{2}").unwrap(), SyncMode::Ssp { staleness: 2 });
+        // a zero staleness window IS the barrier — normalized at parse so
+        // ssp{0} is bit-identical to bsp on every substrate
+        assert_eq!(sync_mode("ssp{0}").unwrap(), SyncMode::Bsp);
+        assert_eq!(sync_mode_name(sync_mode("ssp{3}").unwrap()), "ssp{3}");
+        assert_eq!(sync_mode_name(SyncMode::Bsp), "bsp");
+        assert_eq!(sync_mode_name(SyncMode::AsyncPs), "async-ps");
+        for bad in ["gossip", "ssp", "ssp{}", "ssp{two}", "async"] {
+            let e = sync_mode(bad).unwrap_err().to_string();
+            assert!(
+                e.contains("bsp") && e.contains("ssp{staleness}") && e.contains("async-ps"),
+                "inventory missing for {bad}: {e}"
+            );
+        }
     }
 
     #[test]

@@ -243,6 +243,11 @@ pub struct RecoveryReport {
     /// Charged weight-redistribution seconds (`shrink`/`replan`;
     /// likewise itemized).
     pub redistribution_s: f64,
+    /// Samples/step the post-failure respread had to drop because the
+    /// ABI-pinned microbatch stopped dividing the global minibatch
+    /// (0 = the minibatch hyperparameter survived the event intact;
+    /// uneven per-worker assignment absorbs survivor-count changes).
+    pub residual_mb: u64,
     /// Post-failure steady-state iteration seconds.
     pub post_iteration_s: f64,
     pub post_samples_per_s: f64,
@@ -269,6 +274,7 @@ pub const RECOVERY_KEYS: &[&str] = &[
     "post_samples_per_s",
     "redistribution_s",
     "replan_s",
+    "residual_mb",
     "stall_s",
 ];
 
@@ -283,6 +289,7 @@ impl RecoveryReport {
         m.insert("stall_s".to_string(), Json::Num(self.stall_s));
         m.insert("replan_s".to_string(), Json::Num(self.replan_s));
         m.insert("redistribution_s".to_string(), Json::Num(self.redistribution_s));
+        m.insert("residual_mb".to_string(), Json::Num(self.residual_mb as f64));
         m.insert("post_iteration_s".to_string(), Json::Num(self.post_iteration_s));
         m.insert("post_samples_per_s".to_string(), Json::Num(self.post_samples_per_s));
         m.insert("post_efficiency".to_string(), Json::Num(self.post_efficiency));
@@ -310,6 +317,7 @@ impl RecoveryReport {
             stall_s: get_f64(j, "stall_s")?,
             replan_s: get_f64(j, "replan_s")?,
             redistribution_s: get_f64(j, "redistribution_s")?,
+            residual_mb: j.get("residual_mb")?.as_u64()?,
             post_iteration_s: get_f64(j, "post_iteration_s")?,
             post_samples_per_s: get_f64(j, "post_samples_per_s")?,
             post_efficiency: get_f64(j, "post_efficiency")?,
@@ -321,15 +329,19 @@ impl RecoveryReport {
 
 /// The standard scaling-curve table (nodes, samples/s, speedup,
 /// efficiency) — one shared formatter for benches, examples and docs so
-/// schema changes propagate from a single place.
+/// schema changes propagate from a single place. Absent speedup /
+/// efficiency (backends without a free 1-node baseline, e.g. runtime)
+/// render as `—`; the JSON form keeps its `null` untouched.
 pub fn curve_table(reports: &[ScalingReport]) -> crate::metrics::Table {
     let mut t = crate::metrics::Table::new(&["nodes", "samples/s", "speedup", "efficiency"]);
     for r in reports {
         t.row(vec![
             r.nodes.to_string(),
             format!("{:.0}", r.samples_per_s),
-            format!("{:.1}x", r.speedup.unwrap_or(f64::NAN)),
-            format!("{:.0}%", 100.0 * r.efficiency.unwrap_or(f64::NAN)),
+            r.speedup.map(|v| format!("{v:.1}x")).unwrap_or_else(|| "—".into()),
+            r.efficiency
+                .map(|v| format!("{:.0}%", 100.0 * v))
+                .unwrap_or_else(|| "—".into()),
         ]);
     }
     t
@@ -458,6 +470,7 @@ mod tests {
             stall_s: 1.35,
             replan_s: 0.05,
             redistribution_s: 0.3,
+            residual_mb: 0,
             post_iteration_s: 0.21,
             post_samples_per_s: 2438.0,
             post_efficiency: 0.72,
@@ -482,6 +495,19 @@ mod tests {
         ScalingReport::check_schema(&round).unwrap();
         let back = ScalingReport::from_json(&round).unwrap();
         assert_eq!(RecoveryReport::from_json(&back.recovery).unwrap(), rec);
+    }
+
+    #[test]
+    fn absent_table_values_render_as_dash_not_nan() {
+        let mut r = sample();
+        r.speedup = None;
+        r.efficiency = None;
+        let rendered = curve_table(&[sample(), r.clone()]).render();
+        assert!(rendered.contains("90.1x") && rendered.contains("70%"), "{rendered}");
+        assert!(rendered.contains("—"), "{rendered}");
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        // the JSON form keeps null, untouched by the table fix
+        assert!(r.to_json().to_string().contains("\"efficiency\":null"));
     }
 
     #[test]

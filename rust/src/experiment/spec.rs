@@ -105,11 +105,17 @@ pub struct ParallelismSpec {
     pub overlap: f64,
     /// Simulated iterations (steady state = last minus previous).
     pub iterations: usize,
+    /// Synchronization mode: `bsp` (the paper's barrier, default) |
+    /// `ssp{K}` (bounded staleness window of K iterations) | `async-ps`
+    /// (fully asynchronous parameter server). Registry names
+    /// (`registry::SYNC_MODES`); non-bsp modes require a pure
+    /// data-parallel plan and no failure event.
+    pub sync: String,
 }
 
 impl Default for ParallelismSpec {
     fn default() -> Self {
-        ParallelismSpec { mode: "hybrid".into(), overlap: 1.0, iterations: 4 }
+        ParallelismSpec { mode: "hybrid".into(), overlap: 1.0, iterations: 4, sync: "bsp".into() }
     }
 }
 
@@ -302,6 +308,23 @@ fn validate_prefetch(prefetch: usize) -> Result<()> {
     Ok(())
 }
 
+/// One rule for the failure-injection window across every backend: the
+/// failed iteration plus the recovery iteration must both land before
+/// the run ends, and one post-recovery steady-state iteration must
+/// remain to measure. The bound differs per backend — the simulators
+/// count `parallelism.iterations`, the runtime counts
+/// `execution.steps` — so callers name theirs and the error carries it.
+pub fn validate_fail_window(fail_at: u64, bound: u64, bound_name: &str) -> Result<()> {
+    if fail_at.saturating_add(2) > bound {
+        bail!(
+            "cluster.fail_at is {fail_at} but {bound_name} is {bound}: the failure needs \
+             room for the recovery iteration plus one post-recovery steady-state iteration \
+             (fail_at + 2 <= {bound_name}; raise {bound_name} or lower fail_at)"
+        );
+    }
+    Ok(())
+}
+
 /// `execution.checkpoint` is an every-N-steps interval; 0 is not a
 /// meaningful period ("checkpoint every zero steps") and would divide by
 /// zero in the trainer's interval test. Null/absent is the way to turn
@@ -465,6 +488,7 @@ impl ExperimentSpec {
         par.insert("mode".to_string(), Json::Str(self.parallelism.mode.clone()));
         par.insert("overlap".to_string(), num(self.parallelism.overlap));
         par.insert("iterations".to_string(), num(self.parallelism.iterations as f64));
+        par.insert("sync".to_string(), Json::Str(self.parallelism.sync.clone()));
 
         let mut mb = BTreeMap::new();
         mb.insert("global".to_string(), num(self.minibatch.global as f64));
@@ -588,13 +612,15 @@ impl ExperimentSpec {
         registry::recovery_policy(&cluster.recovery)?;
 
         let p = section(j, "parallelism", &empty)?;
-        check_keys(p, &["mode", "overlap", "iterations"], "parallelism")?;
+        check_keys(p, &["mode", "overlap", "iterations", "sync"], "parallelism")?;
         let parallelism = ParallelismSpec {
             mode: get_str(p, "mode", &d.parallelism.mode)?,
             overlap: get_f64(p, "overlap", d.parallelism.overlap)?,
             iterations: get_usize(p, "iterations", d.parallelism.iterations)?,
+            sync: get_str(p, "sync", &d.parallelism.sync)?,
         };
         registry::plan_mode(&parallelism.mode)?; // validate early
+        registry::sync_mode(&parallelism.sync)?; // validate early
         validate_iterations(parallelism.iterations)?;
 
         let minibatch = match j.opt("minibatch") {
@@ -648,6 +674,19 @@ impl ExperimentSpec {
         // like every other registry name
         super::backend::backend_by_name(&execution.fidelity)
             .context("field execution.fidelity")?;
+
+        // one fail-at window rule for every backend, checked against the
+        // bound the spec's own fidelity will enforce (the backends
+        // re-check through the same helper at run time, since --backend
+        // can override the fidelity)
+        if let Some(at) = cluster.fail_at {
+            let (bound, bound_name) = if execution.fidelity == "runtime" {
+                (execution.steps, "execution.steps")
+            } else {
+                (parallelism.iterations as u64, "parallelism.iterations")
+            };
+            validate_fail_window(at as u64, bound, bound_name)?;
+        }
 
         let collective = get_str(j, "collective", &d.collective)?;
         registry::collective(&collective)?; // validate early
@@ -724,7 +763,7 @@ impl ExperimentSpec {
             "nodes", "topology", "radix", "oversub", "straggler_skew", "hetero", "fail_at",
             "fail_node", "recovery_s", "recovery", "congestion",
         ];
-        const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations"];
+        const PARALLELISM_KEYS: &[&str] = &["mode", "overlap", "iterations", "sync"];
         const EXECUTION_KEYS: &[&str] = &[
             "fidelity", "model", "workers", "steps", "lr", "momentum", "seed", "log_every",
             "eval_every", "optimizer", "prefetch", "checkpoint", "artifacts",
@@ -874,6 +913,10 @@ impl ExperimentSpec {
                     registry::plan_mode(value)?;
                     self.parallelism.mode = value.into()
                 }
+                "sync" => {
+                    registry::sync_mode(value)?;
+                    self.parallelism.sync = value.into()
+                }
                 "overlap" => self.parallelism.overlap = parsed(key, value)?,
                 "iterations" => {
                     let it: usize = parsed(key, value)?;
@@ -916,7 +959,7 @@ impl ExperimentSpec {
                 other => bail!(
                     "unknown --set key {other:?} (nodes, minibatch, model, platform, topology, \
                      radix, oversub, straggler_skew, hetero, fail_at, fail_node, recovery_s, \
-                     recovery, congestion, mode, overlap, iterations, collective, fidelity, \
+                     recovery, congestion, mode, sync, overlap, iterations, collective, fidelity, \
                      workers, steps, lr, momentum, seed, log_every, eval_every, optimizer, \
                      prefetch, checkpoint, artifacts, exec_model, name — or a dotted path like \
                      cluster.nodes, parallelism.mode, minibatch.global, execution.fidelity, \
@@ -942,6 +985,7 @@ mod tests {
         s.cluster.recovery = "replan".into();
         s.cluster.congestion = Some(0.0);
         s.parallelism.mode = "data".into();
+        s.parallelism.sync = "ssp{2}".into();
         s.collective = "ring".into();
         s.execution.workers = Some(4);
         s.execution.model = Some("vgg_tiny".into());
@@ -1052,6 +1096,7 @@ mod tests {
             ("cluster", "recovery", "shrink"),
             ("cluster", "congestion", "0"),
             ("parallelism", "mode", "data"),
+            ("parallelism", "sync", "ssp{2}"),
             ("parallelism", "overlap", "0.5"),
             ("parallelism", "iterations", "3"),
             ("minibatch", "global", "64"),
@@ -1108,6 +1153,67 @@ mod tests {
     fn invalid_mode_is_rejected_at_parse_time() {
         let e = ExperimentSpec::parse_str(r#"{"parallelism": {"mode": "async"}}"#);
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn sync_mode_validates_at_parse_and_set_time_with_inventory() {
+        // absent key defaults to the barrier — the bit-identity contract
+        let s = ExperimentSpec::parse_str(r#"{"model": "vgg_a"}"#).unwrap();
+        assert_eq!(s.parallelism.sync, "bsp");
+        let s =
+            ExperimentSpec::parse_str(r#"{"parallelism": {"sync": "async-ps"}}"#).unwrap();
+        assert_eq!(s.parallelism.sync, "async-ps");
+        // unknown values list the inventory at parse time...
+        let e = ExperimentSpec::parse_str(r#"{"parallelism": {"sync": "gossip"}}"#)
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("bsp") && msg.contains("ssp{staleness}") && msg.contains("async-ps"),
+            "{msg}"
+        );
+        // ...and at --set time, via both the flat alias and dotted path
+        let mut s = ExperimentSpec::default();
+        let e = format!("{:#}", s.apply_set("sync=gossip").unwrap_err());
+        assert!(e.contains("ssp{staleness}") && e.contains("async-ps"), "{e}");
+        let e = format!("{:#}", s.apply_set("parallelism.sync=ssp{nine}").unwrap_err());
+        assert!(e.contains("ssp{staleness}"), "{e}");
+        s.apply_set("sync=ssp{3}").unwrap();
+        assert_eq!(s.parallelism.sync, "ssp{3}");
+        s.apply_set("parallelism.sync=bsp").unwrap();
+        assert_eq!(s.parallelism.sync, "bsp");
+    }
+
+    #[test]
+    fn fail_window_is_one_rule_with_backend_specific_bounds() {
+        // simulators: fail_at + 2 <= parallelism.iterations
+        let e = ExperimentSpec::parse_str(
+            r#"{"cluster": {"fail_at": 3}, "parallelism": {"iterations": 4}}"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("fail_at") && msg.contains("parallelism.iterations"),
+            "{msg}"
+        );
+        assert!(ExperimentSpec::parse_str(
+            r#"{"cluster": {"fail_at": 2}, "parallelism": {"iterations": 4}}"#
+        )
+        .is_ok());
+        // runtime fidelity: the bound is execution.steps instead
+        let e = ExperimentSpec::parse_str(
+            r#"{"cluster": {"fail_at": 9}, "execution": {"fidelity": "runtime", "steps": 10}}"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("fail_at") && msg.contains("execution.steps"), "{msg}");
+        assert!(ExperimentSpec::parse_str(
+            r#"{"cluster": {"fail_at": 8}, "execution": {"fidelity": "runtime", "steps": 10}}"#
+        )
+        .is_ok());
+        // the helper itself is the shared rule
+        assert!(validate_fail_window(2, 4, "parallelism.iterations").is_ok());
+        let e = validate_fail_window(3, 4, "execution.steps").unwrap_err().to_string();
+        assert!(e.contains("execution.steps") && e.contains("fail_at + 2"), "{e}");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! repro run --spec specs/fig6_vgg.json --sweep-nodes 1,2,4,8,16 --out BENCH_fig6.json
 //! repro plan --spec specs/fig4.json --set nodes=64 [--validate netsim]
 //! repro failover --spec specs/fig4.json --policies stall,replan,shrink
+//! repro syncsweep --skews 0,0.2,0.4 --out BENCH_sync_modes.json
 //! repro schema                                     ScalingReport field list
 //! repro info                                       artifact/model inventory + platform
 //! repro analyze table1|cache-blocking|register-blocking|hybrid|fig3|kernel-blocking
@@ -54,6 +55,7 @@ fn run() -> Result<()> {
         Some("run") => run_spec(&opts),
         Some("plan") => plan_cmd(&opts),
         Some("failover") => failover(&opts),
+        Some("syncsweep") => syncsweep(&opts),
         Some("schema") => {
             for key in pcl_dnn::experiment::report::SCHEMA_KEYS {
                 println!("{key}");
@@ -67,8 +69,8 @@ fn run() -> Result<()> {
         Some("score") => score(&opts),
         _ => {
             eprintln!(
-                "usage: repro <run|plan|failover|schema|info|analyze|simulate|train|score> ... \
-                 (see README quickstart; `run --spec specs/<figure>.json` is the main entry)"
+                "usage: repro <run|plan|failover|syncsweep|schema|info|analyze|simulate|train|score> \
+                 ... (see README quickstart; `run --spec specs/<figure>.json` is the main entry)"
             );
             Ok(())
         }
@@ -518,6 +520,140 @@ fn failover(opts: &Opts) -> Result<()> {
     }
     let mut root = std::collections::BTreeMap::new();
     root.insert("policies".to_string(), Json::Arr(rows));
+    root.insert("spec".to_string(), Json::Str(spec.name.clone()));
+    let json = Json::Obj(root);
+    if opts.bool_flag("json") {
+        println!("{json}");
+    }
+    if let Some(out) = opts.str_opt("out") {
+        std::fs::write(out, format!("{}\n", json.pretty()))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `repro syncsweep [--spec <file>] [--set k=v,...]
+/// [--modes bsp,ssp{2},async-ps] [--skews 0,0.2,0.4] [--nodes 8]
+/// [--json] [--out BENCH_sync_modes.json]`
+///
+/// The sync-vs-async throughput frontier: every synchronization mode
+/// runs on the netsim backend at every straggler skew, tabulating
+/// iteration time, aggregate throughput, and the speedup over the BSP
+/// row at the same skew. The async-ps point at skew 0 is cross-checked
+/// against the analytic α-β parameter-server pricing on a clean fabric
+/// (the two substrates share the push/pull formula, so they must agree
+/// within 10%).
+fn syncsweep(opts: &Opts) -> Result<()> {
+    let mut spec = match opts.str_opt("spec") {
+        Some(path) => ExperimentSpec::load(path)?,
+        None => {
+            let mut s = ExperimentSpec::of(
+                "syncsweep",
+                &opts.str_or("net", "vgg_a"),
+                &opts.str_or("platform", "cori"),
+                opts.parse_or("nodes", 8u64)?,
+                opts.parse_or("minibatch", 256u64)?,
+            );
+            s.parallelism.mode = "data".into();
+            s
+        }
+    };
+    if let Some(sets) = opts.str_opt("set") {
+        spec.apply_set(sets)?;
+    }
+    // drift-bounded timelines need a pure data-parallel plan and no
+    // failure event (the non-bsp builders reject both)
+    spec.parallelism.mode = "data".into();
+    spec.cluster.fail_at = None;
+    // enough iterations for per-node drift to reach steady state
+    if spec.parallelism.iterations < 4 {
+        spec.parallelism.iterations = 4;
+    }
+    let modes: Vec<String> = opts
+        .str_or("modes", "bsp,ssp{2},async-ps")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().to_string())
+        .collect();
+    for m in &modes {
+        registry::sync_mode(m)?;
+    }
+    let skews: Vec<f64> = parse_list(&opts.str_or("skews", "0,0.2,0.4"), "skews")?;
+    println!(
+        "# syncsweep — {} x{} on {}, MB={} (netsim backend)",
+        spec.model.name(),
+        spec.cluster.nodes,
+        spec.platform,
+        spec.minibatch.global
+    );
+    let mut t = Table::new(&["sync", "skew", "iter ms", "samples/s", "vs bsp"]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &skew in &skews {
+        let mut bsp_iter: Option<f64> = None;
+        for mode in &modes {
+            let mut s = spec.clone();
+            s.parallelism.sync = mode.clone();
+            s.cluster.straggler_skew = skew;
+            let r = FleetSimBackend.run(&s)?;
+            if registry::sync_mode(mode)?.is_bsp() {
+                bsp_iter = Some(r.iteration_s);
+            }
+            t.row(vec![
+                mode.clone(),
+                format!("{skew:.2}"),
+                format!("{:.2}", r.iteration_s * 1e3),
+                format!("{:.0}", r.samples_per_s),
+                bsp_iter
+                    .map(|b| format!("{:.2}x", b / r.iteration_s))
+                    .unwrap_or_else(|| "—".into()),
+            ]);
+            let mut doc = std::collections::BTreeMap::new();
+            doc.insert("backend".to_string(), Json::Str(r.backend.clone()));
+            doc.insert("iteration_s".to_string(), Json::Num(r.iteration_s));
+            doc.insert("samples_per_s".to_string(), Json::Num(r.samples_per_s));
+            doc.insert("skew".to_string(), Json::Num(skew));
+            doc.insert("sync".to_string(), Json::Str(mode.clone()));
+            doc.insert(
+                "vs_bsp".to_string(),
+                match bsp_iter {
+                    Some(b) => Json::Num(b / r.iteration_s),
+                    None => Json::Null,
+                },
+            );
+            rows.push(Json::Obj(doc));
+        }
+    }
+    t.print();
+    // clean-fabric agreement gate: netsim's per-message PS exchange vs
+    // the analytic α-β closed form, on the async-ps mode where the
+    // collective is fully replaced
+    let mut c = spec.clone();
+    c.parallelism.sync = "async-ps".into();
+    c.cluster.straggler_skew = 0.0;
+    c.cluster.hetero = false;
+    c.cluster.congestion = Some(0.0);
+    let sim = FleetSimBackend.run(&c)?;
+    let ana = AnalyticBackend.run(&c)?;
+    let delta = (sim.iteration_s - ana.iteration_s) / ana.iteration_s;
+    println!(
+        "async-ps cross-check (clean fabric): netsim {:.2} ms vs analytic {:.2} ms ({:+.1}%)",
+        sim.iteration_s * 1e3,
+        ana.iteration_s * 1e3,
+        100.0 * delta
+    );
+    if delta.abs() > 0.10 {
+        bail!(
+            "netsim disagrees with the analytic parameter-server pricing by {:.1}% (> 10%)",
+            100.0 * delta.abs()
+        );
+    }
+    let mut check = std::collections::BTreeMap::new();
+    check.insert("analytic_iteration_s".to_string(), Json::Num(ana.iteration_s));
+    check.insert("delta".to_string(), Json::Num(delta));
+    check.insert("netsim_iteration_s".to_string(), Json::Num(sim.iteration_s));
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("cross_check".to_string(), Json::Obj(check));
+    root.insert("rows".to_string(), Json::Arr(rows));
     root.insert("spec".to_string(), Json::Str(spec.name.clone()));
     let json = Json::Obj(root);
     if opts.bool_flag("json") {

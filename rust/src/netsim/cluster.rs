@@ -52,7 +52,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::analytic::comm_model::Strategy;
+use crate::analytic::comm_model::{self, Strategy};
 use crate::analytic::compute_model;
 use crate::analytic::machine::Platform;
 use crate::analytic::FabricSpec;
@@ -67,6 +67,51 @@ use super::network::ns;
 
 const COMPUTE: usize = 0;
 const COMM: usize = 1;
+
+/// Synchronization discipline of the gradient exchange
+/// (`ExperimentSpec.parallelism.sync`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncMode {
+    /// Bulk-synchronous (the paper's contract): every node's iteration
+    /// t+1 forward gates on every node's iteration-t update through the
+    /// all-member gradient collective — the barrier *is* the collective.
+    #[default]
+    Bsp,
+    /// Stale-synchronous parameter server: gradients move as per-node
+    /// push/pull traffic and a node may run up to `staleness` iterations
+    /// ahead of the slowest node.
+    Ssp { staleness: usize },
+    /// Fully asynchronous parameter server: push/pull traffic with no
+    /// cross-node gating at all (unbounded drift).
+    AsyncPs,
+}
+
+impl SyncMode {
+    /// `Ssp { staleness: 0 }` *is* the barrier — waiting zero iterations
+    /// behind the slowest node is exactly what bsp's collective enforces
+    /// — so it normalizes to `Bsp` and stays bit-identical on every
+    /// substrate instead of merely approximately equal.
+    pub fn normalized(self) -> SyncMode {
+        match self {
+            SyncMode::Ssp { staleness: 0 } => SyncMode::Bsp,
+            m => m,
+        }
+    }
+
+    pub fn is_bsp(self) -> bool {
+        self.normalized() == SyncMode::Bsp
+    }
+
+    /// Drift bound in iterations: `Some(0)` for bsp, `Some(K)` for ssp,
+    /// `None` (unbounded) for async-ps.
+    pub fn staleness(self) -> Option<usize> {
+        match self.normalized() {
+            SyncMode::Bsp => Some(0),
+            SyncMode::Ssp { staleness } => Some(staleness),
+            SyncMode::AsyncPs => None,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -92,6 +137,12 @@ pub struct SimConfig {
     /// by degraded N); `None` falls back to re-normalizing `plan` per
     /// the §3.3 degenerate-shape rule. Ignored for `stall`.
     pub degraded_plan: Option<PartitionPlan>,
+    /// Synchronization discipline: `Bsp` keeps today's collective
+    /// barrier; `Ssp`/`AsyncPs` replace the gradient collectives with
+    /// per-node parameter-server push/pull tasks and let nodes drift
+    /// (bounded by the staleness window under ssp). Non-bsp modes
+    /// require a pure data-parallel plan and no failure event.
+    pub sync: SyncMode,
 }
 
 impl Default for SimConfig {
@@ -103,6 +154,7 @@ impl Default for SimConfig {
             plan: PartitionPlan::empty(1, 256),
             collective: collective::Choice::Auto,
             degraded_plan: None,
+            sync: SyncMode::Bsp,
         }
     }
 }
@@ -269,6 +321,11 @@ fn grad_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
     if cfg.nodes <= 1 || !layer.is_weighted() {
         return 0.0;
     }
+    if !cfg.sync.is_bsp() {
+        // ssp/async: the layer's gradient moves as parameter-server
+        // push/pull traffic instead of an all-member collective
+        return comm_model::ps_exchange_s(&platform.fabric, layer.weight_bytes(), cfg.nodes);
+    }
     planner::strategy_grad_s(
         strategy_for(layer, cfg),
         layer,
@@ -276,6 +333,32 @@ fn grad_exchange_s(layer: &Layer, platform: &Platform, cfg: &SimConfig) -> f64 {
         choice_for(layer, cfg),
         cfg.nodes,
     )
+}
+
+/// Non-bsp sync modes price gradients as parameter-server push/pull,
+/// which only shards data-parallel weights; model/hybrid layer groups
+/// (and failure-recovery timelines) stay bsp-only. Checked by both
+/// simulator fidelities so a direct API caller gets the same error the
+/// spec layer raises.
+fn check_sync_support(cfg: &SimConfig) -> Result<()> {
+    if cfg.sync.is_bsp() {
+        return Ok(());
+    }
+    if let Some(g) = cfg
+        .plan
+        .assignments
+        .iter()
+        .find(|g| !matches!(g.strategy, Strategy::Data))
+    {
+        bail!(
+            "sync mode {:?} requires a pure data-parallel plan, but layer group {:?} \
+             is assigned {:?} (set parallelism.mode = \"data\")",
+            cfg.sync,
+            g.name,
+            g.strategy
+        );
+    }
+    Ok(())
 }
 
 /// Activation exchange seconds (model/hybrid FC layers, fwd or bwd leg).
@@ -365,6 +448,7 @@ pub fn simulate_training(
             cfg.iterations
         );
     }
+    check_sync_support(cfg)?;
     debug_assert!(
         cfg.plan.assignments.is_empty() || cfg.plan.nodes == cfg.nodes,
         "plan was derived for {} nodes but the simulation runs {}",
@@ -540,6 +624,12 @@ pub struct FleetDag {
     /// Tasks one iteration emits when every iteration is uniform (clean
     /// fabric — no failure split); 0 otherwise.
     cycle_tasks: usize,
+    /// Synchronization discipline the DAG was built under (normalized).
+    sync: SyncMode,
+    /// `[iteration][node]` end task (the node's last gradient update of
+    /// that iteration). Populated only under non-bsp sync, where
+    /// throughput aggregates per-node rates instead of barrier spacing.
+    node_iter_ends: Vec<Vec<TaskId>>,
 }
 
 /// A failure event as resolved by the DAG builder: where the simulation
@@ -729,6 +819,15 @@ fn build_fleet_dag(
             cfg.iterations
         );
     }
+    check_sync_support(cfg)?;
+    if !cfg.sync.is_bsp() && fleet_cfg.fail_at.filter(|&it| it < cfg.iterations).is_some() {
+        bail!(
+            "sync mode {:?} does not model failure recovery: the shrink/replan/stall \
+             timelines assume the bsp barrier (drop cluster.fail_at or set \
+             parallelism.sync = \"bsp\")",
+            cfg.sync
+        );
+    }
     assert_eq!(
         cfg.nodes as usize, fleet_cfg.nodes,
         "SimConfig.nodes must match FleetConfig.nodes"
@@ -823,9 +922,14 @@ fn build_fleet_dag(
     // dependency contents differ: iteration 0 has no previous updates),
     // so the expensive zoo/collective walk runs twice and the remaining
     // iterations are instanced from the trailing block; a failure event
-    // makes iterations non-uniform and forces the full loop
-    let template = use_template && recovery.is_none() && cfg.iterations > 2;
+    // makes iterations non-uniform and forces the full loop, and so do
+    // the non-bsp modes (ssp's drift gates reach staleness+1 iterations
+    // back, which the two-iteration template cannot represent)
+    let template =
+        use_template && recovery.is_none() && cfg.iterations > 2 && cfg.sync.is_bsp();
     let built_iterations = if template { 2 } else { cfg.iterations };
+    // [iteration][node] end task, tracked only when nodes may drift
+    let mut node_iter_ends: Vec<Vec<TaskId>> = Vec::new();
 
     for it in 0..built_iterations {
         let mut iter_tail: Vec<TaskId> = Vec::new();
@@ -924,6 +1028,19 @@ fn build_fleet_dag(
                         if let Some(s) = resume_gate[v] {
                             b.gates.push(s);
                         }
+                        // ssp drift bound: node v may not start iteration
+                        // `it` until every other node finished iteration
+                        // `it - 1 - K` (async-ps pushes no gate at all;
+                        // bsp's coupling is the collective itself)
+                        if let SyncMode::Ssp { staleness } = cfg.sync.normalized() {
+                            if let Some(lag_it) = it.checked_sub(1 + staleness) {
+                                for u in 0..n {
+                                    if u != v && alive[u] {
+                                        b.gates.push(node_iter_ends[lag_it][u]);
+                                    }
+                                }
+                            }
+                        }
                     }
                 }
                 b.gates.finish_list();
@@ -996,7 +1113,37 @@ fn build_fleet_dag(
                 );
             }
             let sgd_s = 2.0 * l.weight_elems() as f64 / (m.peak_gflops() * 1e9);
-            let updates: Vec<TaskId> = match strat {
+            let updates: Vec<TaskId> = if !cfg.sync.is_bsp() && n_active > 1 {
+                // parameter-server push/pull on each node's own comm
+                // stream: the α-β round trip to the sharded PS, then the
+                // local apply. No cross-node coupling here — ssp's drift
+                // bound gates the *forward* side instead.
+                let ps_s = comm_model::ps_exchange_s(fabric, l.weight_bytes(), n_active);
+                let ps_label = format!("ps{i}");
+                let sgd_label = format!("sgd{i}");
+                let mut out: Vec<TaskId> = vec![0; n];
+                for &v in &active {
+                    let mut d: [TaskId; 3] = [0; 3];
+                    d[0] = wg[v];
+                    let mut len = 1;
+                    for t in b.last_comm[v].iter() {
+                        d[len] = t;
+                        len += 1;
+                    }
+                    let ps =
+                        b.eng.add(&ps_label, fleet.comm_res(v), ns(ps_s), &d[..len]);
+                    let id = b.eng.add(
+                        &sgd_label,
+                        fleet.comm_res(v),
+                        ns(sgd_s * fleet.time_mult[v]),
+                        &[ps],
+                    );
+                    b.last_comm[v] = Tail::one(id);
+                    out[v] = id;
+                }
+                out
+            } else {
+                match strat {
                 Strategy::Data if n_active > 1 => {
                     let done = b.exchange_update(
                         choice, &format!("x{i}"), &active, l.weight_bytes(), &wg, sgd_s,
@@ -1044,6 +1191,7 @@ fn build_fleet_dag(
                         out[v] = id;
                     }
                     out
+                }
                 }
             };
             for &v in &active {
@@ -1097,6 +1245,16 @@ fn build_fleet_dag(
                 chain = wg;
             }
         }
+        if !cfg.sync.is_bsp() {
+            // a node's iteration retires with its last update: the first
+            // weighted layer is processed last on the backward walk and
+            // its ps→sgd pair chains behind everything else on the
+            // node's comm stream
+            let ends: Vec<TaskId> = (0..n)
+                .map(|v| update_ids[v][first_weighted].expect("weighted net"))
+                .collect();
+            node_iter_ends.push(ends);
+        }
         prev_update = update_ids;
         for &v in &active {
             prev_chain[v] = Some(chain[v]);
@@ -1126,6 +1284,8 @@ fn build_fleet_dag(
         minibatch: cfg.minibatch,
         iterations: cfg.iterations,
         cycle_tasks,
+        sync: cfg.sync.normalized(),
+        node_iter_ends,
     })
 }
 
@@ -1192,10 +1352,31 @@ pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
         }
     });
 
+    // barrier-free modes: aggregate throughput is the sum of per-node
+    // steady rates (each node feeds its MB/N share at its own pace, and
+    // under async-ps the fast nodes genuinely run ahead), not the
+    // fleet-wide boundary spacing a barrier would impose; iteration_s
+    // is re-derived as the aggregate-equivalent spacing
+    let (iter_s, images_per_s) = if !dag.sync.is_bsp() && dag.node_iter_ends.len() >= 2 {
+        let mb_node = dag.minibatch as f64 / n as f64;
+        let last = &dag.node_iter_ends[dag.iterations - 1];
+        let prev = &dag.node_iter_ends[dag.iterations - 2];
+        let rate: f64 = (0..n)
+            .map(|v| {
+                let t = sched.end_ns[last[v]].saturating_sub(sched.end_ns[prev[v]]) as f64
+                    / 1e9;
+                mb_node / t.max(1e-12)
+            })
+            .sum();
+        (dag.minibatch as f64 / rate, rate)
+    } else {
+        (iter_s, dag.minibatch as f64 / iter_s)
+    };
+
     FleetSimResult {
         nodes: n as u64,
         iteration_s: iter_s,
-        images_per_s: dag.minibatch as f64 / iter_s,
+        images_per_s,
         mean_compute_utilization: mean,
         min_compute_utilization: min,
         tasks: dag.eng.len(),
@@ -1216,11 +1397,14 @@ pub fn summarize_fleet(dag: &FleetDag, sched: &Schedule) -> FleetSimResult {
 pub const PROBE_ITERATIONS: usize = 4;
 
 /// Clean-fabric check for the periodic fast path. Stragglers, hetero
-/// generations and firing failure events genuinely need the full split
-/// DAG; `REPRO_NETSIM_PATH=full` forces the full path for A/B gating.
+/// generations, firing failure events and the non-bsp sync modes (whose
+/// drift gates reach past the probe's neighbor window) genuinely need
+/// the full split DAG; `REPRO_NETSIM_PATH=full` forces the full path
+/// for A/B gating.
 fn periodic_eligible(cfg: &SimConfig, fleet_cfg: &FleetConfig) -> bool {
     let forced_full = matches!(std::env::var("REPRO_NETSIM_PATH"), Ok(v) if v == "full");
     !forced_full
+        && cfg.sync.is_bsp()
         && cfg.iterations > PROBE_ITERATIONS
         && fleet_cfg.straggler_skew == 0.0
         && !fleet_cfg.hetero

@@ -35,7 +35,7 @@ pub mod reference;
 
 pub use cluster::{
     simulate_training, simulate_training_fleet, simulate_training_fleet_full, FleetSimResult,
-    RecoveryOutcome, ScalingPoint, SimConfig, SimPath, SimResult,
+    RecoveryOutcome, ScalingPoint, SimConfig, SimPath, SimResult, SyncMode,
 };
 pub use collective::Choice;
 pub use engine::{DepLists, Engine, Schedule, TaskId};

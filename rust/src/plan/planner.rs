@@ -165,6 +165,7 @@ pub fn plan_cost_s(input: &PlannerInput, plan: &PartitionPlan) -> f64 {
         plan: plan.clone(),
         collective: input.collective,
         degraded_plan: None,
+        ..Default::default()
     };
     simulate_training(input.net, input.platform, &cfg)
         .expect("plan_cost_s clamps iterations to >= 2")

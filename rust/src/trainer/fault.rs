@@ -93,6 +93,10 @@ pub struct RecoveryMeasurement {
     pub post_samples_per_s: f64,
     /// mean wall seconds per step after recovery (trainer-filled)
     pub post_iteration_s: f64,
+    /// samples/step dropped by the respread because the ABI-pinned
+    /// microbatch no longer divides the global minibatch (shrink/replan
+    /// only; 0 = the hyperparameter survived intact)
+    pub residual_mb: usize,
 }
 
 impl RecoveryMeasurement {
@@ -104,18 +108,34 @@ impl RecoveryMeasurement {
     }
 }
 
-/// Respread the global minibatch over the surviving workers. The
-/// microbatch size is pinned by the AOT artifact ABI, so the only free
-/// knob is the global minibatch: keep it when `(workers × micro)`
-/// divides it, otherwise trim down to the nearest multiple (never below
-/// one microbatch per survivor). Deterministic; documented in DESIGN.md.
-pub fn respread(global_mb: usize, workers: usize, micro: usize) -> Result<MicrobatchPlan> {
+/// A respread minibatch plan plus the explicit record of any residual
+/// the respread could not keep (`ScalingReport.recovery.residual_mb`).
+#[derive(Debug, Clone)]
+pub struct Respread {
+    pub plan: MicrobatchPlan,
+    /// samples/step the plan had to drop (0 = hyperparameter intact)
+    pub residual_mb: usize,
+}
+
+/// Respread the global minibatch over the surviving workers *without
+/// altering the hyperparameter*: the microbatch size is pinned by the
+/// AOT artifact ABI, but the per-worker microbatch counts are not, so a
+/// survivor count that no longer divides the total is handled by uneven
+/// assignment ([`MicrobatchPlan::uneven`] — some survivors run one more
+/// microbatch than others). The only residual left is when `micro`
+/// itself stops dividing the global minibatch; those `global_mb % micro`
+/// samples cannot be scheduled at all and are reported explicitly in
+/// [`Respread::residual_mb`] rather than silently trimmed. Fails when
+/// fewer microbatches remain than survivors (an idle survivor would fold
+/// a stale gradient buffer). Deterministic; documented in DESIGN.md.
+pub fn respread(global_mb: usize, workers: usize, micro: usize) -> Result<Respread> {
     ensure!(workers >= 1, "respread needs at least one survivor");
     ensure!(micro >= 1, "microbatch must be positive");
-    let unit = workers * micro;
-    let mb = if global_mb >= unit { (global_mb / unit) * unit } else { unit };
-    MicrobatchPlan::new(mb, workers, micro)
-        .with_context(|| format!("respreading MB {global_mb} over {workers} survivors"))
+    let kept = (global_mb / micro) * micro;
+    let residual_mb = global_mb - kept;
+    let plan = MicrobatchPlan::uneven(kept, workers, micro)
+        .with_context(|| format!("respreading MB {global_mb} over {workers} survivors"))?;
+    Ok(Respread { plan, residual_mb })
 }
 
 /// Recover a coordinator whose worker `dead_worker` died during
@@ -152,6 +172,7 @@ pub fn recover(
         pre_samples_per_s: 0.0,
         post_samples_per_s: 0.0,
         post_iteration_s: 0.0,
+        residual_mb: 0,
     };
     match rp.policy {
         RecoveryPolicy::Stall => {
@@ -209,7 +230,9 @@ pub fn recover(
             // survivors keep the current state (the failed step never
             // committed); respread the minibatch and rebuild at N-1
             let t1 = Instant::now();
-            let mb = respread(rp.global_mb, n1, rp.micro)?;
+            let rs = respread(rp.global_mb, n1, rp.micro)?;
+            meas.residual_mb = rs.residual_mb;
+            let mb = rs.plan;
             let topos = topos_for(meas.plan_after.as_ref(), n1);
             let mut next = SyncSgdCoordinator::with_store(&rp.artifact, params, mb, topos);
             next.set_overlap(overlap);
@@ -236,16 +259,27 @@ mod tests {
     use super::*;
 
     #[test]
-    fn respread_keeps_divisible_minibatch_and_trims_otherwise() {
-        // 16 over 4→3 survivors at micro 2: unit 6, trims to 12
-        let p = respread(16, 3, 2).unwrap();
-        assert_eq!((p.global_mb, p.workers, p.micro), (12, 3, 2));
-        // divisible stays exact
-        let p = respread(16, 2, 2).unwrap();
-        assert_eq!((p.global_mb, p.workers, p.micro), (16, 2, 2));
-        // never below one microbatch per survivor
-        let p = respread(2, 3, 2).unwrap();
-        assert_eq!((p.global_mb, p.workers, p.micro), (6, 3, 2));
+    fn respread_preserves_the_global_minibatch() {
+        // 16 over 4→3 survivors at micro 2: previously trimmed to 12 —
+        // a silent hyperparameter change. Now the 8 microbatches go
+        // 3/3/2 and all 16 samples survive.
+        let r = respread(16, 3, 2).unwrap();
+        assert_eq!((r.plan.global_mb, r.plan.workers, r.plan.micro), (16, 3, 2));
+        assert_eq!(r.residual_mb, 0);
+        let counts: Vec<usize> = r.plan.per_worker.iter().map(Vec::len).collect();
+        assert_eq!(counts, vec![3, 3, 2]);
+        // divisible stays exact (and even)
+        let r = respread(16, 2, 2).unwrap();
+        assert_eq!((r.plan.global_mb, r.plan.workers, r.plan.micro), (16, 2, 2));
+        assert_eq!(r.residual_mb, 0);
+        // only a micro-indivisible global MB leaves a residual, and it
+        // is reported, not silently dropped
+        let r = respread(17, 3, 2).unwrap();
+        assert_eq!(r.plan.global_mb, 16);
+        assert_eq!(r.residual_mb, 1);
+        // fewer microbatches than survivors: refuse rather than inflate
+        // the minibatch (the old code grew 2 -> 6 here)
+        assert!(respread(2, 3, 2).is_err());
         assert!(respread(16, 0, 2).is_err());
     }
 

@@ -54,6 +54,10 @@ pub struct TrainConfig {
     /// degraded plan for `replan` recovery (backend re-derives it at N-1;
     /// `None` falls back to `PartitionPlan::renormalize_for`)
     pub recovery_plan: Option<PartitionPlan>,
+    /// sync mode name (`parallelism.sync`): "bsp" | "ssp{K}" | "async-ps".
+    /// Non-bsp modes let a worker run up to K steps ahead of the slowest
+    /// reduction fold (async-ps = unbounded, capped at `workers`).
+    pub sync: String,
 }
 
 impl Default for TrainConfig {
@@ -77,6 +81,7 @@ impl Default for TrainConfig {
             fail_worker: 0,
             recovery: "stall".into(),
             recovery_plan: None,
+            sync: "bsp".into(),
         }
     }
 }
@@ -244,6 +249,15 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
         .collect();
     let mut coord =
         SyncSgdCoordinator::with_plan(&artifact, params, plan.clone(), sgd, tensor_topos);
+    // bounded-staleness window: how many gradient sets may wait parked
+    // behind the in-flight reduction before the leader blocks (0 = BSP,
+    // today's fully synchronous step)
+    let staleness = match crate::experiment::registry::sync_mode(&cfg.sync)? {
+        crate::netsim::SyncMode::Bsp => 0,
+        crate::netsim::SyncMode::Ssp { staleness } => staleness,
+        crate::netsim::SyncMode::AsyncPs => cfg.workers,
+    };
+    coord.set_staleness(staleness);
 
     // checkpoint + fault plumbing (both off by default)
     let ckpt_dir = std::path::PathBuf::from(
@@ -257,11 +271,7 @@ pub fn train(rt: &mut Runtime, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let mut fault_armed: Option<fault::FaultSpec> = None;
     let mut planner: Option<fault::RecoveryPlanner> = None;
     if let Some(at) = cfg.fail_at {
-        ensure!(
-            at + 2 <= cfg.steps,
-            "fail_at {at} leaves no post-recovery step (steps = {})",
-            cfg.steps
-        );
+        crate::experiment::spec::validate_fail_window(at, cfg.steps, "execution.steps")?;
         ensure!(
             cfg.fail_worker < cfg.workers,
             "fail_node {} out of range for {} workers",

@@ -328,22 +328,25 @@ fn shrink_and_replan_continue_at_n_minus_one() {
 }
 
 /// The degraded-minibatch respread under a plan: renormalize_for + the
-/// trainer's minibatch trim compose for a hybrid plan (the shapes the
+/// trainer's uneven respread compose for a hybrid plan (the shapes the
 /// runtime recovery actually rebuilds with).
 #[test]
 fn respread_composes_with_renormalized_plans() {
-    // MB 16 over 4 workers, micro 2 -> 3 survivors: unit 6, MB trims
-    // to 12, per-worker spreads stay uniform
-    let p = fault::respread(16, 3, 2).unwrap();
-    assert_eq!((p.global_mb, p.workers, p.micro), (12, 3, 2));
-    assert_eq!(p.per_worker.len(), 3);
-    assert!(p.per_worker.iter().all(|w| w.len() == 2));
-    // already-divisible minibatches survive untouched
-    let p = fault::respread(24, 3, 2).unwrap();
-    assert_eq!(p.global_mb, 24);
+    // MB 16 over 4 workers, micro 2 -> 3 survivors: the minibatch (a
+    // hyperparameter) stays 16; the 8 microbatches go 3/3/2
+    let r = fault::respread(16, 3, 2).unwrap();
+    assert_eq!((r.plan.global_mb, r.plan.workers, r.plan.micro), (16, 3, 2));
+    assert_eq!(r.residual_mb, 0);
+    assert_eq!(r.plan.per_worker.len(), 3);
+    let counts: Vec<usize> = r.plan.per_worker.iter().map(Vec::len).collect();
+    assert_eq!(counts, vec![3, 3, 2]);
+    // already-divisible minibatches survive untouched and uniform
+    let r = fault::respread(24, 3, 2).unwrap();
+    assert_eq!(r.plan.global_mb, 24);
+    assert!(r.plan.per_worker.iter().all(|w| w.len() == 4));
     // a 2-worker fleet losing a node still trains (1 survivor)
-    let p = fault::respread(8, 1, 2).unwrap();
-    assert_eq!((p.global_mb, p.workers), (8, 1));
+    let r = fault::respread(8, 1, 2).unwrap();
+    assert_eq!((r.plan.global_mb, r.plan.workers), (8, 1));
 }
 
 /// Recovered coordinators keep working for many more steps (no leaked

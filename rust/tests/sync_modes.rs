@@ -1,0 +1,192 @@
+//! Sync-mode axis property suite (the `parallelism.sync` contract):
+//!
+//! * `sync = "bsp"` is bit-identical to a spec with the field absent on
+//!   every simulation backend, and the runtime coordinator's staleness
+//!   window never changes the math — folds stay rank-ordered, so
+//!   parameters match BSP bit-for-bit at every window;
+//! * `ssp{0}` normalizes to bsp exactly (not approximately);
+//! * relaxed modes strictly beat bsp throughput under straggler skew;
+//! * netsim's per-message parameter-server exchange agrees with the
+//!   analytic α-β push/pull pricing on a clean fabric (≤ 10%);
+//! * the non-bsp fallback matrix rejects unsupported configurations
+//!   with actionable errors instead of silently mispricing them.
+
+use pcl_dnn::coordinator::{MicrobatchPlan, SgdConfig, SyncSgdCoordinator};
+use pcl_dnn::experiment::{
+    registry, AnalyticBackend, Backend, ExperimentSpec, FleetSimBackend, FlowSimBackend,
+};
+use pcl_dnn::netsim::SyncMode;
+use pcl_dnn::util::json::Json;
+
+fn spec_at(nodes: u64) -> ExperimentSpec {
+    let mut s = ExperimentSpec::of("sync_modes", "vgg_a", "cori", nodes, 256);
+    s.parallelism.iterations = 4;
+    s
+}
+
+/// Re-parse a spec with `parallelism.sync` dropped from its JSON form —
+/// the shape of every committed spec predating the sync axis.
+fn without_sync_key(spec: &ExperimentSpec) -> ExperimentSpec {
+    let mut j = Json::parse(&spec.to_json().to_string()).unwrap();
+    if let Json::Obj(root) = &mut j {
+        if let Some(Json::Obj(par)) = root.get_mut("parallelism") {
+            assert!(par.remove("sync").is_some(), "spec JSON no longer carries sync");
+        }
+    }
+    ExperimentSpec::parse_str(&j.to_string()).unwrap()
+}
+
+#[test]
+fn bsp_is_bit_identical_to_an_absent_sync_field_on_all_backends() {
+    let backends: &[&dyn Backend] = &[&AnalyticBackend, &FlowSimBackend, &FleetSimBackend];
+    for nodes in [2u64, 4, 8] {
+        let mut explicit = spec_at(nodes);
+        explicit.parallelism.sync = "bsp".into();
+        let absent = without_sync_key(&explicit);
+        assert_eq!(absent.parallelism.sync, "bsp", "absent key must default to the barrier");
+        for b in backends {
+            let e = b.run(&explicit).unwrap().to_json().to_string();
+            let a = b.run(&absent).unwrap().to_json().to_string();
+            assert_eq!(e, a, "{} report diverged at {nodes} nodes", b.name());
+        }
+    }
+}
+
+#[test]
+fn coordinator_staleness_windows_keep_updates_bit_identical() {
+    let params = vec![vec![0.5f32; 33], vec![-0.25f32; 17]];
+    for workers in [2usize, 4, 8] {
+        let plan = MicrobatchPlan::new(32, workers, 2).unwrap();
+        let mut run = |window: Option<usize>| {
+            let mut compute = |w: usize,
+                               starts: &[usize],
+                               acc: &mut [Vec<f32>]|
+             -> anyhow::Result<(f64, u64)> {
+                for (t, buf) in acc.iter_mut().enumerate() {
+                    for (i, x) in buf.iter_mut().enumerate() {
+                        *x = ((w * 31 + t * 7 + i) % 13) as f32 * 0.1 - 0.5;
+                    }
+                }
+                Ok((starts.len() as f64 * 0.25, starts.len() as u64))
+            };
+            let mut c = SyncSgdCoordinator::new(
+                "t",
+                params.clone(),
+                plan.clone(),
+                SgdConfig::default(),
+            );
+            c.set_overlap(true);
+            if let Some(k) = window {
+                c.set_staleness(k);
+            }
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(c.step_with_compute(&mut compute).unwrap().loss.to_bits());
+            }
+            (losses, c.params.tensors.clone(), c.grad_sets_allocated())
+        };
+        // field absent == explicit window 0 == BSP (the regression pin)
+        let (l0, p0, s0) = run(None);
+        assert!(s0 <= 3, "BSP streaming allocated {s0} gradient sets");
+        for window in [0usize, 1, 2, workers] {
+            let (l, p, sets) = run(Some(window));
+            assert_eq!(l0, l, "losses diverged at window {window} ({workers} workers)");
+            for (a, b) in p0.iter().zip(&p) {
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "parameters diverged at window {window} ({workers} workers)"
+                );
+            }
+            // memory stays bounded: the parked backlog adds at most
+            // `window` sets on top of the streaming pipeline's 3
+            assert!(
+                sets <= 3 + window,
+                "window {window} allocated {sets} gradient sets ({workers} workers)"
+            );
+        }
+    }
+}
+
+#[test]
+fn ssp_zero_is_exactly_bsp() {
+    assert_eq!(registry::sync_mode("ssp{0}").unwrap(), SyncMode::Bsp);
+    assert_eq!(registry::sync_mode("ssp{2}").unwrap(), SyncMode::Ssp { staleness: 2 });
+    let mut zero = spec_at(4);
+    zero.parallelism.sync = "ssp{0}".into();
+    let mut bsp = spec_at(4);
+    bsp.parallelism.sync = "bsp".into();
+    let rz = FleetSimBackend.run(&zero).unwrap().to_json().to_string();
+    let rb = FleetSimBackend.run(&bsp).unwrap().to_json().to_string();
+    assert_eq!(rz, rb, "ssp{{0}} must collapse to the barrier bit-for-bit");
+}
+
+#[test]
+fn relaxed_sync_beats_bsp_under_straggler_skew() {
+    // the acceptance frontier: at skew 0.4 and n = 8 the drift-bounded
+    // timelines keep fast nodes productive while bsp convoys on the
+    // slowest node every iteration
+    let mut spec = spec_at(8);
+    spec.parallelism.mode = "data".into();
+    spec.parallelism.iterations = 6;
+    spec.cluster.straggler_skew = 0.4;
+    let run = |sync: &str| {
+        let mut s = spec.clone();
+        s.parallelism.sync = sync.into();
+        FleetSimBackend.run(&s).unwrap()
+    };
+    let bsp = run("bsp");
+    let ssp = run("ssp{2}");
+    let ps = run("async-ps");
+    assert!(
+        ssp.samples_per_s > bsp.samples_per_s,
+        "ssp{{2}} {:.0} samples/s <= bsp {:.0}",
+        ssp.samples_per_s,
+        bsp.samples_per_s
+    );
+    assert!(
+        ps.samples_per_s > bsp.samples_per_s,
+        "async-ps {:.0} samples/s <= bsp {:.0}",
+        ps.samples_per_s,
+        bsp.samples_per_s
+    );
+}
+
+#[test]
+fn async_ps_netsim_agrees_with_analytic_alpha_beta_on_clean_fabric() {
+    let mut spec = spec_at(8);
+    spec.parallelism.mode = "data".into();
+    spec.parallelism.sync = "async-ps".into();
+    spec.cluster.congestion = Some(0.0);
+    let sim = FleetSimBackend.run(&spec).unwrap();
+    let ana = AnalyticBackend.run(&spec).unwrap();
+    let delta = (sim.iteration_s - ana.iteration_s).abs() / ana.iteration_s;
+    assert!(
+        delta <= 0.10,
+        "netsim {:.4} ms vs analytic {:.4} ms: {:.1}% apart (> 10%)",
+        sim.iteration_s * 1e3,
+        ana.iteration_s * 1e3,
+        100.0 * delta
+    );
+}
+
+#[test]
+fn non_bsp_guards_reject_unsupported_configurations() {
+    // flowsim is bulk-synchronous only
+    let mut s = spec_at(4);
+    s.parallelism.sync = "async-ps".into();
+    let e = format!("{:#}", FlowSimBackend.run(&s).unwrap_err());
+    assert!(e.contains("flowsim") && e.contains("netsim"), "{e}");
+    // failure recovery needs the barrier to anchor the timeline split
+    let mut s = spec_at(4);
+    s.parallelism.sync = "ssp{2}".into();
+    s.parallelism.mode = "data".into();
+    s.cluster.fail_at = Some(1);
+    let e = format!("{:#}", FleetSimBackend.run(&s).unwrap_err());
+    assert!(e.contains("fail_at") && e.contains("bsp"), "{e}");
+    // drift-bounded timelines require a pure data-parallel plan
+    let mut s = spec_at(8);
+    s.parallelism.sync = "async-ps".into();
+    s.parallelism.mode = "hybrid".into();
+    let e = format!("{:#}", FleetSimBackend.run(&s).unwrap_err());
+    assert!(e.contains("data-parallel"), "{e}");
+}
